@@ -1,0 +1,65 @@
+"""Ablations — design-choice studies from the paper + beyond-paper variants.
+
+  * DSM on/off for LA and MLP (paper §3: DSM adds +0.005..0.015 ARR) and
+    post-hoc DSM for OP (paper: <0.005, omitted by default).
+  * ℓ2 pre-normalization of pair embeddings before fitting (paper Fig. 5:
+    pre-normalized fits are slightly better and more stable).
+  * BEYOND-PAPER: Procrustes warm start for LA/MLP (closes the from-scratch
+    convergence gap under strong rotation — EXPERIMENTS.md §Tables).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import DriftAdapter, FitConfig
+from repro.data.drift import MILD_TEXT
+from benchmarks.common import Scale, build_scenario, emit, eval_adapter, save_json
+
+
+def run(scale: Scale) -> dict:
+    scen = build_scenario("abl", MILD_TEXT, scale, corpus_seed=0, pair_seed=5)
+    out: dict = {}
+
+    def fit_eval(tag, kind, **kw):
+        ad = DriftAdapter.fit(
+            scen.pairs_b, scen.pairs_a, kind=kind,
+            config=FitConfig(kind=kind, **kw),
+        )
+        r = eval_adapter(scen, ad)
+        out[tag] = r["r10_arr"]
+        emit(f"abl.{tag}.r10_arr", ad.fit_info.fit_seconds * 1e6,
+             round(r["r10_arr"], 4))
+        return r["r10_arr"]
+
+    # --- DSM ---------------------------------------------------------------
+    for kind in ("la", "mlp"):
+        with_dsm = fit_eval(f"{kind}_dsm", kind, use_dsm=True)
+        without = fit_eval(f"{kind}_nodsm", kind, use_dsm=False)
+        out[f"{kind}_dsm_gain"] = round(with_dsm - without, 4)
+    fit_eval("op_nodsm", "op", use_dsm=False)
+    fit_eval("op_dsm_posthoc", "op", use_dsm=True)
+
+    # --- pre-normalization (Fig. 5) -----------------------------------------
+    # simulate un-normalized embeddings: per-item lognormal scale jitter
+    key = jax.random.PRNGKey(3)
+    import jax.numpy as jnp
+
+    scales_b = jnp.exp(0.3 * jax.random.normal(key, (scen.pairs_b.shape[0], 1)))
+    scales_a = jnp.exp(0.3 * jax.random.normal(
+        jax.random.fold_in(key, 1), (scen.pairs_a.shape[0], 1)
+    ))
+    ad_raw = DriftAdapter.fit(
+        scen.pairs_b * scales_b, scen.pairs_a * scales_a, kind="mlp",
+        config=FitConfig(kind="mlp"),
+    )
+    r = eval_adapter(scen, ad_raw)
+    out["mlp_unnormalized_pairs"] = r["r10_arr"]
+    emit("abl.mlp_unnormalized_pairs.r10_arr", 0.0, round(r["r10_arr"], 4))
+
+    # --- beyond-paper: Procrustes warm start --------------------------------
+    for kind in ("la", "mlp"):
+        fit_eval(f"{kind}_warmstart", kind, use_dsm=True,
+                 procrustes_warm_start=True)
+
+    save_json("ablations", out)
+    return out

@@ -1,0 +1,56 @@
+"""ANN back-end characterization — the TPU-native analogue of the paper's
+FAISS-HNSW ef_search setting (§4).
+
+Recall/latency trade-off of the IVF-Flat index as a function of nprobe,
+with the exact flat scan as the reference point, searched with
+adapter-mapped queries (the production query path). Shows nprobe plays
+ef_search's role: the paper's ef_search=50 ≈ our nprobe≈8 operating point.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.ann import build_ivf, flat_search_jnp, ivf_search, recall_at_k
+from repro.core import DriftAdapter, FitConfig
+from repro.data.drift import MILD_TEXT
+from benchmarks.common import Scale, build_scenario, emit, save_json, time_per_call_us
+
+NPROBES = (1, 2, 4, 8, 16, 32)
+
+
+def run(scale: Scale) -> dict:
+    n = min(scale.n_items, 100_000)
+    scen = build_scenario(
+        "ann", MILD_TEXT,
+        Scale(n_items=n, n_queries=min(scale.n_queries, 500),
+              n_pairs=scale.n_pairs),
+        corpus_seed=0, pair_seed=5,
+    )
+    adapter = DriftAdapter.fit(
+        scen.pairs_b, scen.pairs_a, kind="mlp",
+        config=FitConfig(kind="mlp", use_dsm=True),
+    )
+    q = adapter.apply(scen.q_new)
+    _, exact_ids = flat_search_jnp(scen.corpus_old, q, k=10)
+
+    index = build_ivf(
+        jax.random.PRNGKey(0), scen.corpus_old,
+        n_cells=max(64, n // 400), spill_factor=3.0,
+    )
+    out = {"flat_exact_arr": float(recall_at_k(exact_ids, scen.gt))}
+    emit("ann.flat.r10_arr", 0.0, round(out["flat_exact_arr"], 4))
+    for nprobe in NPROBES:
+        search = jax.jit(
+            lambda qq, np_=nprobe: ivf_search(index, qq, k=10, nprobe=np_)
+        )
+        _, ids = search(q)
+        arr = float(recall_at_k(ids, scen.gt))
+        vs_exact = float(recall_at_k(ids, exact_ids))
+        us = time_per_call_us(search, q, per_call_items=q.shape[0], iters=3)
+        out[f"nprobe_{nprobe}"] = {
+            "r10_arr": arr, "recall_vs_exact": vs_exact, "us_per_query": us
+        }
+        emit(f"ann.ivf.nprobe_{nprobe}.r10_arr", us, round(arr, 4))
+    save_json("ann_backend", out)
+    return out

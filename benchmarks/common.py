@@ -1,0 +1,167 @@
+"""Shared benchmark scaffolding: scenario setup, search, timing, reporting.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (the harness
+contract) and dumps a JSON artifact under experiments/bench/.
+
+Scale note (EXPERIMENTS.md §Calibration): the paper runs 1M items × 10k
+queries on Xeon + A100; this container is one CPU core, so the default
+scale is 100k items × 1k queries (--full restores 1M×10k, --quick drops to
+30k×500). ARR is scale-stable: it is a *ratio* of recalls on the same
+corpus, and we verified (§Calibration) it moves <0.01 between 30k and 200k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ann import flat_search_jnp, mrr, recall_at_k
+from repro.core import DriftAdapter, FitConfig
+from repro.data import (
+    CorpusConfig,
+    DriftConfig,
+    make_corpus,
+    make_drift,
+    make_pairs,
+    make_queries,
+)
+
+BENCH_DIR = os.environ.get("REPRO_BENCH_DIR", "experiments/bench")
+
+
+@dataclasses.dataclass
+class Scale:
+    n_items: int = 100_000
+    n_queries: int = 1_000
+    n_pairs: int = 20_000
+    seeds: int = 1
+
+
+QUICK = Scale(n_items=30_000, n_queries=500, n_pairs=20_000, seeds=1)
+DEFAULT = Scale()
+FULL = Scale(n_items=1_000_000, n_queries=10_000, n_pairs=20_000, seeds=5)
+
+
+@dataclasses.dataclass
+class Scenario:
+    """One drift scenario: legacy corpus + drifted space + query sets."""
+
+    name: str
+    corpus_old: jax.Array
+    corpus_new: jax.Array
+    q_new: jax.Array
+    gt: jax.Array            # oracle top-10 ids (new space, exhaustive)
+    gt_top1: jax.Array
+    pairs_b: jax.Array
+    pairs_a: jax.Array
+    misaligned_r10: float
+    misaligned_mrr: float
+
+
+def build_scenario(
+    name: str,
+    drift_cfg: DriftConfig,
+    scale: Scale,
+    *,
+    corpus_seed: int = 0,
+    pair_seed: int = 5,
+    k: int = 10,
+    corpus_cfg: Optional[CorpusConfig] = None,
+) -> Scenario:
+    ccfg = corpus_cfg or CorpusConfig(
+        n_items=scale.n_items,
+        dim=drift_cfg.d_old,
+        n_clusters=max(200, scale.n_items // 150),
+        concentration=0.4,
+        spectrum_beta=1.0,
+        seed=corpus_seed,
+    )
+    corpus_old, _ = make_corpus(ccfg)
+    drift = make_drift(drift_cfg)
+    corpus_new = drift(corpus_old, noise_salt=0)
+    q_old, _ = make_queries(ccfg, scale.n_queries)
+    q_new = drift(q_old, noise_salt=1)
+    _, gt = flat_search_jnp(corpus_new, q_new, k=k)
+    # Misaligned baseline for rectangular upgrades (paper §5.3): the shorter
+    # side is zero-padded to the longer one (GloVe-300 padded to MPNet-768).
+    d_old, d_new = corpus_old.shape[1], q_new.shape[1]
+    if d_old == d_new:
+        mis_corpus, mis_q = corpus_old, q_new
+    else:
+        d = max(d_old, d_new)
+        mis_corpus = jnp.pad(corpus_old, ((0, 0), (0, d - d_old)))
+        mis_q = jnp.pad(q_new, ((0, 0), (0, d - d_new)))
+    _, mis = flat_search_jnp(mis_corpus, mis_q, k=k)
+    pairs_b, pairs_a, _ = make_pairs(
+        jax.random.PRNGKey(pair_seed), corpus_old, corpus_new, scale.n_pairs
+    )
+    return Scenario(
+        name=name,
+        corpus_old=corpus_old,
+        corpus_new=corpus_new,
+        q_new=q_new,
+        gt=gt,
+        gt_top1=gt[:, 0],
+        pairs_b=pairs_b,
+        pairs_a=pairs_a,
+        misaligned_r10=float(recall_at_k(mis, gt)),
+        misaligned_mrr=float(mrr(mis, gt[:, 0])),
+    )
+
+
+def eval_adapter(
+    scen: Scenario, adapter: DriftAdapter, k: int = 10
+) -> dict:
+    """Search the LEGACY index with adapted queries; score against oracle."""
+    q_mapped = adapter.apply(scen.q_new)
+    _, ids = flat_search_jnp(scen.corpus_old, q_mapped, k=k)
+    return {
+        "r10_arr": float(recall_at_k(ids, scen.gt)),
+        "mrr_arr": float(mrr(ids, scen.gt_top1)),
+    }
+
+
+def fit_and_eval(
+    scen: Scenario, kind: str, *, use_dsm: bool, seed: int = 0,
+    config: Optional[FitConfig] = None,
+) -> dict:
+    cfg = config or FitConfig(kind=kind, use_dsm=use_dsm, seed=seed)
+    adapter = DriftAdapter.fit(
+        scen.pairs_b, scen.pairs_a, kind=kind, config=cfg
+    )
+    out = eval_adapter(scen, adapter)
+    out["fit_seconds"] = adapter.fit_info.fit_seconds
+    out["epochs"] = adapter.fit_info.epochs_run
+    out["val_mse"] = adapter.fit_info.val_mse
+    out["param_bytes"] = adapter.param_bytes
+    out["flops_per_query"] = adapter.flops_per_query
+    return out
+
+
+def time_per_call_us(fn: Callable, *args, warmup: int = 2, iters: int = 10,
+                     per_call_items: int = 1) -> float:
+    """Wall-clock µs per call (per item if per_call_items > 1)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    dt = (time.perf_counter() - t0) / iters
+    return dt * 1e6 / per_call_items
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    """The harness CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def save_json(name: str, payload: dict) -> None:
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    with open(os.path.join(BENCH_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=str)

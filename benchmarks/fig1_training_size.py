@@ -1,0 +1,30 @@
+"""Figure 1 — R@10 ARR vs number of training pairs N_p (MLP + DSM, AG-News
+analogue). Expected signature: steep rise 1k→5k, plateau by 16k ≈ 20k."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import DriftAdapter, FitConfig
+from repro.data.drift import MILD_TEXT
+from benchmarks.common import Scale, build_scenario, emit, eval_adapter, save_json
+
+N_P_GRID = (1_000, 2_000, 5_000, 10_000, 16_000, 20_000)
+
+
+def run(scale: Scale) -> dict:
+    scen = build_scenario(
+        "fig1", MILD_TEXT, scale, corpus_seed=0, pair_seed=5
+    )
+    out = {}
+    for n_p in N_P_GRID:
+        b = scen.pairs_b[:n_p]
+        a = scen.pairs_a[:n_p]
+        ad = DriftAdapter.fit(
+            b, a, kind="mlp", config=FitConfig(kind="mlp", use_dsm=True)
+        )
+        r = eval_adapter(scen, ad)
+        out[str(n_p)] = {**r, "fit_seconds": ad.fit_info.fit_seconds}
+        emit(f"fig1.np_{n_p}.r10_arr", ad.fit_info.fit_seconds * 1e6,
+             round(r["r10_arr"], 4))
+    save_json("fig1_training_size", out)
+    return out

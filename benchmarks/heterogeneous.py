@@ -1,0 +1,93 @@
+"""Appendix A.4 — heterogeneous drift: global vs domain-routed adapters.
+
+Half the clusters drift through a (mild) affine map, half through a strong
+nonlinear warp. A single global MLP averages the two regimes; two
+domain-specific MLPs routed by item metadata (cluster parity) recover most
+of the gap — the paper's 0.85 → 0.94 result, realized with MultiAdapter.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.ann import flat_search_jnp, recall_at_k
+from repro.core import DriftAdapter, FitConfig, MultiAdapter
+from repro.data import CorpusConfig, make_corpus, make_queries, make_drift
+from repro.data.drift import DriftConfig
+from benchmarks.common import Scale, emit, save_json
+
+# Two drifts that are each individually recoverable (mild, like Table 1)
+# but structurally DIFFERENT (independent rotations/scales/warps): a single
+# global adapter must average two incompatible maps — that averaging, not
+# any per-domain ceiling, is what the paper's A.4 isolates.
+AFFINE = DriftConfig(d_old=768, d_new=768, rotation_rank=64,
+                     rotation_theta=0.35, scale_sigma=0.02,
+                     nonlinear_alpha=0.0, noise_sigma=0.002, seed=31)
+WARPED = DriftConfig(d_old=768, d_new=768, rotation_rank=64,
+                     rotation_theta=0.70, scale_sigma=0.06,
+                     nonlinear_alpha=0.10, nonlinear_smoothness=1.5,
+                     noise_sigma=0.003, seed=37)
+
+
+def run(scale: Scale) -> dict:
+    n = min(scale.n_items, 100_000)
+    ccfg = CorpusConfig(n_items=n, dim=768, n_clusters=max(200, n // 150),
+                        concentration=0.4, spectrum_beta=1.0, seed=3)
+    corpus_old, clusters = make_corpus(ccfg)
+    q_old, q_clusters = make_queries(ccfg, scale.n_queries)
+    t_affine, t_warp = make_drift(AFFINE), make_drift(WARPED)
+
+    domain = (clusters % 2).astype(bool)            # metadata routing key
+    q_domain = (q_clusters % 2).astype(bool)
+
+    # Separate the domains on the sphere (as real DBpedia class groups are):
+    # without this, anisotropic clusters overlap so heavily that top-10 sets
+    # cross domains and the two drifts scramble CROSS-domain geometry — a
+    # ceiling no adapter (global or routed) can recover. The paper's domains
+    # are semantically disjoint classes; we mirror that.
+    sep = jax.random.normal(jax.random.PRNGKey(77), (768,))
+    sep = 0.8 * sep / jnp.linalg.norm(sep)
+
+    def separate(x, dom):
+        shifted = x + jnp.where(dom[:, None], sep, -sep)
+        return shifted / jnp.linalg.norm(shifted, axis=1, keepdims=True)
+
+    corpus_old = separate(corpus_old, jnp.asarray(domain))
+    q_old = separate(q_old, jnp.asarray(q_domain))
+    corpus_new = jnp.where(
+        domain[:, None], t_warp(corpus_old, 0), t_affine(corpus_old, 0)
+    )
+    q_new = jnp.where(
+        q_domain[:, None], t_warp(q_old, 1), t_affine(q_old, 1)
+    )
+    _, gt = flat_search_jnp(corpus_new, q_new, k=10)
+
+    key = jax.random.PRNGKey(5)
+    idx = jax.random.choice(key, n, (scale.n_pairs,), replace=False)
+    cfg = FitConfig(kind="mlp", use_dsm=True)
+
+    # global adapter on a random mixed sample
+    global_ad = DriftAdapter.fit(corpus_new[idx], corpus_old[idx], config=cfg)
+    _, ids_g = flat_search_jnp(corpus_old, global_ad.apply(q_new), k=10)
+    arr_global = float(recall_at_k(ids_g, gt))
+
+    # two domain adapters, routed by metadata
+    dom_idx = jnp.asarray(domain)[idx]
+    adapters = []
+    for d_val in (False, True):
+        sel = idx[dom_idx == d_val]
+        adapters.append(
+            DriftAdapter.fit(corpus_new[sel], corpus_old[sel], config=cfg)
+        )
+    multi = MultiAdapter.from_adapters(adapters)
+    q_routed = multi.apply(q_new, jnp.asarray(q_domain).astype(jnp.int32))
+    _, ids_r = flat_search_jnp(corpus_old, q_routed, k=10)
+    arr_routed = float(recall_at_k(ids_r, gt))
+
+    out = {"global_mlp": arr_global, "routed_mlp": arr_routed}
+    emit("a4.heterogeneous.global_mlp.r10_arr", 0.0, round(arr_global, 4))
+    emit("a4.heterogeneous.routed_mlp.r10_arr", 0.0, round(arr_routed, 4))
+    save_json("heterogeneous", out)
+    return out

@@ -1,0 +1,80 @@
+"""Benchmark orchestrator — one suite per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick|--full] [--seeds N]
+                                            [--only t1,t3,...]
+
+Prints ``name,us_per_call,derived`` CSV (harness contract) and writes JSON
+artifacts to experiments/bench/. Suites:
+
+    t1      Table 1  — text upgrades (3 corpora, OP/LA/MLP ± DSM)
+    t2      Table 2  — image upgrade, rectangular 512→768
+    t3      Table 3  — upgrade-strategy comparison
+    t4      Table 4  — drastic drift (GloVe→MPNet analogue)
+    fig1    Figure 1 — ARR vs N_p
+    online  §5.6     — continuous online adaptation (24 ticks)
+    hetero  App A.4  — heterogeneous drift, multi-adapter routing
+    a1t5    App A.1 + Table 5 — memory / latency / scale projection
+    ann     §4       — ANN back-end recall/latency knob (nprobe)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+from benchmarks import (
+    ablations,
+    ann_backend,
+    fig1_training_size,
+    heterogeneous,
+    memory_latency,
+    online_adaptation,
+    t1_text,
+    t2_image,
+    t3_strategies,
+    t4_severe,
+)
+from benchmarks.common import DEFAULT, FULL, QUICK, Scale
+
+SUITES = {
+    "t1": t1_text.run,
+    "t2": t2_image.run,
+    "t3": t3_strategies.run,
+    "t4": t4_severe.run,
+    "fig1": fig1_training_size.run,
+    "online": online_adaptation.run,
+    "hetero": heterogeneous.run,
+    "a1t5": memory_latency.run,
+    "ann": ann_backend.run,
+    "abl": ablations.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seeds", type=int, default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+
+    scale = QUICK if args.quick else FULL if args.full else DEFAULT
+    if args.seeds is not None:
+        scale = dataclasses.replace(scale, seeds=args.seeds)
+    names = list(SUITES) if not args.only else args.only.split(",")
+
+    print("name,us_per_call,derived")
+    t_start = time.perf_counter()
+    for name in names:
+        if name not in SUITES:
+            raise SystemExit(f"unknown suite {name!r}; have {list(SUITES)}")
+        t0 = time.perf_counter()
+        SUITES[name](scale)
+        print(f"# suite {name} done in {time.perf_counter()-t0:.1f}s",
+              flush=True)
+    print(f"# all suites done in {time.perf_counter()-t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Distributed corpus-sharded search with the adapter on every shard's
+query path — the paper's §5.5 multi-shard deployment, executable on host
+devices (this script forces 8 CPU devices; on TPU the same code runs on the
+production mesh from repro.launch.mesh).
+
+    PYTHONPATH=src python examples/distributed_search.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType
+
+from repro.ann import flat_search_jnp, recall_at_k, sharded_search
+from repro.core import DriftAdapter
+from repro.data import CorpusConfig, MILD_TEXT, make_corpus, make_drift, make_pairs, make_queries
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
+print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
+
+cfg = CorpusConfig(n_items=65_536, dim=768, n_clusters=500, seed=0)
+corpus_old, _ = make_corpus(cfg)
+drift = make_drift(MILD_TEXT)
+corpus_new = drift(corpus_old, 0)
+q_new = drift(make_queries(cfg, 512)[0], 1)
+_, oracle = flat_search_jnp(corpus_new, q_new, k=10)
+
+pairs_b, pairs_a, _ = make_pairs(jax.random.PRNGKey(0), corpus_old,
+                                 corpus_new, 20_000)
+adapter = DriftAdapter.fit(pairs_b, pairs_a, kind="mlp")
+
+# The adapter applies on every shard before the local scan (replicated,
+# <3 MB); each shard top-k's its corpus slice; one tiny all-gather merges.
+search = sharded_search(
+    mesh, corpus_old, q_new, k=10,
+    corpus_axes=("data",), adapter_fn=adapter.apply,
+)
+scores, ids = search(corpus_old, q_new)
+
+# verify against the single-device path
+_, ref_ids = flat_search_jnp(corpus_old, adapter.apply(q_new), k=10)
+print("sharded == single-device:",
+      bool(jnp.all(ids == ref_ids)))
+print(f"distributed R@10 ARR: {float(recall_at_k(ids, oracle)):.3f}")

@@ -1,0 +1,18 @@
+from repro.ann.flat import FlatIndex, flat_search_jnp
+from repro.ann.ivf import IVFIndex, build_ivf, ivf_search
+from repro.ann.kmeans import kmeans_fit
+from repro.ann.metrics import arr, mrr, recall_at_k
+from repro.ann.sharded import sharded_search
+
+__all__ = [
+    "FlatIndex",
+    "flat_search_jnp",
+    "IVFIndex",
+    "build_ivf",
+    "ivf_search",
+    "kmeans_fit",
+    "arr",
+    "mrr",
+    "recall_at_k",
+    "sharded_search",
+]

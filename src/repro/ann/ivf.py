@@ -1,0 +1,128 @@
+"""IVF-Flat index — the TPU-native approximate counterpart to FAISS-IVF.
+
+Cells are *fixed-capacity tiles*: after k-means, each cell's member rows are
+packed into a (C, cap, d) tensor padded with zero rows (id −1). Probing is a
+static-shape gather + batched matmul — no ragged structures, no host control
+flow, everything jittable and shardable. ``nprobe`` plays the role of the
+paper's HNSW ``ef_search`` recall/latency knob (DESIGN.md §2).
+
+Overflowing rows (beyond a cell's capacity) spill to the globally nearest
+non-full cell... in this implementation we simply size ``cap`` generously
+(cap = spill_factor × N/C) and assert no overflow at build time; overflow
+rows are re-assigned to their next-best cell with free slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ann.kmeans import kmeans_fit
+
+
+@dataclasses.dataclass
+class IVFIndex:
+    centroids: jax.Array      # (C, d)
+    cells: jax.Array          # (C, cap, d)  padded member embeddings
+    cell_ids: jax.Array       # (C, cap)     global row ids, -1 = pad
+    n_items: int
+
+    @property
+    def n_cells(self) -> int:
+        return int(self.centroids.shape[0])
+
+    @property
+    def capacity(self) -> int:
+        return int(self.cells.shape[1])
+
+
+# Register as a pytree so IVFIndex flows through jit/pjit (n_items static).
+jax.tree_util.register_pytree_node(
+    IVFIndex,
+    lambda idx: ((idx.centroids, idx.cells, idx.cell_ids), idx.n_items),
+    lambda n_items, leaves: IVFIndex(*leaves, n_items=n_items),
+)
+
+
+def build_ivf(
+    key: jax.Array,
+    corpus: jax.Array,
+    n_cells: int = 256,
+    spill_factor: float = 3.0,
+    kmeans_iters: int = 20,
+) -> IVFIndex:
+    """Build an IVF-Flat index over an ℓ2-normalized corpus (N, d)."""
+    n, d = corpus.shape
+    centroids, assign = kmeans_fit(key, corpus, n_cells, kmeans_iters)
+    cap = int(np.ceil(spill_factor * n / n_cells))
+    # Host-side packing (one-time build cost, like FAISS's add()):
+    assign_np = np.asarray(assign)
+    corpus_np = np.asarray(corpus)
+    sims = None
+    cell_rows: list[list[int]] = [[] for _ in range(n_cells)]
+    order = np.argsort(assign_np, kind="stable")
+    for idx in order:
+        c = int(assign_np[idx])
+        if len(cell_rows[c]) < cap:
+            cell_rows[c].append(int(idx))
+        else:
+            # overflow: walk next-nearest centroids until a free slot
+            if sims is None:
+                sims = corpus_np @ np.asarray(centroids).T
+            for alt in np.argsort(-sims[idx]):
+                if len(cell_rows[int(alt)]) < cap:
+                    cell_rows[int(alt)].append(int(idx))
+                    break
+    cells = np.zeros((n_cells, cap, d), np.float32)
+    cell_ids = np.full((n_cells, cap), -1, np.int64)
+    for c, rows in enumerate(cell_rows):
+        if rows:
+            cells[c, : len(rows)] = corpus_np[rows]
+            cell_ids[c, : len(rows)] = rows
+    return IVFIndex(
+        centroids=centroids,
+        cells=jnp.asarray(cells),
+        cell_ids=jnp.asarray(cell_ids, jnp.int32),
+        n_items=n,
+    )
+
+
+@partial(jax.jit, static_argnames=("k", "nprobe", "query_block"))
+def ivf_search(
+    index: IVFIndex,
+    queries: jax.Array,
+    k: int = 10,
+    nprobe: int = 8,
+    query_block: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Approximate top-k: probe the ``nprobe`` nearest cells per query."""
+    qn, d = queries.shape
+    neg = jnp.finfo(jnp.float32).min
+    pad_q = -(-qn // query_block) * query_block - qn
+    queries_p = (
+        jnp.concatenate([queries, jnp.zeros((pad_q, d), queries.dtype)])
+        if pad_q
+        else queries
+    )
+    qblocks = queries_p.reshape(-1, query_block, d)
+
+    def search_block(_, qb):
+        cell_scores = qb @ index.centroids.T                  # (B, C)
+        _, probe = jax.lax.top_k(cell_scores, nprobe)         # (B, nprobe)
+        cand_vecs = index.cells[probe]                        # (B, np, cap, d)
+        cand_ids = index.cell_ids[probe]                      # (B, np, cap)
+        cand_vecs = cand_vecs.reshape(query_block, -1, d)
+        cand_ids = cand_ids.reshape(query_block, -1)
+        scores = jnp.einsum("bd,bnd->bn", qb, cand_vecs)
+        scores = jnp.where(cand_ids >= 0, scores, neg)
+        top_s, pos = jax.lax.top_k(scores, k)
+        top_i = jnp.take_along_axis(cand_ids, pos, axis=1)
+        return None, (top_s, top_i)
+
+    _, (scores, ids) = jax.lax.scan(search_block, None, qblocks)
+    scores = scores.reshape(-1, k)[:qn]
+    ids = ids.reshape(-1, k)[:qn]
+    return scores, ids

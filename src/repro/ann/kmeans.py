@@ -1,0 +1,37 @@
+"""Mini-batch-free Lloyd k-means in JAX (used by the IVF index).
+
+Spherical k-means (centroids re-normalized each step) since all corpus
+embeddings are ℓ2-normalized — cluster assignment is then a pure matmul
+argmax, which is the MXU-friendly formulation.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "iters"))
+def kmeans_fit(
+    key: jax.Array, x: jax.Array, n_clusters: int, iters: int = 25
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (centroids (C, d), assignments (N,))."""
+    n, d = x.shape
+    init_idx = jax.random.choice(key, n, (n_clusters,), replace=False)
+    centroids = x[init_idx]
+
+    def step(centroids, _):
+        sims = x @ centroids.T                        # (N, C)
+        assign = jnp.argmax(sims, axis=1)             # (N,)
+        one_hot = jax.nn.one_hot(assign, n_clusters, dtype=x.dtype)  # (N, C)
+        sums = one_hot.T @ x                          # (C, d)
+        counts = one_hot.sum(axis=0)[:, None]         # (C, 1)
+        new_c = jnp.where(counts > 0, sums / jnp.maximum(counts, 1), centroids)
+        norms = jnp.linalg.norm(new_c, axis=1, keepdims=True)
+        new_c = new_c / jnp.maximum(norms, 1e-12)     # spherical
+        return new_c, None
+
+    centroids, _ = jax.lax.scan(step, centroids, None, length=iters)
+    assign = jnp.argmax(x @ centroids.T, axis=1)
+    return centroids, assign

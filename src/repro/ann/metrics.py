@@ -1,0 +1,37 @@
+"""Retrieval metrics: Recall@k, MRR, and the paper's ARR (§4).
+
+Ground truth is the exhaustive k-NN of each query in the *new* embedding
+space (queries and corpus both f_new) — "Oracle New Model". ARR is the ratio
+of a configuration's metric to the oracle's.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def recall_at_k(retrieved: jax.Array, ground_truth: jax.Array) -> jax.Array:
+    """Mean fraction of ground-truth neighbours found.
+
+    retrieved: (Q, k) int ids from the system under test.
+    ground_truth: (Q, k_gt) int ids from exhaustive search (k_gt <= k typical).
+    """
+    hits = (retrieved[:, None, :] == ground_truth[:, :, None]).any(axis=-1)
+    return jnp.mean(hits.astype(jnp.float32))
+
+
+def mrr(retrieved: jax.Array, ground_truth_top1: jax.Array) -> jax.Array:
+    """Mean reciprocal rank of the true nearest neighbour.
+
+    retrieved: (Q, k); ground_truth_top1: (Q,) — the oracle's rank-1 id.
+    Queries whose true NN is not retrieved contribute 0.
+    """
+    match = retrieved == ground_truth_top1[:, None]  # (Q, k)
+    ranks = jnp.argmax(match, axis=1) + 1
+    found = match.any(axis=1)
+    return jnp.mean(jnp.where(found, 1.0 / ranks, 0.0))
+
+
+def arr(metric_value: jax.Array, oracle_value: jax.Array) -> jax.Array:
+    """Adaptation Recall Ratio: metric under adapter / metric of oracle."""
+    return metric_value / jnp.maximum(oracle_value, 1e-12)

@@ -1,0 +1,3 @@
+from repro.ckpt.serialization import save_pytree, load_pytree
+
+__all__ = ["save_pytree", "load_pytree"]

@@ -1,0 +1,67 @@
+"""Checkpointing: msgpack + raw numpy buffers (no orbax in this environment).
+
+Pytrees of arrays are flattened to {json-path: (dtype, shape, bytes)} and
+written as a single msgpack blob — compact, deterministic, streamable. Used
+for adapter params (<3 MB, per the paper's deployment story: the adapter
+ships to every query router) and for model/optimizer state in examples.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree: Any, metadata: dict | None = None) -> None:
+    flat = _flatten_with_paths(tree)
+    payload = {
+        "metadata": metadata or {},
+        "arrays": {
+            k: {
+                "dtype": str(v.dtype),
+                "shape": list(v.shape),
+                "data": v.tobytes(),
+            }
+            for k, v in flat.items()
+        },
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+
+
+def load_pytree(path: str, like: Any = None) -> Any:
+    """Load a checkpoint. If ``like`` is given, restore into its structure;
+    otherwise return the flat {path: array} dict plus metadata."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    arrays = {
+        k: np.frombuffer(v["data"], dtype=np.dtype(v["dtype"])).reshape(v["shape"])
+        for k, v in payload["arrays"].items()
+    }
+    if like is None:
+        return arrays, payload["metadata"]
+    flat_like = _flatten_with_paths(like)
+    missing = set(flat_like) - set(arrays)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path_entries, leaf in leaves_with_paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_entries
+        )
+        new_leaves.append(jnp.asarray(arrays[key]).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,179 @@
+"""Model configuration system + architecture registry.
+
+Every assigned architecture gets one file in this package declaring its
+EXACT published configuration (citation in ``source``) plus a REDUCED
+variant (≤2 layers, d_model ≤ 512, ≤4 experts) used by CPU smoke tests.
+Full configs are only ever lowered via ShapeDtypeStructs in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0                # 0 ⇒ d_model // n_heads
+    # attention options
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    sliding_window: int = 0        # window for "local" layers
+    alt_local_global: bool = False # gemma2 alternating pattern
+    swa_all_layers: bool = False   # beyond-paper serving variant (qwen3-swa)
+    rope_theta: float = 10_000.0
+    act: str = "silu"
+    gated_ffn: bool = True
+    post_norm: bool = False        # gemma2 sandwich norms
+    # PERF (beyond-paper, §Perf iteration): materialize KV to full query
+    # heads before the attention einsums. The grouped (G, R) head split
+    # blocks XLA from sharding attention over the "model" axis when
+    # n_kv_heads doesn't divide it (e.g. kv=8 on a 16-way axis), leaving
+    # each model-column chip to compute ALL heads redundantly. Repeating KV
+    # restores a single H dim that shards — trading R× KV activation bytes
+    # for axis-size× less attention compute per chip. Requires
+    # n_heads % mesh("model") == 0.
+    repeat_kv_for_tp: bool = False
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    # SSM (Mamba-2 / SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    # hybrid (zamba2): one shared attention block reused every N layers
+    hybrid_period: int = 0
+    # encoder-decoder (seamless)
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    # modality frontends (sanctioned stubs: precomputed embeddings in)
+    frontend: str = "none"         # none | vision_stub | audio_stub
+    n_frontend_tokens: int = 0
+    d_frontend: int = 0
+    # numerics / training
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = True
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: bool = True
+    loss_chunk: int = 512
+    moment_dtype: str = "float32"  # optimizer moments (bf16 for the giants)
+    source: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """Sub-quadratic / bounded-state sequence mixing ⇒ long_500k runs."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.alt_local_global or self.swa_all_layers:
+            return True
+        return False
+
+    def param_count_estimate(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS=6·N·D)."""
+        d, dff, v = self.d_model, self.d_ff, self.vocab_size
+        h, g, dh = self.n_heads, self.n_kv_heads, self.head_dim
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d
+        per_attn = d * h * dh + 2 * d * g * dh + h * dh * d
+        ffn_mult = 3 if self.gated_ffn else 2
+        if self.family == "ssm":
+            dims_inner = self.ssm_expand * d
+            n_h = dims_inner // self.ssm_head_dim
+            per_layer = d * (2 * dims_inner + 2 * self.ssm_groups * self.ssm_state + n_h)
+            per_layer += dims_inner * d + dims_inner  # out_proj + norm
+            total += self.n_layers * per_layer
+        elif self.family == "hybrid":
+            dims_inner = self.ssm_expand * d
+            n_h = dims_inner // self.ssm_head_dim
+            # mamba layers carry no per-layer FFN in this family (the FFN
+            # lives in the single shared attention block)
+            per_mamba = d * (2 * dims_inner + 2 * self.ssm_groups * self.ssm_state + n_h)
+            per_mamba += dims_inner * d
+            n_super = self.n_layers // (self.hybrid_period + 1)
+            n_mamba = self.n_layers - n_super
+            total += n_mamba * per_mamba
+            # one shared block: attn + concat proj + its FFN (used n_super x)
+            total += per_attn + 2 * d * d + ffn_mult * d * dff
+        elif self.n_experts:
+            per_layer = per_attn + self.n_experts * dff * d * ffn_mult + d * self.n_experts
+            total += self.n_layers * per_layer
+        else:
+            total += self.n_layers * (per_attn + ffn_mult * d * dff)
+        if self.frontend == "vision_stub":
+            total += self.d_frontend * d
+        if self.is_encoder_decoder:
+            per_enc = per_attn + ffn_mult * d * dff
+            per_dec = 2 * per_attn + ffn_mult * d * dff
+            total += self.n_encoder_layers * per_enc
+            total += self.n_layers * per_dec - self.n_layers * (per_attn + ffn_mult * d * dff)
+        return int(total)
+
+    def active_param_count_estimate(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        if not self.n_experts:
+            return self.param_count_estimate()
+        d, dff = self.d_model, self.d_ff
+        ffn_mult = 3 if self.gated_ffn else 2
+        dense_like = self.param_count_estimate() - self.n_layers * (
+            self.n_experts * dff * d * ffn_mult
+        )
+        return int(
+            dense_like
+            + self.n_layers * self.experts_per_token * dff * d * ffn_mult
+        )
+
+
+ARCH_IDS = (
+    "dbrx-132b",
+    "mamba2-780m",
+    "grok-1-314b",
+    "qwen1.5-0.5b",
+    "qwen2-1.5b",
+    "zamba2-7b",
+    "gemma2-9b",
+    "internvl2-76b",
+    "qwen3-0.6b",
+    "seamless-m4t-large-v2",
+)
+
+_MODULE_FOR_ARCH = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str, reduced: bool = False, **overrides) -> ModelConfig:
+    if arch_id not in _MODULE_FOR_ARCH:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR_ARCH[arch_id]}")
+    cfg = mod.REDUCED if reduced else mod.FULL
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCH_IDS

@@ -1,0 +1,35 @@
+"""DBRX-Base 132B — fine-grained MoE, 16 experts top-4 [hf:databricks/dbrx-base]."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    n_experts=16,
+    experts_per_token=4,
+    rope_theta=500_000.0,
+    tie_embeddings=False,
+    moment_dtype="bfloat16",   # 132B params: fit 256-chip optimizer state
+    source="hf:databricks/dbrx-base",
+)
+
+REDUCED = dataclasses.replace(
+    FULL,
+    n_layers=2,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=448,
+    vocab_size=1024,
+    n_experts=4,
+    experts_per_token=2,
+    moment_dtype="float32",
+    loss_chunk=64,
+)

@@ -1,0 +1,38 @@
+"""Gemma2-9B — alternating local(4096)/global attention, logit softcaps,
+sandwich norms, GeGLU [arXiv:2408.00118]."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="gemma2-9b",
+    family="dense",
+    n_layers=42,
+    d_model=3584,
+    n_heads=16,
+    n_kv_heads=8,
+    d_head=256,
+    d_ff=14336,
+    vocab_size=256000,
+    alt_local_global=True,
+    sliding_window=4096,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    post_norm=True,
+    act="gelu",
+    tie_embeddings=True,
+    source="arXiv:2408.00118",
+)
+
+REDUCED = dataclasses.replace(
+    FULL,
+    n_layers=2,                # one (local, global) pair
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=64,
+    d_ff=512,
+    vocab_size=1024,
+    sliding_window=16,
+    loss_chunk=64,
+)

@@ -1,0 +1,36 @@
+"""Grok-1 314B — 8-expert top-2 MoE with tanh logit capping [hf:xai-org/grok-1]."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=32768,
+    vocab_size=131072,
+    n_experts=8,
+    experts_per_token=2,
+    attn_softcap=30.0,
+    final_softcap=30.0,
+    tie_embeddings=False,
+    moment_dtype="bfloat16",   # 314B params: required to fit 256 chips
+    source="hf:xai-org/grok-1",
+)
+
+REDUCED = dataclasses.replace(
+    FULL,
+    n_layers=2,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=512,
+    vocab_size=1024,
+    n_experts=4,
+    experts_per_token=2,
+    moment_dtype="float32",
+    loss_chunk=64,
+)

@@ -1,0 +1,42 @@
+"""InternVL2-Llama3-76B — InternViT vision frontend (STUB: precomputed patch
+embeddings) + Llama-3-70B-style language backbone [arXiv:2404.16821].
+
+The sanctioned modality carve-out: input_specs() supplies (B, n_patches,
+d_frontend) precomputed ViT embeddings; the learned MLP projector and the
+full 80-layer GQA language model are implemented here.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="internvl2-76b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    frontend="vision_stub",
+    n_frontend_tokens=256,     # patch tokens per image
+    d_frontend=3200,           # InternViT-6B hidden size
+    tie_embeddings=False,
+    moment_dtype="bfloat16",
+    source="arXiv:2404.16821",
+)
+
+REDUCED = dataclasses.replace(
+    FULL,
+    n_layers=2,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=512,
+    vocab_size=1024,
+    n_frontend_tokens=16,
+    d_frontend=128,
+    moment_dtype="float32",
+    loss_chunk=64,
+)

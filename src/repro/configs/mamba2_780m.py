@@ -1,0 +1,32 @@
+"""Mamba2-780m — attention-free SSD state-space model [arXiv:2405.21060]."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=0,                 # attention-free
+    n_kv_heads=0,
+    d_ff=0,                    # Mamba2 blocks replace FFN entirely
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_groups=1,
+    ssm_chunk=128,
+    tie_embeddings=True,
+    source="arXiv:2405.21060",
+)
+
+REDUCED = dataclasses.replace(
+    FULL,
+    n_layers=2,
+    d_model=256,
+    vocab_size=1024,
+    ssm_state=32,
+    ssm_chunk=32,
+    loss_chunk=64,
+)

@@ -1,0 +1,30 @@
+"""Qwen1.5-0.5B — dense MHA with QKV bias [hf:Qwen/Qwen1.5-0.5B]."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="qwen1.5-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=2816,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen1.5-0.5B",
+)
+
+REDUCED = dataclasses.replace(
+    FULL,
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=704,
+    vocab_size=1024,
+    loss_chunk=64,
+)

@@ -1,0 +1,30 @@
+"""Qwen2-1.5B — dense GQA (kv=2) with QKV bias [arXiv:2407.10671]."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="qwen2-1.5b",
+    family="dense",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="arXiv:2407.10671",
+)
+
+REDUCED = dataclasses.replace(
+    FULL,
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=704,
+    vocab_size=1024,
+    loss_chunk=64,
+)

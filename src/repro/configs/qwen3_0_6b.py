@@ -1,0 +1,42 @@
+"""Qwen3-0.6B — dense GQA with qk-norm and explicit head_dim=128
+[hf:Qwen/Qwen3-8B family card].
+
+Beyond-paper serving variant: ``--variant swa`` (swa_all_layers=True)
+turns every layer into 4096-window sliding attention, enabling the
+long_500k decode shape for a dense architecture (DESIGN.md §4).
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="qwen3-0.6b",
+    family="dense",
+    n_layers=28,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=3072,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen3-8B",
+)
+
+SWA_VARIANT = dataclasses.replace(
+    FULL, swa_all_layers=True, sliding_window=4096
+)
+
+REDUCED = dataclasses.replace(
+    FULL,
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=64,
+    d_ff=768,
+    vocab_size=1024,
+    loss_chunk=64,
+)

@@ -1,0 +1,44 @@
+"""SeamlessM4T-Large v2 — encoder-decoder, multimodal [arXiv:2308.11596].
+
+The speech frontend (mel-spectrogram + conformer conv feature extractor) is
+the sanctioned STUB: input_specs() provides precomputed (B, n_frames,
+d_model) frame embeddings consumed by the text/unit encoder-decoder
+transformer implemented here (24 enc + 24 dec layers, non-gated GELU FFN).
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,               # decoder layers
+    n_encoder_layers=24,
+    is_encoder_decoder=True,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    act="gelu",
+    gated_ffn=False,
+    frontend="audio_stub",
+    n_frontend_tokens=1024,    # default speech frames after conv stack
+    d_frontend=1024,
+    tie_embeddings=True,
+    source="arXiv:2308.11596",
+)
+
+REDUCED = dataclasses.replace(
+    FULL,
+    n_layers=2,
+    n_encoder_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=512,
+    vocab_size=1024,
+    n_frontend_tokens=32,
+    d_frontend=256,
+    loss_chunk=64,
+)

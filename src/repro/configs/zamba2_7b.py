@@ -1,0 +1,47 @@
+"""Zamba2-7B — Mamba2 backbone + one SHARED attention block reused at a
+fixed period [arXiv:2411.15242].
+
+Structural note: the published model has 81 layer applications with the
+shared attention block interleaved sparsely. We realize this as 9
+super-blocks of (8 Mamba2 layers + 1 shared-attention application) =
+72 mamba + 9 shared = 81 applications, scanning over super-blocks so the
+shared block's parameters exist exactly once (the architecture's defining
+property). The shared block consumes concat(hidden, initial embedding)
+through a down-projection, per the Zamba design.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="zamba2-7b",
+    family="hybrid",
+    n_layers=81,               # total applications: 72 mamba + 9 shared attn
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_groups=1,
+    ssm_chunk=128,
+    hybrid_period=8,           # 8 mamba layers between shared-attn uses
+    tie_embeddings=True,
+    source="arXiv:2411.15242",
+)
+
+REDUCED = dataclasses.replace(
+    FULL,
+    n_layers=3,                # 1 super-block: 2 mamba + 1 shared attn
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=512,
+    vocab_size=1024,
+    ssm_state=32,
+    ssm_chunk=32,
+    hybrid_period=2,
+    loss_chunk=64,
+)

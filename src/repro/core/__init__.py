@@ -1,0 +1,45 @@
+"""Drift-Adapter core library (the paper's primary contribution)."""
+from repro.core.adapters import (
+    ADAPTER_KINDS,
+    adapter_apply,
+    adapter_flops_per_query,
+    adapter_param_count,
+    dsm_apply,
+    dsm_fit_posthoc,
+    dsm_init,
+    l2_normalize,
+    low_rank_apply,
+    low_rank_init,
+    mlp_apply,
+    mlp_init,
+    procrustes_apply,
+    procrustes_fit,
+)
+from repro.core.api import DriftAdapter
+from repro.core.multi_adapter import MultiAdapter
+from repro.core.online import OnlineAdapterManager, OnlineConfig
+from repro.core.trainer import FitConfig, FitResult, fit_adapter
+
+__all__ = [
+    "ADAPTER_KINDS",
+    "DriftAdapter",
+    "MultiAdapter",
+    "OnlineAdapterManager",
+    "OnlineConfig",
+    "FitConfig",
+    "FitResult",
+    "fit_adapter",
+    "adapter_apply",
+    "adapter_flops_per_query",
+    "adapter_param_count",
+    "dsm_apply",
+    "dsm_fit_posthoc",
+    "dsm_init",
+    "l2_normalize",
+    "low_rank_apply",
+    "low_rank_init",
+    "mlp_apply",
+    "mlp_init",
+    "procrustes_apply",
+    "procrustes_fit",
+]

@@ -1,0 +1,217 @@
+"""Drift-Adapter parameterizations (paper §3).
+
+Three lightweight maps g_θ : R^{d_new} → R^{d_old}:
+
+  * Orthogonal Procrustes (OP):  g(x) = R x, semi-orthogonal R (closed form).
+  * Low-Rank Affine (LA):        g(x) = U Vᵀ x + t, rank r ≪ d.
+  * Residual MLP (MLP):          g(x) = proj(x) + W₂ GELU(W₁ x + b₁) + b₂.
+
+plus the optional Diagonal Scaling Matrix (DSM): g'(x) = S · g(x).
+
+Everything is functional: params are plain pytrees (dicts of jnp arrays),
+apply functions are pure, so adapters jit/vmap/pjit transparently and their
+training shards under the production mesh with zero special-casing.
+
+Row convention: embeddings are (N, d) row-major. The paper's column-vector
+map y = R x becomes Y = X @ R.T here.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+ADAPTER_KINDS = ("op", "la", "mlp", "identity")
+
+
+def l2_normalize(x: jax.Array, axis: int = -1, eps: float = 1e-12) -> jax.Array:
+    return x / (jnp.linalg.norm(x, axis=axis, keepdims=True) + eps)
+
+
+# ---------------------------------------------------------------------------
+# Orthogonal Procrustes
+# ---------------------------------------------------------------------------
+
+def procrustes_fit(a: jax.Array, b: jax.Array) -> dict:
+    """Closed-form (semi-)orthogonal Procrustes solution (Schönemann 1966).
+
+    Solves  argmin_{RᵀR=I} ||A - R B||_F  where A is (N, d_old) and
+    B is (N, d_new) row-major. Returns {"R": (d_old, d_new)}.
+
+    For d_old == d_new this is the paper's OP adapter. For d_old != d_new it
+    is the natural semi-orthogonal generalization (R has orthonormal
+    rows/columns, whichever is the smaller side).
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    m = a.T @ b  # (d_old, d_new)
+    u, _, vt = jnp.linalg.svd(m, full_matrices=False)
+    r = u @ vt  # (d_old, k)(k, d_new) -> (d_old, d_new)
+    return {"R": r}
+
+
+def procrustes_apply(params: dict, x: jax.Array) -> jax.Array:
+    return x @ params["R"].T
+
+
+# ---------------------------------------------------------------------------
+# Low-Rank Affine
+# ---------------------------------------------------------------------------
+
+def low_rank_init(
+    key: jax.Array, d_new: int, d_old: int, rank: int = 64
+) -> dict:
+    """g(x) = U Vᵀ x + t with U ∈ R^{d_old×r}, V ∈ R^{d_new×r}."""
+    ku, kv = jax.random.split(key)
+    # Scaled so UVᵀ starts near a small map; residual of the identity is
+    # learned through optimization (paper trains from scratch with SGD).
+    u = jax.random.normal(ku, (d_old, rank), jnp.float32) * (1.0 / jnp.sqrt(rank))
+    v = jax.random.normal(kv, (d_new, rank), jnp.float32) * (1.0 / jnp.sqrt(d_new))
+    return {"U": u, "V": v, "t": jnp.zeros((d_old,), jnp.float32)}
+
+
+def low_rank_apply(params: dict, x: jax.Array) -> jax.Array:
+    # (N, d_new) @ (d_new, r) @ (r, d_old) + t
+    return (x @ params["V"]) @ params["U"].T + params["t"]
+
+
+# ---------------------------------------------------------------------------
+# Residual MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(
+    key: jax.Array,
+    d_new: int,
+    d_old: int,
+    hidden: int = 256,
+    residual_init: Optional[jax.Array] = None,
+) -> dict:
+    """Residual MLP: g(x) = res(x) + W₂ GELU(W₁ x + b₁) + b₂.
+
+    When d_new == d_old the residual path is the identity (paper §3). For
+    rectangular upgrades the residual is a learnable projection ``P``
+    (initialized from ``residual_init`` — typically the closed-form
+    Procrustes solution — or orthogonally at random).
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "W1": jax.random.normal(k1, (hidden, d_new), jnp.float32)
+        * jnp.sqrt(2.0 / d_new),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        # Output layer starts at zero so g(x) == residual(x) at init — the
+        # adapter begins as "no correction" and learns only the drift.
+        "W2": jnp.zeros((d_old, hidden), jnp.float32),
+        "b2": jnp.zeros((d_old,), jnp.float32),
+    }
+    if residual_init is not None:
+        params["P"] = residual_init.astype(jnp.float32)
+    elif d_new != d_old:
+        params["P"] = jax.nn.initializers.orthogonal()(
+            k3, (d_old, d_new), jnp.float32
+        )
+    return params
+
+
+def mlp_apply(
+    params: dict,
+    x: jax.Array,
+    *,
+    dropout_rate: float = 0.0,
+    dropout_key: Optional[jax.Array] = None,
+) -> jax.Array:
+    h = jax.nn.gelu(x @ params["W1"].T + params["b1"])
+    if dropout_rate > 0.0 and dropout_key is not None:
+        keep = jax.random.bernoulli(dropout_key, 1.0 - dropout_rate, h.shape)
+        h = jnp.where(keep, h / (1.0 - dropout_rate), 0.0)
+    correction = h @ params["W2"].T + params["b2"]
+    residual = x @ params["P"].T if "P" in params else x
+    return residual + correction
+
+
+# ---------------------------------------------------------------------------
+# Diagonal Scaling Matrix
+# ---------------------------------------------------------------------------
+
+def dsm_init(d_old: int) -> dict:
+    return {"s": jnp.ones((d_old,), jnp.float32)}
+
+
+def dsm_apply(params: dict, y: jax.Array) -> jax.Array:
+    return y * params["s"]
+
+
+def dsm_fit_posthoc(a: jax.Array, a_hat: jax.Array) -> dict:
+    """Closed-form per-dimension least squares  min_S ||S·Â − A||²_F.
+
+    s_i = ⟨Â_:,i , A_:,i⟩ / ⟨Â_:,i , Â_:,i⟩ — exact, no SGD needed (used for
+    the OP variant; the paper fits this post-hoc, §3).
+    """
+    num = jnp.sum(a_hat * a, axis=0)
+    den = jnp.sum(a_hat * a_hat, axis=0) + 1e-12
+    return {"s": num / den}
+
+
+# ---------------------------------------------------------------------------
+# Unified apply
+# ---------------------------------------------------------------------------
+
+def adapter_apply(
+    kind: str,
+    params: dict,
+    x: jax.Array,
+    *,
+    renormalize: bool = True,
+    dropout_rate: float = 0.0,
+    dropout_key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Apply adapter of ``kind``; ``params`` may contain a "dsm" sub-tree.
+
+    renormalize: ℓ2-normalize the output — the database stores ℓ2-normalized
+    legacy embeddings (paper §4), so queries must re-enter the unit sphere
+    after the affine/MLP map for inner-product search to equal cosine.
+    """
+    core = params.get("core", params)
+    if kind == "identity":
+        y = x
+    elif kind == "op":
+        y = procrustes_apply(core, x)
+    elif kind == "la":
+        y = low_rank_apply(core, x)
+    elif kind == "mlp":
+        y = mlp_apply(
+            core, x, dropout_rate=dropout_rate, dropout_key=dropout_key
+        )
+    else:
+        raise ValueError(f"unknown adapter kind: {kind!r}")
+    if "dsm" in params:
+        y = dsm_apply(params["dsm"], y)
+    if renormalize:
+        y = l2_normalize(y)
+    return y
+
+
+def adapter_param_count(kind: str, params: dict) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def adapter_flops_per_query(kind: str, params: dict) -> int:
+    """Analytic FLOPs for one query vector — the paper's latency model input."""
+    core = params.get("core", params)
+    flops = 0
+    if kind == "op":
+        d_o, d_n = core["R"].shape
+        flops = 2 * d_o * d_n
+    elif kind == "la":
+        d_o, r = core["U"].shape
+        d_n = core["V"].shape[0]
+        flops = 2 * d_n * r + 2 * r * d_o + d_o
+    elif kind == "mlp":
+        h, d_n = core["W1"].shape
+        d_o = core["W2"].shape[0]
+        flops = 2 * d_n * h + 2 * h * d_o + 8 * h + d_o
+        if "P" in core:
+            flops += 2 * d_n * d_o
+    if "dsm" in params:
+        flops += params["dsm"]["s"].shape[0]
+    return int(flops)

@@ -1,0 +1,110 @@
+"""DriftAdapter facade — the public entry point of the paper's contribution.
+
+Typical production flow (examples/upgrade_zero_downtime.py walks all of it):
+
+    pairs_b, pairs_a = sample_pairs(...)          # small N_p sample
+    adapter = DriftAdapter.fit(pairs_b, pairs_a, kind="mlp")
+    router.install_adapter(adapter)               # queries now bridge spaces
+    ...background re-embedding proceeds at leisure...
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adapters as A
+from repro.core.trainer import FitConfig, FitResult, fit_adapter
+from repro.ckpt import save_pytree, load_pytree
+
+
+@dataclasses.dataclass
+class DriftAdapter:
+    """A fitted drift adapter: maps new-space queries into the legacy space."""
+
+    kind: str
+    params: dict
+    d_new: int
+    d_old: int
+    fit_info: Optional[FitResult] = None
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def fit(
+        cls,
+        b_pairs: jax.Array,
+        a_pairs: jax.Array,
+        *,
+        kind: str = "mlp",
+        use_dsm: bool = True,
+        config: Optional[FitConfig] = None,
+    ) -> "DriftAdapter":
+        cfg = config or FitConfig(kind=kind, use_dsm=use_dsm)
+        if config is None:
+            cfg = dataclasses.replace(cfg, kind=kind, use_dsm=use_dsm)
+        result = fit_adapter(b_pairs, a_pairs, cfg)
+        return cls(
+            kind=result.kind,
+            params=result.params,
+            d_new=int(b_pairs.shape[1]),
+            d_old=int(a_pairs.shape[1]),
+            fit_info=result,
+        )
+
+    @classmethod
+    def identity(cls, d: int) -> "DriftAdapter":
+        """No-op adapter (the 'Misaligned' baseline wraps queries with this)."""
+        return cls(kind="identity", params={"core": {}}, d_new=d, d_old=d)
+
+    # -- application --------------------------------------------------------
+    def apply(self, queries: jax.Array, renormalize: bool = True) -> jax.Array:
+        """Map (N, d_new) query embeddings into the legacy (N, d_old) space."""
+        return A.adapter_apply(
+            self.kind, self.params, queries, renormalize=renormalize
+        )
+
+    def __call__(self, queries: jax.Array) -> jax.Array:
+        return self.apply(queries)
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def param_count(self) -> int:
+        return A.adapter_param_count(self.kind, self.params)
+
+    @property
+    def param_bytes(self) -> int:
+        return sum(
+            x.size * x.dtype.itemsize
+            for x in jax.tree_util.tree_leaves(self.params)
+        )
+
+    @property
+    def flops_per_query(self) -> int:
+        return A.adapter_flops_per_query(self.kind, self.params)
+
+    # -- persistence (adapters ship to every query router; <3 MB) ----------
+    def save(self, path: str) -> None:
+        save_pytree(
+            path,
+            self.params,
+            metadata={"kind": self.kind, "d_new": self.d_new, "d_old": self.d_old},
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "DriftAdapter":
+        arrays, meta = load_pytree(path)
+        params: dict = {}
+        for key, arr in arrays.items():
+            node = params
+            parts = key.split("/")
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = jnp.asarray(arr)
+        return cls(
+            kind=meta["kind"],
+            params=params,
+            d_new=int(meta["d_new"]),
+            d_old=int(meta["d_old"]),
+        )

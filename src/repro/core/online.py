@@ -1,0 +1,73 @@
+"""Continuous online adaptation (paper §5.6).
+
+Scenario: the corpus is lazily re-embedded in the background (e.g. 5 %/hour).
+The index becomes a mixed-state store (some rows f_old, some f_new). Keeping
+ARR high requires the adapter to track the evolving mixture — the paper
+reports ARR > 0.95 for 24 h with hourly refits vs decay to ~0.83 with a
+frozen T=0 adapter.
+
+``OnlineAdapterManager`` owns the refit loop: each tick it receives the pairs
+made newly available by the background re-embedder, appends them to a rolling
+buffer, refits (warm-start from the previous params for SGD-family adapters)
+and atomically swaps the serving adapter. The simulation driver lives in
+``benchmarks/online_adaptation.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import DriftAdapter
+from repro.core.trainer import FitConfig
+
+
+@dataclasses.dataclass
+class OnlineConfig:
+    kind: str = "mlp"
+    buffer_size: int = 50_000       # rolling pair buffer cap
+    refit_every_ticks: int = 1      # hourly in the paper's framing
+    max_epochs_per_refit: int = 10  # refits are cheap warm-started touch-ups
+    seed: int = 0
+
+
+class OnlineAdapterManager:
+    def __init__(self, d_new: int, d_old: int, config: OnlineConfig = OnlineConfig()):
+        self.config = config
+        self.d_new, self.d_old = d_new, d_old
+        self._buf_b: Optional[np.ndarray] = None
+        self._buf_a: Optional[np.ndarray] = None
+        self.adapter: Optional[DriftAdapter] = None
+        self.refits = 0
+        self._tick = 0
+
+    def observe_pairs(self, b_new: np.ndarray, a_old: np.ndarray) -> None:
+        """Append newly available ⟨f_new, f_old⟩ pairs to the rolling buffer."""
+        b_new = np.asarray(b_new, np.float32)
+        a_old = np.asarray(a_old, np.float32)
+        if self._buf_b is None:
+            self._buf_b, self._buf_a = b_new, a_old
+        else:
+            self._buf_b = np.concatenate([self._buf_b, b_new])[-self.config.buffer_size:]
+            self._buf_a = np.concatenate([self._buf_a, a_old])[-self.config.buffer_size:]
+
+    def tick(self) -> Optional[DriftAdapter]:
+        """Advance one tick; refit + swap if scheduled. Returns the new
+        adapter when a swap happened (atomic deploy), else None."""
+        self._tick += 1
+        if self._buf_b is None:
+            return None
+        if self._tick % self.config.refit_every_ticks != 0:
+            return None
+        cfg = FitConfig(
+            kind=self.config.kind,
+            max_epochs=self.config.max_epochs_per_refit,
+            seed=self.config.seed + self._tick,
+        )
+        self.adapter = DriftAdapter.fit(
+            jnp.asarray(self._buf_b), jnp.asarray(self._buf_a), config=cfg
+        )
+        self.refits += 1
+        return self.adapter

@@ -1,0 +1,217 @@
+"""Adapter fitting (paper §4 "Training Details for LA/MLP" + Appendix A.2).
+
+Hyperparameters follow the paper exactly: AdamW(lr=3e-4, wd=0.01), batch 256,
+≤50 epochs, early stopping on validation MSE with patience 5, MLP dropout 0.1,
+80/20 train/val split of the N_p pairs. OP is solved closed-form on all pairs.
+
+The epoch is a single ``lax.scan`` over shuffled minibatches, jitted once; the
+whole fit runs in seconds for N_p = 20k, d = 768 — matching the paper's
+"adapter fitting wall-clock time" efficiency metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adapters as A
+from repro.optim import adamw, apply_updates, EarlyStopping
+
+
+@dataclasses.dataclass(frozen=True)
+class FitConfig:
+    kind: str = "mlp"               # "op" | "la" | "mlp"
+    use_dsm: bool = True
+    rank: int = 64                  # LA rank
+    hidden: int = 256               # MLP hidden units
+    lr: float = 3e-4
+    weight_decay: float = 0.01
+    batch_size: int = 256
+    max_epochs: int = 50
+    patience: int = 5
+    dropout: float = 0.1            # MLP only
+    val_fraction: float = 0.2
+    seed: int = 0
+    # Fit DSM jointly for LA/MLP (paper default); closed-form post-hoc for OP.
+    # `dsm_posthoc_for_all` switches LA/MLP to the closed-form path as an
+    # ablation (EXPERIMENTS.md records both).
+    dsm_posthoc_for_all: bool = False
+    # BEYOND-PAPER: initialize the MLP residual path / LA factors from the
+    # closed-form Procrustes solution instead of identity / random. The paper
+    # trains LA/MLP from scratch (§4); warm-starting converges dramatically
+    # faster under severe drift (EXPERIMENTS.md §Perf ablation) while being
+    # a strict superset of the paper's parameterization.
+    procrustes_warm_start: bool = False
+
+
+@dataclasses.dataclass
+class FitResult:
+    kind: str
+    params: dict                    # {"core": ..., ["dsm": ...]}
+    train_mse: float
+    val_mse: float
+    epochs_run: int
+    fit_seconds: float
+    n_pairs: int
+
+
+def _mse(pred: jax.Array, target: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.sum(jnp.square(pred - target), axis=-1))
+
+
+def _loss_fn(kind: str, params: dict, b: jax.Array, a: jax.Array,
+             dropout_rate: float, key: Optional[jax.Array]) -> jax.Array:
+    pred = A.adapter_apply(
+        kind, params, b, renormalize=False,
+        dropout_rate=dropout_rate, dropout_key=key,
+    )
+    return _mse(pred, a)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("kind", "dropout", "batch_size", "lr", "weight_decay"),
+)
+def _train_epoch(
+    kind, params, opt_state, b_tr, a_tr, key, dropout, batch_size, lr,
+    weight_decay,
+):
+    """One epoch: shuffle, then ``lax.scan`` over minibatches."""
+    opt = adamw(lr=lr, weight_decay=weight_decay)
+    n = b_tr.shape[0]
+    perm_key, drop_key = jax.random.split(key)
+    perm = jax.random.permutation(perm_key, n)
+    b_sh, a_sh = b_tr[perm], a_tr[perm]
+
+    def step(carry, batch):
+        params, opt_state = carry
+        b, a, k = batch
+        loss, grads = jax.value_and_grad(
+            lambda p: _loss_fn(kind, p, b, a, dropout, k)
+        )(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return (params, opt_state), loss
+
+    num_batches = max(n // batch_size, 1)
+    used = num_batches * batch_size if n >= batch_size else n
+    bs = batch_size if n >= batch_size else n
+    b_batches = b_sh[:used].reshape(num_batches, bs, -1)
+    a_batches = a_sh[:used].reshape(num_batches, bs, -1)
+    drop_keys = jax.random.split(drop_key, num_batches)
+    (params, opt_state), losses = jax.lax.scan(
+        step, (params, opt_state), (b_batches, a_batches, drop_keys)
+    )
+    return params, opt_state, jnp.mean(losses)
+
+
+def fit_adapter(
+    b_pairs: jax.Array,
+    a_pairs: jax.Array,
+    config: FitConfig = FitConfig(),
+) -> FitResult:
+    """Fit an adapter on paired embeddings.
+
+    b_pairs: (N_p, d_new) new-model embeddings  (input of g)
+    a_pairs: (N_p, d_old) old-model embeddings  (target of g)
+    """
+    t0 = time.perf_counter()
+    b_pairs = jnp.asarray(b_pairs, jnp.float32)
+    a_pairs = jnp.asarray(a_pairs, jnp.float32)
+    n_p, d_new = b_pairs.shape
+    d_old = a_pairs.shape[1]
+    kind = config.kind
+
+    if kind == "identity":
+        params: dict = {"core": {}}
+        res = FitResult(kind, params, 0.0, 0.0, 0, 0.0, n_p)
+        return res
+
+    if kind == "op":
+        core = A.procrustes_fit(a_pairs, b_pairs)
+        params = {"core": core}
+        if config.use_dsm:
+            a_hat = A.procrustes_apply(core, b_pairs)
+            params["dsm"] = A.dsm_fit_posthoc(a_pairs, a_hat)
+        pred = A.adapter_apply(kind, params, b_pairs, renormalize=False)
+        mse = float(_mse(pred, a_pairs))
+        return FitResult(kind, params, mse, mse, 0, time.perf_counter() - t0, n_p)
+
+    # --- SGD-family adapters (LA / MLP) -----------------------------------
+    key = jax.random.PRNGKey(config.seed)
+    key, init_key = jax.random.split(key)
+    n_val = max(1, int(n_p * config.val_fraction))
+    split_key, key = jax.random.split(key)
+    perm = jax.random.permutation(split_key, n_p)
+    val_idx, tr_idx = perm[:n_val], perm[n_val:]
+    b_tr, a_tr = b_pairs[tr_idx], a_pairs[tr_idx]
+    b_val, a_val = b_pairs[val_idx], a_pairs[val_idx]
+
+    if kind == "la":
+        core = A.low_rank_init(init_key, d_new, d_old, config.rank)
+        if config.procrustes_warm_start:
+            # UVᵀ ≈ rank-r truncation of the Procrustes map (beyond-paper).
+            r_full = A.procrustes_fit(a_pairs, b_pairs)["R"]
+            u, s, vt = jnp.linalg.svd(r_full, full_matrices=False)
+            rr = config.rank
+            core["U"] = u[:, :rr] * jnp.sqrt(s[:rr])[None, :]
+            core["V"] = (vt[:rr, :].T) * jnp.sqrt(s[:rr])[None, :]
+        dropout = 0.0
+    elif kind == "mlp":
+        residual_init = None
+        if d_new != d_old or config.procrustes_warm_start:
+            residual_init = A.procrustes_fit(a_pairs, b_pairs)["R"]
+        core = A.mlp_init(init_key, d_new, d_old, config.hidden, residual_init)
+        dropout = config.dropout
+    else:
+        raise ValueError(f"unknown adapter kind {kind!r}")
+
+    params = {"core": core}
+    if config.use_dsm and not config.dsm_posthoc_for_all:
+        params["dsm"] = A.dsm_init(d_old)  # learned jointly (paper §3)
+
+    opt = adamw(lr=config.lr, weight_decay=config.weight_decay)
+    opt_state = opt.init(params)
+
+    val_loss_fn = jax.jit(
+        lambda p: _loss_fn(kind, p, b_val, a_val, 0.0, None)
+    )
+
+    stopper = EarlyStopping(patience=config.patience)
+    best_params = params
+    epochs_run = 0
+    train_mse = float("nan")
+    for epoch in range(config.max_epochs):
+        key, ekey = jax.random.split(key)
+        params, opt_state, train_loss = _train_epoch(
+            kind, params, opt_state, b_tr, a_tr, ekey, dropout,
+            config.batch_size, config.lr, config.weight_decay,
+        )
+        val_loss = float(val_loss_fn(params))
+        train_mse = float(train_loss)
+        epochs_run = epoch + 1
+        if val_loss <= stopper.best:
+            best_params = params
+        if stopper.update(val_loss, epoch):
+            break
+
+    params = best_params
+    if config.use_dsm and config.dsm_posthoc_for_all:
+        a_hat = A.adapter_apply(kind, params, b_pairs, renormalize=False)
+        params = dict(params)
+        params["dsm"] = A.dsm_fit_posthoc(a_pairs, a_hat)
+
+    val_mse = float(val_loss_fn(params))
+    return FitResult(
+        kind=kind,
+        params=params,
+        train_mse=train_mse,
+        val_mse=val_mse,
+        epochs_run=epochs_run,
+        fit_seconds=time.perf_counter() - t0,
+        n_pairs=n_p,
+    )

@@ -1,0 +1,32 @@
+from repro.data.synthetic import (
+    CorpusConfig,
+    TokenCorpusConfig,
+    make_corpus,
+    make_queries,
+    token_batches,
+)
+from repro.data.drift import (
+    DriftConfig,
+    DriftTransform,
+    IMAGE_CLIP,
+    MILD_TEXT,
+    SEVERE_GLOVE,
+    make_drift,
+)
+from repro.data.pairs import make_pairs, sample_pair_indices
+
+__all__ = [
+    "CorpusConfig",
+    "TokenCorpusConfig",
+    "make_corpus",
+    "make_queries",
+    "token_batches",
+    "DriftConfig",
+    "DriftTransform",
+    "IMAGE_CLIP",
+    "MILD_TEXT",
+    "SEVERE_GLOVE",
+    "make_drift",
+    "make_pairs",
+    "sample_pair_indices",
+]

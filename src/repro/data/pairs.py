@@ -1,0 +1,34 @@
+"""Paired-embedding sampling (paper §4 "Training Pairs and Split").
+
+N_p items are sampled from the database corpus (never from the query set);
+for each we produce ⟨b = f_new(d), a = f_old(d)⟩. With the drift simulator,
+a = corpus row (legacy space) and b = T*(a) (upgraded space).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.drift import DriftTransform
+
+
+def sample_pair_indices(
+    key: jax.Array, corpus_size: int, n_pairs: int
+) -> jax.Array:
+    return jax.random.choice(key, corpus_size, (n_pairs,), replace=False)
+
+
+def make_pairs(
+    key: jax.Array,
+    corpus_old: jax.Array,
+    corpus_new: jax.Array,
+    n_pairs: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (b_pairs (N_p, d_new), a_pairs (N_p, d_old), indices).
+
+    b/a are the SAME rows the database holds in each space — f_new(d_j) in
+    the pair set is bit-identical to the item's would-be re-embedding,
+    matching the paper's pairing protocol.
+    """
+    idx = sample_pair_indices(key, corpus_old.shape[0], n_pairs)
+    return corpus_new[idx], corpus_old[idx], idx

@@ -1,0 +1,3 @@
+from repro.kernels.adapter_apply.ops import adapter_apply_fused
+
+__all__ = ["adapter_apply_fused"]

@@ -1,0 +1,75 @@
+"""Jitted wrapper: folds DriftAdapter params into the fused Pallas kernel.
+
+OP and LA collapse to one (d_old, d_new) matrix + bias before launch (UVᵀ is
+precomposed — at query time low-rank saves FLOPs only below r < d/2, and the
+fused single-matmul form is what a production router deploys); MLP keeps its
+two-matmul structure with the residual path as an explicit P (identity when
+square).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.adapter_apply.kernel import (
+    linear_adapter_pallas,
+    mlp_adapter_pallas,
+)
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_rows(x, tile):
+    q = x.shape[0]
+    pad = -q % tile
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)])
+    return x, q
+
+
+@partial(jax.jit, static_argnames=("kind", "renormalize", "tile", "interpret"))
+def adapter_apply_fused(
+    kind: str,
+    params: dict,
+    x: jax.Array,
+    renormalize: bool = True,
+    tile: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _is_cpu()
+    core = params.get("core", params)
+    d_new = x.shape[1]
+    xp, q = _pad_rows(x.astype(jnp.float32), tile)
+
+    if kind == "mlp":
+        d_old = core["W2"].shape[0]
+        p = core.get("P")
+        if p is None:
+            assert d_new == d_old
+            p = jnp.eye(d_old, dtype=jnp.float32)
+        s = params.get("dsm", {}).get("s", jnp.ones((d_old,), jnp.float32))
+        out = mlp_adapter_pallas(
+            xp, core["W1"], core["b1"], core["W2"], core["b2"], p, s,
+            renormalize=renormalize, tile=tile, interpret=interpret,
+        )
+        return out[:q]
+
+    if kind == "op":
+        m = core["R"]
+        t = jnp.zeros((m.shape[0],), jnp.float32)
+    elif kind == "la":
+        m = core["U"] @ core["V"].T
+        t = core["t"]
+    else:
+        raise ValueError(f"fused adapter: unsupported kind {kind!r}")
+    d_old = m.shape[0]
+    s = params.get("dsm", {}).get("s", jnp.ones((d_old,), jnp.float32))
+    out = linear_adapter_pallas(
+        xp, m, t, s, renormalize=renormalize, tile=tile, interpret=interpret
+    )
+    return out[:q]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused adapter kernel — delegates to the core
+library so the kernel is validated against the exact production math."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.adapters import adapter_apply
+
+
+def adapter_apply_ref(
+    kind: str, params: dict, x: jax.Array, renormalize: bool = True
+) -> jax.Array:
+    return adapter_apply(kind, params, x, renormalize=renormalize)

@@ -1,0 +1,3 @@
+from repro.kernels.ssd_scan.ops import ssd_scan_fused
+
+__all__ = ["ssd_scan_fused"]

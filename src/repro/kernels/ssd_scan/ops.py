@@ -1,0 +1,64 @@
+"""Jitted wrapper: (B, L, H, P) model layout → (BH, C, Q, ...) kernel layout.
+
+B/C group tensors are expanded to per-head (the kernel processes one head
+per grid row; groups replicate their B/C across member heads — same math as
+the grouped einsums in models/mamba2.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_fused(
+    x: jax.Array,       # (B, L, H, P)
+    dt: jax.Array,      # (B, L, H)
+    a_neg: jax.Array,   # (H,)
+    b_in: jax.Array,    # (B, L, G, N)
+    c_in: jax.Array,    # (B, L, G, N)
+    d_skip: jax.Array,  # (H,)
+    chunk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _is_cpu()
+    bsz, l, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    r = h // g
+    chunk = min(chunk, l)
+    assert l % chunk == 0
+    nc = l // chunk
+
+    # (B, L, H, P) -> (B, H, C, Q, P) -> (BH, C, Q, P)
+    xk = x.transpose(0, 2, 1, 3).reshape(bsz * h, nc, chunk, p)
+    dtk = dt.transpose(0, 2, 1).reshape(bsz * h, nc, chunk)
+    bk = (
+        jnp.repeat(b_in, r, axis=2)
+        .transpose(0, 2, 1, 3)
+        .reshape(bsz * h, nc, chunk, n)
+    )
+    ck = (
+        jnp.repeat(c_in, r, axis=2)
+        .transpose(0, 2, 1, 3)
+        .reshape(bsz * h, nc, chunk, n)
+    )
+    ak = jnp.tile(a_neg, bsz).reshape(bsz * h, 1).astype(jnp.float32)
+    dk = jnp.tile(d_skip, bsz).reshape(bsz * h, 1).astype(jnp.float32)
+
+    y = ssd_scan_pallas(
+        xk.astype(jnp.float32), dtk.astype(jnp.float32), ak,
+        bk.astype(jnp.float32), ck.astype(jnp.float32), dk,
+        interpret=interpret,
+    )                                                # (BH, C, Q, P)
+    return (
+        y.reshape(bsz, h, l, p).transpose(0, 2, 1, 3)
+    )

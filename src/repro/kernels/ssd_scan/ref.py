@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the SSD scan kernel — the production chunked
+implementation plus the D-skip, reshaped to the kernel's (BH, ...) layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mamba2 import ssd_chunked
+
+
+def ssd_scan_ref(
+    x: jax.Array,      # (B, L, H, P)
+    dt: jax.Array,     # (B, L, H)
+    a_neg: jax.Array,  # (H,)
+    b_in: jax.Array,   # (B, L, G, N)
+    c_in: jax.Array,   # (B, L, G, N)
+    d_skip: jax.Array, # (H,)
+    chunk: int,
+) -> jax.Array:
+    y, _ = ssd_chunked(x, dt, a_neg, b_in, c_in, chunk=chunk)
+    return y + d_skip[:, None] * x

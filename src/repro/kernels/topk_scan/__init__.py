@@ -1,0 +1,3 @@
+from repro.kernels.topk_scan.ops import topk_scan
+
+__all__ = ["topk_scan"]

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: fused similarity matmul + streaming top-k corpus scan.
+
+The query-path hot loop of the TPU-native vector database (DESIGN.md §2):
+for each query tile the corpus streams HBM→VMEM once per block; each grid
+step does one (Q_TILE, d)×(d, BLOCK_ROWS) MXU matmul and folds the block's
+scores into a running top-k kept in VMEM scratch — the (Q, N) score matrix
+never exists anywhere.
+
+Grid: (query_tiles, corpus_blocks); the corpus axis is sequential
+("arbitrary") so the scratch carry persists across it; query tiles are
+independent ("parallel").
+
+The in-kernel top-k update is argmax-free (iota + min-reduce one-hot
+selection) so every op maps onto the VPU; k is a static python int, the
+slot loop unrolls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = float(jnp.finfo(jnp.float32).min)
+
+
+def _fold_block(scores, ids, best_s, best_i, k: int):
+    """Merge (Qt, C) block scores+ids into carried (Qt, k). Returns updated
+    (best_s, best_i) as values. Vectorized, no argmax/gather."""
+    merged_s = jnp.concatenate([best_s, scores], axis=1)   # (Qt, k+C)
+    merged_i = jnp.concatenate([best_i, ids], axis=1)
+    width = merged_s.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, merged_s.shape, 1)
+    out_s = []
+    out_i = []
+    for _slot in range(k):
+        m = jnp.max(merged_s, axis=1)                      # (Qt,)
+        hit = merged_s == m[:, None]
+        pos = jnp.min(jnp.where(hit, iota, width), axis=1) # first max pos
+        sel = iota == pos[:, None]                         # one-hot (Qt, k+C)
+        picked_i = jnp.sum(jnp.where(sel, merged_i, 0), axis=1)
+        out_s.append(m)
+        out_i.append(picked_i)
+        merged_s = jnp.where(sel, NEG, merged_s)
+    return jnp.stack(out_s, axis=1), jnp.stack(out_i, axis=1)
+
+
+def _topk_kernel(
+    q_ref,          # (Qt, d) VMEM
+    c_ref,          # (C, d) VMEM — current corpus block
+    out_s_ref,      # (Qt, k)
+    out_i_ref,      # (Qt, k)
+    best_s,         # scratch (Qt, k) f32
+    best_i,         # scratch (Qt, k) i32
+    *,
+    k: int,
+    block_rows: int,
+    n_valid: int,
+):
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_s[...] = jnp.full_like(best_s[...], NEG)
+        best_i[...] = jnp.full_like(best_i[...], -1)
+
+    scores = jnp.dot(
+        q_ref[...], c_ref[...].T, preferred_element_type=jnp.float32
+    )                                                      # (Qt, C)
+    row_ids = j * block_rows + jax.lax.broadcasted_iota(
+        jnp.int32, scores.shape, 1
+    )
+    scores = jnp.where(row_ids < n_valid, scores, NEG)
+    new_s, new_i = _fold_block(scores, row_ids, best_s[...], best_i[...], k)
+    best_s[...] = new_s
+    best_i[...] = new_i
+
+    @pl.when(j == nb - 1)
+    def _emit():
+        out_s_ref[...] = best_s[...]
+        out_i_ref[...] = best_i[...]
+
+
+def topk_scan_pallas(
+    corpus: jax.Array,      # (N, d) — padded to block_rows multiple upstream
+    queries: jax.Array,     # (Q, d) — padded to q_tile multiple upstream
+    *,
+    k: int,
+    n_valid: int,
+    q_tile: int = 128,
+    block_rows: int = 1024,
+    interpret: bool = False,
+):
+    n, d = corpus.shape
+    q = queries.shape[0]
+    assert n % block_rows == 0 and q % q_tile == 0
+    grid = (q // q_tile, n // block_rows)
+    kernel = functools.partial(
+        _topk_kernel, k=k, block_rows=block_rows, n_valid=n_valid
+    )
+    out_s, out_i = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_tile, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((q_tile, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((q_tile, k), jnp.float32),
+            pltpu.VMEM((q_tile, k), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(queries, corpus)
+    return out_s, out_i

@@ -1,0 +1,48 @@
+"""Jitted public wrapper for the topk_scan Pallas kernel: pads inputs to
+tile multiples, dispatches, strips padding. interpret=True on CPU (this
+container); compiled Mosaic on real TPU."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_scan.kernel import topk_scan_pallas
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(
+    jax.jit,
+    static_argnames=("k", "q_tile", "block_rows", "interpret"),
+)
+def topk_scan(
+    corpus: jax.Array,
+    queries: jax.Array,
+    k: int = 10,
+    q_tile: int = 128,
+    block_rows: int = 1024,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    if interpret is None:
+        interpret = _is_cpu()
+    n, d = corpus.shape
+    q = queries.shape[0]
+    n_pad = -n % block_rows
+    q_pad = -q % q_tile
+    if n_pad:
+        corpus = jnp.concatenate(
+            [corpus, jnp.zeros((n_pad, d), corpus.dtype)], axis=0
+        )
+    if q_pad:
+        queries = jnp.concatenate(
+            [queries, jnp.zeros((q_pad, d), queries.dtype)], axis=0
+        )
+    out_s, out_i = topk_scan_pallas(
+        corpus, queries, k=k, n_valid=n,
+        q_tile=q_tile, block_rows=block_rows, interpret=interpret,
+    )
+    return out_s[:q], out_i[:q]

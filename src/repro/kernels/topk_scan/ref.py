@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the topk_scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_scan_ref(
+    corpus: jax.Array, queries: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Exact top-k inner-product search, materializing the full score
+    matrix. Ground truth for shape/dtype sweeps against the kernel.
+
+    Accumulates in f32 (preferred_element_type) to match the kernel's MXU
+    semantics for low-precision inputs."""
+    scores = jnp.dot(queries, corpus.T, preferred_element_type=jnp.float32)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    return top_s, top_i.astype(jnp.int32)

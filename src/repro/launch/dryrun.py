@@ -1,0 +1,504 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh)
+combination lowers, compiles, and fits — without any real hardware.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k [--multi-pod] [--all] [--out experiments/dryrun]
+
+For each combo this lowers the right step function (train_step for
+training shapes, encode for prefill, decode_step for decode shapes) against
+ShapeDtypeStruct inputs on the 16×16 (single-pod) or 2×16×16 (multi-pod)
+mesh, compiles it, and records memory_analysis / cost_analysis / collective
+bytes for EXPERIMENTS.md §Dry-run and §Roofline.
+
+The two os.environ lines above MUST run before any jax import — jax locks
+the device count on first init (see the module docstring requirement).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_production_mesh, n_chips
+from repro.launch.roofline import (
+    model_flops_estimate,
+    parse_collective_bytes,
+    roofline_terms,
+)
+from repro.launch.shardings import batch_axes, param_shardings, param_pspecs
+from repro.models import init_model
+from repro.models.model import (
+    DecodeCache,
+    decode_step,
+    encode,
+    hybrid_layout,
+    init_cache,
+)
+from repro.models.encdec import (
+    EncDecCache,
+    encdec_decode_step,
+    encode_audio,
+)
+from repro.optim.optimizers import AdamWState
+from repro.train.step import TrainState, make_optimizer, make_train_step
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+CACHE_DTYPE = jnp.bfloat16
+
+
+def dryrun_config(arch: str, shape_name: Optional[str] = None) -> ModelConfig:
+    """Full config in production numerics, with shape-specific variants."""
+    cfg = get_config(
+        arch,
+        reduced=False,
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+    )
+    if arch == "qwen3-0.6b" and shape_name == "long_500k":
+        # long_500k runs via the documented SWA serving variant (DESIGN.md §4)
+        from repro.configs.qwen3_0_6b import SWA_VARIANT
+
+        cfg = dataclasses.replace(
+            SWA_VARIANT, param_dtype="bfloat16", compute_dtype="bfloat16"
+        )
+    return cfg
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k":
+        long_cfg = cfg
+        if cfg.arch_id == "qwen3-0.6b":
+            return True, "runs via swa serving variant"
+        if not cfg.supports_long_decode:
+            return False, (
+                "pure full-attention architecture — long_500k skipped per "
+                "brief (no sub-quadratic variant claimed by source)"
+            )
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shard(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def build_lowering_inputs(cfg: ModelConfig, shape_name: str, mesh):
+    """Returns (fn, arg_specs, arg_shardings) ready for jit().lower()."""
+    info = SHAPES[shape_name]
+    s, b = info["seq_len"], info["global_batch"]
+    ba = batch_axes(mesh)
+
+    params_shape = jax.eval_shape(
+        lambda k: init_model(k, cfg), _sds((2,), jnp.uint32)
+    )
+    p_shard = param_shardings(params_shape, mesh, cfg)
+    p_spec_tree = param_pspecs(params_shape, mesh, cfg)
+
+    if info["kind"] == "train":
+        step_fn = make_train_step(cfg)
+        opt_shape = jax.eval_shape(
+            lambda p: make_optimizer(cfg).init(p), params_shape
+        )
+        opt_shard = AdamWState(
+            step=_shard(mesh, P()), mu=p_shard, nu=p_shard
+        )
+        state_spec = TrainState(
+            params=params_shape,
+            opt_state=opt_shape,
+            step=_sds((), jnp.int32),
+        )
+        state_shard = TrainState(
+            params=p_shard, opt_state=opt_shard, step=_shard(mesh, P())
+        )
+        batch_spec: dict[str, Any] = {"tokens": _sds((b, s), jnp.int32)}
+        batch_shard: dict[str, Any] = {"tokens": _shard(mesh, P(ba, None))}
+        if cfg.family == "vlm":
+            batch_spec["frontend"] = _sds(
+                (b, cfg.n_frontend_tokens, cfg.d_frontend), jnp.bfloat16
+            )
+            batch_shard["frontend"] = _shard(mesh, P(ba, None, None))
+        if cfg.is_encoder_decoder:
+            batch_spec["frontend"] = _sds(
+                (b, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16
+            )
+            batch_shard["frontend"] = _shard(mesh, P(ba, None, None))
+        return step_fn, (state_spec, batch_spec), (state_shard, batch_shard)
+
+    if info["kind"] == "prefill":
+        if cfg.is_encoder_decoder:
+            fn = lambda p, frames: encode_audio(p, cfg, frames)
+            args = (params_shape, _sds((b, s, cfg.d_model), jnp.bfloat16))
+            shards = (p_shard, _shard(mesh, P(ba, None, None)))
+            return fn, args, shards
+        if cfg.family == "vlm":
+            fn = lambda p, tok, fe: encode(p, cfg, tok, fe)
+            args = (
+                params_shape,
+                _sds((b, s), jnp.int32),
+                _sds((b, cfg.n_frontend_tokens, cfg.d_frontend), jnp.bfloat16),
+            )
+            shards = (
+                p_shard,
+                _shard(mesh, P(ba, None)),
+                _shard(mesh, P(ba, None, None)),
+            )
+            return fn, args, shards
+        fn = lambda p, tok: encode(p, cfg, tok)
+        args = (params_shape, _sds((b, s), jnp.int32))
+        shards = (p_shard, _shard(mesh, P(ba, None)))
+        return fn, args, shards
+
+    # ---- decode ----------------------------------------------------------
+    long = shape_name == "long_500k"
+    batch_spec_axis = None if long else ba
+    all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    seq_axis = all_axes if long else "model"
+
+    if cfg.is_encoder_decoder:
+        cache_shape = jax.eval_shape(
+            lambda p: _encdec_cache_shapes(p, cfg, b, s), params_shape
+        )
+        cache_shard = EncDecCache(
+            pos=_shard(mesh, P(None)),
+            self_k=_shard(mesh, P(None, batch_spec_axis, seq_axis, None, None)),
+            self_v=_shard(mesh, P(None, batch_spec_axis, seq_axis, None, None)),
+            cross_k=_shard(mesh, P(None, batch_spec_axis, None, None, None)),
+            cross_v=_shard(mesh, P(None, batch_spec_axis, None, None, None)),
+        )
+        fn = lambda p, c, t: encdec_decode_step(p, cfg, c, t)
+        tok = _sds((b, 1), jnp.int32)
+        tok_sh = _shard(mesh, P(batch_spec_axis, None))
+        return fn, (params_shape, cache_shape, tok), (p_shard, cache_shard, tok_sh)
+
+    run_cfg = cfg
+    cache_shape = jax.eval_shape(
+        lambda: init_cache(run_cfg, b, s, CACHE_DTYPE)
+    )
+    h_axis = "model"
+
+    def fit(axis, dim):
+        from repro.launch.shardings import _axis_size
+
+        if axis is None:
+            return None
+        return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+    kv_spec = (
+        P(None, batch_spec_axis,
+          fit(seq_axis, s), None, None)
+        if cache_shape.k is not None
+        else None
+    )
+    conv_spec = state_spec_ = None
+    if cache_shape.conv is not None:
+        lead = len(cache_shape.conv.shape) - 3
+        conv_spec = P(*((None,) * lead), batch_spec_axis, None, None)
+        n_heads_ssm = cache_shape.state.shape[-3]
+        state_spec_ = P(
+            *((None,) * lead), batch_spec_axis,
+            fit(h_axis, n_heads_ssm), None, None,
+        )
+    cache_shard = DecodeCache(
+        pos=_shard(mesh, P(None)),
+        k=_shard(mesh, kv_spec) if kv_spec is not None else None,
+        v=_shard(mesh, kv_spec) if kv_spec is not None else None,
+        conv=_shard(mesh, conv_spec) if conv_spec is not None else None,
+        state=_shard(mesh, state_spec_) if state_spec_ is not None else None,
+    )
+    fn = lambda p, c, t: decode_step(p, run_cfg, c, t)
+    tok = _sds((b, 1), jnp.int32)
+    tok_sh = _shard(mesh, P(batch_spec_axis, None))
+    return fn, (params_shape, cache_shape, tok), (p_shard, cache_shard, tok_sh)
+
+
+def _encdec_cache_shapes(params_shape, cfg, b, s):
+    g, dh = cfg.n_kv_heads, cfg.head_dim
+    f = cfg.n_frontend_tokens
+    return EncDecCache(
+        pos=jnp.zeros((b,), jnp.int32),
+        self_k=jnp.zeros((cfg.n_layers, b, s, g, dh), CACHE_DTYPE),
+        self_v=jnp.zeros((cfg.n_layers, b, s, g, dh), CACHE_DTYPE),
+        cross_k=jnp.zeros((cfg.n_layers, b, f, g, dh), CACHE_DTYPE),
+        cross_v=jnp.zeros((cfg.n_layers, b, f, g, dh), CACHE_DTYPE),
+    )
+
+
+def _probe_depths(cfg: ModelConfig):
+    """Two small depths + a setter; cost is linear in depth (tail + L·layer)."""
+    if cfg.family == "hybrid":
+        unit = cfg.hybrid_period + 1
+        depths = (unit, 2 * unit)
+        setter = lambda c, L: dataclasses.replace(c, n_layers=L)
+    elif cfg.is_encoder_decoder:
+        depths = (2, 4)
+        setter = lambda c, L: dataclasses.replace(
+            c, n_layers=L, n_encoder_layers=L
+        )
+    else:
+        depths = (2, 4)
+        setter = lambda c, L: dataclasses.replace(c, n_layers=L)
+    return depths, setter
+
+
+def probe_costs(cfg: ModelConfig, shape_name: str, mesh) -> dict:
+    """Loop-corrected per-chip costs: probe-mode lowering (all scans
+    unrolled) at two depths, linear extrapolation to the full depth."""
+    from repro.models.probe import probe_mode
+
+    info = SHAPES[shape_name]
+    tokens = info["global_batch"] * info["seq_len"]
+    depths, set_depth = _probe_depths(cfg)
+    samples = {}
+    for L in depths:
+        pcfg = set_depth(cfg, L)
+        pcfg = dataclasses.replace(
+            pcfg, loss_chunk=max(pcfg.loss_chunk, tokens // 8)
+        )
+        with probe_mode():
+            fn, args, shardings = build_lowering_inputs(pcfg, shape_name, mesh)
+            with mesh:
+                compiled = (
+                    jax.jit(fn, in_shardings=shardings).lower(*args).compile()
+                )
+        cost = compiled.cost_analysis() or {}
+        coll = parse_collective_bytes(compiled.as_text())
+        samples[L] = (
+            float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(sum(coll.values())),
+            coll,
+        )
+    l1, l2 = depths
+    full = cfg.n_layers
+
+    def extrapolate(i):
+        c1, c2 = samples[l1][i], samples[l2][i]
+        per_layer = (c2 - c1) / (l2 - l1)
+        return max(c1 + per_layer * (full - l1), 0.0)
+
+    coll_kinds = {
+        k: max(
+            samples[l1][3][k]
+            + (samples[l2][3][k] - samples[l1][3][k]) / (l2 - l1) * (full - l1),
+            0.0,
+        )
+        for k in samples[l1][3]
+    }
+    return {
+        "flops": extrapolate(0),
+        "bytes_accessed": extrapolate(1),
+        "collective_total": extrapolate(2),
+        "collective_bytes": coll_kinds,
+        "probe_depths": list(depths),
+        "note": "per-chip costs; scans unrolled; depth-extrapolated",
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            probe: bool = True, opt: bool = False) -> dict:
+    """opt=True applies the §Perf optimization bundle (EXPERIMENTS.md):
+    activation-sharding constraint at the embedding (fixes the GSPMD
+    embed-gather replication, 14-16× attention compute) + repeat_kv full-
+    head TP where n_heads divides the model axis."""
+    from contextlib import nullcontext
+
+    from repro.models.probe import activation_sharding
+
+    cfg = dryrun_config(arch, shape_name)
+    ok, reason = shape_applicable(cfg, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result: dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": "opt" if opt else "baseline",
+    }
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            fname = f"{arch}__{shape_name}__{mesh_name}.json"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                json.dump(result, f, indent=2)
+        return result
+
+    t0 = time.perf_counter()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        if opt:
+            if cfg.n_heads and cfg.n_heads % mesh.shape["model"] == 0:
+                cfg = dataclasses.replace(cfg, repeat_kv_for_tp=True)
+            act_ctx = activation_sharding(
+                batch_axes(mesh), model_size=mesh.shape["model"],
+                # weight-gathering is an inference-shape optimization
+                # (§Perf: catastrophic under backprop for big MoE)
+                gather_weights=SHAPES[shape_name]["kind"] != "train",
+            )
+        else:
+            act_ctx = nullcontext()
+        fn, args, shardings = build_lowering_inputs(cfg, shape_name, mesh)
+        with act_ctx, mesh:
+            jitted = jax.jit(fn, in_shardings=shardings)
+            lowered = jitted.lower(*args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+        chips = n_chips(mesh)
+        flops = float(cost.get("flops", 0.0)) if cost else 0.0
+        bytes_acc = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+        coll_total = float(sum(coll.values()))
+        info = SHAPES[shape_name]
+        n_tokens = (
+            info["global_batch"] * info["seq_len"]
+            if info["kind"] != "decode"
+            else info["global_batch"]
+        )
+        mflops = model_flops_estimate(
+            cfg, n_tokens, training=info["kind"] == "train"
+        )
+        result.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            raw_cost_analysis={  # per-partition, while-bodies counted ONCE
+                "flops": flops,
+                "bytes_accessed": bytes_acc,
+                "collective_bytes": coll,
+            },
+            model_flops=mflops,
+            memory_analysis=_mem_dict(mem),
+            n_chips=chips,
+        )
+        if probe:
+            # loop-corrected per-chip costs (scans unrolled + depth-
+            # extrapolated) — the numbers §Roofline uses
+            with act_ctx:
+                pc = probe_costs(cfg, shape_name, mesh)
+            terms = roofline_terms(
+                pc["flops"], pc["bytes_accessed"], pc["collective_total"],
+                n_chips=1,  # probe costs are already per-chip
+            )
+            terms["n_chips"] = chips
+            result.update(
+                probe_cost=pc,
+                roofline=terms,
+                useful_flops_ratio=(
+                    mflops / (pc["flops"] * chips) if pc["flops"] else None
+                ),
+            )
+        else:
+            result["roofline"] = roofline_terms(flops, bytes_acc, coll_total, 1)
+    except Exception as e:  # noqa: BLE001 — dry-run reports failures as data
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "__opt" if opt else ""
+        fname = f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=2, default=str)
+    return result
+
+
+def _mem_dict(mem) -> Optional[dict]:
+    if mem is None:
+        return None
+    keys = (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+    )
+    return {k: getattr(mem, k, None) for k in keys}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all arch × shape")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the loop-corrected cost probe")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip combos whose JSON artifact already exists")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the §Perf optimization bundle")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                suffix = "__opt" if args.opt else ""
+                fname = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_name}{suffix}.json"
+                )
+                if args.skip_existing and os.path.exists(fname):
+                    with open(fname) as fh:
+                        prev = json.load(fh)
+                    if prev.get("status") in ("ok", "skipped"):
+                        rows.append(prev)
+                        print(f"[cached ] {arch:24s} {shape:12s} "
+                              f"{mesh_name:8s}", flush=True)
+                        continue
+                r = run_one(arch, shape, mp, args.out,
+                            probe=not args.no_probe, opt=args.opt)
+                rows.append(r)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    rt = r["roofline"]
+                    extra = (
+                        f"compute={rt['compute_s']:.3e}s "
+                        f"mem={rt['memory_s']:.3e}s "
+                        f"coll={rt['collective_s']:.3e}s "
+                        f"dom={rt['dominant']} "
+                        f"compile={r['compile_s']:.1f}s"
+                    )
+                elif status == "error":
+                    extra = r["error"][:200]
+                else:
+                    extra = r["reason"][:80]
+                print(f"[{status:7s}] {arch:24s} {shape:12s} "
+                      f"{r['mesh']:8s} {extra}", flush=True)
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skipped" for r in rows)
+    n_err = sum(r["status"] == "error" for r in rows)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh construction (DESIGN.md §6).
+
+Target hardware: TPU v5e pods — 16×16 = 256 chips per pod, 2 pods = 512
+chips multi-pod. A FUNCTION (not a module constant) so importing this module
+never touches jax device state — smoke tests and benches see 1 CPU device;
+only dryrun.py (which sets XLA_FLAGS first) sees 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples on CPU)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The batch/corpus sharding axes for this mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def n_chips(mesh) -> int:
+    total = 1
+    for s in mesh.devices.shape:
+        total *= s
+    return total

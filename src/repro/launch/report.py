@@ -1,0 +1,146 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSON
+artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def _fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}µs"
+
+
+def _fmt_bytes(x) -> str:
+    if x is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def load_rows(d: str, include_variants: bool = False) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        if not include_variants and "__opt" in os.path.basename(f):
+            continue  # §Perf variants live in their own comparison
+        with open(f) as fh:
+            r = json.load(fh)
+        if "mesh" in r and "arch" in r:
+            rows.append(r)
+    return rows
+
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def roofline_table(rows: list[dict], mesh: str = "16x16") -> str:
+    out = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful-FLOPs ratio | args/chip | compile |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    rows = [r for r in rows if r.get("mesh") == mesh]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |"
+            )
+            continue
+        t = r["roofline"]
+        mem = (r.get("memory_analysis") or {})
+        ratio = r.get("useful_flops_ratio")
+        out.append(
+            "| {arch} | {shape} | {c} | {m} | {k} | {dom} | {ur} | {args} | {comp:.0f}s |".format(
+                arch=r["arch"], shape=r["shape"],
+                c=_fmt_s(t["compute_s"]), m=_fmt_s(t["memory_s"]),
+                k=_fmt_s(t["collective_s"]),
+                dom=t["dominant"].replace("_s", ""),
+                ur=f"{ratio:.3f}" if ratio else "-",
+                args=_fmt_bytes(mem.get("argument_size_in_bytes")),
+                comp=r.get("compile_s", 0),
+            )
+        )
+    return "\n".join(out)
+
+
+def summary(rows: list[dict]) -> str:
+    by = {}
+    for r in rows:
+        by.setdefault(r["mesh"], {"ok": 0, "skipped": 0, "error": 0})
+        by[r["mesh"]][r["status"]] += 1
+    lines = []
+    for mesh, c in sorted(by.items()):
+        lines.append(
+            f"mesh {mesh}: {c['ok']} ok, {c['skipped']} skipped, "
+            f"{c['error']} errors"
+        )
+    return "\n".join(lines)
+
+
+def compare_table(d: str) -> str:
+    """Baseline vs --opt variants (§Perf) for the pairs that have both."""
+    import json as _json
+
+    out = [
+        "| arch × shape | term | baseline | optimized | × |",
+        "|---|---|---|---|---|",
+    ]
+    for f in sorted(glob.glob(os.path.join(d, "*__opt.json"))):
+        base_f = f.replace("__opt.json", ".json")
+        if not os.path.exists(base_f):
+            continue
+        with open(f) as fh:
+            o = _json.load(fh)
+        with open(base_f) as fh:
+            b = _json.load(fh)
+        if o.get("status") != "ok" or b.get("status") != "ok":
+            continue
+        pair = f"{o['arch']} × {o['shape']}"
+        for term in ("compute_s", "memory_s", "collective_s"):
+            bt, ot = b["roofline"][term], o["roofline"][term]
+            ratio = bt / ot if ot else float("inf")
+            mark = " **(dominant)**" if b["roofline"]["dominant"] == term else ""
+            out.append(
+                f"| {pair} | {term.replace('_s','')}{mark} | "
+                f"{_fmt_s(bt)} | {_fmt_s(ot)} | {ratio:.1f} |"
+            )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--compare", action="store_true",
+                    help="baseline vs --opt §Perf comparison table")
+    args = ap.parse_args()
+    if args.compare:
+        print(compare_table(args.dir))
+        return
+    rows = load_rows(args.dir)
+    print(summary(rows))
+    print()
+    print(roofline_table(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

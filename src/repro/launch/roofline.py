@@ -1,0 +1,90 @@
+"""Roofline-term derivation from compiled dry-run artifacts (DESIGN.md §7).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (chips × 197e12)        # bf16 MXU peak, v5e
+    memory     = HLO_bytes / (chips × 819e9)         # HBM bandwidth, v5e
+    collective = Σ collective operand bytes / (chips × 50e9)   # ICI/link
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are NOT
+in cost_analysis, so we parse the optimized HLO text and sum the output
+shapes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (all-reduce counted 2× — reduce + broadcast phases).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip, TPU v5e
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes per collective kind from optimized HLO."""
+    out: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.lstrip()
+        for coll in _COLLECTIVES:
+            # match the op use site: `%x = TYPE[shape]{layout} all-gather(`
+            if f" {coll}(" in stripped or f" {coll}-start(" in stripped:
+                m = _SHAPE_RE.search(stripped.split("=", 1)[-1])
+                if m:
+                    b = _shape_bytes(m.group(1), m.group(2))
+                    if coll == "all-reduce":
+                        b *= 2  # reduce + broadcast phases
+                    out[coll] += b
+                break
+    return out
+
+
+def roofline_terms(
+    flops: float,
+    bytes_accessed: float,
+    collective_bytes: float,
+    n_chips: int,
+) -> dict:
+    compute_s = flops / (n_chips * PEAK_FLOPS)
+    memory_s = bytes_accessed / (n_chips * HBM_BW)
+    collective_s = collective_bytes / (n_chips * LINK_BW)
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant
+    terms["n_chips"] = n_chips
+    return terms
+
+
+def model_flops_estimate(cfg, n_tokens: int, training: bool) -> float:
+    """MODEL_FLOPS = 6·N·D (training) or 2·N·D (inference forward), with
+    N = active params (MoE counts top-k only)."""
+    n_active = cfg.active_param_count_estimate()
+    mult = 6.0 if training else 2.0
+    return mult * n_active * n_tokens

@@ -1,0 +1,114 @@
+"""Sharding rules for the production mesh (DESIGN.md §6).
+
+Parameters shard FSDP×TP: the d_model-ish dimension goes to "data" (ZeRO-3
+style — all-gathered per layer), head/ffn/vocab/expert dimensions go to
+"model" (tensor/expert parallel). The batch shards over ("pod", "data").
+Every rule checks divisibility against the actual mesh and falls back to
+replication — sharding must never make a config un-lowerable.
+
+Rules are path-based over the param pytree so they apply uniformly to the
+stacked scan-over-layers parameter trees (leading layer axes get None).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _fit(axis, dim: int, mesh: Mesh):
+    """axis if dim divides across it, else None (replicate)."""
+    return axis if axis is not None and dim % _axis_size(mesh, axis) == 0 else None
+
+
+def batch_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else axes[0]
+
+
+# -- parameter rules ---------------------------------------------------------
+
+def _leaf_spec(path: tuple, shape: tuple, mesh: Mesh, cfg: ModelConfig) -> P:
+    names = [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+    leaf = names[-1]
+    parent = names[-2] if len(names) > 1 else ""
+    nd = len(shape)
+
+    def pad(base: tuple) -> P:
+        return P(*((None,) * (nd - len(base)) + base))
+
+    d_axis, m_axis = "data", "model"
+
+    if leaf == "embed":
+        return P(_fit(m_axis, shape[0], mesh), _fit(d_axis, shape[1], mesh))
+    if leaf == "lm_head":
+        return P(_fit(d_axis, shape[0], mesh), _fit(m_axis, shape[1], mesh))
+    if leaf == "router":
+        return pad((_fit(d_axis, shape[-2], mesh), None))
+    if parent == "moe" and leaf in ("w_in", "w_gate", "w_out"):
+        e, da, db = shape[-3], shape[-2], shape[-1]
+        if e % _axis_size(mesh, m_axis) == 0:
+            # expert parallel (dbrx: 16 experts / 16-way model axis)
+            return pad((m_axis, _fit(d_axis, da, mesh), None))
+        # TP inside experts (grok: 8 experts — shard ffn dim instead)
+        if leaf == "w_out":
+            return pad((None, _fit(m_axis, da, mesh), _fit(d_axis, db, mesh)))
+        return pad((None, _fit(d_axis, da, mesh), _fit(m_axis, db, mesh)))
+    if leaf in ("wq", "wk", "wv", "w_in", "w_gate", "in_proj"):
+        return pad((_fit(d_axis, shape[-2], mesh), _fit(m_axis, shape[-1], mesh)))
+    if leaf in ("wo", "w_out", "out_proj"):
+        return pad((_fit(m_axis, shape[-2], mesh), _fit(d_axis, shape[-1], mesh)))
+    if leaf == "concat_proj":
+        return pad((_fit(d_axis, shape[-2], mesh), _fit(m_axis, shape[-1], mesh)))
+    if leaf == "w" and parent == "projector":
+        return P(_fit(d_axis, shape[0], mesh), _fit(m_axis, shape[1], mesh))
+    # everything small (norm scales, biases, conv, A_log, D, dt_bias, dsm...)
+    return P(*((None,) * nd))
+
+
+def param_pspecs(params_shape: Any, mesh: Mesh, cfg: ModelConfig):
+    """PartitionSpec pytree congruent with an eval_shape(init_model) tree."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [
+        _leaf_spec(path, leaf.shape, mesh, cfg) for path, leaf in leaves
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh, cfg: ModelConfig):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_pspecs(params_shape, mesh, cfg),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def opt_state_shardings(opt_state_shape: Any, params_shardings, mesh: Mesh):
+    """AdamW moments mirror the parameter sharding; step is replicated."""
+
+    def match(leaf_path, leaf):
+        # AdamWState(step, mu, nu): mu/nu are param-congruent trees
+        return None
+
+    # Build by structural congruence: mu/nu have the same treedef as params.
+    from repro.optim.optimizers import AdamWState
+
+    step_sh = NamedSharding(mesh, P())
+    if isinstance(opt_state_shape, AdamWState):
+        return AdamWState(step=step_sh, mu=params_shardings, nu=params_shardings)
+    raise TypeError(f"unknown opt state {type(opt_state_shape)}")

@@ -1,0 +1,67 @@
+"""Training launcher: run train_step for any assigned architecture on the
+available mesh (reduced configs run for real on CPU; full configs lower on
+the production mesh via dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --reduced --steps 50 [--batch 8 --seq 128]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import TokenCorpusConfig, token_batches
+from repro.models import init_model
+from repro.train import make_train_step
+from repro.train.step import init_train_state
+from repro.utils import tree_size
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced (CPU-feasible) variant")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    print(f"{cfg.arch_id}: {tree_size(params)/1e6:.1f}M params "
+          f"({'reduced' if args.reduced else 'FULL'})")
+    state = init_train_state(params, cfg, lr=args.lr)
+    step = jax.jit(make_train_step(cfg), donate_argnums=0)
+
+    rng = np.random.default_rng(0)
+    tok_cfg = TokenCorpusConfig(vocab_size=cfg.vocab_size, seq_len=args.seq)
+    t0 = time.perf_counter()
+    last = None
+    for i, tokens in enumerate(token_batches(tok_cfg, args.batch, args.steps)):
+        batch = {"tokens": tokens}
+        if cfg.family == "vlm":
+            batch["frontend"] = rng.standard_normal(
+                (args.batch, cfg.n_frontend_tokens, cfg.d_frontend),
+                dtype=np.float32,
+            )
+        if cfg.is_encoder_decoder:
+            batch["frontend"] = rng.standard_normal(
+                (args.batch, cfg.n_frontend_tokens, cfg.d_model),
+                dtype=np.float32,
+            )
+        state, metrics = step(state, batch)
+        last = float(metrics["loss"])
+        if i % 10 == 0:
+            print(f"step {i:4d} loss {last:.4f}")
+    rate = args.steps * args.batch * args.seq / (time.perf_counter() - t0)
+    print(f"done: final loss {last:.4f}, {rate:,.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+from repro.models.model import (
+    DecodeCache,
+    decode_step,
+    encode,
+    forward,
+    init_cache,
+    init_model,
+    lm_loss,
+)
+from repro.models.encdec import (
+    EncDecCache,
+    encdec_decode_step,
+    encdec_loss,
+    encode_audio,
+    init_encdec_cache,
+    run_encoder,
+)
+
+__all__ = [
+    "DecodeCache",
+    "decode_step",
+    "encode",
+    "forward",
+    "init_cache",
+    "init_model",
+    "lm_loss",
+    "EncDecCache",
+    "encdec_decode_step",
+    "encdec_loss",
+    "encode_audio",
+    "init_encdec_cache",
+    "run_encoder",
+]

@@ -1,0 +1,237 @@
+"""Encoder-decoder transformer (seamless-m4t family).
+
+The speech frontend is the sanctioned stub: the encoder consumes
+precomputed (B, n_frames, d_model) frame embeddings. Everything else —
+bidirectional encoder, causal decoder with cross-attention, cached decode —
+is implemented fully.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.probe import scan_unroll, shard_batch_leading
+from repro.models.model import (
+    _dtype,
+    attn_dims,
+    chunked_cross_entropy,
+)
+
+
+def _enc_layer_init(key, cfg: ModelConfig) -> dict:
+    ka, kf = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(
+            ka, attn_dims(cfg), qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm
+        ),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "ffn": L.ffn_init(kf, cfg.d_model, cfg.d_ff, gated=cfg.gated_ffn),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig) -> dict:
+    ka, kx, kf = jax.random.split(key, 3)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "self_attn": L.attention_init(
+            ka, attn_dims(cfg), qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm
+        ),
+        "ln_x": L.rmsnorm_init(cfg.d_model),
+        "cross_attn": L.attention_init(
+            kx, attn_dims(cfg), qkv_bias=cfg.qkv_bias, qk_norm=False
+        ),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "ffn": L.ffn_init(kf, cfg.d_model, cfg.d_ff, gated=cfg.gated_ffn),
+    }
+
+
+def init_encdec(key: jax.Array, cfg: ModelConfig) -> dict:
+    pdt = _dtype(cfg.param_dtype)
+    k_embed, k_enc, k_dec, k_head = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k_enc, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    params = {
+        "embed": 0.02
+        * jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model), jnp.float32),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "enc_norm": L.rmsnorm_init(cfg.d_model),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = 0.02 * jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_size), jnp.float32
+        )
+    return jax.tree_util.tree_map(lambda x: x.astype(pdt), params)
+
+
+def _cross_attention(params, x, enc_kv, dims):
+    """Cross-attention: queries from decoder x, keys/values precomputed from
+    the encoder output (enc_kv = (k, v), each (B, F, G, Dh))."""
+    b, s, _ = x.shape
+    d, h, g, dh = dims
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, h, dh)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype).reshape(h, dh)
+    k, v = enc_kv
+    scores = L._gqa_scores(q, k, 0.0)
+    weights = jax.nn.softmax(scores, axis=-1)
+    out = L._gqa_out(weights, v, h)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def _encode_kv(params, enc_out, dims):
+    b, f, _ = enc_out.shape
+    g, dh = dims.n_kv, dims.d_head
+    k = (enc_out @ params["wk"].astype(enc_out.dtype)).reshape(b, f, g, dh)
+    v = (enc_out @ params["wv"].astype(enc_out.dtype)).reshape(b, f, g, dh)
+    if "bk" in params:
+        k = k + params["bk"].astype(k.dtype).reshape(g, dh)
+        v = v + params["bv"].astype(v.dtype).reshape(g, dh)
+    return k, v
+
+
+def run_encoder(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, d_model) stubbed frontend embeddings."""
+    cdt = _dtype(cfg.compute_dtype)
+    x = shard_batch_leading(frames.astype(cdt))
+    b, f = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(f), (b, f))
+
+    def layer(h, lp):
+        a = L.attention_apply(
+            lp["attn"], L.rmsnorm(lp["ln1"], h, cfg.rms_eps), attn_dims(cfg),
+            rope_theta=cfg.rope_theta, positions=positions,
+            window=L.GLOBAL_WINDOW, causal=False,
+        )
+        h = h + a
+        h = h + L.ffn_apply(
+            lp["ffn"], L.rmsnorm(lp["ln2"], h, cfg.rms_eps), act=cfg.act
+        )
+        return h, None
+
+    body = jax.checkpoint(layer) if cfg.remat else layer
+    x, _ = jax.lax.scan(body, x, params["enc_layers"], unroll=scan_unroll())
+    return L.rmsnorm(params["enc_norm"], x, cfg.rms_eps)
+
+
+def run_decoder(
+    params: dict, cfg: ModelConfig, enc_out: jax.Array, tokens: jax.Array
+) -> jax.Array:
+    cdt = _dtype(cfg.compute_dtype)
+    x = shard_batch_leading(params["embed"][tokens].astype(cdt))
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    dims = attn_dims(cfg)
+
+    def layer(h, lp):
+        a = L.attention_apply(
+            lp["self_attn"], L.rmsnorm(lp["ln1"], h, cfg.rms_eps), dims,
+            rope_theta=cfg.rope_theta, positions=positions,
+        )
+        h = h + a
+        enc_kv = _encode_kv(lp["cross_attn"], enc_out, dims)
+        h = h + _cross_attention(
+            lp["cross_attn"], L.rmsnorm(lp["ln_x"], h, cfg.rms_eps),
+            enc_kv, dims,
+        )
+        h = h + L.ffn_apply(
+            lp["ffn"], L.rmsnorm(lp["ln2"], h, cfg.rms_eps), act=cfg.act
+        )
+        return h, None
+
+    body = jax.checkpoint(layer) if cfg.remat else layer
+    x, _ = jax.lax.scan(body, x, params["dec_layers"], unroll=scan_unroll())
+    return L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+
+
+def encdec_loss(
+    params: dict, cfg: ModelConfig, frames: jax.Array, tokens: jax.Array
+) -> tuple[jax.Array, dict]:
+    enc_out = run_encoder(params, cfg, frames)
+    hidden = run_decoder(params, cfg, enc_out, tokens)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    ce = chunked_cross_entropy(
+        hidden, w, targets, mask, cfg.loss_chunk, cfg.final_softcap
+    )
+    return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+
+def encode_audio(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Pooled encoder embedding (the audio arch's f_old/f_new role)."""
+    enc_out = run_encoder(params, cfg, frames)
+    pooled = jnp.mean(enc_out.astype(jnp.float32), axis=1)
+    return pooled / (jnp.linalg.norm(pooled, axis=-1, keepdims=True) + 1e-12)
+
+
+class EncDecCache(NamedTuple):
+    pos: jax.Array          # (B,)
+    self_k: jax.Array       # (n_dec, B, T, G, Dh)
+    self_v: jax.Array
+    cross_k: jax.Array      # (n_dec, B, F, G, Dh) — precomputed at prefill
+    cross_v: jax.Array
+
+
+def init_encdec_cache(
+    params: dict, cfg: ModelConfig, enc_out: jax.Array, max_seq: int,
+    dtype=jnp.float32,
+) -> EncDecCache:
+    b = enc_out.shape[0]
+    g, dh = cfg.n_kv_heads, cfg.head_dim
+    dims = attn_dims(cfg)
+
+    def per_layer(lp):
+        k, v = _encode_kv(lp["cross_attn"], enc_out, dims)
+        return k.astype(dtype), v.astype(dtype)
+
+    cross_k, cross_v = jax.vmap(per_layer)(params["dec_layers"])
+    return EncDecCache(
+        pos=jnp.zeros((b,), jnp.int32),
+        self_k=jnp.zeros((cfg.n_layers, b, max_seq, g, dh), dtype),
+        self_v=jnp.zeros((cfg.n_layers, b, max_seq, g, dh), dtype),
+        cross_k=cross_k,
+        cross_v=cross_v,
+    )
+
+
+def encdec_decode_step(
+    params: dict, cfg: ModelConfig, cache: EncDecCache, token: jax.Array
+) -> tuple[jax.Array, EncDecCache]:
+    cdt = _dtype(cfg.compute_dtype)
+    x = shard_batch_leading(params["embed"][token].astype(cdt))
+    dims = attn_dims(cfg)
+    pos = cache.pos
+
+    def layer(h, xs):
+        lp, kc, vc, xk, xv = xs
+        a, nk, nv = L.attention_decode(
+            lp["self_attn"], L.rmsnorm(lp["ln1"], h, cfg.rms_eps), dims,
+            kc, vc, pos, rope_theta=cfg.rope_theta,
+        )
+        h = h + a
+        h = h + _cross_attention(
+            lp["cross_attn"], L.rmsnorm(lp["ln_x"], h, cfg.rms_eps),
+            (xk, xv), dims,
+        )
+        h = h + L.ffn_apply(
+            lp["ffn"], L.rmsnorm(lp["ln2"], h, cfg.rms_eps), act=cfg.act
+        )
+        return h, (nk, nv)
+
+    x, (ks, vs) = jax.lax.scan(
+        layer, x,
+        (params["dec_layers"], cache.self_k, cache.self_v,
+         cache.cross_k, cache.cross_v),
+        unroll=scan_unroll(),
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    return logits[:, 0], cache._replace(pos=pos + 1, self_k=ks, self_v=vs)

@@ -1,0 +1,460 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, FFN, MoE.
+
+Functional style: ``*_init(key, cfg) -> params`` and ``*_apply(params, x, ...)``.
+All blocks are shape-uniform per layer so the model can ``lax.scan`` over
+stacked layer parameters (compile-time O(1) in depth — essential for the
+80-layer dry-runs on the 512-device mesh).
+
+Per-layer *data* (not params) can still vary inside the scan: attention
+window sizes ride through the scan as a per-layer integer, which is how
+gemma2's local/global alternation works without unrolling.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.probe import (
+    gather_weight,
+    probe_on,
+    scan_unroll,
+    shard_heads,
+)
+
+GLOBAL_WINDOW = 1 << 30  # "window" that always covers the whole sequence
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                     # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]                # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm / QKV bias / softcap / sliding window)
+# ---------------------------------------------------------------------------
+
+class AttnDims(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+
+
+def attention_init(key: jax.Array, dims: AttnDims, *, qkv_bias: bool,
+                   qk_norm: bool, init_std: float = 0.02) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, g, dh = dims
+    p = {
+        "wq": init_std * jax.random.normal(kq, (d, h * dh), jnp.float32),
+        "wk": init_std * jax.random.normal(kk, (d, g * dh), jnp.float32),
+        "wv": init_std * jax.random.normal(kv, (d, g * dh), jnp.float32),
+        "wo": init_std * jax.random.normal(ko, (h * dh, d), jnp.float32),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((g * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((g * dh,), jnp.float32)
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(dh)
+        p["k_norm"] = rmsnorm_init(dh)
+    return p
+
+
+def _project_qkv(params, x, dims: AttnDims, positions, rope_theta):
+    b, s, _ = x.shape
+    d, h, g, dh = dims
+    q = x @ gather_weight(params["wq"], 1).astype(x.dtype)
+    k = x @ gather_weight(params["wk"], 1).astype(x.dtype)
+    v = x @ gather_weight(params["wv"], 1).astype(x.dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, g, dh)
+    v = v.reshape(b, s, g, dh)
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k, attn_softcap):
+    """q: (B,S,H,Dh), k: (B,T,G,Dh) -> scores (B,H,S,T) with GQA grouping."""
+    b, s, h, dh = q.shape
+    g = k.shape[2]
+    q = q.reshape(b, s, g, h // g, dh)
+    scores = jnp.einsum(
+        "bsgrd,btgd->bgrst", q, k, preferred_element_type=jnp.float32
+    )
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    if attn_softcap:
+        scores = attn_softcap * jnp.tanh(scores / attn_softcap)
+    return scores.reshape(b, h, s, k.shape[1])
+
+
+def _gqa_out(weights, v, h):
+    """weights: (B,H,S,T), v: (B,T,G,Dh) -> (B,S,H*Dh)."""
+    b, _, s, t = weights.shape
+    g, dh = v.shape[2], v.shape[3]
+    w = weights.reshape(b, g, h // g, s, t)
+    out = jnp.einsum("bgrst,btgd->bsgrd", w.astype(v.dtype), v)
+    return out.reshape(b, s, h * dh)
+
+
+FLASH_THRESHOLD = 8192   # sequences at/above this use blockwise attention
+FLASH_BLOCK = 1024
+
+
+def flash_gqa(
+    q: jax.Array,            # (B, S, H, Dh)
+    k: jax.Array,            # (B, T, G, Dh)
+    v: jax.Array,            # (B, T, G, Dh)
+    *,
+    causal: bool = True,
+    window: jax.Array | int = GLOBAL_WINDOW,
+    attn_softcap: float = 0.0,
+    q_block: int = FLASH_BLOCK,
+    kv_block: int = FLASH_BLOCK,
+) -> jax.Array:
+    """Blockwise (flash-style) attention with online softmax — never
+    materializes the (S, T) score matrix. Peak live tile is (B, H, q_block,
+    kv_block), which is what makes 32k/500k prefill lowerable (DESIGN.md §6).
+    Returns (B, S, H·Dh)."""
+    b, s, h, dh = q.shape
+    t, g = k.shape[1], k.shape[2]
+    r = h // g
+    if probe_on():
+        # cost-probe: big tiles + unrolled loops so cost_analysis sees every
+        # FLOP (identical matmul totals; tiles are never executed)
+        q_block = kv_block = 8192
+
+    def pick(n: int, target: int) -> int:
+        """Largest divisor of n up to target (handles e.g. the VLM's
+        33024 = 2^8·3·43 tokens: picks 5504 rather than degrading to 128,
+        which matters for probe-mode unrolled tile counts)."""
+        for cand in range(min(n, target), 0, -1):
+            if n % cand == 0:
+                return cand
+        return 1
+
+    q_block = pick(s, min(q_block, s))
+    kv_block = pick(t, min(kv_block, t))
+    assert s % q_block == 0 and t % kv_block == 0
+    nq, nk = s // q_block, t // kv_block
+    neg = jnp.finfo(jnp.float32).min
+
+    qb = jnp.moveaxis(q.reshape(b, nq, q_block, h, dh), 1, 0)  # (nq,B,qb,H,Dh)
+
+    def do_q_block(args):
+        qi, qt = args                                  # qt (B, qb, H, Dh)
+        q_pos = qi * q_block + jnp.arange(q_block)
+        qt_g = qt.reshape(b, q_block, g, r, dh)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kt = jax.lax.dynamic_slice(
+                k, (0, kj * kv_block, 0, 0), (b, kv_block, g, dh)
+            )
+            vt = jax.lax.dynamic_slice(
+                v, (0, kj * kv_block, 0, 0), (b, kv_block, g, dh)
+            )
+            scores = jnp.einsum(
+                "bqgrd,bkgd->bgrqk", qt_g, kt,
+                preferred_element_type=jnp.float32,
+            ) / jnp.sqrt(dh)
+            if attn_softcap:
+                scores = attn_softcap * jnp.tanh(scores / attn_softcap)
+            k_pos = kj * kv_block + jnp.arange(kv_block)
+            diff = q_pos[:, None] - k_pos[None, :]
+            if causal:
+                mask = (diff >= 0) & (diff < window)
+            else:
+                mask = jnp.abs(diff) < window
+            scores = jnp.where(mask[None, None, None], scores, neg)
+            m_new = jnp.maximum(m, scores.max(axis=-1))
+            p = jnp.exp(scores - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p.astype(vt.dtype), vt
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, g, r, q_block), neg, jnp.float32),
+            jnp.zeros((b, g, r, q_block), jnp.float32),
+            jnp.zeros((b, g, r, q_block, dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, jnp.arange(nk), unroll=scan_unroll()
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,G,R,qb,Dh)
+        return jnp.moveaxis(out.reshape(b, h, q_block, dh), 1, 2)
+
+    _, outs = jax.lax.scan(
+        lambda _, x: (None, do_q_block(x)),
+        None,
+        (jnp.arange(nq), qb),
+        unroll=scan_unroll(),
+    )                                                   # (nq,B,qb,H,Dh)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dh)
+    return out.reshape(b, s, h * dh).astype(q.dtype)
+
+
+def attention_apply(
+    params: dict,
+    x: jax.Array,
+    dims: AttnDims,
+    *,
+    rope_theta: float = 10_000.0,
+    window: jax.Array | int = GLOBAL_WINDOW,
+    attn_softcap: float = 0.0,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    repeat_kv: bool = False,
+) -> jax.Array:
+    """Self-attention over a full sequence (training / prefill).
+
+    window may be a traced scalar (per-layer data inside a scan): tokens
+    attend to [i-window+1, i]. causal=False gives bidirectional attention
+    (encoder layers). Sequences ≥ FLASH_THRESHOLD take the blockwise path.
+    repeat_kv materializes KV to full heads (G→H) so the attention einsums
+    expose one shardable head dimension (§Perf; see ModelConfig).
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(params, x, dims, positions, rope_theta)
+    if repeat_kv and dims.n_kv != dims.n_heads:
+        r = dims.n_heads // dims.n_kv
+        k = jnp.repeat(k, r, axis=2)
+        v = jnp.repeat(v, r, axis=2)
+    # §Perf: pin head-TP layouts (no-op unless activation_sharding active)
+    q, k, v = shard_heads(q), shard_heads(k), shard_heads(v)
+    if s >= FLASH_THRESHOLD:
+        out = flash_gqa(
+            q, k, v, causal=causal, window=window, attn_softcap=attn_softcap
+        )
+        return out @ gather_weight(params["wo"], 0).astype(x.dtype)
+    scores = _gqa_scores(q, k, attn_softcap)              # (B,H,S,S)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    if causal:
+        mask = (j <= i) & (i - j < window)
+    else:
+        mask = jnp.abs(i - j) < window
+    scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    weights = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(weights, v, dims.n_heads)
+    return out @ gather_weight(params["wo"], 0).astype(x.dtype)
+
+
+def attention_decode(
+    params: dict,
+    x: jax.Array,                  # (B, 1, d) current token
+    dims: AttnDims,
+    k_cache: jax.Array,            # (B, T, G, Dh)
+    v_cache: jax.Array,            # (B, T, G, Dh)
+    pos: jax.Array,                # (B,) int32 current position
+    *,
+    rope_theta: float = 10_000.0,
+    window: jax.Array | int = GLOBAL_WINDOW,
+    attn_softcap: float = 0.0,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a KV cache. Returns (out, k_cache, v_cache)."""
+    b, one, _ = x.shape
+    t = k_cache.shape[1]
+    q, k_new, v_new = _project_qkv(
+        params, x, dims, pos[:, None], rope_theta
+    )
+    dtype = k_cache.dtype
+    k_cache = jax.vmap(
+        lambda c, upd, p: jax.lax.dynamic_update_slice(
+            c, upd.astype(dtype), (p, 0, 0)
+        )
+    )(k_cache, k_new, pos)
+    v_cache = jax.vmap(
+        lambda c, upd, p: jax.lax.dynamic_update_slice(
+            c, upd.astype(dtype), (p, 0, 0)
+        )
+    )(v_cache, v_new, pos)
+    scores = _gqa_scores(q, k_cache, attn_softcap)        # (B,H,1,T)
+    j = jnp.arange(t)[None, None, None, :]
+    p = pos[:, None, None, None]
+    mask = (j <= p) & (p - j < window)
+    scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    weights = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(weights, v_cache, dims.n_heads)
+    return out @ params["wo"].astype(x.dtype), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN — SwiGLU (llama/qwen/gemma style) or GELU (classic)
+# ---------------------------------------------------------------------------
+
+def ffn_init(key: jax.Array, d: int, d_ff: int, *, gated: bool = True,
+             init_std: float = 0.02) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_in": init_std * jax.random.normal(k1, (d, d_ff), jnp.float32),
+        "w_out": init_std * jax.random.normal(k2, (d_ff, d), jnp.float32),
+    }
+    if gated:
+        p["w_gate"] = init_std * jax.random.normal(k3, (d, d_ff), jnp.float32)
+    return p
+
+
+def ffn_apply(params: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    # gather_weight: no-op unless §Perf activation-sharding is active
+    w_in = gather_weight(params["w_in"], 1).astype(x.dtype)
+    w_out = gather_weight(params["w_out"], 0).astype(x.dtype)
+    h = x @ w_in
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    if "w_gate" in params:
+        h = a(x @ gather_weight(params["w_gate"], 1).astype(x.dtype)) * h
+    else:
+        h = a(h)
+    return h @ w_out
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN — top-k routing, Mesh-TF style one-hot dispatch (capacity-bounded)
+# ---------------------------------------------------------------------------
+
+def moe_init(key: jax.Array, d: int, d_ff: int, n_experts: int,
+             *, init_std: float = 0.02) -> dict:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": init_std * jax.random.normal(kr, (d, n_experts), jnp.float32),
+        "w_in": init_std
+        * jax.random.normal(k1, (n_experts, d, d_ff), jnp.float32),
+        "w_gate": init_std
+        * jax.random.normal(k2, (n_experts, d, d_ff), jnp.float32),
+        "w_out": init_std
+        * jax.random.normal(k3, (n_experts, d_ff, d), jnp.float32),
+    }
+
+
+def moe_apply(
+    params: dict,
+    x: jax.Array,                  # (B, S, d)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,d), aux load-balance loss scalar).
+
+    Sort-based (MegaBlocks-style) dispatch — the TPU-native formulation:
+
+      1. every (token, k) routing pair is sorted by expert id;
+      2. each expert's contiguous segment is gathered into a fixed-capacity
+         (E, C, d) buffer (C = T·k·cf/E GLOBAL capacity, overflow dropped —
+         the residual stream carries dropped tokens);
+      3. batched per-expert FFN matmuls (true top-k FLOPs, never n_experts);
+      4. outputs gather back to (token, k) slots and combine with gates.
+
+    Everything is static-shape gathers + batched matmuls: when the expert
+    axis is sharded on "model", XLA SPMD realizes step 2/4 as the MoE
+    all-to-all. Cost is O(T·k·d) data movement — unlike one-hot dispatch
+    einsums, which are O(T·g·k·d) compute (quadratic in group size).
+    """
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    t = b * s
+    n_pairs = t * top_k
+    cap = max(1, int(n_pairs * capacity_factor / e))
+
+    xf = x.reshape(t, d)
+    logits = xf.astype(jnp.float32) @ params["router"]     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)      # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9
+    )
+
+    # aux load-balance loss (Switch-style): E · Σ_e f_e · p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[gate_idx[:, 0]].add(1.0) / t
+    aux = e * jnp.sum(me * ce)
+
+    # ---- sort (token,k) pairs by expert ----------------------------------
+    pair_expert = gate_idx.reshape(n_pairs)                # (P,)
+    pair_token = jnp.repeat(jnp.arange(t), top_k)          # (P,)
+    order = jnp.argsort(pair_expert)                       # stable
+    sorted_expert = pair_expert[order]
+    sorted_token = pair_token[order]
+    counts = jnp.bincount(pair_expert, length=e)           # (E,)
+    offsets = jnp.cumsum(counts) - counts                  # (E,)
+
+    # ---- gather per-expert segments into (E, C, d) -----------------------
+    slot = offsets[:, None] + jnp.arange(cap)[None, :]     # (E, C)
+    valid = jnp.arange(cap)[None, :] < counts[:, None]
+    safe_slot = jnp.clip(slot, 0, n_pairs - 1)
+    tok_for_slot = sorted_token[safe_slot]                 # (E, C)
+    xin = xf[tok_for_slot] * valid[..., None].astype(x.dtype)  # (E, C, d)
+
+    # ---- batched per-expert FFN ------------------------------------------
+    # gather_weight(·, 0): experts stay expert-parallel on "model"; the FSDP
+    # ("data") shard of d_model is gathered up front (§Perf iteration C2)
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    w_gate = gather_weight(params["w_gate"], 0).astype(x.dtype)
+    w_in = gather_weight(params["w_in"], 0).astype(x.dtype)
+    w_out = gather_weight(params["w_out"], 0).astype(x.dtype)
+    h = a(jnp.einsum("ecd,edf->ecf", xin, w_gate))
+    h = h * jnp.einsum("ecd,edf->ecf", xin, w_in)
+    out_e = jnp.einsum("ecf,efd->ecd", h, w_out)
+
+    # ---- gather outputs back to (token, k) pairs and combine -------------
+    inv = jnp.zeros((n_pairs,), jnp.int32).at[order].set(
+        jnp.arange(n_pairs, dtype=jnp.int32)
+    )                                                      # pair -> sorted pos
+    pair_cap_slot = inv - offsets[pair_expert]             # (P,) position in C
+    in_cap = pair_cap_slot < cap
+    safe_cap = jnp.clip(pair_cap_slot, 0, cap - 1)
+    out_pairs = out_e[pair_expert, safe_cap]               # (P, d)
+    out_pairs = out_pairs * in_cap[:, None].astype(x.dtype)
+    gates = gate_vals.reshape(n_pairs).astype(x.dtype)
+    y = jnp.sum(
+        (out_pairs * gates[:, None]).reshape(t, top_k, d), axis=1
+    )
+    return y.reshape(b, s, d), aux

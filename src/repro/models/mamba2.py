@@ -1,0 +1,252 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Implements the chunked SSD algorithm: within a chunk the recurrence is
+computed as a (masked, decay-weighted) attention-like quadratic form —
+MXU-friendly; across chunks a tiny sequential scan carries the (H, P, N)
+state. This is the TPU-native formulation (DESIGN.md §6): the chunk size
+trades VMEM footprint against scan length, and the per-chunk einsums are
+the compute hot-spot the kernels/ssd_scan Pallas kernel fuses.
+
+Decode is O(1): one state update per token against the recurrent state —
+what makes the long_500k (524 288-token context) dry-run feasible for the
+SSM/hybrid architectures while the pure-attention ones are skipped.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm, rmsnorm_init
+from repro.models.probe import probe_on, scan_unroll
+
+
+class MambaDims(NamedTuple):
+    d_model: int
+    d_inner: int      # expand * d_model
+    n_heads: int      # d_inner // head_dim
+    head_dim: int     # P
+    n_groups: int     # G (B/C shared per group)
+    d_state: int      # N
+    d_conv: int       # causal conv width
+
+
+def mamba_dims(d_model: int, *, d_state: int, head_dim: int = 64,
+               expand: int = 2, n_groups: int = 1, d_conv: int = 4) -> MambaDims:
+    d_inner = expand * d_model
+    assert d_inner % head_dim == 0
+    return MambaDims(d_model, d_inner, d_inner // head_dim, head_dim,
+                     n_groups, d_state, d_conv)
+
+
+def mamba_init(key: jax.Array, dims: MambaDims, init_std: float = 0.02) -> dict:
+    d, di, h, p, g, n, w = dims
+    conv_dim = di + 2 * g * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # in_proj -> [z (di), x (di), B (g*n), C (g*n), dt (h)]
+        "in_proj": init_std
+        * jax.random.normal(k1, (d, 2 * di + 2 * g * n + h), jnp.float32),
+        "conv_w": init_std * jax.random.normal(k2, (w, conv_dim), jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01, jnp.float32))),
+        "norm": rmsnorm_init(di),
+        "out_proj": init_std * jax.random.normal(k4, (di, d), jnp.float32),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., q, h) per-step log-decay -> (..., h, q, q) lower-tri segment
+    sums: out[i, j] = sum(a[j+1..i]) for j < i, 0 on diagonal, -inf above."""
+    q = a.shape[-2]
+    a = jnp.moveaxis(a, -1, -2)                     # (..., h, q)
+    cs = jnp.cumsum(a, axis=-1)                     # (..., h, q)
+    seg = cs[..., :, None] - cs[..., None, :]       # (..., h, q, q)
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,        # (B, L, H, P)
+    dt: jax.Array,       # (B, L, H)  (already softplus'd)
+    a_neg: jax.Array,    # (H,) negative decay rates (= -exp(A_log))
+    b_in: jax.Array,     # (B, L, G, N)
+    c_in: jax.Array,     # (B, L, G, N)
+    chunk: int = 128,
+    init_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    bsz, l, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    r = h // g
+    # NOTE (cost-probe): the heavy SSD einsums (y_diag / states / y_off) are
+    # vectorized over chunks OUTSIDE any scan, so cost_analysis counts them
+    # exactly; only the tiny inter-chunk state recurrence is a scan, and it
+    # unrolls in probe mode (negligible FLOPs either way).
+    chunk = min(chunk, l)
+    assert l % chunk == 0, f"seq {l} not divisible by chunk {chunk}"
+    c = l // chunk
+
+    xc = x.reshape(bsz, c, chunk, h, p)
+    dtc = dt.reshape(bsz, c, chunk, h)
+    bc = b_in.reshape(bsz, c, chunk, g, n)
+    cc = c_in.reshape(bsz, c, chunk, g, n)
+
+    adt = dtc * a_neg                                # (B,C,Q,H) log decays
+    xdt = xc * dtc[..., None]                        # dt-weighted inputs
+
+    # -- intra-chunk (quadratic, attention-like) ---------------------------
+    lmat = jnp.exp(_segsum(adt))                     # (B,C,H,Q,Q)
+    lmat = lmat.reshape(bsz, c, g, r, chunk, chunk)
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", cc, bc)        # (B,C,G,Q,K)
+    scores = scores[:, :, :, None] * lmat                     # (B,C,G,R,Q,K)
+    xdt_g = xdt.reshape(bsz, c, chunk, g, r, p)
+    y_diag = jnp.einsum("bcgrqk,bckgrp->bcqgrp", scores, xdt_g)
+
+    # -- per-chunk end states ----------------------------------------------
+    acs = jnp.cumsum(adt, axis=2)                    # (B,C,Q,H)
+    a_total = acs[:, :, -1]                          # (B,C,H)
+    decay_to_end = jnp.exp(a_total[:, :, None] - acs)        # (B,C,Q,H)
+    xw = xdt * decay_to_end[..., None]               # (B,C,Q,H,P)
+    xw_g = xw.reshape(bsz, c, chunk, g, r, p)
+    states = jnp.einsum("bcqgn,bcqgrp->bcgrpn", bc, xw_g)
+    states = states.reshape(bsz, c, h, p, n)
+
+    # -- inter-chunk recurrence (tiny sequential scan over C chunks) -------
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), x.dtype)
+
+    def step(carry, inp):
+        s_chunk, decay = inp                         # (B,H,P,N), (B,H)
+        new = carry * jnp.exp(decay)[..., None, None] + s_chunk
+        return new, carry                            # emit state BEFORE chunk
+
+    chunk_states = jnp.moveaxis(states, 1, 0)        # (C,B,H,P,N)
+    chunk_decays = jnp.moveaxis(a_total, 1, 0)       # (C,B,H)
+    # Probe note: this scan is the tiny inter-chunk state pass (<0.1 % of
+    # SSD FLOPs — the heavy einsums above are vectorized over chunks outside
+    # any loop). Unrolling it fully at 32k-token chunk counts (256 trips ×
+    # layers) explodes XLA compile time, so probe mode only unrolls when the
+    # trip count is small; the residual undercount is negligible and noted
+    # in EXPERIMENTS.md §Dry-run.
+    unroll = True if (probe_on() and c <= 32) else 1
+    final_state, prev_states = jax.lax.scan(
+        step, init_state, (chunk_states, chunk_decays), unroll=unroll
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)    # (B,C,H,P,N)
+
+    # -- contribution of carried-in state ----------------------------------
+    state_decay = jnp.exp(acs)                       # (B,C,Q,H)
+    prev_g = prev_states.reshape(bsz, c, g, r, p, n)
+    y_off = jnp.einsum("bcqgn,bcgrpn->bcqgrp", cc, prev_g)
+    y_off = y_off * state_decay.reshape(bsz, c, chunk, g, r)[..., None]
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, final_state
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. seq: (B, L, C), w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + seq.shape[1], :] * w[i] for i in range(width)
+    )
+    return out + b
+
+
+def _split_proj(params, u, dims: MambaDims):
+    di, g, n, h = dims.d_inner, dims.n_groups, dims.d_state, dims.n_heads
+    zxbcdt = u @ params["in_proj"].astype(u.dtype)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * g * n]
+    dt_raw = zxbcdt[..., -h:]
+    return z, xbc, dt_raw
+
+
+def mamba_apply(
+    params: dict, u: jax.Array, dims: MambaDims, chunk: int = 128
+) -> jax.Array:
+    """Full-sequence Mamba-2 mixer. u: (B, L, d_model) -> (B, L, d_model)."""
+    bsz, l, _ = u.shape
+    di, h, p, g, n = (dims.d_inner, dims.n_heads, dims.head_dim,
+                      dims.n_groups, dims.d_state)
+    z, xbc, dt_raw = _split_proj(params, u, dims)
+    xbc = jax.nn.silu(
+        _causal_conv(xbc, params["conv_w"].astype(u.dtype),
+                     params["conv_b"].astype(u.dtype))
+    )
+    x = xbc[..., :di].reshape(bsz, l, h, p)
+    b_in = xbc[..., di : di + g * n].reshape(bsz, l, g, n)
+    c_in = xbc[..., di + g * n :].reshape(bsz, l, g, n)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"]
+    )
+    a_neg = -jnp.exp(params["A_log"])
+    y, _ = ssd_chunked(
+        x.astype(jnp.float32), dt, a_neg,
+        b_in.astype(jnp.float32), c_in.astype(jnp.float32), chunk=chunk,
+    )
+    y = y + params["D"][:, None] * x.astype(jnp.float32)
+    y = y.reshape(bsz, l, di).astype(u.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"].astype(u.dtype)
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array    # (B, W-1, conv_dim) trailing conv inputs
+    state: jax.Array   # (B, H, P, N) recurrent state
+
+
+def mamba_cache_init(bsz: int, dims: MambaDims, dtype=jnp.float32) -> MambaCache:
+    conv_dim = dims.d_inner + 2 * dims.n_groups * dims.d_state
+    return MambaCache(
+        conv=jnp.zeros((bsz, dims.d_conv - 1, conv_dim), dtype),
+        state=jnp.zeros(
+            (bsz, dims.n_heads, dims.head_dim, dims.d_state), dtype
+        ),
+    )
+
+
+def mamba_decode(
+    params: dict, u: jax.Array, dims: MambaDims, cache: MambaCache
+) -> tuple[jax.Array, MambaCache]:
+    """One-token decode. u: (B, 1, d_model). O(1) in context length."""
+    bsz = u.shape[0]
+    di, h, p, g, n = (dims.d_inner, dims.n_heads, dims.head_dim,
+                      dims.n_groups, dims.d_state)
+    z, xbc, dt_raw = _split_proj(params, u, dims)
+    # conv over (cached W-1 inputs + current)
+    window = jnp.concatenate([cache.conv, xbc], axis=1)   # (B, W, C)
+    conv_out = jnp.einsum(
+        "bwc,wc->bc", window, params["conv_w"].astype(u.dtype)
+    ) + params["conv_b"].astype(u.dtype)
+    xbc_t = jax.nn.silu(conv_out)                          # (B, C)
+    new_conv = window[:, 1:]
+
+    x = xbc_t[:, :di].reshape(bsz, h, p)
+    b_in = xbc_t[:, di : di + g * n].reshape(bsz, g, n)
+    c_in = xbc_t[:, di + g * n :].reshape(bsz, g, n)
+    dt = jax.nn.softplus(
+        dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"]
+    )                                                      # (B, H)
+    a_neg = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a_neg)                            # (B, H)
+    r = h // g
+    b_h = jnp.repeat(b_in, r, axis=1)                      # (B, H, N)
+    c_h = jnp.repeat(c_in, r, axis=1)
+    x32 = x.astype(jnp.float32)
+    upd = (dt[..., None] * x32)[..., None] * b_h[:, :, None, :]  # (B,H,P,N)
+    state = cache.state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, c_h)
+    y = y + params["D"][:, None] * x32
+    y = y.reshape(bsz, 1, di).astype(u.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"].astype(u.dtype)
+    return out, MambaCache(conv=new_conv, state=state.astype(cache.state.dtype))

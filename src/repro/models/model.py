@@ -1,0 +1,513 @@
+"""Generic decoder-only LM covering the dense / MoE / SSM / hybrid / VLM
+architecture families (encoder-decoder lives in encdec.py).
+
+Design rules that matter at 512-device scale:
+
+  * scan-over-layers with stacked layer params — compile time is O(1) in
+    depth (an 80-layer unroll would take minutes per dry-run combo);
+  * per-layer *data* (attention window sizes) rides through the scan, which
+    is how gemma2's local/global alternation and the qwen3-swa variant work
+    without breaking layer uniformity;
+  * hybrid (zamba2) scans over super-blocks of (period × mamba) and applies
+    the ONE shared attention block between them — the shared params exist
+    exactly once, per the architecture's defining property;
+  * the LM loss never materializes (tokens, vocab) logits: cross-entropy is
+    computed in a lax.scan over token chunks (vocab up to 256 000).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.probe import scan_unroll, shard_batch_leading
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def attn_dims(cfg: ModelConfig) -> L.AttnDims:
+    return L.AttnDims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+
+
+def ssm_dims(cfg: ModelConfig) -> M.MambaDims:
+    return M.mamba_dims(
+        cfg.d_model, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+        expand=cfg.ssm_expand, n_groups=cfg.ssm_groups,
+    )
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer attention window (scanned data, not params)."""
+    n = _num_attn_layers(cfg)
+    if cfg.alt_local_global:
+        w = [cfg.sliding_window if i % 2 == 0 else L.GLOBAL_WINDOW
+             for i in range(n)]
+    elif cfg.swa_all_layers:
+        w = [cfg.sliding_window] * n
+    else:
+        w = [L.GLOBAL_WINDOW] * n
+    return jnp.asarray(w, jnp.int32)
+
+
+def _num_attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.n_layers // (cfg.hybrid_period + 1)  # shared applications
+    return cfg.n_layers
+
+
+def hybrid_layout(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_super, period): n_super super-blocks of `period` mamba layers each,
+    one shared-attn application per super-block."""
+    period = cfg.hybrid_period
+    n_super = cfg.n_layers // (period + 1)
+    assert n_super * (period + 1) == cfg.n_layers, (
+        f"hybrid n_layers {cfg.n_layers} != n_super*(period+1)"
+    )
+    return n_super, period
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(
+            k1, attn_dims(cfg), qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm
+        ),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+    }
+    if cfg.n_experts:
+        p["moe"] = L.moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts)
+    else:
+        p["ffn"] = L.ffn_init(k2, cfg.d_model, cfg.d_ff, gated=cfg.gated_ffn)
+    if cfg.post_norm:
+        p["ln1_post"] = L.rmsnorm_init(cfg.d_model)
+        p["ln2_post"] = L.rmsnorm_init(cfg.d_model)
+    return p
+
+
+def _mamba_layer_init(key, cfg: ModelConfig) -> dict:
+    return {
+        "ln": L.rmsnorm_init(cfg.d_model),
+        "mamba": M.mamba_init(key, ssm_dims(cfg)),
+    }
+
+
+def _shared_attn_init(key, cfg: ModelConfig) -> dict:
+    """Zamba2 shared block: concat(hidden, emb0) -> proj -> attn + ffn."""
+    kp, ka, kf = jax.random.split(key, 3)
+    return {
+        "concat_proj": 0.02
+        * jax.random.normal(kp, (2 * cfg.d_model, cfg.d_model), jnp.float32),
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(
+            ka, attn_dims(cfg), qkv_bias=False, qk_norm=False
+        ),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "ffn": L.ffn_init(kf, cfg.d_model, cfg.d_ff, gated=cfg.gated_ffn),
+    }
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> dict:
+    if cfg.is_encoder_decoder:
+        from repro.models.encdec import init_encdec
+
+        return init_encdec(key, cfg)
+    pdt = _dtype(cfg.param_dtype)
+    k_embed, k_layers, k_extra, k_head = jax.random.split(key, 4)
+    params: dict = {
+        "embed": 0.02
+        * jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model), jnp.float32),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = 0.02 * jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_size), jnp.float32
+        )
+    if cfg.family == "vlm":
+        kw, kb = jax.random.split(k_extra)
+        params["projector"] = {
+            "w": 0.02 * jax.random.normal(kw, (cfg.d_frontend, cfg.d_model),
+                                          jnp.float32),
+            "b": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        n_super, period = hybrid_layout(cfg)
+        keys = jax.random.split(k_layers, n_super * period).reshape(
+            n_super, period, 2
+        )
+        params["layers"] = jax.vmap(
+            jax.vmap(lambda k: _mamba_layer_init(k, cfg))
+        )(keys)
+        params["shared_attn"] = _shared_attn_init(k_extra, cfg)
+    elif cfg.family == "ssm":
+        keys = jax.random.split(k_layers, cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _mamba_layer_init(k, cfg))(keys)
+    else:
+        keys = jax.random.split(k_layers, cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _dense_layer_init(k, cfg))(keys)
+    return jax.tree_util.tree_map(lambda x: x.astype(pdt), params)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _dense_block(lp, h, cfg: ModelConfig, window, positions):
+    a = L.attention_apply(
+        lp["attn"], L.rmsnorm(lp["ln1"], h, cfg.rms_eps), attn_dims(cfg),
+        rope_theta=cfg.rope_theta, window=window,
+        attn_softcap=cfg.attn_softcap, positions=positions,
+        repeat_kv=cfg.repeat_kv_for_tp,
+    )
+    if cfg.post_norm:
+        a = L.rmsnorm(lp["ln1_post"], a, cfg.rms_eps)
+    h = h + a
+    aux = jnp.zeros((), jnp.float32)
+    x2 = L.rmsnorm(lp["ln2"], h, cfg.rms_eps)
+    if cfg.n_experts:
+        f, aux = L.moe_apply(
+            lp["moe"], x2, top_k=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor, act=cfg.act,
+        )
+    else:
+        f = L.ffn_apply(lp["ffn"], x2, act=cfg.act)
+    if cfg.post_norm:
+        f = L.rmsnorm(lp["ln2_post"], f, cfg.rms_eps)
+    return h + f, aux
+
+
+def _mamba_block(lp, h, cfg: ModelConfig):
+    return h + M.mamba_apply(
+        lp["mamba"], L.rmsnorm(lp["ln"], h, cfg.rms_eps), ssm_dims(cfg),
+        chunk=cfg.ssm_chunk,
+    )
+
+
+def _shared_block_clean(sp, h, emb0, cfg: ModelConfig, positions):
+    z = jnp.concatenate([h, emb0], axis=-1) @ sp["concat_proj"].astype(h.dtype)
+    a = L.attention_apply(
+        sp["attn"], L.rmsnorm(sp["ln1"], z, cfg.rms_eps), attn_dims(cfg),
+        rope_theta=cfg.rope_theta, positions=positions,
+    )
+    z = z + a
+    z = z + L.ffn_apply(sp["ffn"], L.rmsnorm(sp["ln2"], z, cfg.rms_eps),
+                        act=cfg.act)
+    return h + z
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,                       # (B, S) int32
+    frontend_embeds: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (hidden (B, T, d) after final norm, aux loss scalar).
+
+    T = S for text-only; T = n_frontend_tokens + S for VLM.
+    """
+    cdt = _dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+    x = shard_batch_leading(x)   # §Perf: see probe.activation_sharding
+    if cfg.post_norm:  # gemma-style embedding normalizer
+        x = x * jnp.sqrt(cfg.d_model).astype(cdt)
+    if cfg.family == "vlm":
+        assert frontend_embeds is not None, "vlm needs patch embeddings"
+        proj = params["projector"]
+        prefix = (
+            frontend_embeds.astype(cdt) @ proj["w"].astype(cdt)
+            + proj["b"].astype(cdt)
+        )
+        x = shard_batch_leading(jnp.concatenate([prefix, x], axis=1))
+    b, t = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+    if cfg.family == "hybrid":
+        emb0 = x
+
+        def super_block(h, sp):
+            def mamba_layer(hh, lp):
+                return _mamba_block(lp, hh, cfg), None
+
+            h, _ = jax.lax.scan(mamba_layer, h, sp, unroll=scan_unroll())
+            h = _shared_block_clean(
+                params["shared_attn"], h, emb0, cfg, positions
+            )
+            return h, jnp.zeros((), jnp.float32)
+
+        body = jax.checkpoint(super_block) if cfg.remat else super_block
+        x, auxs = jax.lax.scan(body, x, params["layers"], unroll=scan_unroll())
+    elif cfg.family == "ssm":
+
+        def layer(h, lp):
+            return _mamba_block(lp, h, cfg), jnp.zeros((), jnp.float32)
+
+        body = jax.checkpoint(layer) if cfg.remat else layer
+        x, auxs = jax.lax.scan(body, x, params["layers"], unroll=scan_unroll())
+    else:
+        windows = layer_windows(cfg)
+
+        def layer(h, xs):
+            lp, window = xs
+            h, aux = _dense_block(lp, h, cfg, window, positions)
+            return h, aux
+
+        body = jax.checkpoint(layer) if cfg.remat else layer
+        x, auxs = jax.lax.scan(
+            body, x, (params["layers"], windows), unroll=scan_unroll()
+        )
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    return x, jnp.sum(auxs)
+
+
+def _head_weight(params: dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_cross_entropy(
+    hidden: jax.Array,          # (B, T, d)
+    w_head: jax.Array,          # (d, V)
+    targets: jax.Array,         # (B, T) int32
+    mask: jax.Array,            # (B, T) float32
+    chunk: int,
+    final_softcap: float = 0.0,
+) -> jax.Array:
+    """Mean next-token CE without materializing (B·T, V) logits."""
+    b, t, d = hidden.shape
+    hf = hidden.reshape(b * t, d)
+    tf = targets.reshape(b * t)
+    mf = mask.reshape(b * t).astype(jnp.float32)
+    n = b * t
+    chunk = min(chunk, n)
+    n_chunks = -(-n // chunk)
+    pad = n_chunks * chunk - n
+    if pad:
+        hf = jnp.concatenate([hf, jnp.zeros((pad, d), hf.dtype)])
+        tf = jnp.concatenate([tf, jnp.zeros((pad,), tf.dtype)])
+        mf = jnp.concatenate([mf, jnp.zeros((pad,), mf.dtype)])
+    hc = hf.reshape(n_chunks, chunk, d)
+    tc = tf.reshape(n_chunks, chunk)
+    mc = mf.reshape(n_chunks, chunk)
+
+    def body(total, xs):
+        h, tgt, m = xs
+        logits = (h @ w_head.astype(h.dtype)).astype(jnp.float32)
+        if final_softcap:
+            logits = final_softcap * jnp.tanh(logits / final_softcap)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tgt[:, None], axis=1)[:, 0]
+        return total + jnp.sum((logz - gold) * m), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32), (hc, tc, mc), unroll=scan_unroll()
+    )
+    return total / jnp.maximum(jnp.sum(mf), 1.0)
+
+
+def lm_loss(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    frontend_embeds: Optional[jax.Array] = None,
+) -> tuple[jax.Array, dict]:
+    hidden, aux = forward(params, cfg, tokens, frontend_embeds)
+    if cfg.family == "vlm":
+        hidden = hidden[:, cfg.n_frontend_tokens :]
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    ce = chunked_cross_entropy(
+        hidden, _head_weight(params, cfg), targets, mask,
+        cfg.loss_chunk, cfg.final_softcap,
+    )
+    loss = ce + cfg.aux_loss_coef * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# embedding production (the Drift-Adapter integration point)
+# ---------------------------------------------------------------------------
+
+def encode(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    frontend_embeds: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Pooled, ℓ2-normalized document embeddings — any architecture in the
+    pool can serve as f_old / f_new of a vector-database upgrade."""
+    hidden, _ = forward(params, cfg, tokens, frontend_embeds)
+    pooled = jnp.mean(hidden.astype(jnp.float32), axis=1)
+    return pooled / (jnp.linalg.norm(pooled, axis=-1, keepdims=True) + 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# decode (serving) — one token against a cache
+# ---------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    pos: jax.Array                      # (B,) next position to write
+    k: Optional[jax.Array] = None       # (n_attn_layers, B, T, G, Dh)
+    v: Optional[jax.Array] = None
+    conv: Optional[jax.Array] = None    # (n_mamba..., B, W-1, C)
+    state: Optional[jax.Array] = None   # (n_mamba..., B, H, P, N)
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.float32
+) -> DecodeCache:
+    pos = jnp.zeros((batch,), jnp.int32)
+    if cfg.family == "ssm":
+        md = ssm_dims(cfg)
+        c = M.mamba_cache_init(batch, md, dtype)
+        return DecodeCache(
+            pos=pos,
+            conv=jnp.broadcast_to(c.conv, (cfg.n_layers,) + c.conv.shape),
+            state=jnp.broadcast_to(c.state, (cfg.n_layers,) + c.state.shape),
+        )
+    g, dh = cfg.n_kv_heads, cfg.head_dim
+    if cfg.family == "hybrid":
+        n_super, period = hybrid_layout(cfg)
+        md = ssm_dims(cfg)
+        c = M.mamba_cache_init(batch, md, dtype)
+        return DecodeCache(
+            pos=pos,
+            conv=jnp.broadcast_to(c.conv, (n_super, period) + c.conv.shape),
+            state=jnp.broadcast_to(c.state, (n_super, period) + c.state.shape),
+            k=jnp.zeros((n_super, batch, max_seq, g, dh), dtype),
+            v=jnp.zeros((n_super, batch, max_seq, g, dh), dtype),
+        )
+    n = cfg.n_layers
+    return DecodeCache(
+        pos=pos,
+        k=jnp.zeros((n, batch, max_seq, g, dh), dtype),
+        v=jnp.zeros((n, batch, max_seq, g, dh), dtype),
+    )
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    cache: DecodeCache,
+    token: jax.Array,                   # (B, 1) int32
+) -> tuple[jax.Array, DecodeCache]:
+    """One serving step: next-token logits + updated cache. For attention
+    archs this is O(T) in cache length; for SSM/hybrid it is O(1)."""
+    cdt = _dtype(cfg.compute_dtype)
+    x = shard_batch_leading(params["embed"][token].astype(cdt))
+    if cfg.post_norm:
+        x = x * jnp.sqrt(cfg.d_model).astype(cdt)
+    pos = cache.pos
+
+    if cfg.family == "ssm":
+        def layer(h, xs):
+            lp, conv, state = xs
+            y, new = M.mamba_decode(
+                lp["mamba"], L.rmsnorm(lp["ln"], h, cfg.rms_eps),
+                ssm_dims(cfg), M.MambaCache(conv, state),
+            )
+            return h + y, (new.conv, new.state)
+
+        x, (convs, states) = jax.lax.scan(
+            layer, x, (params["layers"], cache.conv, cache.state),
+            unroll=scan_unroll(),
+        )
+        new_cache = cache._replace(pos=pos + 1, conv=convs, state=states)
+    elif cfg.family == "hybrid":
+        emb0 = x
+
+        def super_block(h, xs):
+            sp, conv, state, kc, vc = xs
+
+            def mamba_layer(hh, ys):
+                lp, cv, st = ys
+                y, new = M.mamba_decode(
+                    lp["mamba"], L.rmsnorm(lp["ln"], hh, cfg.rms_eps),
+                    ssm_dims(cfg), M.MambaCache(cv, st),
+                )
+                return hh + y, (new.conv, new.state)
+
+            h, (ncv, nst) = jax.lax.scan(
+                mamba_layer, h, (sp, conv, state), unroll=scan_unroll()
+            )
+            # shared attn block (decode path)
+            z = jnp.concatenate([h, emb0], axis=-1) @ params["shared_attn"][
+                "concat_proj"
+            ].astype(h.dtype)
+            a, nk, nv = L.attention_decode(
+                params["shared_attn"]["attn"],
+                L.rmsnorm(params["shared_attn"]["ln1"], z, cfg.rms_eps),
+                attn_dims(cfg), kc, vc, pos, rope_theta=cfg.rope_theta,
+            )
+            z = z + a
+            z = z + L.ffn_apply(
+                params["shared_attn"]["ffn"],
+                L.rmsnorm(params["shared_attn"]["ln2"], z, cfg.rms_eps),
+                act=cfg.act,
+            )
+            return h + z, (ncv, nst, nk, nv)
+
+        x, (convs, states, ks, vs) = jax.lax.scan(
+            super_block, x,
+            (params["layers"], cache.conv, cache.state, cache.k, cache.v),
+            unroll=scan_unroll(),
+        )
+        new_cache = cache._replace(
+            pos=pos + 1, conv=convs, state=states, k=ks, v=vs
+        )
+    else:
+        windows = layer_windows(cfg)
+
+        def layer(h, xs):
+            lp, window, kc, vc = xs
+            a, nk, nv = L.attention_decode(
+                lp["attn"], L.rmsnorm(lp["ln1"], h, cfg.rms_eps),
+                attn_dims(cfg), kc, vc, pos, rope_theta=cfg.rope_theta,
+                window=window, attn_softcap=cfg.attn_softcap,
+            )
+            if cfg.post_norm:
+                a = L.rmsnorm(lp["ln1_post"], a, cfg.rms_eps)
+            h = h + a
+            x2 = L.rmsnorm(lp["ln2"], h, cfg.rms_eps)
+            if cfg.n_experts:
+                f, _ = L.moe_apply(
+                    lp["moe"], x2, top_k=cfg.experts_per_token,
+                    capacity_factor=cfg.capacity_factor, act=cfg.act,
+                )
+            else:
+                f = L.ffn_apply(lp["ffn"], x2, act=cfg.act)
+            if cfg.post_norm:
+                f = L.rmsnorm(lp["ln2_post"], f, cfg.rms_eps)
+            return h + f, (nk, nv)
+
+        x, (ks, vs) = jax.lax.scan(
+            layer, x, (params["layers"], windows, cache.k, cache.v),
+            unroll=scan_unroll(),
+        )
+        new_cache = cache._replace(pos=pos + 1, k=ks, v=vs)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    logits = (x @ _head_weight(params, cfg).astype(x.dtype)).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits[:, 0], new_cache

@@ -1,0 +1,126 @@
+"""Cost-probe mode for the dry-run roofline (DESIGN.md §7).
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE, so any scan
+(layers, flash-attention blocks, SSD chunks, loss chunks) is undercounted.
+In probe mode every internal scan unrolls (``unroll=True``) and block sizes
+grow so trip counts stay small; the remaining depth dimension is recovered
+exactly by lowering at two depths and interpolating linearly
+(cost = tail + L · per_layer). Probe lowers are never executed — block
+sizes that would be VMEM-hostile at runtime are irrelevant here.
+"""
+from __future__ import annotations
+
+_PROBE = {"on": False}
+
+
+def probe_on() -> bool:
+    return _PROBE["on"]
+
+
+class probe_mode:
+    """Context manager enabling unrolled-scan probe lowering."""
+
+    def __enter__(self):
+        _PROBE["on"] = True
+        return self
+
+    def __exit__(self, *exc):
+        _PROBE["on"] = False
+        return False
+
+
+def scan_unroll() -> bool | int:
+    return True if _PROBE["on"] else 1
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding constraints (§Perf iteration A)
+#
+# GSPMD resolves the embedding gather's output sharding badly: tokens are
+# batch-sharded on "data" AND the embedding's d_model dim is FSDP-sharded on
+# "data" — the conflict makes XLA pick a layout that leaves downstream
+# attention REPLICATED across the "model" axis (measured 14-16× redundant
+# compute per chip). One with_sharding_constraint on the embedded
+# activations — (batch→data axes, seq, d replicated) — restores propagation
+# end-to-end. Enabled per-run by the dry-run's --opt variant; off by
+# default so CPU tests never need a mesh context.
+# ---------------------------------------------------------------------------
+
+_ACT = {"batch": None, "model_size": 0, "gather_weights": True}
+
+
+def act_batch_axes():
+    """None = constraints off; else the mesh axes the batch shards over."""
+    return _ACT["batch"]
+
+
+class activation_sharding:
+    def __init__(self, batch_axes, model_size: int = 0,
+                 gather_weights: bool = True):
+        """gather_weights=False for TRAINING shapes: §Perf found explicit
+        weight-gathering catastrophic under backprop (grok-1 train: compute
+        ×164 worse — gradients materialize un-sharded); it is an
+        inference-shape optimization."""
+        self.batch_axes = batch_axes
+        self.model_size = model_size
+        self.gather_weights = gather_weights
+
+    def __enter__(self):
+        _ACT["batch"] = self.batch_axes
+        _ACT["model_size"] = self.model_size
+        _ACT["gather_weights"] = self.gather_weights
+        return self
+
+    def __exit__(self, *exc):
+        _ACT["batch"] = None
+        _ACT["model_size"] = 0
+        _ACT["gather_weights"] = True
+        return False
+
+
+def shard_batch_leading(x):
+    """Constrain x to (batch_axes, None, ...) when constraints are on."""
+    import jax
+    from jax.sharding import PartitionSpec
+
+    ba = _ACT["batch"]
+    if ba is None:
+        return x
+    spec = PartitionSpec(ba, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def gather_weight(w, model_dim: int | None):
+    """§Perf iteration C2 — explicit weight gathering: constrain a weight to
+    its spec WITHOUT the FSDP ("data") axis right before the matmul. XLA
+    then all-gathers the (per-layer, ~GB) weight instead of all-reducing the
+    (per-token, ~TB at 1M tokens) partial products — the right trade
+    whenever tokens ≫ weight rows. model_dim: which dim keeps its "model"
+    (TP) sharding; None = fully replicate."""
+    import jax
+    from jax.sharding import PartitionSpec
+
+    if _ACT["batch"] is None or not _ACT["gather_weights"]:
+        return w
+    axes = [None] * w.ndim
+    if model_dim is not None and _ACT["model_size"]:
+        if w.shape[model_dim] % _ACT["model_size"] == 0:
+            axes[model_dim] = "model"
+    return jax.lax.with_sharding_constraint(w, PartitionSpec(*axes))
+
+
+def shard_heads(x):
+    """Constrain a (B, S, H, Dh) tensor to (batch, None, "model", None) —
+    heads tensor-parallel — replicating heads instead when H doesn't divide
+    the model axis (pins the layout so the BACKWARD transposes can't force
+    involuntary full rematerialization; see §Perf iteration B3)."""
+    import jax
+    from jax.sharding import PartitionSpec
+
+    ba = _ACT["batch"]
+    if ba is None:
+        return x
+    msize = _ACT["model_size"]
+    h_axis = "model" if (msize and x.shape[2] % msize == 0) else None
+    spec = PartitionSpec(ba, None, h_axis, None)
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,23 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    sgd,
+    apply_updates,
+)
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_schedule,
+    linear_warmup_cosine,
+)
+from repro.optim.early_stopping import EarlyStopping
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgd",
+    "apply_updates",
+    "constant_schedule",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+    "EarlyStopping",
+]

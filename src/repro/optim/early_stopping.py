@@ -1,0 +1,24 @@
+"""Early stopping on validation loss — host-side helper (paper §4: patience 5)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass
+class EarlyStopping:
+    patience: int = 5
+    min_delta: float = 0.0
+    best: float = math.inf
+    bad_epochs: int = 0
+    best_epoch: int = -1
+
+    def update(self, value: float, epoch: int) -> bool:
+        """Record a validation metric; returns True if training should stop."""
+        if value < self.best - self.min_delta:
+            self.best = value
+            self.best_epoch = epoch
+            self.bad_epochs = 0
+            return False
+        self.bad_epochs += 1
+        return self.bad_epochs >= self.patience

@@ -1,0 +1,144 @@
+"""Minimal functional optimizer library (no optax in this environment).
+
+Optimizers follow the optax convention:
+
+    opt = adamw(lr=3e-4, weight_decay=0.01)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All state is a pytree so the whole thing jits/shards transparently under
+pjit — optimizer moments inherit the parameter sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def _lr_at(lr: ScalarOrSchedule, step: jax.Array) -> jax.Array:
+    if callable(lr):
+        return lr(step)
+    return jnp.asarray(lr, dtype=jnp.float32)
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def adamw(
+    lr: ScalarOrSchedule = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    grad_clip_norm: Optional[float] = None,
+    moment_dtype: Optional[jnp.dtype] = None,
+) -> Optimizer:
+    """AdamW with decoupled weight decay.
+
+    moment_dtype: store first/second moments in a reduced dtype (e.g.
+    jnp.bfloat16) — used for the very large assigned architectures so the
+    256-chip optimizer state fits HBM (see DESIGN.md §6).
+    """
+
+    def init(params):
+        def zeros(p):
+            return jnp.zeros_like(p, dtype=moment_dtype or p.dtype)
+
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads, state: AdamWState, params):
+        if grad_clip_norm is not None:
+            grads, _ = _clip_by_global_norm(grads, grad_clip_norm)
+        step = state.step + 1
+        stepf = step.astype(jnp.float32)
+        lr_t = _lr_at(lr, step)
+        bc1 = 1.0 - b1 ** stepf
+        bc2 = 1.0 - b2 ** stepf
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1.0 - b1) * g32
+            v32 = v.astype(jnp.float32) * b2 + (1.0 - b2) * jnp.square(g32)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * delta).astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        mu = treedef.unflatten([o[1] for o in out])
+        nu = treedef.unflatten([o[2] for o in out])
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Any
+
+
+def sgd(
+    lr: ScalarOrSchedule = 1e-2,
+    momentum: float = 0.0,
+    grad_clip_norm: Optional[float] = None,
+) -> Optimizer:
+    def init(params):
+        mom = (
+            jax.tree_util.tree_map(jnp.zeros_like, params)
+            if momentum
+            else None
+        )
+        return SGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state: SGDState, params):
+        del params
+        if grad_clip_norm is not None:
+            grads, _ = _clip_by_global_norm(grads, grad_clip_norm)
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            new_mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state.momentum, grads
+            )
+            updates = jax.tree_util.tree_map(lambda m: -lr_t * m, new_mom)
+            return updates, SGDState(step=step, momentum=new_mom)
+        updates = jax.tree_util.tree_map(lambda g: -lr_t * g, grads)
+        return updates, SGDState(step=step, momentum=None)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (functions of integer step → f32 scalar)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(value: float):
+    def fn(step):
+        del step
+        return jnp.asarray(value, jnp.float32)
+
+    return fn
+
+
+def cosine_schedule(peak: float, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+
+    return fn
+
+
+def linear_warmup_cosine(
+    peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0
+):
+    def fn(step):
+        stepf = step.astype(jnp.float32)
+        warm = peak * stepf / max(warmup_steps, 1)
+        frac = jnp.clip(
+            (stepf - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(stepf < warmup_steps, warm, cos)
+
+    return fn

@@ -1,0 +1,13 @@
+from repro.serve.batching import MicroBatcher
+from repro.serve.dual_index import DualIndexServer
+from repro.serve.orchestrator import Phase, UpgradeOrchestrator
+from repro.serve.router import QueryRouter, SearchResult
+
+__all__ = [
+    "MicroBatcher",
+    "DualIndexServer",
+    "Phase",
+    "UpgradeOrchestrator",
+    "QueryRouter",
+    "SearchResult",
+]

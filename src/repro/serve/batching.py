@@ -1,0 +1,53 @@
+"""Request micro-batcher: collects single-query requests into padded,
+fixed-shape batches so the serving path never retraces (static shapes on
+TPU). Size buckets are powers of two up to max_batch."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    embedding: np.ndarray
+
+
+class MicroBatcher:
+    def __init__(self, dim: int, max_batch: int = 256):
+        self.dim = dim
+        self.max_batch = max_batch
+        self._pending: list[Request] = []
+        self._next_id = 0
+
+    def submit(self, embedding: np.ndarray) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append(Request(rid, np.asarray(embedding, np.float32)))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def drain(self, search_fn: Callable, k: int = 10) -> dict[int, tuple]:
+        """Flush pending requests through search_fn in padded power-of-two
+        batches. Returns {request_id: (scores, ids)}."""
+        out: dict[int, tuple] = {}
+        while self._pending:
+            batch = self._pending[: self.max_batch]
+            self._pending = self._pending[self.max_batch :]
+            n = len(batch)
+            bucket = 1 << (n - 1).bit_length()        # next pow2 ≥ n
+            bucket = min(bucket, self.max_batch)
+            q = np.zeros((bucket, self.dim), np.float32)
+            for i, r in enumerate(batch):
+                q[i] = r.embedding
+            scores, ids = search_fn(jnp.asarray(q), k)
+            for i, r in enumerate(batch):
+                out[r.rid] = (np.asarray(scores[i]), np.asarray(ids[i]))
+        return out

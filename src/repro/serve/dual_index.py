@@ -1,0 +1,33 @@
+"""Dual-index serving — the transition-period baseline of Table 3.
+
+Both the legacy and the rebuilt index stay online; every query hits both
+and the per-query top-k merges. Costs 2× serve capacity and the merge
+latency — the operational profile Drift-Adapter is compared against.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.ann.flat import FlatIndex
+
+
+@dataclasses.dataclass
+class DualIndexServer:
+    old_index: FlatIndex          # legacy (f_old) embeddings
+    new_index: FlatIndex          # rebuilt (f_new) embeddings — may be partial
+    new_ids: jax.Array            # global ids of rows present in new_index
+
+    def search(self, q_new: jax.Array, q_old_mapped: jax.Array, k: int = 10):
+        """q_new searches the new index natively; q_old_mapped (adapter
+        output or raw) searches the legacy one; results merge on score."""
+        s_new, i_new_local = self.new_index.search(q_new, k=k)
+        i_new = self.new_ids[i_new_local]
+        s_old, i_old = self.old_index.search(q_old_mapped, k=k)
+        s = jnp.concatenate([s_new, s_old], axis=1)
+        i = jnp.concatenate([i_new, i_old], axis=1)
+        top_s, pos = jax.lax.top_k(s, k)
+        top_i = jnp.take_along_axis(i, pos, axis=1)
+        return top_s, top_i

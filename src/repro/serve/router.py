@@ -1,0 +1,65 @@
+"""Query router — the serving-path integration point of Drift-Adapter.
+
+The router owns the ANN index handle and an optional adapter slot. Installing
+an adapter is an ATOMIC swap (one attribute assignment of an immutable
+object): in-flight queries finish on the old path, new queries take the new
+one — this is the paper's "near-zero operational interruption" deploy story
+(§5.2): ship the <3 MB adapter to every router, swap, done.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ann.flat import FlatIndex
+from repro.core.api import DriftAdapter
+
+
+@dataclasses.dataclass
+class SearchResult:
+    scores: jax.Array
+    ids: jax.Array
+    adapter_kind: str
+    latency_s: float
+
+
+class QueryRouter:
+    """Serves similarity queries against one index, adapting query
+    embeddings into the index's native space when an adapter is installed."""
+
+    def __init__(self, index: FlatIndex, adapter: Optional[DriftAdapter] = None):
+        self.index = index
+        self._adapter = adapter
+        self.queries_served = 0
+        self.swaps = 0
+
+    @property
+    def adapter(self) -> Optional[DriftAdapter]:
+        return self._adapter
+
+    def install_adapter(self, adapter: Optional[DriftAdapter]) -> None:
+        """Atomic swap; None uninstalls (queries pass through unmapped)."""
+        self._adapter = adapter
+        self.swaps += 1
+
+    def search(self, queries: jax.Array, k: int = 10) -> SearchResult:
+        t0 = time.perf_counter()
+        adapter = self._adapter      # read once — atomicity
+        if adapter is not None:
+            queries = adapter.apply(queries)
+        scores, ids = self.index.search(queries, k=k)
+        self.queries_served += queries.shape[0]
+        return SearchResult(
+            scores=scores,
+            ids=ids,
+            adapter_kind=adapter.kind if adapter else "none",
+            latency_s=time.perf_counter() - t0,
+        )
+
+    def replace_rows(self, ids: jax.Array, rows: jax.Array) -> None:
+        """Background re-embedder hook: overwrite rows in place (§5.6)."""
+        self.index = self.index.replace_rows(ids, rows)

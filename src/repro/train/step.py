@@ -1,0 +1,74 @@
+"""Training step factory — the function the multi-pod dry-run lowers.
+
+One train_step = forward (chunked CE + MoE aux) → backward → AdamW update.
+Optimizer moments live in cfg.moment_dtype (bf16 for the 100B+ architectures
+so the 256-chip optimizer state fits HBM — DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import lm_loss
+from repro.models.encdec import encdec_loss
+from repro.optim import adamw, apply_updates
+from repro.utils import global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def make_optimizer(cfg: ModelConfig, lr: float = 3e-4):
+    return adamw(
+        lr=lr,
+        weight_decay=0.01,
+        grad_clip_norm=1.0,
+        moment_dtype={"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+            cfg.moment_dtype
+        ],
+    )
+
+
+def init_train_state(params, cfg: ModelConfig, lr: float = 3e-4) -> TrainState:
+    opt = make_optimizer(cfg, lr)
+    return TrainState(
+        params=params, opt_state=opt.init(params), step=jnp.zeros((), jnp.int32)
+    )
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch keys: "tokens" (B,S) int32; plus "frontend" for vlm (patch
+    embeddings) / audio (frame embeddings).
+    """
+    opt = make_optimizer(cfg, lr)
+
+    def loss_fn(params, batch):
+        if cfg.is_encoder_decoder:
+            return encdec_loss(params, cfg, batch["frontend"], batch["tokens"])
+        return lm_loss(
+            params, cfg, batch["tokens"], batch.get("frontend")
+        )
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch
+        )
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        metrics = {
+            "loss": loss,
+            "ce": parts["ce"],
+            "aux": parts["aux"],
+            "grad_norm": global_norm(grads),
+        }
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,17 @@
+from repro.utils.tree import (
+    tree_size,
+    tree_bytes,
+    tree_zeros_like,
+    tree_cast,
+    global_norm,
+)
+from repro.utils.prng import key_iter
+
+__all__ = [
+    "tree_size",
+    "tree_bytes",
+    "tree_zeros_like",
+    "tree_cast",
+    "global_norm",
+    "key_iter",
+]

@@ -1,0 +1,12 @@
+"""Deterministic PRNG key management."""
+from __future__ import annotations
+
+import jax
+
+
+def key_iter(seed: int):
+    """Infinite iterator of fresh PRNG keys derived from one seed."""
+    key = jax.random.PRNGKey(seed)
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub

@@ -1,0 +1,12 @@
+import jax
+import pytest
+
+# Tests run on the default single CPU device. The 512-device environment is
+# exercised ONLY by dryrun.py / subprocess tests (per the brief: smoke tests
+# and benches must see 1 device).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

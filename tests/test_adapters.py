@@ -1,0 +1,172 @@
+"""Unit tests for the Drift-Adapter core math (paper §3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DriftAdapter,
+    FitConfig,
+    adapter_apply,
+    dsm_fit_posthoc,
+    l2_normalize,
+    procrustes_apply,
+    procrustes_fit,
+)
+
+
+def _unit_rows(key, n, d):
+    x = jax.random.normal(key, (n, d))
+    return x / jnp.linalg.norm(x, axis=1, keepdims=True)
+
+
+class TestProcrustes:
+    def test_recovers_exact_rotation(self, rng):
+        d = 64
+        b = _unit_rows(rng, 500, d)
+        r_true = jnp.linalg.qr(
+            jax.random.normal(jax.random.PRNGKey(1), (d, d))
+        )[0]
+        a = b @ r_true.T
+        params = procrustes_fit(a, b)
+        np.testing.assert_allclose(
+            np.asarray(params["R"]), np.asarray(r_true), atol=1e-4
+        )
+
+    def test_solution_is_orthogonal(self, rng):
+        d = 48
+        a = jax.random.normal(rng, (300, d))
+        b = jax.random.normal(jax.random.PRNGKey(2), (300, d))
+        r = procrustes_fit(a, b)["R"]
+        np.testing.assert_allclose(
+            np.asarray(r @ r.T), np.eye(d), atol=1e-4
+        )
+
+    def test_rectangular_semi_orthogonal(self, rng):
+        a = jax.random.normal(rng, (400, 32))           # d_old = 32
+        b = jax.random.normal(jax.random.PRNGKey(3), (400, 64))
+        r = procrustes_fit(a, b)["R"]                   # (32, 64)
+        assert r.shape == (32, 64)
+        np.testing.assert_allclose(np.asarray(r @ r.T), np.eye(32), atol=1e-4)
+
+    def test_is_global_optimum_among_rotations(self, rng):
+        """No random orthogonal matrix beats the closed form."""
+        d = 24
+        b = _unit_rows(rng, 200, d)
+        a = b @ jnp.linalg.qr(
+            jax.random.normal(jax.random.PRNGKey(5), (d, d))
+        )[0].T + 0.01 * jax.random.normal(jax.random.PRNGKey(6), (200, d))
+        r_star = procrustes_fit(a, b)["R"]
+        best = float(jnp.sum((b @ r_star.T - a) ** 2))
+        for seed in range(5):
+            q = jnp.linalg.qr(
+                jax.random.normal(jax.random.PRNGKey(100 + seed), (d, d))
+            )[0]
+            assert float(jnp.sum((b @ q.T - a) ** 2)) >= best - 1e-4
+
+
+class TestDSM:
+    def test_posthoc_is_per_dim_least_squares(self, rng):
+        a_hat = jax.random.normal(rng, (300, 16))
+        s_true = jnp.linspace(0.5, 2.0, 16)
+        a = a_hat * s_true
+        s = dsm_fit_posthoc(a, a_hat)["s"]
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_true), atol=1e-5)
+
+    def test_posthoc_never_hurts_mse(self, rng):
+        a = jax.random.normal(rng, (200, 8))
+        a_hat = a * 1.7 + 0.1 * jax.random.normal(jax.random.PRNGKey(7), (200, 8))
+        s = dsm_fit_posthoc(a, a_hat)["s"]
+        before = float(jnp.mean((a_hat - a) ** 2))
+        after = float(jnp.mean((a_hat * s - a) ** 2))
+        assert after <= before + 1e-7
+
+
+class TestApply:
+    def test_renormalize_unit_norm(self, rng):
+        d = 32
+        params = {"core": procrustes_fit(
+            _unit_rows(rng, 100, d), _unit_rows(jax.random.PRNGKey(8), 100, d)
+        )}
+        y = adapter_apply("op", params, jax.random.normal(rng, (50, d)) * 3.0)
+        np.testing.assert_allclose(
+            np.asarray(jnp.linalg.norm(y, axis=1)), 1.0, atol=1e-5
+        )
+
+    def test_identity_kind(self, rng):
+        x = _unit_rows(rng, 10, 16)
+        y = adapter_apply("identity", {"core": {}}, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError):
+            adapter_apply("nope", {"core": {}}, jnp.zeros((1, 4)))
+
+
+class TestFacade:
+    def test_fit_apply_save_load_roundtrip(self, rng, tmp_path):
+        d = 32
+        b = _unit_rows(rng, 800, d)
+        a = b @ jnp.linalg.qr(
+            jax.random.normal(jax.random.PRNGKey(9), (d, d))
+        )[0].T
+        ad = DriftAdapter.fit(
+            b, a, kind="mlp", config=FitConfig(kind="mlp", max_epochs=2)
+        )
+        p = str(tmp_path / "ad.msgpack")
+        ad.save(p)
+        loaded = DriftAdapter.load(p)
+        x = _unit_rows(jax.random.PRNGKey(10), 20, d)
+        np.testing.assert_allclose(
+            np.asarray(loaded.apply(x)), np.asarray(ad.apply(x)), atol=1e-6
+        )
+        assert loaded.kind == "mlp"
+        assert loaded.param_bytes == ad.param_bytes
+
+    def test_param_budget_matches_paper_appendix(self, rng):
+        """A.1: OP ≈ 2.36 MB, LA ≈ 0.39 MB, MLP ≈ 1.57 MB at d=768."""
+        d = 768
+        b = _unit_rows(rng, 2048, d)
+        a = _unit_rows(jax.random.PRNGKey(11), 2048, d)
+        op = DriftAdapter.fit(b, a, kind="op", use_dsm=False)
+        assert abs(op.param_bytes - d * d * 4) < 1024
+        la = DriftAdapter.fit(
+            b, a, kind="la", use_dsm=False,
+            config=FitConfig(kind="la", use_dsm=False, max_epochs=1),
+        )
+        assert abs(la.param_bytes - (2 * d * 64 + d) * 4) < 1024
+        mlp = DriftAdapter.fit(
+            b, a, kind="mlp", use_dsm=False,
+            config=FitConfig(kind="mlp", use_dsm=False, max_epochs=1),
+        )
+        expected = (256 * d + 256 + d * 256 + d) * 4
+        assert abs(mlp.param_bytes - expected) < 1024
+
+    def test_fit_reduces_mse_vs_identity(self, rng):
+        d = 48
+        b = _unit_rows(rng, 4000, d)
+        rot = jnp.linalg.qr(
+            jax.random.normal(jax.random.PRNGKey(12), (d, d))
+        )[0]
+        a = l2_normalize(b @ rot.T)
+        mse_id = float(jnp.mean(jnp.sum((b - a) ** 2, axis=1)))
+        ad = DriftAdapter.fit(
+            b, a, kind="la", config=FitConfig(kind="la", max_epochs=30)
+        )
+        assert ad.fit_info.val_mse < mse_id
+
+    def test_warm_start_beats_cold_under_rotation(self, rng):
+        d = 64
+        b = _unit_rows(rng, 5000, d)
+        a = b @ jnp.linalg.qr(
+            jax.random.normal(jax.random.PRNGKey(13), (d, d))
+        )[0].T
+        cold = DriftAdapter.fit(
+            b, a, kind="mlp", config=FitConfig(kind="mlp", max_epochs=5)
+        )
+        warm = DriftAdapter.fit(
+            b, a, kind="mlp",
+            config=FitConfig(kind="mlp", max_epochs=5,
+                             procrustes_warm_start=True),
+        )
+        assert warm.fit_info.val_mse < cold.fit_info.val_mse

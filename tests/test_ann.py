@@ -1,0 +1,122 @@
+"""ANN substrate tests: flat scan, IVF, k-means, metrics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ann import (
+    FlatIndex,
+    build_ivf,
+    flat_search_jnp,
+    ivf_search,
+    kmeans_fit,
+    mrr,
+    recall_at_k,
+)
+from repro.data import CorpusConfig, make_corpus
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    cfg = CorpusConfig(n_items=8000, dim=64, n_clusters=80, seed=0)
+    x, assign = make_corpus(cfg)
+    return x, assign
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    x, _ = corpus
+    q = x[:64] + 0.05 * jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    return q / jnp.linalg.norm(q, axis=1, keepdims=True)
+
+
+class TestFlat:
+    def test_matches_numpy_exhaustive(self, corpus, queries):
+        x, _ = corpus
+        gt = np.argsort(-(np.asarray(queries) @ np.asarray(x).T), axis=1)[:, :10]
+        _, ids = flat_search_jnp(x, queries, k=10, block_rows=1024)
+        np.testing.assert_array_equal(np.asarray(ids), gt)
+
+    @pytest.mark.parametrize("block_rows", [100, 999, 4096, 100_000])
+    def test_block_size_invariance(self, corpus, queries, block_rows):
+        x, _ = corpus
+        _, ref = flat_search_jnp(x, queries, k=5, block_rows=8000)
+        _, ids = flat_search_jnp(x, queries, k=5, block_rows=block_rows)
+        np.testing.assert_array_equal(np.asarray(ids), np.asarray(ref))
+
+    def test_index_replace_rows(self, corpus, queries):
+        x, _ = corpus
+        idx = FlatIndex(corpus=x)
+        # overwrite row 0 with query 0 → it must become the top hit
+        idx2 = idx.replace_rows(jnp.asarray([0]), queries[:1])
+        _, ids = idx2.search(queries[:1], k=1)
+        assert int(ids[0, 0]) == 0
+
+
+class TestIVF:
+    def test_full_probe_is_exact(self, corpus, queries):
+        x, _ = corpus
+        index = build_ivf(jax.random.PRNGKey(0), x, n_cells=32,
+                          spill_factor=33.0)
+        _, exact = flat_search_jnp(x, queries, k=10)
+        _, ids = ivf_search(index, queries, k=10, nprobe=32, query_block=64)
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(ids), axis=1), np.sort(np.asarray(exact), axis=1)
+        )
+
+    def test_recall_monotonic_in_nprobe(self, corpus, queries):
+        x, _ = corpus
+        index = build_ivf(jax.random.PRNGKey(0), x, n_cells=64)
+        _, exact = flat_search_jnp(x, queries, k=10)
+        last = 0.0
+        for nprobe in (1, 4, 16, 64):
+            _, ids = ivf_search(index, queries, k=10, nprobe=nprobe,
+                                query_block=64)
+            r = float(recall_at_k(ids, exact))
+            assert r >= last - 0.02   # allow tiny non-monotonic noise
+            last = r
+        assert last > 0.95
+
+    def test_every_item_indexed_once(self, corpus):
+        x, _ = corpus
+        index = build_ivf(jax.random.PRNGKey(0), x, n_cells=32)
+        ids = np.asarray(index.cell_ids).ravel()
+        ids = ids[ids >= 0]
+        assert len(ids) == x.shape[0]
+        assert len(np.unique(ids)) == x.shape[0]
+
+
+class TestKMeans:
+    def test_assignment_is_nearest_centroid(self, corpus):
+        x, _ = corpus
+        centroids, assign = kmeans_fit(jax.random.PRNGKey(0), x, 16, iters=5)
+        sims = np.asarray(x @ centroids.T)
+        np.testing.assert_array_equal(np.asarray(assign), sims.argmax(1))
+
+    def test_centroids_unit_norm(self, corpus):
+        x, _ = corpus
+        centroids, _ = kmeans_fit(jax.random.PRNGKey(0), x, 16, iters=5)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(centroids), axis=1), 1.0, atol=1e-5
+        )
+
+
+class TestMetrics:
+    def test_recall_perfect_and_zero(self):
+        gt = jnp.asarray([[1, 2, 3], [4, 5, 6]])
+        assert float(recall_at_k(gt, gt)) == 1.0
+        miss = jnp.asarray([[7, 8, 9], [10, 11, 12]])
+        assert float(recall_at_k(miss, gt)) == 0.0
+
+    def test_recall_partial(self):
+        gt = jnp.asarray([[1, 2, 3, 4]])
+        got = jnp.asarray([[1, 2, 99, 98]])
+        assert float(recall_at_k(got, gt)) == pytest.approx(0.5)
+
+    def test_mrr_rank_positions(self):
+        gt1 = jnp.asarray([5, 9])
+        got = jnp.asarray([[5, 0, 0], [0, 0, 9]])
+        assert float(mrr(got, gt1)) == pytest.approx((1.0 + 1 / 3) / 2)
+
+    def test_mrr_not_found_is_zero(self):
+        assert float(mrr(jnp.asarray([[1, 2]]), jnp.asarray([3]))) == 0.0

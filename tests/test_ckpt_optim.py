@@ -1,0 +1,85 @@
+"""Checkpointing + optimizer substrate tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import load_pytree, save_pytree
+from repro.optim import (
+    EarlyStopping,
+    adamw,
+    apply_updates,
+    cosine_schedule,
+    linear_warmup_cosine,
+    sgd,
+)
+
+
+def test_ckpt_roundtrip_nested(tmp_path):
+    tree = {
+        "layers": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                   "b": jnp.ones((4,), jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    p = str(tmp_path / "ck.msgpack")
+    save_pytree(p, tree, metadata={"note": "x"})
+    restored = load_pytree(p, like=tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_ckpt_missing_key_raises(tmp_path):
+    p = str(tmp_path / "ck.msgpack")
+    save_pytree(p, {"a": jnp.zeros(2)})
+    with pytest.raises(KeyError):
+        load_pytree(p, like={"a": jnp.zeros(2), "b": jnp.zeros(3)})
+
+
+def test_adamw_matches_reference_step():
+    """One AdamW step against the textbook update."""
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.5])}
+    lr, wd, b1, b2, eps = 0.1, 0.01, 0.9, 0.999, 1e-8
+    opt = adamw(lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=wd)
+    state = opt.init(p)
+    upd, _ = opt.update(g, state, p)
+    m = (1 - b1) * g["w"] / (1 - b1)
+    v = (1 - b2) * g["w"] ** 2 / (1 - b2)
+    expected = -lr * (m / (jnp.sqrt(v) + eps) + wd * p["w"])
+    np.testing.assert_allclose(np.asarray(upd["w"]), np.asarray(expected),
+                               rtol=1e-5)
+
+
+def test_adamw_bf16_moments_dtype():
+    p = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    opt = adamw(moment_dtype=jnp.bfloat16)
+    state = opt.init(p)
+    assert state.mu["w"].dtype == jnp.bfloat16
+
+
+def test_grad_clip_limits_update_norm():
+    p = {"w": jnp.zeros((3,))}
+    g = {"w": jnp.asarray([100.0, 100.0, 100.0])}
+    opt = sgd(lr=1.0, grad_clip_norm=1.0)
+    state = opt.init(p)
+    upd, _ = opt.update(g, state, p)
+    assert float(jnp.linalg.norm(upd["w"])) <= 1.0 + 1e-5
+
+
+def test_schedules_shapes():
+    s = cosine_schedule(1.0, 100)
+    assert float(s(jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(s(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)
+    w = linear_warmup_cosine(1.0, 10, 100)
+    assert float(w(jnp.asarray(5))) == pytest.approx(0.5)
+
+
+def test_early_stopping_patience():
+    es = EarlyStopping(patience=3)
+    vals = [1.0, 0.9, 0.95, 0.96, 0.97]
+    stops = [es.update(v, i) for i, v in enumerate(vals)]
+    assert stops == [False, False, False, False, True]
+    assert es.best == 0.9 and es.best_epoch == 1

@@ -1,0 +1,79 @@
+"""Data pipeline tests: corpus generation, drift transform, pair sampling."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import (
+    CorpusConfig,
+    make_corpus,
+    make_drift,
+    make_pairs,
+    make_queries,
+)
+from repro.data.drift import DriftConfig, IMAGE_CLIP, MILD_TEXT, SEVERE_GLOVE
+
+
+def test_corpus_unit_norm_and_deterministic():
+    cfg = CorpusConfig(n_items=500, dim=32, n_clusters=10, seed=4)
+    x1, a1 = make_corpus(cfg)
+    x2, a2 = make_corpus(cfg)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x1), axis=1), 1.0, atol=1e-5
+    )
+
+
+def test_queries_share_centres_but_not_items():
+    cfg = CorpusConfig(n_items=2000, dim=64, n_clusters=20, seed=0)
+    x, _ = make_corpus(cfg)
+    q, _ = make_queries(cfg, 100)
+    # same mixture: a query's nearest corpus item should be close
+    sims = np.asarray(q @ x.T).max(axis=1)
+    assert sims.mean() > 0.5
+    # but never identical (held out)
+    assert sims.max() < 0.999
+
+
+def test_drift_transform_deterministic_and_salted():
+    dcfg = dataclasses.replace(MILD_TEXT, d_old=32, d_new=32)
+    drift = make_drift(dcfg)
+    x = make_corpus(CorpusConfig(n_items=50, dim=32, seed=1))[0]
+    y1 = drift(x, noise_salt=0)
+    y2 = drift(x, noise_salt=0)
+    y3 = drift(x, noise_salt=1)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert not np.allclose(np.asarray(y1), np.asarray(y3))
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y1), axis=1), 1.0, atol=1e-5
+    )
+
+
+def test_rectangular_presets_shapes():
+    for preset in (IMAGE_CLIP, SEVERE_GLOVE):
+        drift = make_drift(preset)
+        x = jnp.ones((3, preset.d_old)) / jnp.sqrt(preset.d_old)
+        y = drift(x)
+        assert y.shape == (3, preset.d_new)
+
+
+def test_pairs_are_database_rows():
+    cfg = CorpusConfig(n_items=300, dim=16, seed=2)
+    x, _ = make_corpus(cfg)
+    dcfg = DriftConfig(d_old=16, d_new=16, rotation_theta=0.3, seed=3)
+    drift = make_drift(dcfg)
+    y = drift(x, 0)
+    b, a, idx = make_pairs(jax.random.PRNGKey(0), x, y, 64)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(x[idx]))
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(y[idx]))
+    assert len(np.unique(np.asarray(idx))) == 64   # no replacement
+
+
+def test_zero_drift_is_identity():
+    dcfg = DriftConfig(d_old=24, d_new=24, rotation_theta=0.0,
+                       scale_sigma=0.0, nonlinear_alpha=0.0,
+                       noise_sigma=0.0, seed=0)
+    drift = make_drift(dcfg)
+    x = make_corpus(CorpusConfig(n_items=20, dim=24, seed=0))[0]
+    np.testing.assert_allclose(np.asarray(drift(x)), np.asarray(x), atol=1e-5)

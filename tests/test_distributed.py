@@ -1,0 +1,85 @@
+"""Distributed tests — run in a subprocess with 8 forced host devices so the
+main pytest process keeps its single-device view (per the brief)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+
+
+def test_sharded_search_equals_exact():
+    r = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.ann import sharded_search
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,)*2)
+        key = jax.random.PRNGKey(0)
+        corpus = jax.random.normal(key, (4096, 64))
+        corpus /= jnp.linalg.norm(corpus, axis=1, keepdims=True)
+        queries = corpus[:32]
+        fn = sharded_search(mesh, corpus, queries, k=7)
+        s, i = fn(corpus, queries)
+        gt = np.argsort(-(np.asarray(queries) @ np.asarray(corpus).T),
+                        axis=1)[:, :7]
+        assert np.array_equal(np.asarray(i), gt), "mismatch"
+        print("OK")
+    """)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+def test_sharded_search_with_adapter():
+    r = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.ann import sharded_search, flat_search_jnp
+        from repro.core import DriftAdapter, FitConfig
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,)*2)
+        key = jax.random.PRNGKey(0)
+        d = 64
+        corpus = jax.random.normal(key, (2048, d))
+        corpus /= jnp.linalg.norm(corpus, axis=1, keepdims=True)
+        rot = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1), (d, d)))[0]
+        corpus_new = corpus @ rot.T
+        ad = DriftAdapter.fit(corpus_new, corpus, kind="op",
+                              config=FitConfig(kind="op", use_dsm=False))
+        q_new = corpus_new[:16]
+        fn = sharded_search(mesh, corpus, q_new, k=5, adapter_fn=ad.apply)
+        s, i = fn(corpus, q_new)
+        _, ref = flat_search_jnp(corpus, ad.apply(q_new), k=5)
+        assert np.array_equal(np.asarray(i), np.asarray(ref))
+        print("OK")
+    """)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_one_combo_compiles():
+    """A miniature of the 512-device dry-run inside CI: one arch × shape on
+    the full production mesh."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen3-0.6b", "--shape", "decode_32k", "--no-probe",
+         "--out", ""],
+        capture_output=True, text=True, env=env, timeout=600, cwd=REPO,
+    )
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-1000:])
+    assert "[ok" in r.stdout

@@ -1,0 +1,131 @@
+"""Launch-layer tests: roofline math, HLO collective parser, config
+estimates, report rendering — all pure-CPU, no mesh needed."""
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.roofline import (
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    model_flops_estimate,
+    parse_collective_bytes,
+    roofline_terms,
+)
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = bf16[2048,512]{1,0} all-gather(%p0), replica_groups={}
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%add
+  %rs = f32[64,32]{1,0} reduce-scatter(%y), to_apply=%add
+  %a2a = bf16[16,128]{1,0} all-to-all(%z)
+  %cp = u32[8]{0} collective-permute(%w)
+  %ags = bf16[4,4]{1,0} all-gather-start(%q)
+  %not_a_coll = f32[10]{0} add(%a, %b)
+}
+"""
+
+
+class TestCollectiveParser:
+    def test_counts_each_kind(self):
+        out = parse_collective_bytes(HLO_SAMPLE)
+        assert out["all-gather"] == 2048 * 512 * 2 + 4 * 4 * 2  # incl -start
+        assert out["all-reduce"] == 1024 * 4 * 2                # 2x phases
+        assert out["reduce-scatter"] == 64 * 32 * 4
+        assert out["all-to-all"] == 16 * 128 * 2
+        assert out["collective-permute"] == 8 * 4
+
+    def test_ignores_non_collectives(self):
+        out = parse_collective_bytes("%x = f32[99]{0} add(%a, %b)")
+        assert sum(out.values()) == 0
+
+
+class TestRooflineTerms:
+    def test_terms_and_dominance(self):
+        t = roofline_terms(
+            flops=PEAK_FLOPS, bytes_accessed=0.0, collective_bytes=0.0,
+            n_chips=1,
+        )
+        assert t["compute_s"] == pytest.approx(1.0)
+        assert t["dominant"] == "compute_s"
+        t = roofline_terms(0.0, HBM_BW * 2, LINK_BW, 1)
+        assert t["memory_s"] == pytest.approx(2.0)
+        assert t["collective_s"] == pytest.approx(1.0)
+        assert t["dominant"] == "memory_s"
+
+    def test_chips_scale_down_terms(self):
+        t1 = roofline_terms(1e18, 1e15, 1e14, 1)
+        t256 = roofline_terms(1e18, 1e15, 1e14, 256)
+        assert t256["compute_s"] == pytest.approx(t1["compute_s"] / 256)
+
+
+class TestParamEstimates:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_full_param_counts_in_expected_band(self, arch):
+        """The analytic estimate must land near the architecture's
+        advertised size (the number in its name / model card)."""
+        expected = {
+            "dbrx-132b": 132e9, "mamba2-780m": 0.78e9,
+            "grok-1-314b": 314e9, "qwen1.5-0.5b": 0.5e9,
+            "qwen2-1.5b": 1.5e9, "zamba2-7b": 7e9, "gemma2-9b": 9e9,
+            "internvl2-76b": 70e9,  # language backbone only (stub frontend)
+            "qwen3-0.6b": 0.6e9, "seamless-m4t-large-v2": 2.3e9,
+        }[arch]
+        got = get_config(arch).param_count_estimate()
+        assert 0.5 * expected < got < 1.8 * expected, (arch, got)
+
+    def test_moe_active_params_much_smaller(self):
+        cfg = get_config("dbrx-132b")
+        total = cfg.param_count_estimate()
+        active = cfg.active_param_count_estimate()
+        assert active < 0.45 * total   # 4 of 16 experts + dense parts
+
+    def test_model_flops_train_vs_infer(self):
+        cfg = get_config("qwen3-0.6b")
+        assert model_flops_estimate(cfg, 1000, True) == pytest.approx(
+            3 * model_flops_estimate(cfg, 1000, False)
+        )
+
+
+class TestDryRunArtifacts:
+    """Validate the committed dry-run artifacts (integration check of the
+    whole §Dry-run pipeline without re-compiling anything)."""
+
+    DIR = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                       "experiments", "dryrun")
+
+    @pytest.mark.skipif(not os.path.isdir(DIR), reason="no dryrun artifacts")
+    def test_full_coverage_and_no_errors(self):
+        import glob
+
+        rows = []
+        for f in glob.glob(os.path.join(self.DIR, "*.json")):
+            if "__opt" in f:
+                continue
+            with open(f) as fh:
+                rows.append(json.load(fh))
+        by_mesh = {}
+        for r in rows:
+            by_mesh.setdefault(r["mesh"], []).append(r)
+        for mesh, rs in by_mesh.items():
+            assert len(rs) == 40, (mesh, len(rs))      # 10 arch × 4 shapes
+            assert all(r["status"] in ("ok", "skipped") for r in rs)
+            n_ok = sum(r["status"] == "ok" for r in rs)
+            assert n_ok == 34                           # 6 documented skips
+
+    @pytest.mark.skipif(not os.path.isdir(DIR), reason="no dryrun artifacts")
+    def test_ok_rows_have_roofline_and_memory(self):
+        import glob
+
+        for f in glob.glob(os.path.join(self.DIR, "*16x16.json")):
+            with open(f) as fh:
+                r = json.load(fh)
+            if r["status"] != "ok":
+                continue
+            assert r["roofline"]["dominant"] in (
+                "compute_s", "memory_s", "collective_s"
+            )
+            assert r["memory_analysis"]["argument_size_in_bytes"] > 0
+            assert r["probe_cost"]["flops"] > 0

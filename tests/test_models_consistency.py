@@ -1,0 +1,153 @@
+"""Deep model-substrate correctness: decode-vs-prefill agreement, SSD vs
+naive recurrence, flash vs dense attention, MoE dispatch invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import decode_step, forward, init_cache, init_model
+from repro.models.layers import (
+    AttnDims,
+    _gqa_out,
+    _gqa_scores,
+    flash_gqa,
+    moe_apply,
+    moe_init,
+)
+from repro.models.mamba2 import ssd_chunked
+from repro.models.model import _head_weight
+
+CONSISTENCY_ARCHS = [
+    "qwen3-0.6b", "qwen2-1.5b", "gemma2-9b", "mamba2-780m", "zamba2-7b",
+]
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_decode_matches_prefill(arch):
+    cfg = get_config(arch, reduced=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 2, cfg.vocab_size)
+    hidden, _ = forward(params, cfg, tokens)
+    full = np.asarray((hidden @ _head_weight(params, cfg)).astype(jnp.float32))
+    if cfg.final_softcap:
+        full = cfg.final_softcap * np.tanh(full / cfg.final_softcap)
+    cache = init_cache(cfg, B, S)
+    dec = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))
+    outs = []
+    for t in range(S):
+        lg, cache = dec(params, cache, tokens[:, t : t + 1])
+        outs.append(np.asarray(lg))
+    np.testing.assert_allclose(np.stack(outs, 1), full, atol=2e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["dbrx-132b", "grok-1-314b"])
+def test_moe_decode_matches_prefill_with_ample_capacity(arch):
+    cfg = get_config(arch, reduced=True, capacity_factor=8.0)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 2, cfg.vocab_size)
+    hidden, _ = forward(params, cfg, tokens)
+    full = np.asarray((hidden @ _head_weight(params, cfg)).astype(jnp.float32))
+    if cfg.final_softcap:
+        full = cfg.final_softcap * np.tanh(full / cfg.final_softcap)
+    cache = init_cache(cfg, B, S)
+    dec = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))
+    outs = []
+    for t in range(S):
+        lg, cache = dec(params, cache, tokens[:, t : t + 1])
+        outs.append(np.asarray(lg))
+    np.testing.assert_allclose(np.stack(outs, 1), full, atol=2e-4, rtol=1e-4)
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    B, L, H, P, G, N = 2, 64, 4, 8, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    a_neg = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    b_in = jax.random.normal(ks[3], (B, L, G, N))
+    c_in = jax.random.normal(ks[4], (B, L, G, N))
+
+    r = H // G
+    bh = jnp.repeat(b_in, r, axis=2)
+    ch = jnp.repeat(c_in, r, axis=2)
+
+    def step(state, t):
+        decay = jnp.exp(dt[:, t] * a_neg)
+        upd = (dt[:, t, :, None] * x[:, t])[..., None] * bh[:, t, :, None, :]
+        state = state * decay[..., None, None] + upd
+        return state, jnp.einsum("bhpn,bhn->bhp", state, ch[:, t])
+
+    state0 = jnp.zeros((B, H, P, N))
+    final, ys = jax.lax.scan(step, state0, jnp.arange(L))
+    y_ref = jnp.moveaxis(ys, 0, 1)
+    for chunk in (8, 16, 64):
+        y, s = ssd_chunked(x, dt, a_neg, b_in, c_in, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(final),
+                                   atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [1 << 30, 48])
+def test_flash_matches_dense(causal, window):
+    B, S, H, G, Dh = 2, 256, 8, 2, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, Dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, G, Dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, G, Dh))
+    scores = _gqa_scores(q, k, 0.0)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = ((j <= i) & (i - j < window)) if causal else (jnp.abs(i - j) < window)
+    scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    ref = _gqa_out(jax.nn.softmax(scores, -1), v, H).reshape(B, S, H * Dh)
+    out = flash_gqa(q, k, v, causal=causal, window=window,
+                    q_block=64, kv_block=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-5)
+
+
+class TestMoEDispatch:
+    def test_outputs_are_gateweighted_expert_mix(self):
+        """With capacity ample and k=1, output == selected expert's FFN."""
+        d, dff, e = 16, 32, 4
+        params = moe_init(jax.random.PRNGKey(0), d, dff, e)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d))
+        out, aux = moe_apply(params, x, top_k=1, capacity_factor=8.0)
+        logits = x @ params["router"]
+        sel = jnp.argmax(logits, axis=-1)
+        for bi in range(2):
+            for si in range(8):
+                ei = int(sel[bi, si])
+                xi = x[bi, si]
+                h = jax.nn.silu(xi @ params["w_gate"][ei]) * (xi @ params["w_in"][ei])
+                expected = h @ params["w_out"][ei]
+                np.testing.assert_allclose(
+                    np.asarray(out[bi, si]), np.asarray(expected),
+                    atol=1e-4, rtol=1e-4,
+                )
+
+    def test_aux_loss_near_one_when_balanced(self):
+        """Uniform router ⇒ Switch aux ≈ 1 (its minimum)."""
+        d, dff, e = 8, 16, 4
+        params = moe_init(jax.random.PRNGKey(0), d, dff, e)
+        params = dict(params, router=jnp.zeros((d, e)))
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, d))
+        _, aux = moe_apply(params, x, top_k=2)
+        assert 0.9 < float(aux) < 1.2
+
+    def test_gradients_flow_to_router_and_experts(self):
+        d, dff, e = 8, 16, 4
+        params = moe_init(jax.random.PRNGKey(0), d, dff, e)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d))
+
+        def loss(p):
+            out, aux = moe_apply(p, x, top_k=2)
+            return jnp.sum(out**2) + 0.01 * aux
+
+        g = jax.grad(loss)(params)
+        for name in ("router", "w_in", "w_gate", "w_out"):
+            assert float(jnp.abs(g[name]).max()) > 0.0, name

@@ -1,0 +1,96 @@
+"""Online adaptation + multi-adapter routing unit tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DriftAdapter,
+    FitConfig,
+    MultiAdapter,
+    OnlineAdapterManager,
+    OnlineConfig,
+)
+
+
+def _rot_pairs(seed, n, d):
+    key = jax.random.PRNGKey(seed)
+    b = jax.random.normal(key, (n, d))
+    b = b / jnp.linalg.norm(b, axis=1, keepdims=True)
+    r = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1), (d, d)))[0]
+    return b, b @ r.T
+
+
+class TestOnlineManager:
+    def test_no_refit_before_pairs(self):
+        mgr = OnlineAdapterManager(16, 16)
+        assert mgr.tick() is None
+        assert mgr.adapter is None
+
+    def test_refit_schedule(self):
+        mgr = OnlineAdapterManager(
+            16, 16, OnlineConfig(kind="op", refit_every_ticks=2)
+        )
+        b, a = _rot_pairs(0, 500, 16)
+        mgr.observe_pairs(np.asarray(b), np.asarray(a))
+        assert mgr.tick() is None          # tick 1: not scheduled
+        ad = mgr.tick()                    # tick 2: refit
+        assert ad is not None and mgr.refits == 1
+        x = jax.random.normal(jax.random.PRNGKey(5), (10, 16))
+        assert ad.apply(x).shape == (10, 16)
+
+    def test_rolling_buffer_cap(self):
+        mgr = OnlineAdapterManager(
+            8, 8, OnlineConfig(kind="op", buffer_size=100)
+        )
+        for s in range(3):
+            b, a = _rot_pairs(s, 60, 8)
+            mgr.observe_pairs(np.asarray(b), np.asarray(a))
+        assert mgr._buf_b.shape[0] == 100  # capped, newest kept
+
+
+class TestMultiAdapter:
+    def test_routing_matches_individual_adapters(self):
+        d = 24
+        ads = []
+        for s in (0, 1):
+            b, a = _rot_pairs(s, 800, d)
+            ads.append(DriftAdapter.fit(
+                b, a, kind="op", config=FitConfig(kind="op", use_dsm=False)
+            ))
+        multi = MultiAdapter.from_adapters(ads)
+        x = jax.random.normal(jax.random.PRNGKey(9), (20, d))
+        dom = jnp.asarray([0, 1] * 10, jnp.int32)
+        routed = multi.apply(x, dom)
+        for i in range(20):
+            expected = ads[int(dom[i])].apply(x[i : i + 1])[0]
+            np.testing.assert_allclose(
+                np.asarray(routed[i]), np.asarray(expected), atol=1e-5
+            )
+
+    def test_mixed_kinds_rejected(self):
+        b, a = _rot_pairs(0, 300, 8)
+        op = DriftAdapter.fit(b, a, kind="op",
+                              config=FitConfig(kind="op", use_dsm=False))
+        la = DriftAdapter.fit(b, a, kind="la",
+                              config=FitConfig(kind="la", max_epochs=1))
+        with pytest.raises(ValueError):
+            MultiAdapter.from_adapters([op, la])
+
+    def test_jittable(self):
+        b, a = _rot_pairs(0, 300, 8)
+        ads = [
+            DriftAdapter.fit(b, a, kind="op",
+                             config=FitConfig(kind="op", use_dsm=False))
+            for _ in range(2)
+        ]
+        multi = MultiAdapter.from_adapters(ads)
+        x = jax.random.normal(jax.random.PRNGKey(2), (6, 8))
+        dom = jnp.zeros((6,), jnp.int32)
+        jitted = jax.jit(multi.apply)
+        np.testing.assert_allclose(
+            np.asarray(jitted(x, dom)), np.asarray(multi.apply(x, dom)),
+            atol=1e-6,
+        )

@@ -1,0 +1,126 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.ann import flat_search_jnp, recall_at_k
+from repro.core import adapter_apply, dsm_fit_posthoc, l2_normalize, procrustes_fit
+from repro.optim import adamw, apply_updates
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def paired_embeddings(draw):
+    n = draw(st.integers(20, 100))
+    d_old = draw(st.sampled_from([8, 16, 32]))
+    d_new = draw(st.sampled_from([8, 16, 32]))
+    seed = draw(st.integers(0, 2**16))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(k1, (n, d_old))
+    b = jax.random.normal(k2, (n, d_new))
+    return a, b
+
+
+@given(paired_embeddings())
+@settings(**SETTINGS)
+def test_procrustes_semi_orthogonal_any_shape(pair):
+    """RRᵀ = I (or RᵀR = I on the thin side) for ANY paired data."""
+    a, b = pair
+    r = procrustes_fit(a, b)["R"]
+    d_old, d_new = r.shape
+    if d_old <= d_new:
+        gram = r @ r.T
+        eye = np.eye(d_old)
+    else:
+        gram = r.T @ r
+        eye = np.eye(d_new)
+    np.testing.assert_allclose(np.asarray(gram), eye, atol=1e-3)
+
+
+@given(paired_embeddings())
+@settings(**SETTINGS)
+def test_procrustes_rotation_invariance(pair):
+    """Fitting against rotated targets composes the rotation: R(QA,B) = Q·R(A,B)
+    — compared through PREDICTIONS (the matrices themselves are only unique
+    a.e.; float32 SVD wobbles near degenerate singular values)."""
+    a, b = pair
+    d_old = a.shape[1]
+    q = jnp.linalg.qr(
+        jax.random.normal(jax.random.PRNGKey(99), (d_old, d_old))
+    )[0]
+    r1 = procrustes_fit(a @ q.T, b)["R"]
+    r0 = procrustes_fit(a, b)["R"]
+    pred1 = b @ r1.T
+    pred0 = (b @ r0.T) @ q.T
+    err = float(jnp.abs(pred1 - pred0).max())
+    scale = float(jnp.abs(pred0).max()) + 1e-6
+    assert err / scale < 5e-2
+
+
+@given(paired_embeddings())
+@settings(**SETTINGS)
+def test_dsm_posthoc_never_increases_mse(pair):
+    a, b = pair
+    if a.shape[1] != b.shape[1]:
+        return
+    s = dsm_fit_posthoc(a, b)["s"]
+    before = float(jnp.mean((b - a) ** 2))
+    after = float(jnp.mean((b * s - a) ** 2))
+    assert after <= before + 1e-6
+
+
+@given(st.integers(0, 2**16), st.sampled_from([4, 16, 64]))
+@settings(**SETTINGS)
+def test_adapter_output_always_unit_norm(seed, d):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (13, d)) * 5.0
+    params = {"core": {"R": jnp.eye(d) * 0.3}}
+    y = adapter_apply("op", params, x, renormalize=True)
+    norms = np.linalg.norm(np.asarray(y), axis=1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-4)
+
+
+@given(st.integers(0, 2**16), st.integers(1, 10),
+       st.sampled_from([33, 128, 1000]))
+@settings(**SETTINGS)
+def test_flat_search_block_invariance(seed, k, block_rows):
+    key = jax.random.PRNGKey(seed)
+    corpus = l2_normalize(jax.random.normal(key, (300, 16)))
+    queries = l2_normalize(
+        jax.random.normal(jax.random.fold_in(key, 1), (7, 16))
+    )
+    _, ref = flat_search_jnp(corpus, queries, k=k, block_rows=300)
+    _, got = flat_search_jnp(corpus, queries, k=k, block_rows=block_rows)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@given(st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_recall_bounds_and_self_identity(seed):
+    key = jax.random.PRNGKey(seed)
+    ids = jax.random.randint(key, (5, 10), 0, 1000)
+    assert float(recall_at_k(ids, ids)) == 1.0
+    other = ids + 10_000
+    assert float(recall_at_k(other, ids)) == 0.0
+
+
+@given(st.integers(0, 2**16), st.floats(1e-4, 1e-1))
+@settings(**SETTINGS)
+def test_adamw_descends_on_quadratic(seed, lr):
+    key = jax.random.PRNGKey(seed)
+    target = jax.random.normal(key, (8,))
+    params = {"w": jnp.zeros((8,))}
+    opt = adamw(lr=lr, weight_decay=0.0)
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < l0

@@ -1,0 +1,129 @@
+"""Serving-layer tests: router, dual index, micro-batcher, and the full
+upgrade orchestrator (the paper's near-zero-downtime procedure end to end)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ann import FlatIndex, flat_search_jnp, recall_at_k
+from repro.core import FitConfig
+from repro.data import CorpusConfig, make_corpus, make_drift, make_queries
+from repro.data.drift import MILD_TEXT
+from repro.serve import (
+    DualIndexServer,
+    MicroBatcher,
+    Phase,
+    QueryRouter,
+    UpgradeOrchestrator,
+)
+
+
+@pytest.fixture(scope="module")
+def upgrade_world():
+    dcfg = dataclasses.replace(MILD_TEXT, d_old=128, d_new=128)
+    ccfg = CorpusConfig(n_items=5000, dim=128, n_clusters=100,
+                        spectrum_beta=1.0, seed=0)
+    corpus_old, _ = make_corpus(ccfg)
+    drift = make_drift(dcfg)
+    corpus_new = drift(corpus_old, 0)
+    q_old, _ = make_queries(ccfg, 100)
+    q_new = drift(q_old, 1)
+    _, gt = flat_search_jnp(corpus_new, q_new, k=10)
+    return corpus_old, corpus_new, q_new, gt
+
+
+class TestRouter:
+    def test_search_without_adapter(self, upgrade_world):
+        corpus_old, _, q_new, _ = upgrade_world
+        router = QueryRouter(FlatIndex(corpus=corpus_old))
+        res = router.search(q_new, k=10)
+        assert res.ids.shape == (100, 10)
+        assert res.adapter_kind == "none"
+        assert router.queries_served == 100
+
+    def test_adapter_install_improves_recall(self, upgrade_world):
+        corpus_old, corpus_new, q_new, gt = upgrade_world
+        from repro.core import DriftAdapter
+
+        router = QueryRouter(FlatIndex(corpus=corpus_old))
+        before = float(recall_at_k(router.search(q_new, k=10).ids, gt))
+        idx = jax.random.choice(jax.random.PRNGKey(1), 5000, (4000,),
+                                replace=False)
+        ad = DriftAdapter.fit(
+            corpus_new[idx], corpus_old[idx], kind="op",
+            config=FitConfig(kind="op", use_dsm=False),
+        )
+        router.install_adapter(ad)
+        after = float(recall_at_k(router.search(q_new, k=10).ids, gt))
+        assert after > before + 0.05
+        assert router.swaps == 1
+
+
+class TestOrchestrator:
+    def test_full_upgrade_lifecycle(self, upgrade_world):
+        corpus_old, corpus_new, q_new, gt = upgrade_world
+        router = QueryRouter(FlatIndex(corpus=corpus_old))
+        orch = UpgradeOrchestrator(
+            router,
+            encode_new=lambda q: q,
+            corpus_new_provider=lambda ids: corpus_new[jnp.asarray(ids)],
+        )
+        assert orch.phase == Phase.SERVING_OLD
+        ids = np.arange(3000)
+        orch.fit_adapter(
+            ids, corpus_old[:3000], corpus_new[:3000],
+            config=FitConfig(kind="op", use_dsm=False),
+        )
+        assert orch.phase == Phase.ADAPTER_TRAINED
+        swap_s = orch.deploy_bridge()
+        assert orch.phase == Phase.BRIDGED
+        assert swap_s < 0.1   # the "interruption" is the atomic swap
+        bridged_recall = float(recall_at_k(router.search(q_new, 10).ids, gt))
+        assert bridged_recall > 0.8
+
+        while orch.progress < 1.0:
+            orch.reembed_batch(batch_size=2000)
+        assert orch.phase == Phase.REEMBEDDING
+        orch.cutover()
+        assert orch.phase == Phase.SERVING_NEW
+        final_recall = float(recall_at_k(router.search(q_new, 10).ids, gt))
+        assert final_recall > 0.99   # native new-model serving = oracle
+        assert router.adapter is None
+        phases = [t.phase for t in orch.log]
+        assert phases == [p.value for p in (
+            Phase.SERVING_OLD, Phase.ADAPTER_TRAINED, Phase.BRIDGED,
+            Phase.SERVING_NEW,
+        )]
+
+
+class TestDualIndex:
+    def test_merge_prefers_better_hits(self, upgrade_world):
+        corpus_old, corpus_new, q_new, gt = upgrade_world
+        half = 2500
+        dual = DualIndexServer(
+            old_index=FlatIndex(corpus=corpus_old),
+            new_index=FlatIndex(corpus=corpus_new[:half]),
+            new_ids=jnp.arange(half),
+        )
+        s, ids = dual.search(q_new, q_new, k=10)
+        assert ids.shape == (100, 10)
+        # scores sorted descending
+        assert bool(jnp.all(s[:, :-1] >= s[:, 1:]))
+
+
+class TestMicroBatcher:
+    def test_padding_and_roundtrip(self, upgrade_world):
+        corpus_old, _, q_new, _ = upgrade_world
+        index = FlatIndex(corpus=corpus_old)
+        mb = MicroBatcher(dim=128, max_batch=64)
+        rids = [mb.submit(np.asarray(q_new[i])) for i in range(5)]
+        assert mb.pending == 5
+        out = mb.drain(lambda q, k: index.search(q, k=k), k=3)
+        assert mb.pending == 0
+        assert set(out) == set(rids)
+        # results equal unbatched search
+        _, ref = index.search(q_new[:5], k=3)
+        for i, rid in enumerate(rids):
+            np.testing.assert_array_equal(out[rid][1], np.asarray(ref[i]))

@@ -1,0 +1,124 @@
+"""End-to-end behaviour tests: the paper's claims exercised on the full
+system (data pipeline → adapter → index → serving) at test scale."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ann import FlatIndex, flat_search_jnp, recall_at_k
+from repro.core import DriftAdapter, FitConfig
+from repro.data import (
+    CorpusConfig,
+    MILD_TEXT,
+    make_corpus,
+    make_drift,
+    make_pairs,
+    make_queries,
+)
+
+
+@pytest.fixture(scope="module")
+def world():
+    """A small but realistic upgrade world (20k items, d=256)."""
+    dcfg = dataclasses.replace(MILD_TEXT, d_old=256, d_new=256)
+    ccfg = CorpusConfig(n_items=20_000, dim=256, n_clusters=150,
+                        spectrum_beta=1.0, seed=0)
+    corpus_old, _ = make_corpus(ccfg)
+    drift = make_drift(dcfg)
+    corpus_new = drift(corpus_old, 0)
+    q_old, _ = make_queries(ccfg, 400)
+    q_new = drift(q_old, 1)
+    _, gt = flat_search_jnp(corpus_new, q_new, k=10)
+    pairs_b, pairs_a, _ = make_pairs(
+        jax.random.PRNGKey(5), corpus_old, corpus_new, 10_000
+    )
+    return dict(corpus_old=corpus_old, corpus_new=corpus_new, q_new=q_new,
+                gt=gt, pairs_b=pairs_b, pairs_a=pairs_a)
+
+
+class TestPaperClaims:
+    """Each test maps to a headline claim of the paper."""
+
+    def test_misaligned_search_degrades(self, world):
+        _, mis = flat_search_jnp(world["corpus_old"], world["q_new"], k=10)
+        arr = float(recall_at_k(mis, world["gt"]))
+        assert arr < 0.85   # drift hurts direct cross-space search
+
+    def test_adapter_recovers_most_recall(self, world):
+        """§5.1: adapters recover ≥90% ARR at test scale (95-99 at paper
+        scale); improvement over misaligned strictly positive."""
+        _, mis = flat_search_jnp(world["corpus_old"], world["q_new"], k=10)
+        base = float(recall_at_k(mis, world["gt"]))
+        for kind, dsm in (("op", False), ("mlp", True)):
+            ad = DriftAdapter.fit(
+                world["pairs_b"], world["pairs_a"], kind=kind,
+                config=FitConfig(kind=kind, use_dsm=dsm),
+            )
+            _, ids = flat_search_jnp(
+                world["corpus_old"], ad.apply(world["q_new"]), k=10
+            )
+            arr = float(recall_at_k(ids, world["gt"]))
+            assert arr > 0.90, (kind, arr)
+            assert arr > base + 0.1
+
+    def test_small_pair_budget_suffices(self, world):
+        """Figure 1: 5k pairs already land close to the 10k-pair result."""
+        arrs = {}
+        for n_p in (1_000, 5_000, 10_000):
+            ad = DriftAdapter.fit(
+                world["pairs_b"][:n_p], world["pairs_a"][:n_p], kind="op",
+                config=FitConfig(kind="op", use_dsm=False),
+            )
+            _, ids = flat_search_jnp(
+                world["corpus_old"], ad.apply(world["q_new"]), k=10
+            )
+            arrs[n_p] = float(recall_at_k(ids, world["gt"]))
+        assert arrs[5_000] >= arrs[1_000] - 0.01
+        assert arrs[10_000] - arrs[5_000] < 0.05   # saturation
+
+    def test_adapter_latency_budget(self, world):
+        """A.1: the adapter is a few matmuls — FLOPs/query at d=768-class
+        sizes stay far below one µs of TPU compute; <3 MB per router."""
+        ad = DriftAdapter.fit(
+            world["pairs_b"], world["pairs_a"], kind="mlp",
+            config=FitConfig(kind="mlp", max_epochs=1),
+        )
+        from repro.launch.roofline import PEAK_FLOPS
+
+        us = ad.flops_per_query / PEAK_FLOPS * 1e6
+        assert us < 10.0
+        assert ad.param_bytes < 3 * 2**20
+
+    def test_fit_cost_independent_of_corpus_size(self, world):
+        """§5.5: training cost depends on N_p, not N."""
+        ad = DriftAdapter.fit(
+            world["pairs_b"][:5000], world["pairs_a"][:5000], kind="op",
+            config=FitConfig(kind="op", use_dsm=False),
+        )
+        assert ad.fit_info.fit_seconds < 60.0
+
+
+class TestIndexIntegration:
+    def test_ivf_serves_adapted_queries(self, world):
+        from repro.ann import build_ivf, ivf_search
+
+        ad = DriftAdapter.fit(
+            world["pairs_b"], world["pairs_a"], kind="op",
+            config=FitConfig(kind="op", use_dsm=False),
+        )
+        index = build_ivf(jax.random.PRNGKey(0), world["corpus_old"],
+                          n_cells=64)
+        q = ad.apply(world["q_new"])
+        _, ids = ivf_search(index, q, k=10, nprobe=16, query_block=100)
+        _, exact = flat_search_jnp(world["corpus_old"], q, k=10)
+        assert float(recall_at_k(ids, exact)) > 0.9
+
+    def test_pallas_backend_matches_jnp(self, world):
+        idx_jnp = FlatIndex(corpus=world["corpus_old"][:4096], backend="jnp")
+        idx_pl = FlatIndex(corpus=world["corpus_old"][:4096], backend="pallas")
+        q = world["q_new"][:64]
+        _, a = idx_jnp.search(q, k=10)
+        _, b = idx_pl.search(q, k=10)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
