@@ -9,7 +9,6 @@ ef_search's role: the paper's ef_search=50 ≈ our nprobe≈8 operating point.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.ann import build_ivf, flat_search_jnp, ivf_search, recall_at_k
 from repro.core import DriftAdapter, FitConfig

@@ -19,7 +19,6 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.ann import flat_search_jnp, mrr, recall_at_k
 from repro.core import DriftAdapter, FitConfig

@@ -2,7 +2,6 @@
 analogue). Expected signature: steep rise 1k→5k, plateau by 16k ≈ 20k."""
 from __future__ import annotations
 
-import jax
 
 from repro.core import DriftAdapter, FitConfig
 from repro.data.drift import MILD_TEXT

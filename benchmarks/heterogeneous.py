@@ -7,7 +7,6 @@ of the gap — the paper's 0.85 → 0.94 result, realized with MultiAdapter.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -34,7 +34,7 @@ from benchmarks import (
     t3_strategies,
     t4_severe,
 )
-from benchmarks.common import DEFAULT, FULL, QUICK, Scale
+from benchmarks.common import DEFAULT, FULL, QUICK
 
 SUITES = {
     "t1": t1_text.run,

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.data.drift import MILD_TEXT
 from benchmarks.common import (
-    Scale, Scenario, build_scenario, emit, fit_and_eval, save_json,
+    Scale, build_scenario, emit, fit_and_eval, save_json,
 )
 
 DATASETS = {

@@ -12,7 +12,6 @@ modeled re-embed hours, and stays >100× under ANY plausible encoder rate.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import DriftAdapter, FitConfig
 from repro.data.drift import MILD_TEXT

@@ -8,7 +8,6 @@ adapters recover partially, MLP leads — the "diagnostic signal" of §5.3.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.data.drift import SEVERE_GLOVE
 from benchmarks.common import Scale, build_scenario, emit, fit_and_eval, save_json

@@ -10,7 +10,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import AxisType
 
 from repro.ann import flat_search_jnp, recall_at_k, sharded_search

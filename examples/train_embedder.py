@@ -8,7 +8,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.ckpt import save_pytree
 from repro.configs import get_config

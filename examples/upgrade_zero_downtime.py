@@ -21,7 +21,7 @@ from repro.ann import FlatIndex, flat_search_jnp, recall_at_k
 from repro.configs import get_config
 from repro.core.trainer import FitConfig
 from repro.models import encode, init_model
-from repro.serve import MicroBatcher, Phase, QueryRouter, UpgradeOrchestrator
+from repro.serve import MicroBatcher, QueryRouter, UpgradeOrchestrator
 
 ARCH = "qwen3-0.6b"
 N_ITEMS, N_QUERIES, SEQ = 4000, 200, 48

@@ -1,14 +1,56 @@
+"""ANN substrate — flat and IVF indexes unified behind ``SearchBackend``.
+
+Every index carries a ``backend`` selector choosing its scan engine:
+
+* ``"jnp"``    — pure-jnp blocked scan (reference; always available)
+* ``"pallas"`` — kernels/topk_scan: fused matmul + streaming top-k
+* ``"fused"``  — kernels/fused_search: the one-pass bridged query path —
+  adapter transform + corpus scan + running top-k in a single launch
+  (``search_bridged``); plain ``search`` falls back to the pallas scan.
+
+``QueryRouter`` (serve/router.py) talks to indexes only through this
+protocol, so swapping engines is a constructor argument, not a code change.
+
+For IVF the probe path is a gather + batched matmul, so "jnp" and "pallas"
+coincide; the selector matters there only for ``search_bridged``.
+"""
+from typing import Protocol, runtime_checkable
+
+import jax
+
 from repro.ann.flat import FlatIndex, flat_search_jnp
-from repro.ann.ivf import IVFIndex, build_ivf, ivf_search
+from repro.ann.ivf import IVFIndex, build_ivf, ivf_rescore, ivf_search
 from repro.ann.kmeans import kmeans_fit
 from repro.ann.metrics import arr, mrr, recall_at_k
 from repro.ann.sharded import sharded_search
 
+
+@runtime_checkable
+class SearchBackend(Protocol):
+    """What the serving layer requires of an index."""
+
+    backend: str
+
+    def search(
+        self, queries: jax.Array, k: int = 10
+    ) -> tuple[jax.Array, jax.Array]:
+        """Native-space top-k: (scores (Q, k), ids (Q, k))."""
+        ...
+
+    def search_bridged(
+        self, adapter, queries: jax.Array, k: int = 10
+    ) -> tuple[jax.Array, jax.Array]:
+        """Top-k for new-space queries bridged through a DriftAdapter."""
+        ...
+
+
 __all__ = [
+    "SearchBackend",
     "FlatIndex",
     "flat_search_jnp",
     "IVFIndex",
     "build_ivf",
+    "ivf_rescore",
     "ivf_search",
     "kmeans_fit",
     "arr",

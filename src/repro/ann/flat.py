@@ -5,19 +5,23 @@ instead of HNSW graph traversal (pointer-chasing, MXU-hostile), the corpus
 is scanned in HBM-resident blocks with an MXU matmul per block and a running
 top-k merge, so the full (Q, N) score matrix is never materialized.
 
-The scan loop has two interchangeable engines:
+The scan loop has three interchangeable engines (the SearchBackend selector):
   * ``backend="jnp"``   — pure jnp reference (always available, CPU-friendly)
   * ``backend="pallas"``— the fused kernels/topk_scan Pallas kernel
-Both produce identical results (tests assert exact agreement on scores).
+  * ``backend="fused"`` — like "pallas", plus ``search_bridged`` runs the
+    one-pass kernels/fused_search kernel: adapter transform + scan + top-k
+    in a single launch, transformed queries never round-tripping HBM.
+All produce identical results (tests assert exact agreement on scores).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+BACKENDS = ("jnp", "pallas", "fused")
 
 
 @partial(jax.jit, static_argnames=("k", "block_rows"))
@@ -72,8 +76,14 @@ class FlatIndex:
     """Exact inner-product index over ℓ2-normalized embeddings."""
 
     corpus: jax.Array                     # (N, d) float32, unit rows
-    backend: str = "jnp"                  # "jnp" | "pallas"
+    backend: str = "jnp"                  # "jnp" | "pallas" | "fused"
     block_rows: int = 65536
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of {BACKENDS}"
+            )
 
     @property
     def size(self) -> int:
@@ -86,7 +96,7 @@ class FlatIndex:
     def search(
         self, queries: jax.Array, k: int = 10
     ) -> tuple[jax.Array, jax.Array]:
-        if self.backend == "pallas":
+        if self.backend in ("pallas", "fused"):
             from repro.kernels.topk_scan import ops as topk_ops
 
             return topk_ops.topk_scan(
@@ -95,6 +105,25 @@ class FlatIndex:
         return flat_search_jnp(
             self.corpus, queries, k=k, block_rows=self.block_rows
         )
+
+    def search_bridged(
+        self, adapter, queries: jax.Array, k: int = 10
+    ) -> tuple[jax.Array, jax.Array]:
+        """Search with new-space queries bridged through ``adapter``.
+
+        On the "fused" backend this is ONE kernel launch (adapter transform
+        + corpus scan + running top-k); otherwise the adapter applies first
+        and the result feeds the backend's plain scan.
+        """
+        if self.backend == "fused":
+            from repro.kernels.fused_search import ops as fused_ops
+
+            fused_kind, fused = adapter.as_fused_params()
+            return fused_ops.fused_bridged_search(
+                fused_kind, fused, queries, self.corpus, k=k,
+                block_rows=min(self.block_rows, 2048),
+            )
+        return self.search(adapter.apply(queries), k=k)
 
     # Mutation path for the lazy/background re-embedding scenario (§5.6):
     # rows are overwritten in place as items get re-encoded by f_new.

@@ -29,6 +29,15 @@ class IVFIndex:
     cells: jax.Array          # (C, cap, d)  padded member embeddings
     cell_ids: jax.Array       # (C, cap)     global row ids, -1 = pad
     n_items: int
+    backend: str = "jnp"      # "jnp" | "pallas" | "fused"
+
+    def __post_init__(self):
+        from repro.ann.flat import BACKENDS
+
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of {BACKENDS}"
+            )
 
     @property
     def n_cells(self) -> int:
@@ -38,12 +47,56 @@ class IVFIndex:
     def capacity(self) -> int:
         return int(self.cells.shape[1])
 
+    def search(
+        self, queries: jax.Array, k: int = 10, nprobe: int = 8
+    ) -> tuple[jax.Array, jax.Array]:
+        """Native-space probe + rescore.
 
-# Register as a pytree so IVFIndex flows through jit/pjit (n_items static).
+        Note: the probe path is a gather + batched matmul, so the "jnp" and
+        "pallas" engines coincide for IVF — the selector only changes
+        behavior for ``search_bridged`` ("fused" = adapter folded into the
+        centroid-probe launch).
+        """
+        return ivf_search(self, queries, k=k, nprobe=nprobe)
+
+    def search_bridged(
+        self, adapter, queries: jax.Array, k: int = 10, nprobe: int = 8
+    ) -> tuple[jax.Array, jax.Array]:
+        """Bridged search: adapter-mapped queries probe + rescore.
+
+        On the "fused" backend the adapter transform and the centroid probe
+        run as ONE fused_search launch over the centroid table (which also
+        emits the transformed queries for the candidate rescore) — the probe
+        never sees an HBM round-trip of transformed queries. Other backends
+        apply the adapter separately, then run the standard probe path.
+        """
+        if nprobe > self.n_cells:
+            raise ValueError(
+                f"nprobe={nprobe} exceeds n_cells={self.n_cells}"
+            )
+        if self.backend == "fused":
+            from repro.kernels.fused_search import ops as fused_ops
+
+            fused_kind, fused = adapter.as_fused_params()
+            # centroid table is small: size the block to its padded rows
+            br = min(1024, -(-self.n_cells // 128) * 128)
+            _, probe, q_mapped = fused_ops.fused_bridged_search(
+                fused_kind, fused, queries, self.centroids, k=nprobe,
+                block_rows=br, return_queries=True,
+            )
+            return ivf_rescore(self, q_mapped, probe, k=k)
+        return ivf_search(self, adapter.apply(queries), k=k, nprobe=nprobe)
+
+
+# Register as a pytree so IVFIndex flows through jit/pjit (n_items and the
+# backend selector are static aux data).
 jax.tree_util.register_pytree_node(
     IVFIndex,
-    lambda idx: ((idx.centroids, idx.cells, idx.cell_ids), idx.n_items),
-    lambda n_items, leaves: IVFIndex(*leaves, n_items=n_items),
+    lambda idx: (
+        (idx.centroids, idx.cells, idx.cell_ids),
+        (idx.n_items, idx.backend),
+    ),
+    lambda aux, leaves: IVFIndex(*leaves, n_items=aux[0], backend=aux[1]),
 )
 
 
@@ -90,6 +143,29 @@ def build_ivf(
     )
 
 
+def _score_probed(
+    index: IVFIndex, qb: jax.Array, probe: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Rescore one query block (B, d) against its probed cells (B, nprobe)."""
+    b, d = qb.shape
+    neg = jnp.finfo(jnp.float32).min
+    cand_vecs = index.cells[probe]                        # (B, np, cap, d)
+    cand_ids = index.cell_ids[probe]                      # (B, np, cap)
+    cand_vecs = cand_vecs.reshape(b, -1, d)
+    cand_ids = cand_ids.reshape(b, -1)
+    scores = jnp.einsum("bd,bnd->bn", qb, cand_vecs)
+    scores = jnp.where(cand_ids >= 0, scores, neg)
+    top_s, pos = jax.lax.top_k(scores, k)
+    top_i = jnp.take_along_axis(cand_ids, pos, axis=1)
+    return top_s, top_i
+
+
+def _pad_to_blocks(x: jax.Array, block: int) -> jax.Array:
+    from repro.kernels.common import pad_rows
+
+    return pad_rows(x, block).reshape(-1, block, *x.shape[1:])
+
+
 @partial(jax.jit, static_argnames=("k", "nprobe", "query_block"))
 def ivf_search(
     index: IVFIndex,
@@ -99,30 +175,38 @@ def ivf_search(
     query_block: int = 256,
 ) -> tuple[jax.Array, jax.Array]:
     """Approximate top-k: probe the ``nprobe`` nearest cells per query."""
-    qn, d = queries.shape
-    neg = jnp.finfo(jnp.float32).min
-    pad_q = -(-qn // query_block) * query_block - qn
-    queries_p = (
-        jnp.concatenate([queries, jnp.zeros((pad_q, d), queries.dtype)])
-        if pad_q
-        else queries
-    )
-    qblocks = queries_p.reshape(-1, query_block, d)
+    n_cells = index.centroids.shape[0]
+    if nprobe > n_cells:          # shapes are static under jit: trace-time
+        raise ValueError(f"nprobe={nprobe} exceeds n_cells={n_cells}")
+    qn = queries.shape[0]
+    qblocks = _pad_to_blocks(queries, query_block)
 
     def search_block(_, qb):
         cell_scores = qb @ index.centroids.T                  # (B, C)
         _, probe = jax.lax.top_k(cell_scores, nprobe)         # (B, nprobe)
-        cand_vecs = index.cells[probe]                        # (B, np, cap, d)
-        cand_ids = index.cell_ids[probe]                      # (B, np, cap)
-        cand_vecs = cand_vecs.reshape(query_block, -1, d)
-        cand_ids = cand_ids.reshape(query_block, -1)
-        scores = jnp.einsum("bd,bnd->bn", qb, cand_vecs)
-        scores = jnp.where(cand_ids >= 0, scores, neg)
-        top_s, pos = jax.lax.top_k(scores, k)
-        top_i = jnp.take_along_axis(cand_ids, pos, axis=1)
-        return None, (top_s, top_i)
+        return None, _score_probed(index, qb, probe, k)
 
     _, (scores, ids) = jax.lax.scan(search_block, None, qblocks)
-    scores = scores.reshape(-1, k)[:qn]
-    ids = ids.reshape(-1, k)[:qn]
-    return scores, ids
+    return scores.reshape(-1, k)[:qn], ids.reshape(-1, k)[:qn]
+
+
+@partial(jax.jit, static_argnames=("k", "query_block"))
+def ivf_rescore(
+    index: IVFIndex,
+    q_mapped: jax.Array,
+    probe: jax.Array,
+    k: int = 10,
+    query_block: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Candidate rescore for externally-probed queries (the fused bridged
+    path: probe ids + transformed queries come out of one kernel launch)."""
+    qn = q_mapped.shape[0]
+    qblocks = _pad_to_blocks(q_mapped, query_block)
+    pblocks = _pad_to_blocks(probe, query_block)
+
+    def search_block(_, inp):
+        qb, pb = inp
+        return None, _score_probed(index, qb, pb, k)
+
+    _, (scores, ids) = jax.lax.scan(search_block, None, (qblocks, pblocks))
+    return scores.reshape(-1, k)[:qn], ids.reshape(-1, k)[:qn]

@@ -15,14 +15,23 @@ describes for multi-shard systems.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.ann.flat import flat_search_jnp
+
+# shard_map moved from jax.experimental to the jax namespace, and its
+# replication-check kwarg was renamed check_rep -> check_vma. Resolve once so
+# the search builder works on both the pinned container jax and newer ones.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_KW = {"check_rep": False}
 
 
 def sharded_search(
@@ -52,7 +61,6 @@ def sharded_search(
     rows_per_shard = n // n_shards
 
     corpus_spec = P(corpus_axes if len(corpus_axes) > 1 else corpus_axes[0])
-    model_axes = tuple(a for a in mesh.axis_names if a not in corpus_axes)
 
     def local_search(corpus_shard, queries_rep):
         # global id offset of this shard's rows
@@ -80,9 +88,9 @@ def sharded_search(
     in_specs = (corpus_spec, P())
     out_specs = (P(), P())
     fn = jax.jit(
-        jax.shard_map(
+        _shard_map(
             local_search, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
+            **_SHARD_MAP_KW,
         ),
         in_shardings=(
             NamedSharding(mesh, corpus_spec),

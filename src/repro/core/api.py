@@ -29,6 +29,10 @@ class DriftAdapter:
     d_new: int
     d_old: int
     fit_info: Optional[FitResult] = None
+    # lazily-built weights for the one-pass fused search kernel
+    _fused: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -67,6 +71,23 @@ class DriftAdapter:
 
     def __call__(self, queries: jax.Array) -> jax.Array:
         return self.apply(queries)
+
+    def as_fused_params(self) -> tuple:
+        """Kernel-ready weights for the one-pass bridged search backend.
+
+        OP/LA precompose into a single (d_old, d_new) matrix + bias (the
+        UVᵀ product is materialized once here, at install time — not per
+        query batch); MLP keeps its two-matmul form with the residual
+        projection and DSM diagonal made explicit. Memoized: routers fold
+        once when the adapter is installed and reuse on every search.
+
+        Returns ("linear" | "mlp", {weight name: array}).
+        """
+        if self._fused is None:
+            from repro.kernels.fused_search.ops import fold_fused_params
+
+            self._fused = fold_fused_params(self.kind, self.params, self.d_new)
+        return self._fused
 
     # -- introspection ------------------------------------------------------
     @property

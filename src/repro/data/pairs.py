@@ -7,9 +7,7 @@ a = corpus row (legacy space) and b = T*(a) (upgraded space).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.data.drift import DriftTransform
 
 
 def sample_pair_indices(

@@ -17,18 +17,11 @@ from repro.kernels.adapter_apply.kernel import (
     linear_adapter_pallas,
     mlp_adapter_pallas,
 )
-
-
-def _is_cpu() -> bool:
-    return jax.default_backend() == "cpu"
-
-
-def _pad_rows(x, tile):
-    q = x.shape[0]
-    pad = -q % tile
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)])
-    return x, q
+from repro.kernels.common import (
+    fold_fused_params,
+    is_cpu as _is_cpu,
+    pad_rows,
+)
 
 
 @partial(jax.jit, static_argnames=("kind", "renormalize", "tile", "interpret"))
@@ -42,34 +35,20 @@ def adapter_apply_fused(
 ) -> jax.Array:
     if interpret is None:
         interpret = _is_cpu()
-    core = params.get("core", params)
-    d_new = x.shape[1]
-    xp, q = _pad_rows(x.astype(jnp.float32), tile)
+    q, d_new = x.shape
+    xp = pad_rows(x.astype(jnp.float32), tile)
 
-    if kind == "mlp":
-        d_old = core["W2"].shape[0]
-        p = core.get("P")
-        if p is None:
-            assert d_new == d_old
-            p = jnp.eye(d_old, dtype=jnp.float32)
-        s = params.get("dsm", {}).get("s", jnp.ones((d_old,), jnp.float32))
+    # shared fold (kernels/common.py) — the exact layout the one-pass
+    # fused_search kernel consumes, so the two launch paths cannot diverge
+    fused_kind, w = fold_fused_params(kind, params, d_new)
+    if fused_kind == "mlp":
         out = mlp_adapter_pallas(
-            xp, core["W1"], core["b1"], core["W2"], core["b2"], p, s,
+            xp, w["w1"], w["b1"], w["w2"], w["b2"], w["p"], w["s"],
             renormalize=renormalize, tile=tile, interpret=interpret,
         )
-        return out[:q]
-
-    if kind == "op":
-        m = core["R"]
-        t = jnp.zeros((m.shape[0],), jnp.float32)
-    elif kind == "la":
-        m = core["U"] @ core["V"].T
-        t = core["t"]
     else:
-        raise ValueError(f"fused adapter: unsupported kind {kind!r}")
-    d_old = m.shape[0]
-    s = params.get("dsm", {}).get("s", jnp.ones((d_old,), jnp.float32))
-    out = linear_adapter_pallas(
-        xp, m, t, s, renormalize=renormalize, tile=tile, interpret=interpret
-    )
+        out = linear_adapter_pallas(
+            xp, w["m"], w["t"], w["s"],
+            renormalize=renormalize, tile=tile, interpret=interpret,
+        )
     return out[:q]

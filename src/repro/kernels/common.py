@@ -1,0 +1,61 @@
+"""Shared helpers for the kernel ops wrappers (single source of truth —
+three kernel packages make the same interpret-mode and padding decisions)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def is_cpu() -> bool:
+    """Pallas kernels run interpret=True here (CPU container), compiled
+    Mosaic on real TPU."""
+    return jax.default_backend() == "cpu"
+
+
+def pad_rows(x: jax.Array, mult: int) -> jax.Array:
+    """Zero-pad axis 0 up to the next multiple of ``mult``."""
+    pad = -x.shape[0] % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, *x.shape[1:]), x.dtype)])
+    return x
+
+
+def fold_fused_params(kind: str, params: dict, d_new: int) -> tuple[str, dict]:
+    """Collapse DriftAdapter (kind, params) into kernel-ready weights.
+
+    The SINGLE source of truth for the adapter→kernel weight layout, shared
+    by the standalone adapter_apply kernel and the one-pass fused_search
+    kernel (their parity gate depends on both folding identically). OP and
+    LA precompose to one (d_old, d_new) matrix + bias (UVᵀ materialized);
+    identity becomes the unit matrix; MLP keeps its two-matmul form with
+    the residual projection P explicit and the DSM diagonal alongside.
+
+    Returns ("linear", {m, t, s}) or ("mlp", {w1, b1, w2, b2, p, s}).
+    """
+    core = params.get("core", params)
+    if kind == "mlp":
+        d_old = core["W2"].shape[0]
+        p = core.get("P")
+        if p is None:
+            assert d_new == d_old
+            p = jnp.eye(d_old, dtype=jnp.float32)
+        s = params.get("dsm", {}).get("s", jnp.ones((d_old,), jnp.float32))
+        return "mlp", {
+            "w1": core["W1"], "b1": core["b1"],
+            "w2": core["W2"], "b2": core["b2"],
+            "p": p.astype(jnp.float32), "s": s,
+        }
+    if kind == "op":
+        m = core["R"]
+        t = jnp.zeros((m.shape[0],), jnp.float32)
+    elif kind == "la":
+        m = core["U"] @ core["V"].T
+        t = core["t"]
+    elif kind == "identity":
+        m = jnp.eye(d_new, dtype=jnp.float32)
+        t = jnp.zeros((d_new,), jnp.float32)
+    else:
+        raise ValueError(f"fused fold: unsupported adapter kind {kind!r}")
+    d_old = m.shape[0]
+    s = params.get("dsm", {}).get("s", jnp.ones((d_old,), jnp.float32))
+    return "linear", {"m": m.astype(jnp.float32), "t": t, "s": s}

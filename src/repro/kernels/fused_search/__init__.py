@@ -1,0 +1,13 @@
+from repro.kernels.fused_search.ops import (
+    FUSED_KINDS,
+    fold_fused_params,
+    fused_bridged_search,
+)
+from repro.kernels.fused_search.ref import fused_bridged_search_ref
+
+__all__ = [
+    "FUSED_KINDS",
+    "fold_fused_params",
+    "fused_bridged_search",
+    "fused_bridged_search_ref",
+]

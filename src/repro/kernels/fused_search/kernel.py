@@ -1,0 +1,205 @@
+"""Pallas TPU kernel: one-pass bridged query path — adapter ∘ scan ∘ top-k.
+
+The serving hot loop when an adapter is installed (paper §4, Table 3) used to
+be two launches with an HBM round-trip between them:
+
+    q' = adapter_apply(q)        # kernels/adapter_apply — writes q' to HBM
+    s, i = topk_scan(corpus, q') # kernels/topk_scan   — reads q' back
+
+This kernel fuses both: for each query tile the Drift-Adapter transform
+(linear OP/LA-folded matrix or residual MLP, with DSM and ℓ2 re-norm) runs
+once in VMEM on the first corpus step, the transformed tile stays in VMEM
+scratch, and every corpus block streams HBM→VMEM through the same
+matmul + running top-k fold the standalone topk_scan uses. The transformed
+queries never touch HBM (unless ``return_queries`` asks for them — the IVF
+probe path wants them for the candidate-cell rescore).
+
+Grid: (query_tiles, corpus_blocks); corpus axis sequential ("arbitrary") so
+the VMEM carries (transformed tile + running top-k) persist across it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.topk_scan.kernel import NEG, _CompilerParams, _fold_block
+
+
+def _l2_renorm(y):
+    norm = jnp.sqrt(jnp.sum(y * y, axis=1, keepdims=True)) + 1e-12
+    return y / norm
+
+
+def _linear_transform(x_ref, m_ref, t_ref, s_ref, renormalize: bool):
+    """OP / LA collapsed to one matrix: y = S·(M x + t), optionally ℓ2."""
+    x = x_ref[...].astype(jnp.float32)
+    y = jnp.dot(x, m_ref[...].T, preferred_element_type=jnp.float32) + t_ref[0]
+    y = y * s_ref[0]
+    return _l2_renorm(y) if renormalize else y
+
+
+def _mlp_transform(
+    x_ref, w1_ref, b1_ref, w2_ref, b2_ref, p_ref, s_ref, renormalize: bool
+):
+    """Residual MLP: y = S·(P x + W₂ GELU(W₁ x + b₁) + b₂), optionally ℓ2."""
+    x = x_ref[...].astype(jnp.float32)
+    h = jax.nn.gelu(
+        jnp.dot(x, w1_ref[...].T, preferred_element_type=jnp.float32)
+        + b1_ref[0]
+    )
+    y = (
+        jnp.dot(x, p_ref[...].T, preferred_element_type=jnp.float32)
+        + jnp.dot(h, w2_ref[...].T, preferred_element_type=jnp.float32)
+        + b2_ref[0]
+    )
+    y = y * s_ref[0]
+    return _l2_renorm(y) if renormalize else y
+
+
+def _scan_step(transform, c_ref, out_refs, qx, best_s, best_i, *,
+               k, block_rows, n_valid, return_queries):
+    """Shared adapter→scan→top-k body; ``transform`` runs only on step 0."""
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        qx[...] = transform()
+        best_s[...] = jnp.full_like(best_s[...], NEG)
+        best_i[...] = jnp.full_like(best_i[...], -1)
+        if return_queries:
+            out_refs[2][...] = qx[...]
+
+    scores = jnp.dot(
+        qx[...], c_ref[...].T, preferred_element_type=jnp.float32
+    )                                                      # (Qt, C)
+    row_ids = j * block_rows + jax.lax.broadcasted_iota(
+        jnp.int32, scores.shape, 1
+    )
+    scores = jnp.where(row_ids < n_valid, scores, NEG)
+    new_s, new_i = _fold_block(scores, row_ids, best_s[...], best_i[...], k)
+    best_s[...] = new_s
+    best_i[...] = new_i
+
+    @pl.when(j == nb - 1)
+    def _emit():
+        out_refs[0][...] = best_s[...]
+        out_refs[1][...] = best_i[...]
+
+
+def _fused_linear_kernel(
+    x_ref, m_ref, t_ref, s_ref, c_ref, *refs,
+    k, block_rows, n_valid, renormalize, return_queries,
+):
+    out_refs, (qx, best_s, best_i) = refs[:-3], refs[-3:]
+    _scan_step(
+        lambda: _linear_transform(x_ref, m_ref, t_ref, s_ref, renormalize),
+        c_ref, out_refs, qx, best_s, best_i,
+        k=k, block_rows=block_rows, n_valid=n_valid,
+        return_queries=return_queries,
+    )
+
+
+def _fused_mlp_kernel(
+    x_ref, w1_ref, b1_ref, w2_ref, b2_ref, p_ref, s_ref, c_ref, *refs,
+    k, block_rows, n_valid, renormalize, return_queries,
+):
+    out_refs, (qx, best_s, best_i) = refs[:-3], refs[-3:]
+    _scan_step(
+        lambda: _mlp_transform(
+            x_ref, w1_ref, b1_ref, w2_ref, b2_ref, p_ref, s_ref, renormalize
+        ),
+        c_ref, out_refs, qx, best_s, best_i,
+        k=k, block_rows=block_rows, n_valid=n_valid,
+        return_queries=return_queries,
+    )
+
+
+def _call(kernel, weights, queries, corpus, weight_shapes, *, k, d_old,
+          q_tile, block_rows, n_valid, return_queries, interpret):
+    n, _ = corpus.shape
+    q, d_new = queries.shape
+    assert n % block_rows == 0 and q % q_tile == 0
+    grid = (q // q_tile, n // block_rows)
+    rep = lambda i, j: tuple(0 for _ in range(2))
+    out_specs = [
+        pl.BlockSpec((q_tile, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((q_tile, k), lambda i, j: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((q, k), jnp.float32),
+        jax.ShapeDtypeStruct((q, k), jnp.int32),
+    ]
+    if return_queries:
+        out_specs.append(pl.BlockSpec((q_tile, d_old), lambda i, j: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((q, d_old), jnp.float32))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_tile, d_new), lambda i, j: (i, 0)),
+            *[pl.BlockSpec(s, rep) for s in weight_shapes],
+            pl.BlockSpec((block_rows, d_old), lambda i, j: (j, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((q_tile, d_old), jnp.float32),
+            pltpu.VMEM((q_tile, k), jnp.float32),
+            pltpu.VMEM((q_tile, k), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(queries, *weights, corpus)
+
+
+def fused_linear_search_pallas(
+    queries, m, t, s, corpus, *, k, n_valid, renormalize=True,
+    q_tile=128, block_rows=1024, return_queries=False, interpret=False,
+):
+    """queries (Q, d_new) × m (d_old, d_new) → top-k over corpus (N, d_old).
+
+    Q and N must be pre-padded to q_tile / block_rows multiples; padded
+    corpus rows are masked via n_valid. Returns (scores, ids[, q_mapped]).
+    """
+    d_old = m.shape[0]
+    kernel = functools.partial(
+        _fused_linear_kernel, k=k, block_rows=block_rows, n_valid=n_valid,
+        renormalize=renormalize, return_queries=return_queries,
+    )
+    weights = (m, t.reshape(1, -1), s.reshape(1, -1))
+    shapes = (m.shape, (1, d_old), (1, d_old))
+    return _call(
+        kernel, weights, queries, corpus, shapes, k=k, d_old=d_old,
+        q_tile=q_tile, block_rows=block_rows, n_valid=n_valid,
+        return_queries=return_queries, interpret=interpret,
+    )
+
+
+def fused_mlp_search_pallas(
+    queries, w1, b1, w2, b2, p, s, corpus, *, k, n_valid, renormalize=True,
+    q_tile=128, block_rows=1024, return_queries=False, interpret=False,
+):
+    """Residual-MLP variant of the one-pass bridged search."""
+    d_old, hidden = w2.shape
+    kernel = functools.partial(
+        _fused_mlp_kernel, k=k, block_rows=block_rows, n_valid=n_valid,
+        renormalize=renormalize, return_queries=return_queries,
+    )
+    weights = (
+        w1, b1.reshape(1, -1), w2, b2.reshape(1, -1), p, s.reshape(1, -1)
+    )
+    shapes = (
+        w1.shape, (1, hidden), w2.shape, (1, d_old), p.shape, (1, d_old)
+    )
+    return _call(
+        kernel, weights, queries, corpus, shapes, k=k, d_old=d_old,
+        q_tile=q_tile, block_rows=block_rows, n_valid=n_valid,
+        return_queries=return_queries, interpret=interpret,
+    )

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused bridged-search kernel — composes the core
+library adapter with the topk_scan oracle so the one-pass kernel is
+validated against the exact two-pass production math it replaces."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.adapters import adapter_apply
+from repro.kernels.topk_scan.ref import topk_scan_ref
+
+
+def fused_bridged_search_ref(
+    kind: str,
+    params: dict,
+    queries: jax.Array,
+    corpus: jax.Array,
+    k: int = 10,
+    renormalize: bool = True,
+    return_queries: bool = False,
+):
+    q_mapped = adapter_apply(kind, params, queries, renormalize=renormalize)
+    scores, ids = topk_scan_ref(corpus, q_mapped, k)
+    if return_queries:
+        return scores, ids, q_mapped
+    return scores, ids

@@ -22,6 +22,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both so the kernel
+# runs on the pinned container jax as well as newer releases.
+_CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
 
 def _ssd_kernel(
     x_ref,        # (1, 1, Q, P)
@@ -108,7 +114,7 @@ def ssd_scan_pallas(
         out_specs=pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, nc, q, p), jnp.float32),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

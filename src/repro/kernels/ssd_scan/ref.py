@@ -3,7 +3,6 @@ implementation plus the D-skip, reshaped to the kernel's (BH, ...) layout."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.models.mamba2 import ssd_chunked
 

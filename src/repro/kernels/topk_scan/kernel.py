@@ -25,6 +25,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG = float(jnp.finfo(jnp.float32).min)
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both so the kernel
+# runs on the pinned container jax as well as newer releases.
+_CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
 
 def _fold_block(scores, ids, best_s, best_i, k: int):
     """Merge (Qt, C) block scores+ids into carried (Qt, k). Returns updated
@@ -120,7 +126,7 @@ def topk_scan_pallas(
             pltpu.VMEM((q_tile, k), jnp.float32),
             pltpu.VMEM((q_tile, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -6,13 +6,9 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.common import is_cpu as _is_cpu, pad_rows as _pad_rows
 from repro.kernels.topk_scan.kernel import topk_scan_pallas
-
-
-def _is_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 @partial(
@@ -29,20 +25,11 @@ def topk_scan(
 ) -> tuple[jax.Array, jax.Array]:
     if interpret is None:
         interpret = _is_cpu()
-    n, d = corpus.shape
+    n = corpus.shape[0]
     q = queries.shape[0]
-    n_pad = -n % block_rows
-    q_pad = -q % q_tile
-    if n_pad:
-        corpus = jnp.concatenate(
-            [corpus, jnp.zeros((n_pad, d), corpus.dtype)], axis=0
-        )
-    if q_pad:
-        queries = jnp.concatenate(
-            [queries, jnp.zeros((q_pad, d), queries.dtype)], axis=0
-        )
     out_s, out_i = topk_scan_pallas(
-        corpus, queries, k=k, n_valid=n,
+        _pad_rows(corpus, block_rows), _pad_rows(queries, q_tile),
+        k=k, n_valid=n,
         q_tile=q_tile, block_rows=block_rows, interpret=interpret,
     )
     return out_s[:q], out_i[:q]

@@ -25,7 +25,6 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
@@ -36,13 +35,12 @@ from repro.launch.roofline import (
     parse_collective_bytes,
     roofline_terms,
 )
-from repro.launch.shardings import batch_axes, param_shardings, param_pspecs
+from repro.launch.shardings import batch_axes, param_shardings
 from repro.models import init_model
 from repro.models.model import (
     DecodeCache,
     decode_step,
     encode,
-    hybrid_layout,
     init_cache,
 )
 from repro.models.encdec import (
@@ -83,7 +81,6 @@ def dryrun_config(arch: str, shape_name: Optional[str] = None) -> ModelConfig:
 
 def shape_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
     if shape == "long_500k":
-        long_cfg = cfg
         if cfg.arch_id == "qwen3-0.6b":
             return True, "runs via swa serving variant"
         if not cfg.supports_long_decode:
@@ -112,7 +109,6 @@ def build_lowering_inputs(cfg: ModelConfig, shape_name: str, mesh):
         lambda k: init_model(k, cfg), _sds((2,), jnp.uint32)
     )
     p_shard = param_shardings(params_shape, mesh, cfg)
-    p_spec_tree = param_pspecs(params_shape, mesh, cfg)
 
     if info["kind"] == "train":
         step_fn = make_train_step(cfg)
@@ -243,6 +239,14 @@ def _encdec_cache_shapes(params_shape, cfg, b, s):
     )
 
 
+def _cost_dict(cost) -> dict:
+    """Normalize Compiled.cost_analysis() across jax versions: older jax
+    returns a one-element list of dicts (per partition), newer a dict."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _probe_depths(cfg: ModelConfig):
     """Two small depths + a setter; cost is linear in depth (tail + L·layer)."""
     if cfg.family == "hybrid":
@@ -280,7 +284,7 @@ def probe_costs(cfg: ModelConfig, shape_name: str, mesh) -> dict:
                 compiled = (
                     jax.jit(fn, in_shardings=shardings).lower(*args).compile()
                 )
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled.cost_analysis())
         coll = parse_collective_bytes(compiled.as_text())
         samples[L] = (
             float(cost.get("flops", 0.0)),
@@ -364,7 +368,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             t_compile = time.perf_counter() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled.cost_analysis())
         hlo = compiled.as_text()
         coll = parse_collective_bytes(hlo)
         chips = n_chips(mesh)

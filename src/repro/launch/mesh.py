@@ -8,23 +8,28 @@ only dryrun.py (which sets XLA_FLAGS first) sees 512 host devices.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit sharding-mode mesh axes
+    from jax.sharding import AxisType
+
+    def _axis_types(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+
+except ImportError:  # jax <= 0.4.x: make_mesh has no axis_types kwarg
+
+    def _axis_types(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_axis_types(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over whatever devices exist (tests / examples on CPU)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return jax.make_mesh((data, model), ("data", "model"), **_axis_types(2))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

@@ -14,7 +14,6 @@ collective-permute (all-reduce counted 2× — reduce + broadcast phases).
 from __future__ import annotations
 
 import re
-from typing import Optional
 
 PEAK_FLOPS = 197e12        # bf16 per chip, TPU v5e
 HBM_BW = 819e9             # bytes/s per chip

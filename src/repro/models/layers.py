@@ -421,7 +421,6 @@ def moe_apply(
     pair_expert = gate_idx.reshape(n_pairs)                # (P,)
     pair_token = jnp.repeat(jnp.arange(t), top_k)          # (P,)
     order = jnp.argsort(pair_expert)                       # stable
-    sorted_expert = pair_expert[order]
     sorted_token = pair_token[order]
     counts = jnp.bincount(pair_expert, length=e)           # (E,)
     offsets = jnp.cumsum(counts) - counts                  # (E,)

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import rmsnorm, rmsnorm_init
-from repro.models.probe import probe_on, scan_unroll
+from repro.models.probe import probe_on
 
 
 class MambaDims(NamedTuple):

@@ -16,9 +16,7 @@ Design rules that matter at 512-device scale:
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

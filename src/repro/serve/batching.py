@@ -4,9 +4,8 @@ TPU). Size buckets are powers of two up to max_batch."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -51,3 +50,15 @@ class MicroBatcher:
             for i, r in enumerate(batch):
                 out[r.rid] = (np.asarray(scores[i]), np.asarray(ids[i]))
         return out
+
+    def drain_bridged(self, index, adapter, k: int = 10) -> dict[int, tuple]:
+        """Flush pending requests straight into the index's bridged path —
+        each padded bucket becomes ONE fused adapter→scan→top-k launch when
+        the index runs the "fused" backend (no per-bucket adapter launch,
+        no HBM round-trip of transformed queries). With ``adapter=None``
+        buckets take the native search path unchanged."""
+        if adapter is None:
+            return self.drain(lambda q, kk: index.search(q, k=kk), k=k)
+        return self.drain(
+            lambda q, kk: index.search_bridged(adapter, q, k=kk), k=k
+        )

@@ -5,6 +5,13 @@ an adapter is an ATOMIC swap (one attribute assignment of an immutable
 object): in-flight queries finish on the old path, new queries take the new
 one — this is the paper's "near-zero operational interruption" deploy story
 (§5.2): ship the <3 MB adapter to every router, swap, done.
+
+The router talks to the index only through the SearchBackend protocol: with
+an adapter installed it calls ``search_bridged``, so an index built with
+``backend="fused"`` serves the whole bridged query path as ONE kernel launch
+(adapter transform + scan + top-k, no HBM round-trip of transformed
+queries). Install time also pre-folds the adapter's fused weights so the
+first post-swap query pays no composition cost.
 """
 from __future__ import annotations
 
@@ -13,9 +20,8 @@ import time
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.ann.flat import FlatIndex
+from repro.ann import SearchBackend
 from repro.core.api import DriftAdapter
 
 
@@ -31,11 +37,18 @@ class QueryRouter:
     """Serves similarity queries against one index, adapting query
     embeddings into the index's native space when an adapter is installed."""
 
-    def __init__(self, index: FlatIndex, adapter: Optional[DriftAdapter] = None):
+    def __init__(
+        self, index: SearchBackend, adapter: Optional[DriftAdapter] = None
+    ):
         self.index = index
         self._adapter = adapter
         self.queries_served = 0
         self.swaps = 0
+        self._prefold(adapter)
+
+    def _prefold(self, adapter: Optional[DriftAdapter]) -> None:
+        if adapter is not None and getattr(self.index, "backend", "") == "fused":
+            adapter.as_fused_params()
 
     @property
     def adapter(self) -> Optional[DriftAdapter]:
@@ -43,6 +56,9 @@ class QueryRouter:
 
     def install_adapter(self, adapter: Optional[DriftAdapter]) -> None:
         """Atomic swap; None uninstalls (queries pass through unmapped)."""
+        # pre-fold fused weights BEFORE the swap — the first bridged query
+        # must not pay the UVᵀ/eye composition
+        self._prefold(adapter)
         self._adapter = adapter
         self.swaps += 1
 
@@ -50,8 +66,9 @@ class QueryRouter:
         t0 = time.perf_counter()
         adapter = self._adapter      # read once — atomicity
         if adapter is not None:
-            queries = adapter.apply(queries)
-        scores, ids = self.index.search(queries, k=k)
+            scores, ids = self.index.search_bridged(adapter, queries, k=k)
+        else:
+            scores, ids = self.index.search(queries, k=k)
         self.queries_served += queries.shape[0]
         return SearchResult(
             scores=scores,
@@ -61,5 +78,15 @@ class QueryRouter:
         )
 
     def replace_rows(self, ids: jax.Array, rows: jax.Array) -> None:
-        """Background re-embedder hook: overwrite rows in place (§5.6)."""
+        """Background re-embedder hook: overwrite rows in place (§5.6).
+
+        Requires an index with in-place row mutation (FlatIndex); packed
+        IVF cells would need a re-pack, which build_ivf owns.
+        """
+        if not hasattr(self.index, "replace_rows"):
+            raise NotImplementedError(
+                f"{type(self.index).__name__} does not support in-place row "
+                "replacement; rebuild the index (build_ivf) to fold in "
+                "re-embedded rows"
+            )
         self.index = self.index.replace_rows(ids, rows)

@@ -6,7 +6,7 @@ so the 256-chip optimizer state fits HBM — DESIGN.md §6).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ from repro.core import (
     adapter_apply,
     dsm_fit_posthoc,
     l2_normalize,
-    procrustes_apply,
     procrustes_fit,
 )
 
@@ -104,6 +103,7 @@ class TestApply:
 
 
 class TestFacade:
+    @pytest.mark.slow
     def test_fit_apply_save_load_roundtrip(self, rng, tmp_path):
         d = 32
         b = _unit_rows(rng, 800, d)
@@ -123,6 +123,7 @@ class TestFacade:
         assert loaded.kind == "mlp"
         assert loaded.param_bytes == ad.param_bytes
 
+    @pytest.mark.slow
     def test_param_budget_matches_paper_appendix(self, rng):
         """A.1: OP ≈ 2.36 MB, LA ≈ 0.39 MB, MLP ≈ 1.57 MB at d=768."""
         d = 768
@@ -142,6 +143,7 @@ class TestFacade:
         expected = (256 * d + 256 + d * 256 + d) * 4
         assert abs(mlp.param_bytes - expected) < 1024
 
+    @pytest.mark.slow
     def test_fit_reduces_mse_vs_identity(self, rng):
         d = 48
         b = _unit_rows(rng, 4000, d)
@@ -155,6 +157,7 @@ class TestFacade:
         )
         assert ad.fit_info.val_mse < mse_id
 
+    @pytest.mark.slow
     def test_warm_start_beats_cold_under_rotation(self, rng):
         d = 64
         b = _unit_rows(rng, 5000, d)

@@ -54,6 +54,7 @@ class TestFlat:
 
 
 class TestIVF:
+    @pytest.mark.slow
     def test_full_probe_is_exact(self, corpus, queries):
         x, _ = corpus
         index = build_ivf(jax.random.PRNGKey(0), x, n_cells=32,
@@ -64,6 +65,7 @@ class TestIVF:
             np.sort(np.asarray(ids), axis=1), np.sort(np.asarray(exact), axis=1)
         )
 
+    @pytest.mark.slow
     def test_recall_monotonic_in_nprobe(self, corpus, queries):
         x, _ = corpus
         index = build_ivf(jax.random.PRNGKey(0), x, n_cells=64)

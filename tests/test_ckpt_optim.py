@@ -8,7 +8,6 @@ from repro.ckpt import load_pytree, save_pytree
 from repro.optim import (
     EarlyStopping,
     adamw,
-    apply_updates,
     cosine_schedule,
     linear_warmup_cosine,
     sgd,

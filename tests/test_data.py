@@ -4,6 +4,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.data import (
     CorpusConfig,
@@ -15,6 +16,7 @@ from repro.data import (
 from repro.data.drift import DriftConfig, IMAGE_CLIP, MILD_TEXT, SEVERE_GLOVE
 
 
+@pytest.mark.slow
 def test_corpus_unit_norm_and_deterministic():
     cfg = CorpusConfig(n_items=500, dim=32, n_clusters=10, seed=4)
     x1, a1 = make_corpus(cfg)
@@ -25,6 +27,7 @@ def test_corpus_unit_norm_and_deterministic():
     )
 
 
+@pytest.mark.slow
 def test_queries_share_centres_but_not_items():
     cfg = CorpusConfig(n_items=2000, dim=64, n_clusters=20, seed=0)
     x, _ = make_corpus(cfg)
@@ -36,6 +39,7 @@ def test_queries_share_centres_but_not_items():
     assert sims.max() < 0.999
 
 
+@pytest.mark.slow
 def test_drift_transform_deterministic_and_salted():
     dcfg = dataclasses.replace(MILD_TEXT, d_old=32, d_new=32)
     drift = make_drift(dcfg)
@@ -50,6 +54,7 @@ def test_drift_transform_deterministic_and_salted():
     )
 
 
+@pytest.mark.slow
 def test_rectangular_presets_shapes():
     for preset in (IMAGE_CLIP, SEVERE_GLOVE):
         drift = make_drift(preset)
@@ -58,6 +63,7 @@ def test_rectangular_presets_shapes():
         assert y.shape == (3, preset.d_new)
 
 
+@pytest.mark.slow
 def test_pairs_are_database_rows():
     cfg = CorpusConfig(n_items=300, dim=16, seed=2)
     x, _ = make_corpus(cfg)
@@ -70,6 +76,7 @@ def test_pairs_are_database_rows():
     assert len(np.unique(np.asarray(idx))) == 64   # no replacement
 
 
+@pytest.mark.slow
 def test_zero_drift_is_identity():
     dcfg = DriftConfig(d_old=24, d_new=24, rotation_theta=0.0,
                        scale_sigma=0.0, nonlinear_alpha=0.0,

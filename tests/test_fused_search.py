@@ -1,0 +1,213 @@
+"""One-pass bridged query path: fused adapter→scan→top-k vs the reference
+two-pass math, across adapter kinds, backends, and ragged serving batches."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ann import FlatIndex, SearchBackend, build_ivf, ivf_search
+from repro.core import DriftAdapter, FitConfig
+from repro.kernels.fused_search import (
+    fold_fused_params,
+    fused_bridged_search,
+    fused_bridged_search_ref,
+)
+from repro.serve import MicroBatcher, QueryRouter
+
+D = 128
+# one fast parity case per adapter kind; the ±DSM permutations ride the
+# full tier (the DSM fold is shared code, cheap coverage-wise)
+KINDS = [
+    ("op", False),
+    pytest.param("op", True, marks=pytest.mark.slow),
+    ("la", True),
+    pytest.param("la", False, marks=pytest.mark.slow),
+    ("mlp", True),
+    pytest.param("mlp", False, marks=pytest.mark.slow),
+]
+
+
+@pytest.fixture(scope="module")
+def world():
+    key = jax.random.PRNGKey(0)
+    b = jax.random.normal(key, (2000, D))
+    b = b / jnp.linalg.norm(b, axis=1, keepdims=True)
+    r = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1), (D, D)))[0]
+    a = b @ r.T
+    corpus = jax.random.normal(jax.random.PRNGKey(2), (1500, D))
+    corpus = corpus / jnp.linalg.norm(corpus, axis=1, keepdims=True)
+    queries = jax.random.normal(jax.random.PRNGKey(3), (97, D))
+    return b, a, corpus, queries
+
+
+def _fit(world, kind, dsm):
+    b, a, _, _ = world
+    return DriftAdapter.fit(
+        b, a, kind=kind, config=FitConfig(kind=kind, use_dsm=dsm, max_epochs=2)
+    )
+
+
+class TestKernelParity:
+    @pytest.mark.parametrize("kind,dsm", KINDS)
+    def test_matches_reference(self, world, kind, dsm):
+        _, _, corpus, queries = world
+        ad = _fit(world, kind, dsm)
+        fk, fp = fold_fused_params(ad.kind, ad.params, D)
+        s, i = fused_bridged_search(
+            fk, fp, queries, corpus, k=7, block_rows=512, interpret=True
+        )
+        rs, ri = fused_bridged_search_ref(ad.kind, ad.params, queries, corpus, k=7)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+    def test_identity_kind(self, world):
+        _, _, corpus, queries = world
+        ad = DriftAdapter.identity(D)
+        fk, fp = ad.as_fused_params()
+        assert fk == "linear"
+        s, i = fused_bridged_search(fk, fp, queries, corpus, k=5, interpret=True)
+        rs, ri = fused_bridged_search_ref("identity", ad.params, queries, corpus, k=5)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+    def test_returns_transformed_queries(self, world):
+        _, _, corpus, queries = world
+        ad = _fit(world, "mlp", True)
+        fk, fp = ad.as_fused_params()
+        s, i, qm = fused_bridged_search(
+            fk, fp, queries, corpus, k=5, return_queries=True, interpret=True
+        )
+        np.testing.assert_allclose(
+            np.asarray(qm), np.asarray(ad.apply(queries)), atol=1e-5
+        )
+
+    @pytest.mark.slow
+    def test_ragged_and_tiny_batches(self, world):
+        """Padding correctness: every batch size the MicroBatcher can emit."""
+        _, _, corpus, queries = world
+        ad = _fit(world, "op", True)
+        fk, fp = ad.as_fused_params()
+        rs, ri = fused_bridged_search_ref(ad.kind, ad.params, queries, corpus, k=4)
+        for n in (1, 2, 3, 31, 64, 97):
+            s, i = fused_bridged_search(
+                fk, fp, queries[:n], corpus, k=4, interpret=True
+            )
+            np.testing.assert_allclose(
+                np.asarray(s), np.asarray(rs[:n]), atol=1e-5
+            )
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ri[:n]))
+
+    def test_fold_precomposes_la(self, world):
+        ad = _fit(world, "la", True)
+        fk, fp = ad.as_fused_params()
+        assert fk == "linear"
+        core = ad.params["core"]
+        np.testing.assert_allclose(
+            np.asarray(fp["m"]), np.asarray(core["U"] @ core["V"].T), atol=1e-6
+        )
+        assert ad.as_fused_params() is not None
+        # memoized — second call returns the same folded arrays
+        assert ad.as_fused_params()[1]["m"] is fp["m"]
+
+
+class TestBackendProtocol:
+    def test_flat_backends_agree(self, world):
+        _, _, corpus, queries = world
+        ad = _fit(world, "mlp", True)
+        ref_idx = FlatIndex(corpus=corpus)
+        assert isinstance(ref_idx, SearchBackend)
+        rs, ri = ref_idx.search_bridged(ad, queries, k=6)
+        for backend in ("pallas", "fused"):
+            idx = FlatIndex(corpus=corpus, backend=backend)
+            assert isinstance(idx, SearchBackend)
+            s, i = idx.search_bridged(ad, queries, k=6)
+            np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-5)
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+    def test_ivf_fused_backend_agrees(self, world):
+        _, _, corpus, queries = world
+        ad = _fit(world, "op", False)
+        ivf = build_ivf(jax.random.PRNGKey(0), corpus, n_cells=16)
+        assert isinstance(ivf, SearchBackend)
+        rs, ri = ivf.search_bridged(ad, queries, k=6, nprobe=4)
+        np.testing.assert_array_equal(
+            np.asarray(ri),
+            np.asarray(ivf_search(ivf, ad.apply(queries), k=6, nprobe=4)[1]),
+        )
+        fused_ivf = dataclasses.replace(ivf, backend="fused")
+        s, i = fused_ivf.search_bridged(ad, queries, k=6, nprobe=4)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+    def test_ivf_nprobe_exceeding_cells_raises(self, world):
+        """Both backends must reject nprobe > n_cells the same way (the
+        fused probe would otherwise pick padded centroid rows)."""
+        _, _, corpus, queries = world
+        ad = _fit(world, "op", False)
+        ivf = build_ivf(jax.random.PRNGKey(0), corpus, n_cells=8)
+        for backend in ("jnp", "fused"):
+            idx = dataclasses.replace(ivf, backend=backend)
+            with pytest.raises(ValueError, match="nprobe"):
+                idx.search_bridged(ad, queries, k=5, nprobe=9)
+
+    def test_unknown_backend_rejected(self, world):
+        _, _, corpus, _ = world
+        with pytest.raises(ValueError, match="unknown backend"):
+            FlatIndex(corpus=corpus, backend="bogus")
+
+    @pytest.mark.slow
+    def test_ivf_full_probe_fused_is_exact(self, world):
+        _, _, corpus, queries = world
+        ad = _fit(world, "op", False)
+        ivf = build_ivf(
+            jax.random.PRNGKey(0), corpus, n_cells=8, spill_factor=9.0
+        )
+        fused_ivf = dataclasses.replace(ivf, backend="fused")
+        _, i = fused_ivf.search_bridged(ad, queries, k=5, nprobe=8)
+        flat = FlatIndex(corpus=corpus)
+        _, ref = flat.search_bridged(ad, queries, k=5)
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(i)), np.sort(np.asarray(ref))
+        )
+
+
+class TestServingIntegration:
+    def test_router_takes_fused_path(self, world):
+        _, _, corpus, queries = world
+        ad = _fit(world, "la", True)
+        ref = QueryRouter(FlatIndex(corpus=corpus), adapter=ad).search(queries, k=5)
+        router = QueryRouter(FlatIndex(corpus=corpus, backend="fused"))
+        router.install_adapter(ad)
+        assert ad._fused is not None        # install pre-folded the weights
+        res = router.search(queries, k=5)
+        assert res.adapter_kind == "la"
+        np.testing.assert_allclose(
+            np.asarray(res.scores), np.asarray(ref.scores), atol=1e-5
+        )
+        np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+
+    def test_batcher_drains_into_fused_call(self, world):
+        """Ragged bucket sizes (1..max_batch) through drain_bridged match
+        the unbatched bridged search row for row."""
+        _, _, corpus, queries = world
+        ad = _fit(world, "mlp", False)
+        idx = FlatIndex(corpus=corpus, backend="fused")
+        _, ref_ids = idx.search_bridged(ad, queries, k=3)
+        mb = MicroBatcher(dim=D, max_batch=32)
+        rids = [mb.submit(np.asarray(queries[i])) for i in range(41)]
+        out = mb.drain_bridged(idx, ad, k=3)
+        assert mb.pending == 0
+        for j, rid in enumerate(rids):
+            np.testing.assert_array_equal(out[rid][1], np.asarray(ref_ids[j]))
+
+    def test_batcher_bridged_without_adapter(self, world):
+        _, _, corpus, queries = world
+        idx = FlatIndex(corpus=corpus, backend="fused")
+        _, ref_ids = idx.search(queries[:5], k=3)
+        mb = MicroBatcher(dim=D, max_batch=16)
+        rids = [mb.submit(np.asarray(queries[i])) for i in range(5)]
+        out = mb.drain_bridged(idx, None, k=3)
+        for j, rid in enumerate(rids):
+            np.testing.assert_array_equal(out[rid][1], np.asarray(ref_ids[j]))

@@ -72,6 +72,7 @@ class TestAdapterApplyFused:
         ref = adapter_apply_ref(kind, ad.params, x)
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
 
+    @pytest.mark.slow
     def test_rectangular(self):
         b = jax.random.normal(jax.random.PRNGKey(3), (1500, 96))
         a = b @ jax.random.normal(jax.random.PRNGKey(4), (96, 128)) * 0.1
@@ -84,6 +85,7 @@ class TestAdapterApplyFused:
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
 
 
+@pytest.mark.slow
 class TestSSDScan:
     @pytest.mark.parametrize(
         "B,L,H,P,G,N,chunk",

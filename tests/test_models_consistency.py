@@ -8,7 +8,6 @@ import pytest
 from repro.configs import get_config
 from repro.models import decode_step, forward, init_cache, init_model
 from repro.models.layers import (
-    AttnDims,
     _gqa_out,
     _gqa_scores,
     flash_gqa,
@@ -17,6 +16,8 @@ from repro.models.layers import (
 )
 from repro.models.mamba2 import ssd_chunked
 from repro.models.model import _head_weight
+
+pytestmark = pytest.mark.slow  # full-tier only: heavy multi-second workloads
 
 CONSISTENCY_ARCHS = [
     "qwen3-0.6b", "qwen2-1.5b", "gemma2-9b", "mamba2-780m", "zamba2-7b",

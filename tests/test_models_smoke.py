@@ -3,7 +3,6 @@ instantiates a REDUCED variant (≤2 layers / ≤4 experts / d_model ≤ 512),
 runs one forward + one train step + one decode step on CPU, and asserts
 output shapes and finiteness."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -13,7 +12,6 @@ from repro.models import (
     encode,
     encode_audio,
     encdec_decode_step,
-    forward,
     init_cache,
     init_encdec_cache,
     init_model,
@@ -21,6 +19,7 @@ from repro.models import (
 )
 from repro.train import make_train_step
 from repro.train.step import init_train_state
+
 
 B, S = 2, 64
 
@@ -47,6 +46,7 @@ class TestArchSmoke:
         assert cfg.d_model <= 512
         assert cfg.n_experts <= 4
 
+    @pytest.mark.slow
     def test_train_step(self, arch):
         cfg = get_config(arch, reduced=True)
         params = init_model(jax.random.PRNGKey(0), cfg)
@@ -63,6 +63,7 @@ class TestArchSmoke:
         after = jax.tree_util.tree_leaves(state2.params)[3]
         assert not np.allclose(np.asarray(before), np.asarray(after))
 
+    @pytest.mark.slow
     def test_decode_step_shapes(self, arch):
         cfg = get_config(arch, reduced=True)
         params = init_model(jax.random.PRNGKey(0), cfg)

@@ -1,5 +1,4 @@
 """Online adaptation + multi-adapter routing unit tests."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +69,7 @@ class TestMultiAdapter:
                 np.asarray(routed[i]), np.asarray(expected), atol=1e-5
             )
 
+    @pytest.mark.slow
     def test_mixed_kinds_rejected(self):
         b, a = _rot_pairs(0, 300, 8)
         op = DriftAdapter.fit(b, a, kind="op",

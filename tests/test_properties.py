@@ -1,7 +1,15 @@
-"""Hypothesis property-based tests on system invariants."""
+"""Hypothesis property-based tests on system invariants.
+
+Skipped (not errored) when hypothesis isn't installed — it ships in the
+package's ``[test]`` extra, which CI installs; minimal runtimes only lose
+this module, not the whole collection.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="install via `pip install .[test]`")
 from hypothesis import given, settings, strategies as st
 
 from repro.ann import flat_search_jnp, recall_at_k

@@ -18,6 +18,8 @@ from repro.data import (
     make_queries,
 )
 
+pytestmark = pytest.mark.slow  # full-tier only: heavy multi-second workloads
+
 
 @pytest.fixture(scope="module")
 def world():
