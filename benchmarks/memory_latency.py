@@ -14,10 +14,13 @@ jnp reference, and reports the HBM bytes each path moves.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ann import build_ivf, ivf_search
 from repro.core import DriftAdapter, FitConfig
 from repro.kernels.adapter_apply.ops import adapter_apply_fused
 from repro.kernels.fused_search import (
@@ -147,6 +150,136 @@ def bench_fused_query_path(
     }
 
 
+TPU_CAVEAT = (
+    "latency numbers are CPU interpret-mode; re-measure on real TPU where "
+    "the HBM round-trip and launch overhead dominate and the interpreter's "
+    "per-grid-step copies disappear"
+)
+
+
+def bench_ivf_fused_path(
+    adapter: DriftAdapter,
+    corpus: jax.Array,
+    batch: int = 32,
+    k: int = 10,
+    nprobe: int = 4,
+    n_cells: int = 64,
+) -> dict:
+    """IVF bridged query: fused two-launch path vs the gather+einsum path.
+
+    The unfused path applies the adapter, probes, then materializes the
+    probed cells as a (B, nprobe, cap, d) tensor in HBM before the einsum
+    (write + read back = 2 extra passes over B·nprobe·cap·d floats). The
+    fused path is two kernel launches — adapter-folded centroid probe
+    (kernels/fused_search) and streaming gather-rescore
+    (kernels/ivf_rescore) — that never build the gathered tensor. Timing is
+    gated on EXACT score/id parity between the two paths, same interleaved
+    median-of-pair-ratios methodology as bench_fused_query_path.
+    """
+    import statistics
+    import time
+
+    n, d = corpus.shape
+    index = build_ivf(jax.random.PRNGKey(7), corpus, n_cells=n_cells)
+    fused_index = dataclasses.replace(index, backend="fused")
+    cap = index.capacity
+    q = jax.random.normal(jax.random.PRNGKey(8), (batch, adapter.d_new))
+    q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+
+    def unfused(qx):
+        return ivf_search(index, adapter.apply(qx), k=k, nprobe=nprobe)
+
+    def fused_path(qx):
+        return fused_index.search_bridged(adapter, qx, k=k, nprobe=nprobe)
+
+    # -- parity gate (the two paths must be THE SAME search) ---------------
+    ref_s, ref_i = unfused(q)
+    s, i = fused_path(q)
+    np.testing.assert_allclose(
+        np.asarray(s), np.asarray(ref_s), atol=1e-5,
+        err_msg="fused IVF path scores diverge from the jnp gather path",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(i), np.asarray(ref_i),
+        err_msg="fused IVF path ids diverge from the jnp gather path",
+    )
+
+    def _once(fn):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(q))
+        return (time.perf_counter() - t0) * 1e6
+
+    samples = {"unfused": [], "fused": []}
+    ratios = []
+    for _ in range(20):
+        tu = _once(unfused)
+        tf = _once(fused_path)
+        samples["unfused"].append(tu)
+        samples["fused"].append(tf)
+        ratios.append(tu / tf)
+
+    # -- HBM traffic model (exact f32 byte counts per batch) ---------------
+    # Both paths read queries + centroid table + probed cells once and
+    # write (B, k) results; the unfused path ADDITIONALLY writes the
+    # gathered (B, nprobe, cap, d) candidate tensor and reads it back for
+    # the einsum, plus round-trips the adapter-transformed queries.
+    probe_bytes = _bytes_f32((batch, adapter.d_new), (n_cells, d))
+    gather_bytes = _bytes_f32((batch, nprobe, cap, d))
+    out_bytes = _bytes_f32((batch, k), (batch, k))
+    common = probe_bytes + gather_bytes + out_bytes
+    bytes_unfused = common + 2 * gather_bytes + 2 * _bytes_f32((batch, d))
+    bytes_fused = common + _bytes_f32((batch, d))   # q' emitted once (probe
+    #                                                 launch → rescore read)
+    return {
+        "batch": batch,
+        "k": k,
+        "nprobe": nprobe,
+        "n_cells": n_cells,
+        "cell_capacity": cap,
+        "corpus_rows": n,
+        "d": d,
+        "kernel_launches_fused": 2,
+        "us_per_batch_unfused": round(statistics.median(samples["unfused"]), 1),
+        "us_per_batch_fused": round(statistics.median(samples["fused"]), 1),
+        "speedup": round(statistics.median(ratios), 3),
+        "hbm_bytes_unfused": bytes_unfused,
+        "hbm_bytes_fused": bytes_fused,
+        "hbm_bytes_saved_per_batch": bytes_unfused - bytes_fused,
+        "gather_bytes_not_materialized": 2 * gather_bytes,
+        "parity": "exact (atol 1e-5 scores, ids equal)",
+        "caveat": TPU_CAVEAT,
+    }
+
+
+def run_ivf(adapter: DriftAdapter | None = None) -> dict:
+    """Standalone IVF fused-vs-unfused section → BENCH_ivf.json (the CI
+    bench artifact)."""
+    d = 768
+    if adapter is None:
+        key = jax.random.PRNGKey(0)
+        b = jax.random.normal(key, (8_000, d))
+        b = b / jnp.linalg.norm(b, axis=1, keepdims=True)
+        r = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1), (d, d)))[0]
+        adapter = DriftAdapter.fit(
+            b, b @ r.T, kind="op",
+            config=FitConfig(kind="op", use_dsm=False),
+        )
+        corpus = (b @ r.T)[:4096]
+    else:
+        key = jax.random.PRNGKey(0)
+        corpus = jax.random.normal(key, (4096, adapter.d_old))
+        corpus = corpus / jnp.linalg.norm(corpus, axis=1, keepdims=True)
+    out = bench_ivf_fused_path(adapter, corpus)
+    emit("a1.ivf_fused.query_path_us", out["us_per_batch_fused"],
+         out["hbm_bytes_fused"])
+    emit("a1.ivf_unfused.query_path_us", out["us_per_batch_unfused"],
+         out["hbm_bytes_unfused"])
+    emit("a1.ivf_fused_vs_unfused.speedup", 0.0, out["speedup"])
+    print(f"# caveat: {TPU_CAVEAT}", flush=True)
+    save_json("BENCH_ivf", out)
+    return out
+
+
 def run(scale: Scale) -> dict:
     d = 768
     key = jax.random.PRNGKey(0)
@@ -194,6 +327,10 @@ def run(scale: Scale) -> dict:
     emit("a1.fused_vs_unfused.paired_delta_us", fused["paired_delta_us"],
          fused["speedup"])
 
+    # IVF bridged path: two fused launches vs adapter + gather + einsum
+    out["ivf_query_path"] = run_ivf(adapter_la)
+    out["caveat"] = TPU_CAVEAT
+
     # Table 5 projection — adapter columns measured, re-embed/build modeled
     embed_rate = 400.0          # items / GPU-second (A100, d=768 encoder)
     hnsw_ms = {1e6: 0.5, 1e8: 5.0, 1e9: 15.0}
@@ -213,5 +350,24 @@ def run(scale: Scale) -> dict:
         emit(f"t5.scale_{int(n)}.query_ms_after", 0.0,
              t5[f"{int(n):,}"]["query_ms_after"])
     out["t5_projection"] = t5
+    print(f"# caveat: {TPU_CAVEAT}", flush=True)
     save_json("memory_latency", out)
     return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--ivf-only", action="store_true",
+        help="run just the IVF fused-vs-unfused section (the CI bench "
+        "artifact: BENCH_ivf.json)",
+    )
+    args = ap.parse_args()
+    if args.ivf_only:
+        run_ivf()
+    else:
+        from benchmarks.common import DEFAULT
+
+        run(DEFAULT)

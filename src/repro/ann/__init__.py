@@ -11,8 +11,13 @@ Every index carries a ``backend`` selector choosing its scan engine:
 ``QueryRouter`` (serve/router.py) talks to indexes only through this
 protocol, so swapping engines is a constructor argument, not a code change.
 
-For IVF the probe path is a gather + batched matmul, so "jnp" and "pallas"
-coincide; the selector matters there only for ``search_bridged``.
+For IVF, "jnp" and "pallas" coincide (gather + batched matmul rescore);
+"fused" serves ``search`` and ``search_bridged`` as exactly two kernel
+launches — centroid probe (with the adapter folded in when bridged), then
+the kernels/ivf_rescore streaming gather-rescore.
+
+``sharded_search`` / ``sharded_ivf_search`` run the same engines per shard
+(corpus rows / IVF cells sharded) and all-gather only k-candidate sets.
 """
 from typing import Protocol, runtime_checkable
 
@@ -22,7 +27,7 @@ from repro.ann.flat import FlatIndex, flat_search_jnp
 from repro.ann.ivf import IVFIndex, build_ivf, ivf_rescore, ivf_search
 from repro.ann.kmeans import kmeans_fit
 from repro.ann.metrics import arr, mrr, recall_at_k
-from repro.ann.sharded import sharded_search
+from repro.ann.sharded import sharded_ivf_search, sharded_search
 
 
 @runtime_checkable
@@ -32,13 +37,19 @@ class SearchBackend(Protocol):
     backend: str
 
     def search(
-        self, queries: jax.Array, k: int = 10
+        self, queries: jax.Array, k: int = 10, q_valid: int | None = None
     ) -> tuple[jax.Array, jax.Array]:
-        """Native-space top-k: (scores (Q, k), ids (Q, k))."""
+        """Native-space top-k: (scores (Q, k), ids (Q, k)). ``q_valid``
+        marks trailing rows as micro-batcher padding the kernel engines
+        may skip (those output rows are then undefined)."""
         ...
 
     def search_bridged(
-        self, adapter, queries: jax.Array, k: int = 10
+        self,
+        adapter,
+        queries: jax.Array,
+        k: int = 10,
+        q_valid: int | None = None,
     ) -> tuple[jax.Array, jax.Array]:
         """Top-k for new-space queries bridged through a DriftAdapter."""
         ...
@@ -56,5 +67,6 @@ __all__ = [
     "arr",
     "mrr",
     "recall_at_k",
+    "sharded_ivf_search",
     "sharded_search",
 ]

@@ -94,20 +94,31 @@ class FlatIndex:
         return int(self.corpus.shape[1])
 
     def search(
-        self, queries: jax.Array, k: int = 10
+        self,
+        queries: jax.Array,
+        k: int = 10,
+        q_valid: int | None = None,
     ) -> tuple[jax.Array, jax.Array]:
+        """Native-space top-k. ``q_valid`` marks trailing rows as
+        micro-batcher padding: the kernel engines skip those query tiles
+        (their output rows are undefined); the jnp engine ignores it."""
         if self.backend in ("pallas", "fused"):
             from repro.kernels.topk_scan import ops as topk_ops
 
             return topk_ops.topk_scan(
-                self.corpus, queries, k=k, block_rows=min(self.block_rows, 2048)
+                self.corpus, queries, k=k,
+                block_rows=min(self.block_rows, 2048), q_valid=q_valid,
             )
         return flat_search_jnp(
             self.corpus, queries, k=k, block_rows=self.block_rows
         )
 
     def search_bridged(
-        self, adapter, queries: jax.Array, k: int = 10
+        self,
+        adapter,
+        queries: jax.Array,
+        k: int = 10,
+        q_valid: int | None = None,
     ) -> tuple[jax.Array, jax.Array]:
         """Search with new-space queries bridged through ``adapter``.
 
@@ -121,9 +132,9 @@ class FlatIndex:
             fused_kind, fused = adapter.as_fused_params()
             return fused_ops.fused_bridged_search(
                 fused_kind, fused, queries, self.corpus, k=k,
-                block_rows=min(self.block_rows, 2048),
+                block_rows=min(self.block_rows, 2048), q_valid=q_valid,
             )
-        return self.search(adapter.apply(queries), k=k)
+        return self.search(adapter.apply(queries), k=k, q_valid=q_valid)
 
     # Mutation path for the lazy/background re-embedding scenario (§5.6):
     # rows are overwritten in place as items get re-encoded by f_new.

@@ -6,10 +6,16 @@ static-shape gather + batched matmul — no ragged structures, no host control
 flow, everything jittable and shardable. ``nprobe`` plays the role of the
 paper's HNSW ``ef_search`` recall/latency knob (DESIGN.md §2).
 
-Overflowing rows (beyond a cell's capacity) spill to the globally nearest
-non-full cell... in this implementation we simply size ``cap`` generously
-(cap = spill_factor × N/C) and assert no overflow at build time; overflow
-rows are re-assigned to their next-best cell with free slots.
+Overflowing rows (beyond a cell's capacity) spill to the nearest non-full
+cell; ``cap`` is sized generously (cap = spill_factor × N/C, rounded up to
+the f32 sublane of 8 for the rescore kernel) so spills are rare.
+
+Backends: "jnp"/"pallas" rescore probed cells with a gather + einsum (the
+(B, nprobe, cap, d) candidate tensor is materialized); "fused" streams each
+probed cell's (cap, d) tile straight into VMEM via kernels/ivf_rescore —
+``search`` is two kernel launches (centroid top-k probe, gather-rescore) and
+``search_bridged`` is the same two launches with the adapter folded into the
+probe (kernels/fused_search, ``return_queries``), zero jnp glue between.
 """
 from __future__ import annotations
 
@@ -48,27 +54,39 @@ class IVFIndex:
         return int(self.cells.shape[1])
 
     def search(
-        self, queries: jax.Array, k: int = 10, nprobe: int = 8
+        self,
+        queries: jax.Array,
+        k: int = 10,
+        nprobe: int = 8,
+        q_valid: int | None = None,
     ) -> tuple[jax.Array, jax.Array]:
         """Native-space probe + rescore.
 
-        Note: the probe path is a gather + batched matmul, so the "jnp" and
-        "pallas" engines coincide for IVF — the selector only changes
-        behavior for ``search_bridged`` ("fused" = adapter folded into the
-        centroid-probe launch).
+        "jnp" and "pallas" coincide here (gather + batched matmul); "fused"
+        runs two kernel launches — topk_scan over the centroid table, then
+        the ivf_rescore streaming kernel — never materializing the gathered
+        (B, nprobe, cap, d) candidate tensor. ``q_valid`` marks trailing
+        rows as micro-batcher padding: the fused launches skip those query
+        tiles and their output rows are undefined.
         """
-        return ivf_search(self, queries, k=k, nprobe=nprobe)
+        return ivf_search(self, queries, k=k, nprobe=nprobe, q_valid=q_valid)
 
     def search_bridged(
-        self, adapter, queries: jax.Array, k: int = 10, nprobe: int = 8
+        self,
+        adapter,
+        queries: jax.Array,
+        k: int = 10,
+        nprobe: int = 8,
+        q_valid: int | None = None,
     ) -> tuple[jax.Array, jax.Array]:
         """Bridged search: adapter-mapped queries probe + rescore.
 
-        On the "fused" backend the adapter transform and the centroid probe
-        run as ONE fused_search launch over the centroid table (which also
-        emits the transformed queries for the candidate rescore) — the probe
-        never sees an HBM round-trip of transformed queries. Other backends
-        apply the adapter separately, then run the standard probe path.
+        On the "fused" backend a bridged query is EXACTLY two kernel
+        launches: (1) fused_search over the centroid table — adapter
+        transform + probe top-k in one launch, emitting the transformed
+        queries from VMEM; (2) the ivf_rescore gather-rescore kernel over
+        the probed cells. Other backends apply the adapter separately, then
+        run the standard probe path.
         """
         if nprobe > self.n_cells:
             raise ValueError(
@@ -82,10 +100,12 @@ class IVFIndex:
             br = min(1024, -(-self.n_cells // 128) * 128)
             _, probe, q_mapped = fused_ops.fused_bridged_search(
                 fused_kind, fused, queries, self.centroids, k=nprobe,
-                block_rows=br, return_queries=True,
+                block_rows=br, return_queries=True, q_valid=q_valid,
             )
-            return ivf_rescore(self, q_mapped, probe, k=k)
-        return ivf_search(self, adapter.apply(queries), k=k, nprobe=nprobe)
+            return ivf_rescore(self, q_mapped, probe, k=k, q_valid=q_valid)
+        return ivf_search(
+            self, adapter.apply(queries), k=k, nprobe=nprobe, q_valid=q_valid
+        )
 
 
 # Register as a pytree so IVFIndex flows through jit/pjit (n_items and the
@@ -100,6 +120,30 @@ jax.tree_util.register_pytree_node(
 )
 
 
+def _pack_cells(
+    corpus_np: np.ndarray,
+    rows: np.ndarray,
+    cells_of_rows: np.ndarray,
+    n_cells: int,
+    cap: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Scatter (row, cell) assignments into the packed (C, cap, d) layout.
+
+    Fully vectorized: slot-within-cell comes from the position offset inside
+    each cell's contiguous group after a stable sort by cell.
+    """
+    d = corpus_np.shape[1]
+    order = np.argsort(cells_of_rows, kind="stable")
+    rr, cc = rows[order], cells_of_rows[order]
+    # first index of each cell's group == start offset → slot = pos - start
+    slot = np.arange(rr.size) - np.searchsorted(cc, cc)
+    cells = np.zeros((n_cells, cap, d), np.float32)
+    cell_ids = np.full((n_cells, cap), -1, np.int32)
+    cells[cc, slot] = corpus_np[rr]
+    cell_ids[cc, slot] = rr
+    return cells, cell_ids
+
+
 def build_ivf(
     key: jax.Array,
     corpus: jax.Array,
@@ -107,38 +151,62 @@ def build_ivf(
     spill_factor: float = 3.0,
     kmeans_iters: int = 20,
 ) -> IVFIndex:
-    """Build an IVF-Flat index over an ℓ2-normalized corpus (N, d)."""
+    """Build an IVF-Flat index over an ℓ2-normalized corpus (N, d).
+
+    Host-side packing is vectorized (one-time build cost, like FAISS's
+    add()): in-capacity rows scatter in one shot; overflow rows spill to
+    their next-nearest non-full cell in ≤C vectorized rounds over the
+    preference ranks — no per-row argsort walk. ``cap`` is rounded up to a
+    multiple of 8 (f32 sublane) so the packed cells tile cleanly into the
+    ivf_rescore kernel.
+    """
     n, d = corpus.shape
     centroids, assign = kmeans_fit(key, corpus, n_cells, kmeans_iters)
-    cap = int(np.ceil(spill_factor * n / n_cells))
-    # Host-side packing (one-time build cost, like FAISS's add()):
-    assign_np = np.asarray(assign)
+    cap = -(-int(np.ceil(spill_factor * n / n_cells)) // 8) * 8
+    assign_np = np.asarray(assign, np.int64)
     corpus_np = np.asarray(corpus)
-    sims = None
-    cell_rows: list[list[int]] = [[] for _ in range(n_cells)]
+    counts = np.bincount(assign_np, minlength=n_cells)
+    # rank of each row within its cell (stable in original row order)
     order = np.argsort(assign_np, kind="stable")
-    for idx in order:
-        c = int(assign_np[idx])
-        if len(cell_rows[c]) < cap:
-            cell_rows[c].append(int(idx))
-        else:
-            # overflow: walk next-nearest centroids until a free slot
-            if sims is None:
-                sims = corpus_np @ np.asarray(centroids).T
-            for alt in np.argsort(-sims[idx]):
-                if len(cell_rows[int(alt)]) < cap:
-                    cell_rows[int(alt)].append(int(idx))
-                    break
-    cells = np.zeros((n_cells, cap, d), np.float32)
-    cell_ids = np.full((n_cells, cap), -1, np.int64)
-    for c, rows in enumerate(cell_rows):
-        if rows:
-            cells[c, : len(rows)] = corpus_np[rows]
-            cell_ids[c, : len(rows)] = rows
+    sorted_cells = assign_np[order]
+    rank = np.arange(n) - np.searchsorted(sorted_cells, sorted_cells)
+    fit_rows = order[rank < cap]
+    over_rows = order[rank >= cap]
+    rows = fit_rows
+    cells_of_rows = assign_np[fit_rows]
+    if over_rows.size:
+        free = cap - np.minimum(counts, cap)
+        # preference order over centroids, computed once for ALL overflow
+        # rows (the old path re-argsorted the full (N, C) sim matrix row
+        # by row inside a python loop)
+        pref = np.argsort(
+            -(corpus_np[over_rows] @ np.asarray(centroids).T), axis=1
+        )
+        placed = np.full(over_rows.size, -1, np.int64)
+        for t in range(n_cells):
+            todo = np.flatnonzero(placed < 0)
+            if todo.size == 0:
+                break
+            prop = pref[todo, t]
+            # accept up to free[c] proposers per cell this round
+            by_cell = np.argsort(prop, kind="stable")
+            sp = prop[by_cell]
+            in_cell = np.arange(sp.size) - np.searchsorted(sp, sp)
+            accept = in_cell < free[sp]
+            placed[todo[by_cell[accept]]] = sp[accept]
+            np.subtract.at(free, sp[accept], 1)
+        if (placed < 0).any():
+            raise ValueError(
+                "IVF build overflow: not enough total capacity "
+                f"(cap={cap}, n_cells={n_cells}, n={n}); raise spill_factor"
+            )
+        rows = np.concatenate([fit_rows, over_rows])
+        cells_of_rows = np.concatenate([cells_of_rows, placed])
+    cells, cell_ids = _pack_cells(corpus_np, rows, cells_of_rows, n_cells, cap)
     return IVFIndex(
         centroids=centroids,
         cells=jnp.asarray(cells),
-        cell_ids=jnp.asarray(cell_ids, jnp.int32),
+        cell_ids=jnp.asarray(cell_ids),
         n_items=n,
     )
 
@@ -146,18 +214,13 @@ def build_ivf(
 def _score_probed(
     index: IVFIndex, qb: jax.Array, probe: jax.Array, k: int
 ) -> tuple[jax.Array, jax.Array]:
-    """Rescore one query block (B, d) against its probed cells (B, nprobe)."""
-    b, d = qb.shape
-    neg = jnp.finfo(jnp.float32).min
-    cand_vecs = index.cells[probe]                        # (B, np, cap, d)
-    cand_ids = index.cell_ids[probe]                      # (B, np, cap)
-    cand_vecs = cand_vecs.reshape(b, -1, d)
-    cand_ids = cand_ids.reshape(b, -1)
-    scores = jnp.einsum("bd,bnd->bn", qb, cand_vecs)
-    scores = jnp.where(cand_ids >= 0, scores, neg)
-    top_s, pos = jax.lax.top_k(scores, k)
-    top_i = jnp.take_along_axis(cand_ids, pos, axis=1)
-    return top_s, top_i
+    """Rescore one query block (B, d) against its probed cells (B, nprobe).
+
+    Delegates to the ivf_rescore kernel's jnp oracle — the gather + einsum
+    math the fused backend is parity-gated against."""
+    from repro.kernels.ivf_rescore.ref import ivf_rescore_ref
+
+    return ivf_rescore_ref(index.cells, index.cell_ids, qb, probe, k)
 
 
 def _pad_to_blocks(x: jax.Array, block: int) -> jax.Array:
@@ -173,12 +236,27 @@ def ivf_search(
     k: int = 10,
     nprobe: int = 8,
     query_block: int = 256,
+    q_valid=None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Approximate top-k: probe the ``nprobe`` nearest cells per query."""
+    """Approximate top-k: probe the ``nprobe`` nearest cells per query.
+
+    ``q_valid`` is a DYNAMIC argument (int/scalar array or None): varying
+    per-bucket valid counts from the micro-batcher do not retrace."""
     n_cells = index.centroids.shape[0]
     if nprobe > n_cells:          # shapes are static under jit: trace-time
         raise ValueError(f"nprobe={nprobe} exceeds n_cells={n_cells}")
     qn = queries.shape[0]
+    if index.backend == "fused":
+        from repro.kernels.topk_scan import ops as topk_ops
+
+        # the probe's 128-row tiles are never wholly skippable under pow2
+        # bucketing, so q_valid is not forwarded (it would be quantized
+        # away anyway); the rescore's 8-row tiles do skip
+        br = min(1024, -(-n_cells // 128) * 128)
+        _, probe = topk_ops.topk_scan(
+            index.centroids, queries, k=nprobe, block_rows=br
+        )
+        return ivf_rescore(index, queries, probe, k=k, q_valid=q_valid)
     qblocks = _pad_to_blocks(queries, query_block)
 
     def search_block(_, qb):
@@ -197,10 +275,21 @@ def ivf_rescore(
     probe: jax.Array,
     k: int = 10,
     query_block: int = 256,
+    q_valid=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Candidate rescore for externally-probed queries (the fused bridged
-    path: probe ids + transformed queries come out of one kernel launch)."""
+    path: probe ids + transformed queries come out of one kernel launch).
+
+    On the "fused" backend this is the ivf_rescore Pallas kernel — probed
+    (cap, d) cell tiles stream HBM→VMEM, no gathered candidate tensor; on
+    "jnp"/"pallas" it is the blocked gather + einsum scan."""
     qn = q_mapped.shape[0]
+    if index.backend == "fused":
+        from repro.kernels.ivf_rescore import ops as rescore_ops
+
+        return rescore_ops.ivf_rescore_fused(
+            index.cells, index.cell_ids, q_mapped, probe, k=k, q_valid=q_valid
+        )
     qblocks = _pad_to_blocks(q_mapped, query_block)
     pblocks = _pad_to_blocks(probe, query_block)
 

@@ -2,16 +2,27 @@
 
 The corpus rows are sharded across the mesh's data axes (``("data",)``
 single-pod, ``("pod", "data")`` multi-pod); queries are replicated. Each
-shard computes a *local* top-k over its rows with the same blocked scan the
-single-device FlatIndex uses; the per-shard candidate sets (k scores + k
-global ids — tiny: k·8 bytes) are then all-gathered and merged with one more
-top-k. Communication per query is `shards × k × 8` bytes, independent of
-corpus size N — which is what makes the billion-row projection in the
-paper's Table 5 workable.
+shard computes a *local* top-k over its rows; the per-shard candidate sets
+(k scores + k global ids — tiny: k·8 bytes) are then all-gathered and merged
+with one more top-k. Communication per query is `shards × k × 8` bytes,
+independent of corpus size N — which is what makes the billion-row
+projection in the paper's Table 5 workable.
 
-The adapter is applied to the query batch *before* dispatch (replicated —
-it is <3 MB), exactly the "centrally before dispatch" deployment the paper
-describes for multi-shard systems.
+Every shard runs the same ``backend`` engine the single-device indexes use
+("jnp" | "pallas" | "fused"). On ``backend="fused"`` with an installed
+adapter's ``as_fused_params()`` handed in via ``fused``, each shard serves
+the bridged query as ONE local kernels/fused_search launch — adapter
+transform + local corpus scan + running top-k in VMEM — and only the
+k-candidate sets cross the interconnect. This replaces the old
+adapter-then-jnp-scan per shard (the adapter launch and the HBM round-trip
+of transformed queries paid once per shard).
+
+``sharded_ivf_search`` extends the same story to IVF: the packed cell
+tensor is sharded cell-wise, the (small) centroid table is replicated, every
+shard derives the SAME global probe set and rescans only the probed cells it
+owns (others point at a NEG-masked dummy cell) — so the merged result is
+exactly the single-device answer, and on "fused" each shard's rescore is
+one kernels/ivf_rescore launch.
 """
 from __future__ import annotations
 
@@ -20,7 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.ann.flat import flat_search_jnp
+from repro.ann.flat import BACKENDS, flat_search_jnp
 
 # shard_map moved from jax.experimental to the jax namespace, and its
 # replication-check kwarg was renamed check_rep -> check_vma. Resolve once so
@@ -34,6 +45,40 @@ else:  # jax <= 0.4.x
     _SHARD_MAP_KW = {"check_rep": False}
 
 
+def _n_shards(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _shard_index(mesh: Mesh, axes: tuple[str, ...]):
+    idx = 0
+    for a in axes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _merge_candidates(s, i, axes: tuple[str, ...], k: int):
+    """All-gather per-shard (Q, k) candidate sets and merge with one top-k."""
+    for a in axes:
+        s = jax.lax.all_gather(s, a, axis=1, tiled=True)
+        i = jax.lax.all_gather(i, a, axis=1, tiled=True)
+    top_s, pos = jax.lax.top_k(s, k)
+    return top_s, jnp.take_along_axis(i, pos, axis=1)
+
+
+def _check_engine(backend: str, adapter_fn, fused) -> None:
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {BACKENDS}"
+        )
+    if fused is not None and backend != "fused":
+        raise ValueError("fused adapter params require backend='fused'")
+    if fused is not None and adapter_fn is not None:
+        raise ValueError("pass either adapter_fn or fused, not both")
+
+
 def sharded_search(
     mesh: Mesh,
     corpus: jax.Array,
@@ -43,6 +88,8 @@ def sharded_search(
     corpus_axes: tuple[str, ...] = ("data",),
     block_rows: int = 65536,
     adapter_fn=None,
+    backend: str = "jnp",
+    fused: tuple[str, dict] | None = None,
 ):
     """Build the jitted distributed search fn and return it.
 
@@ -50,40 +97,50 @@ def sharded_search(
             (pad with zero rows upstream if not; ids ≥ N are masked here).
     adapter_fn: optional params-free callable applied to queries on every
             shard before search (the installed DriftAdapter's apply).
+    backend: per-shard scan engine — "jnp" (blocked jnp scan), "pallas"
+            (kernels/topk_scan), "fused" (kernels/fused_search one-launch
+            bridged path when ``fused`` is given, topk_scan otherwise).
+    fused:  the installed adapter's ``as_fused_params()`` (kind, weights);
+            with backend="fused" each shard runs adapter transform + scan +
+            top-k as ONE local launch — no per-shard adapter launch, no HBM
+            round-trip of transformed queries.
     """
+    _check_engine(backend, adapter_fn, fused)
     n = corpus.shape[0]
-    axis_sizes = [mesh.shape[a] for a in corpus_axes]
-    n_shards = 1
-    for s in axis_sizes:
-        n_shards *= s
-    if n % n_shards:
-        raise ValueError(f"corpus rows {n} not divisible by {n_shards} shards")
-    rows_per_shard = n // n_shards
+    shards = _n_shards(mesh, corpus_axes)
+    if n % shards:
+        raise ValueError(f"corpus rows {n} not divisible by {shards} shards")
+    rows_per_shard = n // shards
+    kernel_rows = min(block_rows, rows_per_shard, 2048)
 
     corpus_spec = P(corpus_axes if len(corpus_axes) > 1 else corpus_axes[0])
 
     def local_search(corpus_shard, queries_rep):
-        # global id offset of this shard's rows
-        idx = 0
-        for a in corpus_axes:
-            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-        offset = idx * rows_per_shard
-        if adapter_fn is not None:
-            queries_rep = adapter_fn(queries_rep)
-        s, i = flat_search_jnp(
-            corpus_shard, queries_rep, k=k,
-            block_rows=min(block_rows, rows_per_shard),
-        )
-        i = i + offset
-        # gather candidates from all shards and merge
-        cat_s = s
-        cat_i = i
-        for a in corpus_axes:
-            cat_s = jax.lax.all_gather(cat_s, a, axis=1, tiled=True)
-            cat_i = jax.lax.all_gather(cat_i, a, axis=1, tiled=True)
-        top_s, pos = jax.lax.top_k(cat_s, k)
-        top_i = jnp.take_along_axis(cat_i, pos, axis=1)
-        return top_s, top_i
+        offset = _shard_index(mesh, corpus_axes) * rows_per_shard
+        if backend == "fused" and fused is not None:
+            from repro.kernels.fused_search.ops import fused_bridged_search
+
+            fused_kind, fused_params = fused
+            s, i = fused_bridged_search(
+                fused_kind, fused_params, queries_rep, corpus_shard,
+                k=k, block_rows=kernel_rows,
+            )
+        elif backend in ("pallas", "fused"):
+            from repro.kernels.topk_scan.ops import topk_scan
+
+            if adapter_fn is not None:
+                queries_rep = adapter_fn(queries_rep)
+            s, i = topk_scan(
+                corpus_shard, queries_rep, k=k, block_rows=kernel_rows
+            )
+        else:
+            if adapter_fn is not None:
+                queries_rep = adapter_fn(queries_rep)
+            s, i = flat_search_jnp(
+                corpus_shard, queries_rep, k=k,
+                block_rows=min(block_rows, rows_per_shard),
+            )
+        return _merge_candidates(s, i + offset, corpus_axes, k)
 
     in_specs = (corpus_spec, P())
     out_specs = (P(), P())
@@ -94,6 +151,105 @@ def sharded_search(
         ),
         in_shardings=(
             NamedSharding(mesh, corpus_spec),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=NamedSharding(mesh, P()),
+    )
+    return fn
+
+
+def sharded_ivf_search(
+    mesh: Mesh,
+    index,
+    k: int = 10,
+    nprobe: int = 8,
+    *,
+    cell_axes: tuple[str, ...] = ("data",),
+    adapter_fn=None,
+    fused: tuple[str, dict] | None = None,
+):
+    """Cells-sharded IVF search with exact single-device parity.
+
+    The (C, cap, d) packed cells and (C, cap) ids shard cell-wise; the
+    centroid table is replicated (it is tiny — C·d floats). Every shard
+    computes the SAME global probe set from the replicated centroids, then
+    rescans only the probed cells it owns — probe entries owned elsewhere
+    are redirected to a local all-pad dummy cell whose candidates mask to
+    NEG, so each probed cell is scored on exactly one shard and the merged
+    top-k equals the single-device result (ids are global already: the
+    sharded cell_ids carry them).
+
+    Engine selection mirrors ``IVFIndex``: ``index.backend == "fused"``
+    runs the per-shard rescore as one kernels/ivf_rescore launch (and, with
+    ``fused`` given, the probe as one kernels/fused_search launch emitting
+    the transformed queries from VMEM); other backends use the jnp
+    gather + einsum rescore.
+
+    Returns the jitted fn; call it as ``fn(index.cells, index.cell_ids,
+    queries)``.
+    """
+    backend = index.backend
+    _check_engine(backend, adapter_fn, fused)
+    c, cap, d = index.cells.shape
+    if nprobe > c:
+        raise ValueError(f"nprobe={nprobe} exceeds n_cells={c}")
+    shards = _n_shards(mesh, cell_axes)
+    if c % shards:
+        raise ValueError(f"n_cells {c} not divisible by {shards} shards")
+    c_local = c // shards
+    centroids = index.centroids
+    br = min(1024, -(-c // 128) * 128)
+
+    cell_spec = P(cell_axes if len(cell_axes) > 1 else cell_axes[0])
+
+    def local_search(cells_shard, ids_shard, queries_rep):
+        if backend == "fused" and fused is not None:
+            from repro.kernels.fused_search.ops import fused_bridged_search
+
+            fused_kind, fused_params = fused
+            _, probe, qm = fused_bridged_search(
+                fused_kind, fused_params, queries_rep, centroids,
+                k=nprobe, block_rows=br, return_queries=True,
+            )
+        else:
+            qm = queries_rep if adapter_fn is None else adapter_fn(queries_rep)
+            if backend == "fused":
+                from repro.kernels.topk_scan.ops import topk_scan
+
+                _, probe = topk_scan(centroids, qm, k=nprobe, block_rows=br)
+            else:
+                _, probe = jax.lax.top_k(qm @ centroids.T, nprobe)
+        # redirect probe entries owned by other shards to the dummy cell
+        local_p = probe - _shard_index(mesh, cell_axes) * c_local
+        local_p = jnp.where(
+            (local_p >= 0) & (local_p < c_local), local_p, c_local
+        )
+        cells_aug = jnp.concatenate(
+            [cells_shard, jnp.zeros((1, cap, d), cells_shard.dtype)]
+        )
+        ids_aug = jnp.concatenate(
+            [ids_shard, jnp.full((1, cap), -1, ids_shard.dtype)]
+        )
+        if backend == "fused":
+            from repro.kernels.ivf_rescore.ops import ivf_rescore_fused
+
+            s, i = ivf_rescore_fused(cells_aug, ids_aug, qm, local_p, k=k)
+        else:
+            from repro.kernels.ivf_rescore.ref import ivf_rescore_ref
+
+            s, i = ivf_rescore_ref(cells_aug, ids_aug, qm, local_p, k)
+        return _merge_candidates(s, i, cell_axes, k)
+
+    in_specs = (cell_spec, cell_spec, P())
+    out_specs = (P(), P())
+    fn = jax.jit(
+        _shard_map(
+            local_search, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            **_SHARD_MAP_KW,
+        ),
+        in_shardings=(
+            NamedSharding(mesh, cell_spec),
+            NamedSharding(mesh, cell_spec),
             NamedSharding(mesh, P()),
         ),
         out_shardings=NamedSharding(mesh, P()),

@@ -20,6 +20,22 @@ def pad_rows(x: jax.Array, mult: int) -> jax.Array:
     return x
 
 
+def quantize_q_valid(q: int, q_valid: int | None, q_tile: int) -> int | None:
+    """Round a valid-query count up to tile granularity, or drop it.
+
+    The kernels' pad-row skip is whole-tile (``i * q_tile < q_valid``), so
+    only ceil(q_valid / q_tile) matters. Quantizing BEFORE the jit boundary
+    collapses the per-bucket counts a micro-batcher produces onto at most
+    q/q_tile static values — and to None (the default trace) whenever no
+    whole tile is skippable, which with 128-row tiles and power-of-two
+    buckets is always.
+    """
+    if q_valid is None:
+        return None
+    rounded = -(-min(q, q_valid) // q_tile) * q_tile
+    return None if rounded >= -(-q // q_tile) * q_tile else rounded
+
+
 def fold_fused_params(kind: str, params: dict, d_new: int) -> tuple[str, dict]:
     """Collapse DriftAdapter (kind, params) into kernel-ready weights.
 

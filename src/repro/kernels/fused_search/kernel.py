@@ -61,52 +61,60 @@ def _mlp_transform(
 
 
 def _scan_step(transform, c_ref, out_refs, qx, best_s, best_i, *,
-               k, block_rows, n_valid, return_queries):
+               k, block_rows, n_valid, q_valid, return_queries):
     """Shared adapter→scan→top-k body; ``transform`` runs only on step 0."""
+    i = pl.program_id(0)
     j = pl.program_id(1)
     nb = pl.num_programs(1)
+    q_tile = qx.shape[0]
 
-    @pl.when(j == 0)
-    def _init():
-        qx[...] = transform()
-        best_s[...] = jnp.full_like(best_s[...], NEG)
-        best_i[...] = jnp.full_like(best_i[...], -1)
-        if return_queries:
-            out_refs[2][...] = qx[...]
+    # query tiles entirely past q_valid are micro-batcher padding: skip the
+    # transform + matmul + fold + emit (their output rows are undefined)
+    @pl.when(i * q_tile < q_valid)
+    def _tile():
+        @pl.when(j == 0)
+        def _init():
+            qx[...] = transform()
+            best_s[...] = jnp.full_like(best_s[...], NEG)
+            best_i[...] = jnp.full_like(best_i[...], -1)
+            if return_queries:
+                out_refs[2][...] = qx[...]
 
-    scores = jnp.dot(
-        qx[...], c_ref[...].T, preferred_element_type=jnp.float32
-    )                                                      # (Qt, C)
-    row_ids = j * block_rows + jax.lax.broadcasted_iota(
-        jnp.int32, scores.shape, 1
-    )
-    scores = jnp.where(row_ids < n_valid, scores, NEG)
-    new_s, new_i = _fold_block(scores, row_ids, best_s[...], best_i[...], k)
-    best_s[...] = new_s
-    best_i[...] = new_i
+        scores = jnp.dot(
+            qx[...], c_ref[...].T, preferred_element_type=jnp.float32
+        )                                                      # (Qt, C)
+        row_ids = j * block_rows + jax.lax.broadcasted_iota(
+            jnp.int32, scores.shape, 1
+        )
+        scores = jnp.where(row_ids < n_valid, scores, NEG)
+        new_s, new_i = _fold_block(
+            scores, row_ids, best_s[...], best_i[...], k
+        )
+        best_s[...] = new_s
+        best_i[...] = new_i
 
-    @pl.when(j == nb - 1)
-    def _emit():
-        out_refs[0][...] = best_s[...]
-        out_refs[1][...] = best_i[...]
+        @pl.when(j == nb - 1)
+        def _emit():
+            out_refs[0][...] = best_s[...]
+            out_refs[1][...] = best_i[...]
 
 
 def _fused_linear_kernel(
     x_ref, m_ref, t_ref, s_ref, c_ref, *refs,
-    k, block_rows, n_valid, renormalize, return_queries,
+    k, block_rows, n_valid, q_valid, renormalize, return_queries,
 ):
     out_refs, (qx, best_s, best_i) = refs[:-3], refs[-3:]
     _scan_step(
         lambda: _linear_transform(x_ref, m_ref, t_ref, s_ref, renormalize),
         c_ref, out_refs, qx, best_s, best_i,
-        k=k, block_rows=block_rows, n_valid=n_valid,
+        k=k, block_rows=block_rows, n_valid=n_valid, q_valid=q_valid,
         return_queries=return_queries,
     )
 
 
 def _fused_mlp_kernel(
     x_ref, w1_ref, b1_ref, w2_ref, b2_ref, p_ref, s_ref, c_ref, *refs,
-    k, block_rows, n_valid, renormalize, return_queries,
+    k, block_rows, n_valid, q_valid, renormalize, return_queries,
 ):
     out_refs, (qx, best_s, best_i) = refs[:-3], refs[-3:]
     _scan_step(
@@ -114,7 +122,7 @@ def _fused_mlp_kernel(
             x_ref, w1_ref, b1_ref, w2_ref, b2_ref, p_ref, s_ref, renormalize
         ),
         c_ref, out_refs, qx, best_s, best_i,
-        k=k, block_rows=block_rows, n_valid=n_valid,
+        k=k, block_rows=block_rows, n_valid=n_valid, q_valid=q_valid,
         return_queries=return_queries,
     )
 
@@ -160,17 +168,19 @@ def _call(kernel, weights, queries, corpus, weight_shapes, *, k, d_old,
 
 
 def fused_linear_search_pallas(
-    queries, m, t, s, corpus, *, k, n_valid, renormalize=True,
+    queries, m, t, s, corpus, *, k, n_valid, q_valid=None, renormalize=True,
     q_tile=128, block_rows=1024, return_queries=False, interpret=False,
 ):
     """queries (Q, d_new) × m (d_old, d_new) → top-k over corpus (N, d_old).
 
     Q and N must be pre-padded to q_tile / block_rows multiples; padded
-    corpus rows are masked via n_valid. Returns (scores, ids[, q_mapped]).
+    corpus rows are masked via n_valid, padded query tiles skipped via
+    q_valid. Returns (scores, ids[, q_mapped]).
     """
     d_old = m.shape[0]
     kernel = functools.partial(
         _fused_linear_kernel, k=k, block_rows=block_rows, n_valid=n_valid,
+        q_valid=queries.shape[0] if q_valid is None else q_valid,
         renormalize=renormalize, return_queries=return_queries,
     )
     weights = (m, t.reshape(1, -1), s.reshape(1, -1))
@@ -183,13 +193,15 @@ def fused_linear_search_pallas(
 
 
 def fused_mlp_search_pallas(
-    queries, w1, b1, w2, b2, p, s, corpus, *, k, n_valid, renormalize=True,
-    q_tile=128, block_rows=1024, return_queries=False, interpret=False,
+    queries, w1, b1, w2, b2, p, s, corpus, *, k, n_valid, q_valid=None,
+    renormalize=True, q_tile=128, block_rows=1024, return_queries=False,
+    interpret=False,
 ):
     """Residual-MLP variant of the one-pass bridged search."""
     d_old, hidden = w2.shape
     kernel = functools.partial(
         _fused_mlp_kernel, k=k, block_rows=block_rows, n_valid=n_valid,
+        q_valid=queries.shape[0] if q_valid is None else q_valid,
         renormalize=renormalize, return_queries=return_queries,
     )
     weights = (

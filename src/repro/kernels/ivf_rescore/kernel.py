@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: IVF candidate gather-rescore without the HBM gather.
+
+The jnp IVF rescore (`ann/ivf._score_probed`) materializes the probed cells
+as a (B, nprobe, cap, d) tensor in HBM before the einsum — for B=256,
+nprobe=8, cap≈12k, d=768 that is ~70 GB of traffic per query block, two
+orders of magnitude more than the adapter transform the paper budgets <10 µs
+for (§5.2). This kernel never builds that tensor: the probe table is a
+scalar-prefetch operand, so each grid step's BlockSpec index_map picks ONE
+probed cell and DMAs its (cap, d) tile HBM→VMEM directly; the matmul and the
+pad-masked (id == -1) running top-k fold happen in VMEM and only the (Q, k)
+results ever return to HBM.
+
+Grid: (query_tiles, q_tile * nprobe). Step (i, j) rescans probed cell
+``probe[i*q_tile + j // nprobe, j % nprobe]`` — the (q_tile, d) query tile
+is resident across the whole row of steps, the per-step matmul scores all
+q_tile queries against the streamed cell (MXU-shaped), and rows other than
+the owning query ``j // nprobe`` are masked to NEG so their folds are
+no-ops. The corpus-axis steps are sequential ("arbitrary") so the running
+top-k scratch persists; query tiles are independent ("parallel").
+
+Layout requirements (enforced by ``build_ivf`` / the ops wrapper): cap is a
+multiple of 8 (f32 sublane); d should be a multiple of 128 on real TPU
+(same caveat as topk_scan).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.topk_scan.kernel import NEG, _CompilerParams, _fold_block
+
+
+def _ivf_rescore_kernel(
+    probe_ref,      # (Q, nprobe) SMEM — scalar-prefetched probe table
+    qv_ref,         # (1,) SMEM — scalar-prefetched valid-query count
+    q_ref,          # (Qt, d) VMEM — current query tile
+    cell_ref,       # (1, cap, d) VMEM — the probed cell's packed vectors
+    cid_ref,        # (1, cap) VMEM — the cell's global row ids, -1 = pad
+    out_s_ref,      # (Qt, k)
+    out_i_ref,      # (Qt, k)
+    best_s,         # scratch (Qt, k) f32
+    best_i,         # scratch (Qt, k) i32
+    *,
+    k: int,
+    nprobe: int,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+    q_tile = q_ref.shape[0]
+
+    # q_valid rides the scalar-prefetch channel (NOT a static python int):
+    # per-bucket valid counts from the micro-batcher never retrace or
+    # recompile the kernel — the skip predicate is data, not code
+    @pl.when(i * q_tile < qv_ref[0])
+    def _tile():
+        @pl.when(j == 0)
+        def _init():
+            best_s[...] = jnp.full_like(best_s[...], NEG)
+            best_i[...] = jnp.full_like(best_i[...], -1)
+
+        q_local = j // nprobe              # which tile row owns this step
+        scores = jnp.dot(
+            q_ref[...], cell_ref[0].T, preferred_element_type=jnp.float32
+        )                                                  # (Qt, cap)
+        cand = jnp.broadcast_to(cid_ref[...], scores.shape)
+        rows = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+        # pads (id -1) and non-owning rows fold as NEG → no-ops in the merge
+        scores = jnp.where((cand >= 0) & (rows == q_local), scores, NEG)
+        new_s, new_i = _fold_block(scores, cand, best_s[...], best_i[...], k)
+        best_s[...] = new_s
+        best_i[...] = new_i
+
+        @pl.when(j == nb - 1)
+        def _emit():
+            out_s_ref[...] = best_s[...]
+            out_i_ref[...] = best_i[...]
+
+
+def ivf_rescore_pallas(
+    cells: jax.Array,       # (C, cap, d) packed cell vectors, zero pads
+    cell_ids: jax.Array,    # (C, cap) int32 global row ids, -1 = pad
+    queries: jax.Array,     # (Q, d) — padded to q_tile multiple upstream
+    probe: jax.Array,       # (Q, nprobe) int32 cell ids, in [0, C)
+    q_valid: jax.Array,     # (1,) int32 — valid-query count (dynamic)
+    *,
+    k: int,
+    q_tile: int = 8,
+    interpret: bool = False,
+):
+    """Rescore each query against its probed cells; top-k per query.
+
+    Rows ≥ ``q_valid`` (query padding) skip all work per tile granularity;
+    their outputs are undefined and must be stripped by the caller.
+    ``q_valid`` is a DYNAMIC (1,) scalar so per-bucket counts from the
+    micro-batcher share one compiled kernel.
+    """
+    c, cap, d = cells.shape
+    q, nprobe = probe.shape
+    assert q % q_tile == 0 and queries.shape == (q, d)
+    grid = (q // q_tile, q_tile * nprobe)
+
+    def cell_map(i, j, p, qv):
+        return (p[i * q_tile + j // nprobe, j % nprobe], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_tile, d), lambda i, j, p, qv: (i, 0)),
+            pl.BlockSpec((1, cap, d), cell_map),
+            pl.BlockSpec(
+                (1, cap), lambda i, j, p, qv: cell_map(i, j, p, qv)[:2]
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile, k), lambda i, j, p, qv: (i, 0)),
+            pl.BlockSpec((q_tile, k), lambda i, j, p, qv: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((q_tile, k), jnp.float32),
+            pltpu.VMEM((q_tile, k), jnp.int32),
+        ],
+    )
+    kernel = functools.partial(_ivf_rescore_kernel, k=k, nprobe=nprobe)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(probe, q_valid, queries, cells, cell_ids)

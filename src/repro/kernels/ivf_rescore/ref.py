@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the IVF gather-rescore kernel.
+
+This IS the production math the kernel replaces (the `ann/ivf._score_probed`
+gather + einsum, which delegates here) — the kernel's parity gate therefore
+pins it to the exact jnp path, not a lookalike."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ivf_rescore_ref(
+    cells: jax.Array,       # (C, cap, d)
+    cell_ids: jax.Array,    # (C, cap) int32, -1 = pad
+    queries: jax.Array,     # (Q, d)
+    probe: jax.Array,       # (Q, nprobe) int32
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Gather the probed cells and rescore: the memory-hungry reference.
+
+    Materializes the (Q, nprobe, cap, d) candidate tensor the kernel is
+    built to avoid. Returns (scores (Q, k), ids (Q, k)); queries with fewer
+    than k unpadded candidates emit NEG/-1 tail slots.
+    """
+    q, d = queries.shape
+    neg = jnp.finfo(jnp.float32).min
+    cand_vecs = cells[probe].reshape(q, -1, d)            # (Q, np*cap, d)
+    cand_ids = cell_ids[probe].reshape(q, -1)             # (Q, np*cap)
+    scores = jnp.einsum("bd,bnd->bn", queries, cand_vecs)
+    scores = jnp.where(cand_ids >= 0, scores, neg)
+    top_s, pos = jax.lax.top_k(scores, k)
+    top_i = jnp.take_along_axis(cand_ids, pos, axis=1)
+    return top_s, top_i

@@ -50,6 +50,9 @@ def _fold_block(scores, ids, best_s, best_i, k: int):
         out_s.append(m)
         out_i.append(picked_i)
         merged_s = jnp.where(sel, NEG, merged_s)
+        # blank the picked id too: when a row runs out of real candidates
+        # (score NEG), later slots must re-select as -1, not repeat the id
+        merged_i = jnp.where(sel, -1, merged_i)
     return jnp.stack(out_s, axis=1), jnp.stack(out_i, axis=1)
 
 
@@ -64,30 +67,39 @@ def _topk_kernel(
     k: int,
     block_rows: int,
     n_valid: int,
+    q_valid: int,
 ):
+    i = pl.program_id(0)
     j = pl.program_id(1)
     nb = pl.num_programs(1)
+    q_tile = q_ref.shape[0]
 
-    @pl.when(j == 0)
-    def _init():
-        best_s[...] = jnp.full_like(best_s[...], NEG)
-        best_i[...] = jnp.full_like(best_i[...], -1)
+    # query tiles entirely past q_valid are micro-batcher padding: skip the
+    # matmul + fold + emit outright (their output rows are undefined)
+    @pl.when(i * q_tile < q_valid)
+    def _tile():
+        @pl.when(j == 0)
+        def _init():
+            best_s[...] = jnp.full_like(best_s[...], NEG)
+            best_i[...] = jnp.full_like(best_i[...], -1)
 
-    scores = jnp.dot(
-        q_ref[...], c_ref[...].T, preferred_element_type=jnp.float32
-    )                                                      # (Qt, C)
-    row_ids = j * block_rows + jax.lax.broadcasted_iota(
-        jnp.int32, scores.shape, 1
-    )
-    scores = jnp.where(row_ids < n_valid, scores, NEG)
-    new_s, new_i = _fold_block(scores, row_ids, best_s[...], best_i[...], k)
-    best_s[...] = new_s
-    best_i[...] = new_i
+        scores = jnp.dot(
+            q_ref[...], c_ref[...].T, preferred_element_type=jnp.float32
+        )                                                      # (Qt, C)
+        row_ids = j * block_rows + jax.lax.broadcasted_iota(
+            jnp.int32, scores.shape, 1
+        )
+        scores = jnp.where(row_ids < n_valid, scores, NEG)
+        new_s, new_i = _fold_block(
+            scores, row_ids, best_s[...], best_i[...], k
+        )
+        best_s[...] = new_s
+        best_i[...] = new_i
 
-    @pl.when(j == nb - 1)
-    def _emit():
-        out_s_ref[...] = best_s[...]
-        out_i_ref[...] = best_i[...]
+        @pl.when(j == nb - 1)
+        def _emit():
+            out_s_ref[...] = best_s[...]
+            out_i_ref[...] = best_i[...]
 
 
 def topk_scan_pallas(
@@ -96,6 +108,7 @@ def topk_scan_pallas(
     *,
     k: int,
     n_valid: int,
+    q_valid: int | None = None,
     q_tile: int = 128,
     block_rows: int = 1024,
     interpret: bool = False,
@@ -105,7 +118,8 @@ def topk_scan_pallas(
     assert n % block_rows == 0 and q % q_tile == 0
     grid = (q // q_tile, n // block_rows)
     kernel = functools.partial(
-        _topk_kernel, k=k, block_rows=block_rows, n_valid=n_valid
+        _topk_kernel, k=k, block_rows=block_rows, n_valid=n_valid,
+        q_valid=q if q_valid is None else q_valid,
     )
     out_s, out_i = pl.pallas_call(
         kernel,

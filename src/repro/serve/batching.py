@@ -1,13 +1,33 @@
 """Request micro-batcher: collects single-query requests into padded,
 fixed-shape batches so the serving path never retraces (static shapes on
-TPU). Size buckets are powers of two up to max_batch."""
+TPU). Size buckets are powers of two up to max_batch.
+
+Bucket padding is all-zero rows. The pads exist only to keep shapes static
+— their results are never read — so ``drain`` forwards the valid-row count
+to search fns that accept ``q_valid``: the fused kernels then skip every
+query tile past it (no transform, no matmul, no top-k fold) instead of
+scoring garbage. Search fns without a ``q_valid`` parameter (the jnp
+engines) still compute pad-row scores; that cost is bounded by the pow2
+bucket (< 2× the valid rows) and the rows are dropped here either way."""
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable
 
 import jax.numpy as jnp
 import numpy as np
+
+
+def _accepts_q_valid(fn: Callable) -> bool:
+    # only an EXPLICIT q_valid parameter opts in — a bare **kwargs does not
+    # (generic pass-through wrappers around two-argument search fns would
+    # otherwise get a keyword their inner fn rejects)
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+    return "q_valid" in params
 
 
 @dataclasses.dataclass
@@ -35,7 +55,13 @@ class MicroBatcher:
 
     def drain(self, search_fn: Callable, k: int = 10) -> dict[int, tuple]:
         """Flush pending requests through search_fn in padded power-of-two
-        batches. Returns {request_id: (scores, ids)}."""
+        batches. Returns {request_id: (scores, ids)}.
+
+        search_fn is called as ``search_fn(queries, k)`` — or
+        ``search_fn(queries, k, q_valid=n)`` when it takes a ``q_valid``
+        parameter, so fused launches skip the all-zero pad rows (whose
+        output is then undefined; only the n valid rows are read here)."""
+        pass_q_valid = _accepts_q_valid(search_fn)
         out: dict[int, tuple] = {}
         while self._pending:
             batch = self._pending[: self.max_batch]
@@ -46,7 +72,10 @@ class MicroBatcher:
             q = np.zeros((bucket, self.dim), np.float32)
             for i, r in enumerate(batch):
                 q[i] = r.embedding
-            scores, ids = search_fn(jnp.asarray(q), k)
+            if pass_q_valid:
+                scores, ids = search_fn(jnp.asarray(q), k, q_valid=n)
+            else:
+                scores, ids = search_fn(jnp.asarray(q), k)
             for i, r in enumerate(batch):
                 out[r.rid] = (np.asarray(scores[i]), np.asarray(ids[i]))
         return out
@@ -55,10 +84,19 @@ class MicroBatcher:
         """Flush pending requests straight into the index's bridged path —
         each padded bucket becomes ONE fused adapter→scan→top-k launch when
         the index runs the "fused" backend (no per-bucket adapter launch,
-        no HBM round-trip of transformed queries). With ``adapter=None``
-        buckets take the native search path unchanged."""
+        no HBM round-trip of transformed queries), with pad rows masked out
+        of the launch via the bucket's valid-row count. With
+        ``adapter=None`` buckets take the native search path unchanged."""
         if adapter is None:
-            return self.drain(lambda q, kk: index.search(q, k=kk), k=k)
+            return self.drain(
+                lambda q, kk, q_valid=None: index.search(
+                    q, k=kk, q_valid=q_valid
+                ),
+                k=k,
+            )
         return self.drain(
-            lambda q, kk: index.search_bridged(adapter, q, k=kk), k=k
+            lambda q, kk, q_valid=None: index.search_bridged(
+                adapter, q, k=kk, q_valid=q_valid
+            ),
+            k=k,
         )

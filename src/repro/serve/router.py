@@ -62,14 +62,25 @@ class QueryRouter:
         self._adapter = adapter
         self.swaps += 1
 
-    def search(self, queries: jax.Array, k: int = 10) -> SearchResult:
+    def search(
+        self, queries: jax.Array, k: int = 10, q_valid: int | None = None
+    ) -> SearchResult:
+        """``q_valid`` (micro-batcher pass-through) marks trailing query
+        rows as padding the fused launches skip; rows past it come back
+        undefined and must not be read."""
         t0 = time.perf_counter()
         adapter = self._adapter      # read once — atomicity
         if adapter is not None:
-            scores, ids = self.index.search_bridged(adapter, queries, k=k)
+            scores, ids = self.index.search_bridged(
+                adapter, queries, k=k, q_valid=q_valid
+            )
         else:
-            scores, ids = self.index.search(queries, k=k)
-        self.queries_served += queries.shape[0]
+            scores, ids = self.index.search(queries, k=k, q_valid=q_valid)
+        # pad rows are not served queries
+        self.queries_served += (
+            queries.shape[0] if q_valid is None
+            else min(int(q_valid), queries.shape[0])
+        )
         return SearchResult(
             scores=scores,
             ids=ids,

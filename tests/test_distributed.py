@@ -78,6 +78,86 @@ def test_sharded_search_with_adapter():
 
 
 @pytest.mark.slow
+def test_sharded_search_fused_backend():
+    """backend="fused" + as_fused_params(): each shard serves the bridged
+    query as ONE local fused launch; result must equal the replicated
+    single-device bridged search."""
+    r = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.ann import sharded_search, flat_search_jnp
+        from repro.core import DriftAdapter, FitConfig
+        try:
+            from jax.sharding import AxisType
+            mesh = jax.make_mesh((4, 2), ("data", "model"),
+                                 axis_types=(AxisType.Auto,)*2)
+        except ImportError:      # jax <= 0.4.x: no explicit-sharding types
+            mesh = jax.make_mesh((4, 2), ("data", "model"))
+        key = jax.random.PRNGKey(0)
+        d = 64
+        corpus = jax.random.normal(key, (2048, d))
+        corpus /= jnp.linalg.norm(corpus, axis=1, keepdims=True)
+        rot = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1), (d, d)))[0]
+        corpus_new = corpus @ rot.T
+        ad = DriftAdapter.fit(corpus_new, corpus, kind="op",
+                              config=FitConfig(kind="op", use_dsm=False))
+        q_new = corpus_new[:16]
+        fn = sharded_search(mesh, corpus, q_new, k=5, backend="fused",
+                            fused=ad.as_fused_params())
+        s, i = fn(corpus, q_new)
+        _, ref = flat_search_jnp(corpus, ad.apply(q_new), k=5)
+        assert np.array_equal(np.asarray(i), np.asarray(ref))
+        print("OK")
+    """)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_sharded_ivf_search_parity():
+    """Cells-sharded IVF (jnp and fused engines) must reproduce the
+    single-device probe + rescore exactly."""
+    r = _run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.ann import build_ivf, ivf_search, sharded_ivf_search
+        from repro.core import DriftAdapter, FitConfig
+        try:
+            from jax.sharding import AxisType
+            mesh = jax.make_mesh((4, 2), ("data", "model"),
+                                 axis_types=(AxisType.Auto,)*2)
+        except ImportError:      # jax <= 0.4.x: no explicit-sharding types
+            mesh = jax.make_mesh((4, 2), ("data", "model"))
+        key = jax.random.PRNGKey(0)
+        d = 64
+        corpus = jax.random.normal(key, (2048, d))
+        corpus /= jnp.linalg.norm(corpus, axis=1, keepdims=True)
+        rot = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1), (d, d)))[0]
+        corpus_new = corpus @ rot.T
+        ad = DriftAdapter.fit(corpus_new, corpus, kind="op",
+                              config=FitConfig(kind="op", use_dsm=False))
+        q_new = corpus_new[:16]
+        ivf = build_ivf(jax.random.PRNGKey(2), corpus, n_cells=16)
+        # jnp engine
+        _, ri = ivf_search(ivf, ad.apply(q_new), k=5, nprobe=4)
+        fn = sharded_ivf_search(mesh, ivf, k=5, nprobe=4,
+                                adapter_fn=ad.apply)
+        _, i = fn(ivf.cells, ivf.cell_ids, q_new)
+        assert np.array_equal(np.asarray(i), np.asarray(ri)), "jnp mismatch"
+        # fused engine: per-shard fused probe + ivf_rescore launches
+        fivf = dataclasses.replace(ivf, backend="fused")
+        rs, ri = fivf.search_bridged(ad, q_new, k=5, nprobe=4)
+        fn = sharded_ivf_search(mesh, fivf, k=5, nprobe=4,
+                                fused=ad.as_fused_params())
+        s, i = fn(ivf.cells, ivf.cell_ids, q_new)
+        assert np.array_equal(np.asarray(i), np.asarray(ri)), "fused mismatch"
+        assert np.allclose(np.asarray(s), np.asarray(rs), atol=1e-5)
+        print("OK")
+    """)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
 def test_dryrun_one_combo_compiles():
     """A miniature of the 512-device dry-run inside CI: one arch × shape on
     the full production mesh."""
