@@ -1,15 +1,18 @@
-"""End-to-end driver: a full near-zero-downtime embedding-model upgrade,
-serving batched requests THROUGHOUT the transition (the paper's §5.2 story
-as an executable scenario).
+"""End-to-end driver: a full near-zero-downtime embedding-model upgrade on
+the `VectorStore` lifecycle API, serving batched requests THROUGHOUT the
+transition (the paper's §5.2 story as an executable scenario).
 
 f_old is a (reduced) qwen3-0.6b checkpoint; f_new composes its "continued
 training" successor (weights moved 10 % toward an independent basin — the
 LOCAL, idiosyncratic part of drift) with a global basis rotation (the
 SYSTEMATIC part real optimizer trajectories produce — untrained random
 checkpoints share a basis, so the global component must be injected; see
-EXPERIMENTS.md §Calibration). The upgrade is served end-to-end with the
-orchestrator; the script ends with the paper's §5.3 DIAGNOSTIC on a truly
-unrelated model pair (ARR collapses → full re-index signalled).
+EXPERIMENTS.md §Calibration). The upgrade runs fit → shadow-eval → canary →
+progressive migration (migrated rows served natively, remainder bridged) →
+cutover. A second scenario replays the paper's §5.3 DIAGNOSTIC on a truly
+unrelated model pair: shadow-eval FAILS its recall gate and `rollback()`
+restores bit-identical pre-upgrade serving — the other exit of the
+lifecycle state machine.
 
     PYTHONPATH=src python examples/upgrade_zero_downtime.py
 """
@@ -21,7 +24,7 @@ from repro.ann import FlatIndex, flat_search_jnp, recall_at_k
 from repro.configs import get_config
 from repro.core.trainer import FitConfig
 from repro.models import encode, init_model
-from repro.serve import MicroBatcher, QueryRouter, UpgradeOrchestrator
+from repro.serve import MicroBatcher, VectorStore
 
 ARCH = "qwen3-0.6b"
 N_ITEMS, N_QUERIES, SEQ = 4000, 200, 48
@@ -54,59 +57,95 @@ def embed(params, token_arr, rotate=False):
 
 corpus_old = embed(p_old, docs)
 corpus_new = embed(p_new, docs, rotate=True)
+q_old = embed(p_old, queries)
 q_new = embed(p_new, queries, rotate=True)
 _, oracle = flat_search_jnp(corpus_new, q_new, k=10)
 
-router = QueryRouter(FlatIndex(corpus=corpus_old))
+# one facade owns index + version registry + router; the bridged path runs
+# as ONE fused kernel launch on backend="fused"
+store = VectorStore(
+    FlatIndex(corpus=corpus_old, backend="fused"), version="qwen3-v1"
+)
 batcher = MicroBatcher(dim=corpus_old.shape[1], max_batch=64)
 
 
-def serve_and_score(tag: str) -> None:
+def serve_and_score(tag: str, space=None, qs=None) -> None:
+    qs = q_new if qs is None else qs
     for i in range(N_QUERIES):
-        batcher.submit(np.asarray(q_new[i]))
+        batcher.submit(np.asarray(qs[i]))
     out = batcher.drain(
-        lambda q, k: (lambda r: (r.scores, r.ids))(router.search(q, k)), k=10
+        lambda q, k, q_valid=None: (lambda r: (r.scores, r.ids))(
+            store.search(q, k, space=space, q_valid=q_valid)
+        ),
+        k=10,
     )
     ids = jnp.stack([jnp.asarray(out[i][1]) for i in sorted(out)])
-    print(f"  [{tag:12s}] phase={orch.phase.value:16s} "
+    handle = store.active_upgrade
+    stage = handle.stage.value if handle else "steady"
+    print(f"  [{tag:12s}] stage={stage:12s} "
           f"R@10 vs oracle = {float(recall_at_k(ids, oracle)):.3f}")
 
 
-orch = UpgradeOrchestrator(
-    router,
-    encode_new=lambda q: q,
+handle = store.upgrade(
+    "qwen3-v2",
     corpus_new_provider=lambda ids: corpus_new[jnp.asarray(ids)],
 )
 serve_and_score("pre-upgrade")          # misaligned: new queries, old index
 
 pair_ids = rng.choice(N_ITEMS, size=3000, replace=False)
-orch.fit_adapter(
-    pair_ids, corpus_old[pair_ids], corpus_new[pair_ids],
+handle.fit(
+    corpus_new[pair_ids], corpus_old[pair_ids],
     config=FitConfig(kind="mlp", max_epochs=30, procrustes_warm_start=True),
 )
-swap = orch.deploy_bridge()
-print(f"  adapter deployed; service interruption = {swap*1e6:.0f} µs")
-serve_and_score("bridged")              # adapter on the query path
 
-while orch.progress < 1.0:              # lazy background re-embedding
-    orch.reembed_batch(batch_size=1000)
-serve_and_score(f"reembed {orch.progress:.0%}")
+# offline gate BEFORE any traffic shifts: bridged recall vs a re-embedded
+# probe set (here: the full re-embedded corpus)
+report = handle.shadow_eval(q_new, corpus_new, k=10, threshold=0.6)
+print(f"  shadow-eval: R@10={report.recall:.3f} "
+      f"({'PASS' if report.passed else 'FAIL'} at {report.threshold})")
 
-orch.cutover()
+# canary: 10 % of requests get encoded with f_new and served bridged; the
+# control arm keeps old-encoder native serving (space='qwen3-v1')
+swap = handle.start_canary(0.10)
+print(f"  canary live; service interruption = {swap*1e6:.0f} µs")
+canary_rows = [i for i in range(N_QUERIES) if handle.canary_assign()]
+print(f"  canary arm: {len(canary_rows)}/{N_QUERIES} requests")
+serve_and_score("canary-arm")           # bridged (new-space traffic)
+serve_and_score("control-arm", space="qwen3-v1", qs=q_old)  # old-native
+
+swap = handle.deploy()                  # promote: 100 % bridged
+print(f"  bridge promoted; interruption = {swap*1e6:.0f} µs")
+serve_and_score("bridged")
+
+while handle.progress < 1.0:            # lazy background re-embedding;
+    handle.migrate_batch(batch_size=1000)   # migrated rows serve natively
+    serve_and_score(f"migrate {handle.progress:.0%}")
+
+handle.cutover()
 serve_and_score("post-cutover")         # native new-model serving
-print("upgrade transitions:", " -> ".join(t.phase for t in orch.log))
+print("  lifecycle:", " -> ".join(e.stage for e in handle.events))
 
-# --- §5.3 diagnostic: a truly unrelated model pair -------------------------
+# --- §5.3 diagnostic: a truly unrelated model pair → rollback --------------
 print("\n== diagnostic: unrelated architectures (qwen1.5 -> qwen3) ==")
-from repro.core import DriftAdapter
 from repro.data.model_drift import encode_corpus_with_arch
 
 a_old = encode_corpus_with_arch("qwen1.5-0.5b", docs[:2000], seed=7)
 b_new = encode_corpus_with_arch("qwen3-0.6b", docs[:2000], seed=8)
-ad = DriftAdapter.fit(b_new[:1500], a_old[:1500], kind="mlp",
-                      config=FitConfig(kind="mlp", max_epochs=20))
-_, gt2 = flat_search_jnp(b_new[1500:], b_new[1500:], k=5)
-_, got2 = flat_search_jnp(a_old[1500:], ad.apply(b_new[1500:]), k=5)
-arr = float(recall_at_k(got2, gt2))
-print(f"  ARR between unrelated encoders: {arr:.3f} -> the paper's "
-      "diagnostic: drift too severe, schedule a full re-index instead")
+store2 = VectorStore(FlatIndex(corpus=a_old[:1500]), version="qwen1.5-v1")
+baseline = store2.search(b_new[1500:], k=5)
+
+handle2 = store2.upgrade("qwen3-v1")
+handle2.fit(b_new[:1500], a_old[:1500],
+            config=FitConfig(kind="mlp", max_epochs=20))
+report2 = handle2.shadow_eval(
+    b_new[1500:], b_new[:1500], k=5, threshold=0.6
+)
+print(f"  ARR between unrelated encoders: {report2.recall:.3f} -> "
+      f"{'PASS' if report2.passed else 'FAIL'}: drift too severe, "
+      "schedule a full re-index instead")
+handle2.rollback()                      # one call back to pre-upgrade state
+after = store2.search(b_new[1500:], k=5)
+identical = bool(jnp.all(baseline.ids == after.ids)) and bool(
+    jnp.all(baseline.scores == after.scores)
+)
+print(f"  rollback: bit-identical pre-upgrade serving = {identical}")

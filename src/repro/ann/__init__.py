@@ -32,9 +32,27 @@ from repro.ann.sharded import sharded_ivf_search, sharded_search
 
 @runtime_checkable
 class SearchBackend(Protocol):
-    """What the serving layer requires of an index."""
+    """What the serving layer requires of an index.
+
+    Mutability note: ``replace_rows`` is the protocol-level migration hook —
+    functional (returns a NEW index; the receiver's arrays are never
+    touched), which is what makes ``UpgradeHandle.rollback()`` bit-identical:
+    the pre-upgrade index object stays valid throughout a migration. Truly
+    immutable backends may omit it (hasattr-gated by callers); FlatIndex
+    overwrites corpus rows, IVFIndex overwrites packed (cell, slot) entries.
+    """
 
     backend: str
+
+    @property
+    def size(self) -> int:
+        """Number of indexed rows."""
+        ...
+
+    @property
+    def dim(self) -> int:
+        """Dimensionality of the index's native embedding space."""
+        ...
 
     def search(
         self, queries: jax.Array, k: int = 10, q_valid: int | None = None
@@ -51,7 +69,9 @@ class SearchBackend(Protocol):
         k: int = 10,
         q_valid: int | None = None,
     ) -> tuple[jax.Array, jax.Array]:
-        """Top-k for new-space queries bridged through a DriftAdapter."""
+        """Top-k for new-space queries bridged through a DriftAdapter (or a
+        composed multi-hop bridge from the SpaceRegistry; bridges without a
+        single-launch fused form are served apply-then-search)."""
         ...
 
 

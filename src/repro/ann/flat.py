@@ -129,7 +129,12 @@ class FlatIndex:
         if self.backend == "fused":
             from repro.kernels.fused_search import ops as fused_ops
 
-            fused_kind, fused = adapter.as_fused_params()
+            try:
+                fused_kind, fused = adapter.as_fused_params()
+            except NotImplementedError:
+                # multi-MLP version chains have no single-launch form:
+                # apply sequentially, then one native fused scan
+                return self.search(adapter.apply(queries), k=k, q_valid=q_valid)
             return fused_ops.fused_bridged_search(
                 fused_kind, fused, queries, self.corpus, k=k,
                 block_rows=min(self.block_rows, 2048), q_valid=q_valid,

@@ -53,6 +53,39 @@ class IVFIndex:
     def capacity(self) -> int:
         return int(self.cells.shape[1])
 
+    @property
+    def size(self) -> int:
+        return int(self.n_items)
+
+    @property
+    def dim(self) -> int:
+        return int(self.centroids.shape[1])
+
+    # Protocol-level mutation path for lazy/background re-embedding (§5.6):
+    # rows are overwritten in their packed (cell, slot) positions as items
+    # get re-encoded, so mixed-state serving works on IVF too. The row stays
+    # in the cell old-space k-means assigned it (centroids don't move — the
+    # DeDrift-style approximation); a full re-pack at cutover (build_ivf on
+    # the migrated corpus) restores new-space cell geometry.
+    def replace_rows(self, ids: jax.Array, new_rows: jax.Array) -> "IVFIndex":
+        ids_np = np.asarray(ids).reshape(-1)
+        flat = np.asarray(self.cell_ids).reshape(-1)
+        order = np.argsort(flat, kind="stable")
+        # ids beyond every packed id searchsort to len(flat): clamp so the
+        # mismatch check below reports them instead of an IndexError
+        locs = np.minimum(
+            np.searchsorted(flat, ids_np, sorter=order), flat.size - 1
+        )
+        pos = order[locs]
+        if not np.array_equal(flat[pos], ids_np):
+            missing = ids_np[flat[pos] != ids_np]
+            raise KeyError(f"row ids not in index: {missing[:5].tolist()} ...")
+        cap = self.capacity
+        new_cells = self.cells.at[pos // cap, pos % cap].set(
+            jnp.asarray(new_rows, self.cells.dtype)
+        )
+        return dataclasses.replace(self, cells=new_cells)
+
     def search(
         self,
         queries: jax.Array,
@@ -95,7 +128,14 @@ class IVFIndex:
         if self.backend == "fused":
             from repro.kernels.fused_search import ops as fused_ops
 
-            fused_kind, fused = adapter.as_fused_params()
+            try:
+                fused_kind, fused = adapter.as_fused_params()
+            except NotImplementedError:
+                # multi-MLP version chains: sequential apply, fused probe
+                return ivf_search(
+                    self, adapter.apply(queries), k=k, nprobe=nprobe,
+                    q_valid=q_valid,
+                )
             # centroid table is small: size the block to its padded rows
             br = min(1024, -(-self.n_cells // 128) * 128)
             _, probe, q_mapped = fused_ops.fused_bridged_search(

@@ -1,3 +1,3 @@
-from repro.ckpt.serialization import save_pytree, load_pytree
+from repro.ckpt.serialization import load_pytree, save_pytree, unflatten_keys
 
-__all__ = ["save_pytree", "load_pytree"]
+__all__ = ["save_pytree", "load_pytree", "unflatten_keys"]

@@ -24,6 +24,27 @@ def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
     return flat
 
 
+def unflatten_keys(flat: dict[str, np.ndarray], prefix: str = "") -> dict:
+    """Rebuild a nested dict from ``load_pytree``'s flat {"a/b/c": arr} form.
+
+    With ``prefix``, only keys under "<prefix>/" are taken (the prefix is
+    stripped) — how the registry restores one edge's params out of a
+    multi-edge checkpoint. Leaves come back as jnp arrays.
+    """
+    nested: dict = {}
+    for key, arr in flat.items():
+        if prefix:
+            if not key.startswith(prefix + "/"):
+                continue
+            key = key[len(prefix) + 1:]
+        node = nested
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(arr)
+    return nested
+
+
 def save_pytree(path: str, tree: Any, metadata: dict | None = None) -> None:
     flat = _flatten_with_paths(tree)
     payload = {

@@ -8,6 +8,7 @@ from repro.core.adapters import (
     dsm_fit_posthoc,
     dsm_init,
     l2_normalize,
+    linear_apply,
     low_rank_apply,
     low_rank_init,
     mlp_apply,
@@ -17,15 +18,26 @@ from repro.core.adapters import (
 )
 from repro.core.api import DriftAdapter
 from repro.core.multi_adapter import MultiAdapter
-from repro.core.online import OnlineAdapterManager, OnlineConfig
+from repro.core.online import OnlineAdapterManager, OnlineConfig, RingPairBuffer
+from repro.core.registry import (
+    ChainedAdapter,
+    SpaceRegistry,
+    SpaceVersion,
+    compose_adapters,
+)
 from repro.core.trainer import FitConfig, FitResult, fit_adapter
 
 __all__ = [
     "ADAPTER_KINDS",
+    "ChainedAdapter",
     "DriftAdapter",
     "MultiAdapter",
     "OnlineAdapterManager",
     "OnlineConfig",
+    "RingPairBuffer",
+    "SpaceRegistry",
+    "SpaceVersion",
+    "compose_adapters",
     "FitConfig",
     "FitResult",
     "fit_adapter",
@@ -36,6 +48,7 @@ __all__ = [
     "dsm_fit_posthoc",
     "dsm_init",
     "l2_normalize",
+    "linear_apply",
     "low_rank_apply",
     "low_rank_init",
     "mlp_apply",

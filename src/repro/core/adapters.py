@@ -22,7 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-ADAPTER_KINDS = ("op", "la", "mlp", "identity")
+ADAPTER_KINDS = ("op", "la", "mlp", "identity", "linear")
 
 
 def l2_normalize(x: jax.Array, axis: int = -1, eps: float = 1e-12) -> jax.Array:
@@ -130,6 +130,19 @@ def mlp_apply(
 
 
 # ---------------------------------------------------------------------------
+# Dense affine ("linear") — the closed form OP/LA version chains fold into
+# ---------------------------------------------------------------------------
+
+def linear_apply(params: dict, x: jax.Array) -> jax.Array:
+    """g(x) = M x + t with a dense M ∈ R^{d_old×d_new}.
+
+    Not a fitting target of its own: ``compose_adapters`` (core/registry.py)
+    materializes multi-hop OP/LA version chains into this kind, so a v1→v3
+    bridged query stays ONE matrix (and one fused kernel launch)."""
+    return x @ params["M"].T + params["t"]
+
+
+# ---------------------------------------------------------------------------
 # Diagonal Scaling Matrix
 # ---------------------------------------------------------------------------
 
@@ -178,6 +191,8 @@ def adapter_apply(
         y = procrustes_apply(core, x)
     elif kind == "la":
         y = low_rank_apply(core, x)
+    elif kind == "linear":
+        y = linear_apply(core, x)
     elif kind == "mlp":
         y = mlp_apply(
             core, x, dropout_rate=dropout_rate, dropout_key=dropout_key
@@ -202,6 +217,9 @@ def adapter_flops_per_query(kind: str, params: dict) -> int:
     if kind == "op":
         d_o, d_n = core["R"].shape
         flops = 2 * d_o * d_n
+    elif kind == "linear":
+        d_o, d_n = core["M"].shape
+        flops = 2 * d_o * d_n + d_o
     elif kind == "la":
         d_o, r = core["U"].shape
         d_n = core["V"].shape[0]

@@ -13,11 +13,10 @@ import dataclasses
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import adapters as A
 from repro.core.trainer import FitConfig, FitResult, fit_adapter
-from repro.ckpt import save_pytree, load_pytree
+from repro.ckpt import load_pytree, save_pytree, unflatten_keys
 
 
 @dataclasses.dataclass
@@ -116,16 +115,9 @@ class DriftAdapter:
     @classmethod
     def load(cls, path: str) -> "DriftAdapter":
         arrays, meta = load_pytree(path)
-        params: dict = {}
-        for key, arr in arrays.items():
-            node = params
-            parts = key.split("/")
-            for p in parts[:-1]:
-                node = node.setdefault(p, {})
-            node[parts[-1]] = jnp.asarray(arr)
         return cls(
             kind=meta["kind"],
-            params=params,
+            params=unflatten_keys(arrays),
             d_new=int(meta["d_new"]),
             d_old=int(meta["d_old"]),
         )

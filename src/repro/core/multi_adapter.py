@@ -10,6 +10,13 @@ thing stays jittable and shardable.
 All member adapters must share (kind, d_new, d_old, hyperparams) so their
 param pytrees are congruent; routing then becomes a gather over a stacked
 parameter tree, which vectorizes cleanly on TPU (no per-query control flow).
+
+In the versioned registry (core/registry.py) per-domain adapters live as
+``(src, dst, domain)`` edge slots; a MultiAdapter is a *stacked view* over
+those slots (``from_registry`` / ``SpaceRegistry.multi_adapter``), and
+``unstack`` splits a view back into the individual adapters for slot-wise
+(re-)registration — refitting one domain atomically replaces one slot
+without touching its siblings.
 """
 from __future__ import annotations
 
@@ -47,6 +54,26 @@ class MultiAdapter:
             d_new=adapters[0].d_new,
             d_old=adapters[0].d_old,
         )
+
+    @classmethod
+    def from_registry(cls, registry, src: str, dst: str) -> "MultiAdapter":
+        """Stacked view over the registry's ``(src, dst, 0..n-1)`` slots."""
+        return registry.multi_adapter(src, dst)
+
+    def unstack(self) -> list[DriftAdapter]:
+        """Split back into per-domain DriftAdapters (for edge-slot
+        registration or single-domain refits)."""
+        return [
+            DriftAdapter(
+                kind=self.kind,
+                params=jax.tree_util.tree_map(
+                    lambda leaf: leaf[i], self.stacked_params
+                ),
+                d_new=self.d_new,
+                d_old=self.d_old,
+            )
+            for i in range(self.n_domains)
+        ]
 
     def apply(self, queries: jax.Array, domain_ids: jax.Array) -> jax.Array:
         """queries: (N, d_new); domain_ids: (N,) int32 in [0, n_domains)."""

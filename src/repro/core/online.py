@@ -9,8 +9,16 @@ frozen T=0 adapter.
 ``OnlineAdapterManager`` owns the refit loop: each tick it receives the pairs
 made newly available by the background re-embedder, appends them to a rolling
 buffer, refits (warm-start from the previous params for SGD-family adapters)
-and atomically swaps the serving adapter. The simulation driver lives in
-``benchmarks/online_adaptation.py``.
+and atomically swaps the serving adapter. The pair buffer is a preallocated
+ring (:class:`RingPairBuffer`): appends are O(chunk) scatters into fixed
+storage, never an O(buffer) reallocation — the per-tick concatenate of the
+old implementation was quadratic over a long run.
+
+When constructed with a :class:`~repro.core.registry.SpaceRegistry` slot
+(``registry=..., src=..., dst=...``, optional ``domain``), every refit also
+atomically replaces that registry edge, so ``VectorStore``s resolving the
+edge pick up the new adapter on their next bridge-cache refresh. The
+simulation driver lives in ``benchmarks/online_adaptation.py``.
 """
 from __future__ import annotations
 
@@ -24,6 +32,67 @@ from repro.core.api import DriftAdapter
 from repro.core.trainer import FitConfig
 
 
+class RingPairBuffer:
+    """Fixed-capacity rolling window over ⟨b, a⟩ row pairs.
+
+    Semantically identical to "concatenate everything ever observed, keep
+    the trailing ``capacity`` rows" (property-tested against that oracle),
+    but appends scatter into preallocated storage: O(chunk) per observe
+    instead of O(buffer), and zero steady-state allocation."""
+
+    def __init__(self, capacity: int):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = capacity
+        self._b: Optional[np.ndarray] = None
+        self._a: Optional[np.ndarray] = None
+        self._head = 0          # next write position
+        self._count = 0         # rows currently held (≤ capacity)
+
+    def __len__(self) -> int:
+        return self._count
+
+    def append(self, b: np.ndarray, a: np.ndarray) -> None:
+        b = np.asarray(b, np.float32)
+        a = np.asarray(a, np.float32)
+        if b.shape[0] != a.shape[0]:
+            raise ValueError(
+                f"pair count mismatch: {b.shape[0]} vs {a.shape[0]}"
+            )
+        if self._b is None:
+            self._b = np.empty((self.capacity, b.shape[1]), np.float32)
+            self._a = np.empty((self.capacity, a.shape[1]), np.float32)
+        n = b.shape[0]
+        if n >= self.capacity:     # chunk alone overflows: keep its tail
+            self._b[:] = b[n - self.capacity:]
+            self._a[:] = a[n - self.capacity:]
+            self._head = 0
+            self._count = self.capacity
+            return
+        end = self._head + n
+        if end <= self.capacity:
+            sl = slice(self._head, end)
+            self._b[sl], self._a[sl] = b, a
+        else:
+            first = self.capacity - self._head
+            self._b[self._head:], self._a[self._head:] = b[:first], a[:first]
+            self._b[:end - self.capacity] = b[first:]
+            self._a[:end - self.capacity] = a[first:]
+        self._head = end % self.capacity
+        self._count = min(self._count + n, self.capacity)
+
+    def view(self) -> tuple[np.ndarray, np.ndarray]:
+        """Buffered pairs, oldest→newest (copies; O(count))."""
+        if self._b is None:
+            raise ValueError("empty buffer")
+        if self._count < self.capacity:
+            return self._b[: self._count].copy(), self._a[: self._count].copy()
+        order = np.concatenate(
+            [np.arange(self._head, self.capacity), np.arange(self._head)]
+        )
+        return self._b[order], self._a[order]
+
+
 @dataclasses.dataclass
 class OnlineConfig:
     kind: str = "mlp"
@@ -34,30 +103,49 @@ class OnlineConfig:
 
 
 class OnlineAdapterManager:
-    def __init__(self, d_new: int, d_old: int, config: OnlineConfig = OnlineConfig()):
+    def __init__(
+        self,
+        d_new: int,
+        d_old: int,
+        config: OnlineConfig = OnlineConfig(),
+        *,
+        registry=None,
+        src: Optional[str] = None,
+        dst: Optional[str] = None,
+        domain: Optional[int] = None,
+    ):
         self.config = config
         self.d_new, self.d_old = d_new, d_old
-        self._buf_b: Optional[np.ndarray] = None
-        self._buf_a: Optional[np.ndarray] = None
+        self._buffer = RingPairBuffer(config.buffer_size)
         self.adapter: Optional[DriftAdapter] = None
         self.refits = 0
         self._tick = 0
+        if registry is not None and (src is None or dst is None):
+            raise ValueError("registry decoration needs src and dst versions")
+        self.registry = registry
+        self.src, self.dst, self.domain = src, dst, domain
+
+    # materialized trailing-window views (oldest→newest), kept for callers
+    # of the pre-ring-buffer attribute layout
+    @property
+    def _buf_b(self) -> Optional[np.ndarray]:
+        return self._buffer.view()[0] if len(self._buffer) else None
+
+    @property
+    def _buf_a(self) -> Optional[np.ndarray]:
+        return self._buffer.view()[1] if len(self._buffer) else None
 
     def observe_pairs(self, b_new: np.ndarray, a_old: np.ndarray) -> None:
         """Append newly available ⟨f_new, f_old⟩ pairs to the rolling buffer."""
-        b_new = np.asarray(b_new, np.float32)
-        a_old = np.asarray(a_old, np.float32)
-        if self._buf_b is None:
-            self._buf_b, self._buf_a = b_new, a_old
-        else:
-            self._buf_b = np.concatenate([self._buf_b, b_new])[-self.config.buffer_size:]
-            self._buf_a = np.concatenate([self._buf_a, a_old])[-self.config.buffer_size:]
+        self._buffer.append(b_new, a_old)
 
     def tick(self) -> Optional[DriftAdapter]:
         """Advance one tick; refit + swap if scheduled. Returns the new
-        adapter when a swap happened (atomic deploy), else None."""
+        adapter when a swap happened (atomic deploy), else None. With a
+        registry slot configured, the swap also atomically replaces the
+        ``(src, dst, domain)`` edge."""
         self._tick += 1
-        if self._buf_b is None:
+        if len(self._buffer) == 0:
             return None
         if self._tick % self.config.refit_every_ticks != 0:
             return None
@@ -66,8 +154,13 @@ class OnlineAdapterManager:
             max_epochs=self.config.max_epochs_per_refit,
             seed=self.config.seed + self._tick,
         )
+        buf_b, buf_a = self._buffer.view()
         self.adapter = DriftAdapter.fit(
-            jnp.asarray(self._buf_b), jnp.asarray(self._buf_a), config=cfg
+            jnp.asarray(buf_b), jnp.asarray(buf_a), config=cfg
         )
         self.refits += 1
+        if self.registry is not None:
+            self.registry.register_edge(
+                self.src, self.dst, self.adapter, domain=self.domain
+            )
         return self.adapter

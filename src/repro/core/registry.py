@@ -1,0 +1,403 @@
+"""Versioned embedding-space registry — the version graph under `VectorStore`.
+
+Embedding-space *versions* (v1, v2, …: one per deployed encoder) are nodes;
+fitted :class:`DriftAdapter`s are directed edges ``(src, dst)``: an edge
+maps src-space vectors into dst space (for an upgrade v1→v2 the bridge edge
+runs v2→v1 — new queries into the legacy index). Heterogeneous-drift
+deployments hang several adapters off one edge via ``(src, dst, domain)``
+slots (``MultiAdapter`` is a view over those slots); online refits
+atomically replace an edge (one dict assignment — in-flight queries keep
+the adapter object they already read).
+
+Multi-hop bridges compose along a version chain. Composition **folds**:
+
+* a chain of OP/LA/linear/identity links (± DSM) collapses — via the same
+  ``fold_fused_params`` the fused kernels consume — into ONE dense affine
+  map, returned as a ``kind="linear"`` DriftAdapter. A v1→v3 bridged query
+  on the fused backend is therefore still a single kernel launch.
+* a chain containing exactly one MLP link folds its linear neighbours into
+  the MLP's input/output matrices — still one fused ``"mlp"`` launch.
+* two or more MLP links cannot fold; :class:`ChainedAdapter` applies them
+  sequentially (ℓ2 renorm only after the last link, matching the folded
+  semantics) and the serving layer falls back to apply-then-search.
+
+The whole registry persists/restores through ``repro.ckpt`` (one msgpack
+blob: version table + per-edge params), so a router fleet can be rehydrated
+with every historical bridge intact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import load_pytree, save_pytree, unflatten_keys
+from repro.core.api import DriftAdapter
+from repro.kernels.common import fold_fused_params
+
+
+@dataclasses.dataclass(frozen=True)
+class SpaceVersion:
+    """One embedding-space version: the output space of one encoder deploy."""
+
+    name: str
+    dim: int
+    description: str = ""
+
+
+class ChainedAdapter:
+    """Sequential fallback for version chains with ≥ 2 MLP links.
+
+    Applies each link in order with ℓ2 renormalization deferred to the end —
+    the same semantics the foldable chains collapse under, so swapping a
+    ChainedAdapter for its folded equivalent never changes results, only
+    launch count. Quacks like a DriftAdapter everywhere except
+    ``as_fused_params`` (no single-launch form exists)."""
+
+    kind = "chain"
+
+    def __init__(self, links: Sequence[Union[DriftAdapter, "ChainedAdapter"]]):
+        if not links:
+            raise ValueError("ChainedAdapter needs at least one link")
+        for up, down in zip(links, links[1:]):
+            if up.d_old != down.d_new:
+                raise ValueError(
+                    f"chain dimension mismatch: {up.d_old} -> {down.d_new}"
+                )
+        self.links = tuple(links)
+        self.d_new = links[0].d_new
+        self.d_old = links[-1].d_old
+
+    def apply(self, queries: jax.Array, renormalize: bool = True) -> jax.Array:
+        y = queries
+        for link in self.links[:-1]:
+            y = link.apply(y, renormalize=False)
+        return self.links[-1].apply(y, renormalize=renormalize)
+
+    def __call__(self, queries: jax.Array) -> jax.Array:
+        return self.apply(queries)
+
+    def as_fused_params(self) -> tuple:
+        raise NotImplementedError(
+            "a chain with more than one MLP link has no single-launch fused "
+            "form; serve it via apply() + native search (SearchBackend "
+            "search_bridged falls back automatically)"
+        )
+
+    @property
+    def param_count(self) -> int:
+        return sum(link.param_count for link in self.links)
+
+
+def _folded_linear(adapter: DriftAdapter) -> Optional[tuple]:
+    """(m, t, s) of an adapter's one-matmul form, or None for MLP/chain."""
+    if isinstance(adapter, ChainedAdapter):
+        return None
+    fused_kind, fused = fold_fused_params(
+        adapter.kind, adapter.params, adapter.d_new
+    )
+    if fused_kind != "linear":
+        return None
+    return fused["m"], fused["t"], fused["s"]
+
+
+def compose_adapters(
+    links: Sequence[Union[DriftAdapter, ChainedAdapter]],
+) -> Union[DriftAdapter, ChainedAdapter]:
+    """Compose a version chain (``links[0]`` applies first) into one adapter.
+
+    All-linear chains (OP/LA/linear/identity ± DSM) fold to a single
+    ``kind="linear"`` DriftAdapter; a single MLP link absorbs linear
+    neighbours into a folded ``kind="mlp"`` DriftAdapter — both stay
+    one-fused-launch bridges AND ordinary save/load-able adapters. Chains
+    with ≥ 2 MLP links return a :class:`ChainedAdapter`.
+
+    Semantics: sequential application with ℓ2 renorm only after the LAST
+    link (renorm is a per-row positive scale, so deferring it preserves
+    every intermediate direction while making the chain foldable)."""
+    flat: list[DriftAdapter] = []
+    for link in links:
+        flat.extend(link.links if isinstance(link, ChainedAdapter) else [link])
+    if not flat:
+        raise ValueError("compose_adapters needs at least one link")
+    for up, down in zip(flat, flat[1:]):
+        if up.d_old != down.d_new:
+            raise ValueError(
+                f"chain dimension mismatch: {up.d_old} -> {down.d_new}"
+            )
+    if len(flat) == 1 and isinstance(flat[0], DriftAdapter):
+        return flat[0]
+
+    # running fold: state is either a pure affine (m, t) or a folded MLP
+    lin_m: Optional[jax.Array] = None   # includes every DSM seen so far
+    lin_t: Optional[jax.Array] = None
+    mlp: Optional[dict] = None          # {"W1","b1","W2","b2","P","s"}
+    for link in flat:
+        folded = _folded_linear(link)
+        if folded is not None:
+            m, t, s = folded
+            sm = m * s[:, None]          # diag(s) @ m
+            st = t * s                   # diag(s) @ t
+            if mlp is None:
+                if lin_m is None:
+                    lin_m, lin_t = sm, st
+                else:
+                    lin_m, lin_t = sm @ lin_m, sm @ lin_t + st
+            else:
+                # post-MLP linear folds into the output side: the MLP's own
+                # DSM rides along (a = diag(s_link) m diag(s_mlp))
+                a = sm * mlp["s"][None, :]
+                mlp = {
+                    "W1": mlp["W1"], "b1": mlp["b1"],
+                    "W2": a @ mlp["W2"],
+                    "b2": a @ mlp["b2"] + st,
+                    "P": a @ mlp["P"],
+                    "s": jnp.ones((sm.shape[0],), jnp.float32),
+                }
+        else:
+            if mlp is not None:
+                return ChainedAdapter(flat)      # second MLP: no fold
+            fused_kind, fused = fold_fused_params(
+                link.kind, link.params, link.d_new
+            )
+            assert fused_kind == "mlp"
+            p = fused["p"]
+            if lin_m is None:
+                mlp = {
+                    "W1": fused["w1"], "b1": fused["b1"],
+                    "W2": fused["w2"], "b2": fused["b2"],
+                    "P": p, "s": fused["s"],
+                }
+            else:
+                # pre-MLP linear folds into the input side
+                mlp = {
+                    "W1": fused["w1"] @ lin_m,
+                    "b1": fused["b1"] + fused["w1"] @ lin_t,
+                    "W2": fused["w2"],
+                    "b2": fused["b2"] + p @ lin_t,
+                    "P": p @ lin_m,
+                    "s": fused["s"],
+                }
+                lin_m = lin_t = None
+    d_new, d_old = flat[0].d_new, flat[-1].d_old
+    if mlp is not None:
+        params = {
+            "core": {k: mlp[k] for k in ("W1", "b1", "W2", "b2", "P")},
+            "dsm": {"s": mlp["s"]},
+        }
+        return DriftAdapter(kind="mlp", params=params, d_new=d_new, d_old=d_old)
+    return DriftAdapter(
+        kind="linear",
+        params={"core": {"M": lin_m, "t": lin_t}},
+        d_new=d_new,
+        d_old=d_old,
+    )
+
+
+class SpaceRegistry:
+    """Version-graph registry: spaces as nodes, fitted adapters as edges."""
+
+    DEFAULT_DOMAIN: Optional[int] = None
+
+    def __init__(self):
+        self.versions: dict[str, SpaceVersion] = {}
+        self._edges: dict[tuple[str, str, Optional[int]], DriftAdapter] = {}
+        # bumped on every mutation — serving layers key bridge caches on it
+        self.revision = 0
+
+    # -- nodes ---------------------------------------------------------------
+    def add_version(
+        self, name: str, dim: int, description: str = ""
+    ) -> SpaceVersion:
+        """Idempotent node registration; re-adding with a different dim is
+        an error (a version's space never changes shape)."""
+        existing = self.versions.get(name)
+        if existing is not None:
+            if existing.dim != dim:
+                raise ValueError(
+                    f"version {name!r} already registered with dim "
+                    f"{existing.dim}, not {dim}"
+                )
+            return existing
+        v = SpaceVersion(name=name, dim=dim, description=description)
+        self.versions[name] = v
+        self.revision += 1
+        return v
+
+    def version(self, name: str) -> SpaceVersion:
+        return self.versions[name]
+
+    # -- edges ---------------------------------------------------------------
+    def _check_version(self, name: str) -> SpaceVersion:
+        if name not in self.versions:
+            raise KeyError(
+                f"unknown space version {name!r}; "
+                f"registered: {sorted(self.versions)}"
+            )
+        return self.versions[name]
+
+    def register_edge(
+        self,
+        src: str,
+        dst: str,
+        adapter: DriftAdapter,
+        domain: Optional[int] = None,
+    ) -> None:
+        """Install/replace the ``(src, dst, domain)`` adapter slot.
+
+        Replacement is ATOMIC (one dict assignment of an immutable adapter):
+        this is the online-refit deploy primitive — in-flight queries finish
+        on whichever adapter object they already read."""
+        sv, dv = self._check_version(src), self._check_version(dst)
+        if adapter.d_new != sv.dim or adapter.d_old != dv.dim:
+            raise ValueError(
+                f"adapter maps {adapter.d_new}->{adapter.d_old} but edge "
+                f"{src}->{dst} needs {sv.dim}->{dv.dim}"
+            )
+        self._edges[(src, dst, domain)] = adapter
+        self.revision += 1
+
+    def register_domain_adapters(
+        self, src: str, dst: str, adapters: Sequence[DriftAdapter]
+    ) -> None:
+        """Fill ``(src, dst, 0..n-1)`` slots — the MultiAdapter decoration."""
+        for i, adapter in enumerate(adapters):
+            self.register_edge(src, dst, adapter, domain=i)
+
+    def remove_edge(
+        self, src: str, dst: str, domain: Optional[int] = None
+    ) -> None:
+        del self._edges[(src, dst, domain)]
+        self.revision += 1
+
+    def edge(
+        self, src: str, dst: str, domain: Optional[int] = None
+    ) -> DriftAdapter:
+        """The exact registered adapter on a slot (KeyError if absent)."""
+        return self._edges[(src, dst, domain)]
+
+    def has_edge(
+        self, src: str, dst: str, domain: Optional[int] = None
+    ) -> bool:
+        return (src, dst, domain) in self._edges
+
+    def edges(self) -> list[tuple[str, str, Optional[int]]]:
+        return sorted(
+            self._edges, key=lambda k: (k[0], k[1], -1 if k[2] is None else k[2])
+        )
+
+    def domains(self, src: str, dst: str) -> list[int]:
+        """Domain ids decorating an edge (excludes the default slot)."""
+        return sorted(
+            d for s, t, d in self._edges if s == src and t == dst and d is not None
+        )
+
+    def multi_adapter(self, src: str, dst: str):
+        """Build a :class:`MultiAdapter` view over an edge's domain slots."""
+        from repro.core.multi_adapter import MultiAdapter
+
+        doms = self.domains(src, dst)
+        if not doms:
+            raise KeyError(f"no domain slots registered on edge {src}->{dst}")
+        if doms != list(range(len(doms))):
+            raise ValueError(
+                f"edge {src}->{dst} domain slots {doms} are not contiguous "
+                "from 0 — MultiAdapter routing indexes by position"
+            )
+        return MultiAdapter.from_adapters(
+            [self._edges[(src, dst, d)] for d in doms]
+        )
+
+    # -- multi-hop resolution ------------------------------------------------
+    def path(self, src: str, dst: str) -> list[str]:
+        """Shortest default-domain version path src→dst (BFS, deterministic)."""
+        self._check_version(src)
+        self._check_version(dst)
+        if src == dst:
+            return [src]
+        adjacency: dict[str, list[str]] = {}
+        for s, t, d in self._edges:
+            if d is None:
+                adjacency.setdefault(s, []).append(t)
+        prev: dict[str, str] = {}
+        queue = deque([src])
+        while queue:
+            node = queue.popleft()
+            for nxt in sorted(adjacency.get(node, [])):
+                if nxt in prev or nxt == src:
+                    continue
+                prev[nxt] = node
+                if nxt == dst:
+                    out = [dst]
+                    while out[-1] != src:
+                        out.append(prev[out[-1]])
+                    return out[::-1]
+                queue.append(nxt)
+        raise KeyError(f"no adapter path from {src!r} to {dst!r}")
+
+    def adapter(
+        self, src: str, dst: str, domain: Optional[int] = None
+    ) -> Union[DriftAdapter, ChainedAdapter]:
+        """Resolve a (possibly multi-hop) bridge mapping src-space queries
+        into dst space.
+
+        A directly registered slot wins; otherwise the shortest
+        default-domain chain composes (folding per ``compose_adapters``).
+        ``src == dst`` resolves to the identity."""
+        if domain is not None:
+            return self._edges[(src, dst, domain)]
+        if (src, dst, None) in self._edges:
+            return self._edges[(src, dst, None)]
+        if src == dst:
+            return DriftAdapter.identity(self._check_version(src).dim)
+        hops = self.path(src, dst)
+        return compose_adapters(
+            [self._edges[(a, b, None)] for a, b in zip(hops, hops[1:])]
+        )
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str) -> None:
+        """One msgpack blob: version table + every edge's params."""
+        edges = self.edges()
+        tree = {f"e{i}": self._edges[key].params for i, key in enumerate(edges)}
+        meta = {
+            "versions": [
+                {"name": v.name, "dim": v.dim, "description": v.description}
+                for v in self.versions.values()
+            ],
+            "edges": [
+                {
+                    "slot": f"e{i}",
+                    "src": src,
+                    "dst": dst,
+                    "domain": domain,
+                    "kind": self._edges[(src, dst, domain)].kind,
+                }
+                for i, (src, dst, domain) in enumerate(edges)
+            ],
+        }
+        save_pytree(path, tree, metadata=meta)
+
+    @classmethod
+    def load(cls, path: str) -> "SpaceRegistry":
+        arrays, meta = load_pytree(path)
+        reg = cls()
+        for v in meta["versions"]:
+            reg.add_version(v["name"], int(v["dim"]), v.get("description", ""))
+        for e in meta["edges"]:
+            src, dst = e["src"], e["dst"]
+            reg.register_edge(
+                src,
+                dst,
+                DriftAdapter(
+                    kind=e["kind"],
+                    params=unflatten_keys(arrays, prefix=e["slot"]),
+                    d_new=reg.versions[src].dim,
+                    d_old=reg.versions[dst].dim,
+                ),
+                domain=e["domain"],
+            )
+        return reg

@@ -64,6 +64,10 @@ def fold_fused_params(kind: str, params: dict, d_new: int) -> tuple[str, dict]:
     if kind == "op":
         m = core["R"]
         t = jnp.zeros((m.shape[0],), jnp.float32)
+    elif kind == "linear":
+        # composed version chains (core/registry.py) arrive pre-folded
+        m = core["M"]
+        t = core["t"]
     elif kind == "la":
         m = core["U"] @ core["V"].T
         t = core["t"]

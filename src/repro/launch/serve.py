@@ -1,23 +1,126 @@
-"""Serving launcher: stand up a QueryRouter over a synthetic corpus, run
+"""Serving launcher: stand up a VectorStore over a synthetic corpus, run
 batched decode/search traffic, and optionally simulate a live upgrade.
 
     PYTHONPATH=src python -m repro.launch.serve --items 50000 --queries 2000 \
-        [--upgrade] [--adapter mlp]
+        [--backend {jnp,pallas,fused}] [--adapter mlp] [--upgrade]
+
+    # full lifecycle (fit → shadow → canary → migrate → cutover) with a
+    # bridged-recall + migration-progress timeline written as JSON:
+    PYTHONPATH=src python -m repro.launch.serve --lifecycle \
+        --items 2000 --queries 200 --dim 128 --backend fused \
+        --out experiments/bench/BENCH_lifecycle.json
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
 import numpy as np
 
-from repro.ann import FlatIndex, flat_search_jnp, recall_at_k
+from repro.ann import FlatIndex, build_ivf, flat_search_jnp, recall_at_k
 from repro.core import DriftAdapter, FitConfig
 from repro.data import (
     CorpusConfig, MILD_TEXT, make_corpus, make_drift, make_pairs, make_queries,
 )
-from repro.serve import MicroBatcher, QueryRouter, UpgradeOrchestrator
+from repro.serve import MicroBatcher, QueryRouter, UpgradeOrchestrator, VectorStore
+
+
+def _build_world(args):
+    import dataclasses
+
+    ccfg = CorpusConfig(n_items=args.items, dim=args.dim,
+                        n_clusters=max(200, args.items // 150), seed=0)
+    corpus_old, _ = make_corpus(ccfg)
+    drift = make_drift(
+        dataclasses.replace(MILD_TEXT, d_old=args.dim, d_new=args.dim)
+    )
+    corpus_new = drift(corpus_old, 0)
+    q_new = drift(make_queries(ccfg, args.queries)[0], 1)
+    _, oracle = flat_search_jnp(corpus_new, q_new, k=10)
+    return corpus_old, corpus_new, q_new, oracle
+
+
+def _make_index(args, corpus):
+    if args.index == "ivf":
+        index = build_ivf(jax.random.PRNGKey(7), corpus,
+                          n_cells=max(8, args.items // 200))
+        import dataclasses
+
+        return dataclasses.replace(index, backend=args.backend)
+    return FlatIndex(corpus=corpus, backend=args.backend)
+
+
+def run_lifecycle(args) -> None:
+    """The full VectorStore upgrade lifecycle with an audited JSON timeline:
+    bridged recall + migration progress at every stage boundary."""
+    corpus_old, corpus_new, q_new, oracle = _build_world(args)
+    store = VectorStore(_make_index(args, corpus_old), version="v1")
+    handle = store.upgrade(
+        "v2",
+        corpus_new_provider=lambda ids: corpus_new[jax.numpy.asarray(ids)],
+    )
+    timeline: list[dict] = []
+    t_start = time.perf_counter()
+
+    def mark(stage: str, **extra) -> None:
+        res = store.search(q_new, k=10)
+        timeline.append({
+            "stage": stage,
+            "t_s": round(time.perf_counter() - t_start, 4),
+            "progress": round(handle.progress, 4),
+            "recall_at_10": round(float(recall_at_k(res.ids, oracle)), 4),
+            "path": res.adapter_kind,
+            **extra,
+        })
+        print(f"[{stage:12s}] progress={handle.progress:5.1%} "
+              f"R@10={timeline[-1]['recall_at_10']:.3f} "
+              f"path={res.adapter_kind}")
+
+    mark("misaligned")
+    pairs_b, pairs_a, _ = make_pairs(
+        jax.random.PRNGKey(0), corpus_old, corpus_new,
+        min(20_000, args.items)
+    )
+    handle.fit(pairs_b, pairs_a, config=FitConfig(kind=args.adapter))
+    report = handle.shadow_eval(q_new, corpus_new, k=10, threshold=0.5)
+    handle.start_canary(0.1)
+    mark("canary", shadow_recall=round(report.recall, 4),
+         canary_fraction=0.1)
+    swap = handle.deploy()
+    mark("bridged", swap_us=round(swap * 1e6, 1))
+    n_batches = 4
+    for _ in range(n_batches):
+        handle.migrate_batch(batch_size=-(-args.items // n_batches))
+        mark("migrating")
+    handle.cutover()
+    mark("cutover")
+
+    payload = {
+        "config": {
+            "items": args.items, "queries": args.queries, "dim": args.dim,
+            "backend": args.backend, "index": args.index,
+            "adapter": args.adapter,
+            "platform": jax.default_backend(),
+        },
+        "caveat": (
+            "CPU interpret-mode timings; re-measure on real TPU"
+            if jax.default_backend() == "cpu" else ""
+        ),
+        "timeline": timeline,
+        "lifecycle_events": handle.timeline(),
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+    final = timeline[-1]["recall_at_10"]
+    if final < 0.9:
+        raise SystemExit(
+            f"lifecycle gate: post-cutover recall {final} < 0.9"
+        )
 
 
 def main() -> None:
@@ -26,19 +129,25 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=2_000)
     ap.add_argument("--dim", type=int, default=768)
     ap.add_argument("--adapter", default="mlp", choices=["op", "la", "mlp"])
+    ap.add_argument("--backend", default="jnp",
+                    choices=["jnp", "pallas", "fused"],
+                    help="SearchBackend scan engine for the serving index")
+    ap.add_argument("--index", default="flat", choices=["flat", "ivf"])
     ap.add_argument("--upgrade", action="store_true",
-                    help="simulate the full upgrade lifecycle")
+                    help="simulate the full upgrade lifecycle (legacy "
+                         "orchestrator driver)")
+    ap.add_argument("--lifecycle", action="store_true",
+                    help="drive the VectorStore lifecycle and emit a "
+                         "bridged-recall + migration-progress timeline JSON")
+    ap.add_argument("--out", default="experiments/bench/BENCH_lifecycle.json")
     args = ap.parse_args()
 
-    ccfg = CorpusConfig(n_items=args.items, dim=args.dim,
-                        n_clusters=max(200, args.items // 150), seed=0)
-    corpus_old, _ = make_corpus(ccfg)
-    drift = make_drift(MILD_TEXT)
-    corpus_new = drift(corpus_old, 0)
-    q_new = drift(make_queries(ccfg, args.queries)[0], 1)
-    _, oracle = flat_search_jnp(corpus_new, q_new, k=10)
+    if args.lifecycle:
+        run_lifecycle(args)
+        return
 
-    router = QueryRouter(FlatIndex(corpus=corpus_old))
+    corpus_old, corpus_new, q_new, oracle = _build_world(args)
+    router = QueryRouter(_make_index(args, corpus_old))
     batcher = MicroBatcher(dim=args.dim, max_batch=256)
 
     def traffic(tag: str) -> None:
@@ -46,7 +155,9 @@ def main() -> None:
         for i in range(args.queries):
             batcher.submit(np.asarray(q_new[i]))
         out = batcher.drain(
-            lambda q, k: (lambda r: (r.scores, r.ids))(router.search(q, k)),
+            lambda q, k, q_valid=None: (lambda r: (r.scores, r.ids))(
+                router.search(q, k, q_valid=q_valid)
+            ),
             k=10,
         )
         ids = np.stack([out[i][1] for i in sorted(out)])
@@ -57,7 +168,8 @@ def main() -> None:
 
     traffic("misaligned")
     pairs_b, pairs_a, _ = make_pairs(
-        jax.random.PRNGKey(0), corpus_old, corpus_new, 20_000
+        jax.random.PRNGKey(0), corpus_old, corpus_new,
+        min(20_000, args.items)
     )
     if not args.upgrade:
         adapter = DriftAdapter.fit(

@@ -1,13 +1,37 @@
+"""Serving layer — the `VectorStore` facade plus its building blocks.
+
+`VectorStore` (serve/store.py) is the primary entry point: index + version
+registry + router behind one object, with `upgrade()` driving the full
+lifecycle (fit → shadow-eval → canary → migrate → cutover / rollback).
+`QueryRouter`, `UpgradeOrchestrator`, `MultiAdapter`-style routing and
+`DualIndexServer` remain importable from their historical homes (the
+orchestrator is now a thin shim over `UpgradeHandle`).
+"""
 from repro.serve.batching import MicroBatcher
 from repro.serve.dual_index import DualIndexServer
-from repro.serve.orchestrator import Phase, UpgradeOrchestrator
+from repro.serve.orchestrator import Phase, TransitionLog, UpgradeOrchestrator
 from repro.serve.router import QueryRouter, SearchResult
+from repro.serve.store import (
+    CanaryStats,
+    LifecycleEvent,
+    ShadowReport,
+    UpgradeHandle,
+    UpgradeStage,
+    VectorStore,
+)
 
 __all__ = [
     "MicroBatcher",
     "DualIndexServer",
     "Phase",
+    "TransitionLog",
     "UpgradeOrchestrator",
     "QueryRouter",
     "SearchResult",
+    "CanaryStats",
+    "LifecycleEvent",
+    "ShadowReport",
+    "UpgradeHandle",
+    "UpgradeStage",
+    "VectorStore",
 ]

@@ -3,6 +3,14 @@
 Both the legacy and the rebuilt index stay online; every query hits both
 and the per-query top-k merges. Costs 2× serve capacity and the merge
 latency — the operational profile Drift-Adapter is compared against.
+
+Ported onto the `VectorStore` facade as the cost-comparison baseline:
+``DualIndexServer.from_store`` materializes the baseline for a store
+mid-migration — the pre-upgrade snapshot index (full f_old) next to a
+freshly built index over the migrated f_new rows. Where Drift-Adapter
+serves that state from ONE index (bridged + mask-merged scan), the dual
+baseline keeps both resident: the memory/capacity delta is the paper's
+Table 3 cost column.
 """
 from __future__ import annotations
 
@@ -10,22 +18,62 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.ann import SearchBackend
 from repro.ann.flat import FlatIndex
 
 
 @dataclasses.dataclass
 class DualIndexServer:
-    old_index: FlatIndex          # legacy (f_old) embeddings
-    new_index: FlatIndex          # rebuilt (f_new) embeddings — may be partial
+    old_index: SearchBackend      # legacy (f_old) embeddings
+    new_index: SearchBackend      # rebuilt (f_new) embeddings — may be partial
     new_ids: jax.Array            # global ids of rows present in new_index
+
+    @classmethod
+    def from_store(cls, store) -> "DualIndexServer":
+        """Baseline twin of a store's in-flight upgrade: snapshot old index
+        + a second, fully materialized index over the migrated rows."""
+        handle = store.active_upgrade
+        if handle is None or handle._new_rows is None:
+            raise RuntimeError(
+                "store has no in-flight migration to baseline against"
+            )
+        mig = np.flatnonzero(handle.migrated_mask)
+        return cls(
+            old_index=handle._snap_index,
+            new_index=FlatIndex(
+                corpus=jnp.asarray(handle._new_rows[mig]),
+                backend=getattr(handle._snap_index, "backend", "jnp"),
+            ),
+            new_ids=jnp.asarray(mig),
+        )
+
+    @property
+    def resident_bytes(self) -> int:
+        """Combined corpus residency — the 2× capacity cost being measured."""
+        total = 0
+        for index in (self.old_index, self.new_index):
+            for arr in (
+                getattr(index, "corpus", None), getattr(index, "cells", None)
+            ):
+                if arr is not None:
+                    total += arr.size * arr.dtype.itemsize
+        return total
 
     def search(self, q_new: jax.Array, q_old_mapped: jax.Array, k: int = 10):
         """q_new searches the new index natively; q_old_mapped (adapter
-        output or raw) searches the legacy one; results merge on score."""
+        output or raw) searches the legacy one; results merge on score.
+
+        Rows already rebuilt into the new index are authoritative there —
+        their stale legacy-side hits are masked out of the merge (otherwise
+        a migrated row surfaces twice and crowds out real candidates)."""
         s_new, i_new_local = self.new_index.search(q_new, k=k)
         i_new = self.new_ids[i_new_local]
         s_old, i_old = self.old_index.search(q_old_mapped, k=k)
+        in_new = jnp.zeros((self.old_index.size,), bool).at[self.new_ids].set(True)
+        stale = (i_old < 0) | in_new[jnp.clip(i_old, 0)]
+        s_old = jnp.where(stale, jnp.finfo(jnp.float32).min, s_old)
         s = jnp.concatenate([s_new, s_old], axis=1)
         i = jnp.concatenate([i_new, i_old], axis=1)
         top_s, pos = jax.lax.top_k(s, k)

@@ -1,15 +1,18 @@
-"""Upgrade orchestrator — the operational state machine of a model upgrade.
+"""Upgrade orchestrator — the legacy state-machine view of a model upgrade.
 
     SERVING_OLD ──fit──▶ ADAPTER_TRAINED ──deploy──▶ BRIDGED
         BRIDGED ──(background re-embed batches)──▶ REEMBEDDING(p%)
         REEMBEDDING(100%) ──cutover──▶ SERVING_NEW
 
-In BRIDGED/REEMBEDDING the service runs on the legacy index with the
-adapter on the query path (the paper's near-zero-downtime bridge); the
-re-embed loop proceeds at whatever pace capacity allows; CUTOVER swaps to
-the native-new index and uninstalls the adapter. Every transition is
-recorded with wall-clock timestamps so the "estimated downtime" column of
-Table 3 is an auditable measurement here.
+Since the `VectorStore` redesign this class is a THIN shim: each transition
+delegates to the corresponding :class:`~repro.serve.store.UpgradeHandle`
+stage on a store wrapped around the caller's router (so `router.search`
+reflects lifecycle state exactly as before). New code should drive
+``VectorStore.upgrade()`` directly — it adds shadow-eval, canary, mixed-state
+migration serving, IVF support, and one-call rollback. Phase names, the
+transition log, and method signatures here are kept verbatim for existing
+drivers; every transition is still recorded with wall-clock timestamps so
+the "estimated downtime" column of Table 3 stays an auditable measurement.
 """
 from __future__ import annotations
 
@@ -19,13 +22,12 @@ import time
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.ann.flat import FlatIndex
 from repro.core.api import DriftAdapter
 from repro.core.trainer import FitConfig
 from repro.serve.router import QueryRouter
+from repro.serve.store import VectorStore
 
 
 class Phase(enum.Enum):
@@ -56,14 +58,18 @@ class UpgradeOrchestrator:
         self.router = router
         self.encode_new = encode_new
         self.corpus_new_provider = corpus_new_provider
+        self.store = VectorStore(router.index, version="old", router=router)
+        self.handle = self.store.upgrade(
+            "new", corpus_new_provider=corpus_new_provider
+        )
         self.phase = Phase.SERVING_OLD
         self.log: list[TransitionLog] = [
             TransitionLog(Phase.SERVING_OLD.value, time.time())
         ]
-        self.adapter: Optional[DriftAdapter] = None
-        self._n = router.index.size
-        self._reembedded = np.zeros(self._n, dtype=bool)
-        self._new_rows: Optional[np.ndarray] = None
+
+    @property
+    def adapter(self) -> Optional[DriftAdapter]:
+        return self.handle.adapter
 
     # -- phase transitions ---------------------------------------------------
     def fit_adapter(
@@ -71,44 +77,39 @@ class UpgradeOrchestrator:
         config: Optional[FitConfig] = None,
     ) -> DriftAdapter:
         assert self.phase == Phase.SERVING_OLD
-        self.adapter = DriftAdapter.fit(
+        adapter = self.handle.fit(
             b_new, a_old, config=config or FitConfig(kind="mlp")
         )
         self._transition(Phase.ADAPTER_TRAINED,
                          f"fit on {len(pair_ids)} pairs in "
-                         f"{self.adapter.fit_info.fit_seconds:.1f}s")
-        return self.adapter
+                         f"{adapter.fit_info.fit_seconds:.1f}s")
+        return adapter
 
     def deploy_bridge(self) -> float:
         """Install the adapter on the router. Returns the measured
         'interruption' — the atomic-swap wall time (µs-scale)."""
         assert self.phase == Phase.ADAPTER_TRAINED and self.adapter
-        t0 = time.perf_counter()
-        self.router.install_adapter(self.adapter)
-        dt = time.perf_counter() - t0
+        dt = self.handle.deploy()
         self._transition(Phase.BRIDGED, f"swap took {dt*1e6:.1f}us")
         return dt
 
     def reembed_batch(self, batch_size: int = 10_000) -> float:
-        """Advance background re-embedding; returns completed fraction."""
+        """Advance background re-embedding; returns completed fraction.
+
+        Buffered mode (``serve_mixed=False``): rows accumulate for cutover
+        and the live index stays pure-old, so the router's plain bridged
+        path keeps full recall throughout — this class's callers search via
+        the bare ``QueryRouter``, which has no mixed-state merge. The
+        mixed-state serving mode is a ``VectorStore.search`` feature."""
         assert self.phase in (Phase.BRIDGED, Phase.REEMBEDDING)
-        todo = np.flatnonzero(~self._reembedded)[:batch_size]
-        if len(todo):
-            rows = self.corpus_new_provider(todo)
-            if self._new_rows is None:
-                d_new = rows.shape[1]
-                self._new_rows = np.zeros((self._n, d_new), np.float32)
-            self._new_rows[todo] = np.asarray(rows)
-            self._reembedded[todo] = True
-        frac = float(self._reembedded.mean())
+        frac = self.handle.migrate_batch(batch_size, serve_mixed=False)
         self.phase = Phase.REEMBEDDING
         return frac
 
     def cutover(self) -> None:
         """Swap to the native-new index; uninstall the adapter."""
-        assert self._reembedded.all(), "re-embedding incomplete"
-        self.router.index = FlatIndex(corpus=jnp.asarray(self._new_rows))
-        self.router.install_adapter(None)
+        assert self.handle.progress == 1.0, "re-embedding incomplete"
+        self.handle.cutover()
         self._transition(Phase.SERVING_NEW, "native new-model serving")
 
     def _transition(self, phase: Phase, detail: str = "") -> None:
@@ -117,4 +118,4 @@ class UpgradeOrchestrator:
 
     @property
     def progress(self) -> float:
-        return float(self._reembedded.mean())
+        return self.handle.progress

@@ -89,15 +89,17 @@ class QueryRouter:
         )
 
     def replace_rows(self, ids: jax.Array, rows: jax.Array) -> None:
-        """Background re-embedder hook: overwrite rows in place (§5.6).
+        """Background re-embedder hook: overwrite rows (§5.6).
 
-        Requires an index with in-place row mutation (FlatIndex); packed
-        IVF cells would need a re-pack, which build_ivf owns.
+        Goes through the SearchBackend protocol's functional migration API —
+        FlatIndex overwrites corpus rows, IVFIndex overwrites packed
+        (cell, slot) entries — and atomically swaps the returned index in.
+        Only truly immutable backends (no ``replace_rows``) are rejected.
         """
         if not hasattr(self.index, "replace_rows"):
             raise NotImplementedError(
-                f"{type(self.index).__name__} does not support in-place row "
-                "replacement; rebuild the index (build_ivf) to fold in "
+                f"{type(self.index).__name__} is immutable: it implements no "
+                "replace_rows migration hook; rebuild the index to fold in "
                 "re-embedded rows"
             )
         self.index = self.index.replace_rows(ids, rows)

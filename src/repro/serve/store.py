@@ -1,0 +1,577 @@
+"""`VectorStore` — the unified serving facade over the version registry.
+
+One object owns the paper's whole operational story (§5): an ANN index
+(behind ``SearchBackend``), a :class:`~repro.core.registry.SpaceRegistry`
+of embedding-space versions and fitted bridges, and a ``QueryRouter`` for
+the hot path. ``store.search(q, space="v3")`` serves a query from ANY
+registered space: native when ``space`` is the serving version, otherwise
+bridged through the registry's (possibly multi-hop, fold-composed) adapter
+chain — one fused kernel launch whenever the chain folds.
+
+``store.upgrade("v2", ...)`` returns an :class:`UpgradeHandle` driving the
+full lifecycle as explicit, audited stages::
+
+    handle.fit(b_pairs, a_pairs)          # <3 MB adapter, seconds–minutes
+    handle.shadow_eval(q_new, probe_new)  # recall vs a re-embedded probe set
+    handle.start_canary(0.05)             # 5 % of traffic bridged
+    handle.deploy()                       # 100 % bridged (µs atomic swap)
+    while handle.progress < 1:            # lazy background re-embedding;
+        handle.migrate_batch(50_000)      #   migrated rows served natively,
+    handle.cutover()                      #   the remainder bridged
+    # …or, at ANY stage before cutover: handle.rollback()  — bit-identical
+    # pre-upgrade serving (indexes are functional; the snapshot never mutated)
+
+During migration the index is a mixed-state store (cf. DeDrift): migrated
+rows hold f_new vectors, the rest f_old. A new-space query is then served by
+TWO scans masked against the migration bitmap — the bridged scan g(q) keeps
+only un-migrated candidates, the native scan q keeps only migrated ones —
+merged on score. On IVF the native side probes with g(q) (cells still live
+in old-space k-means geometry) but rescores with raw q, which the two-launch
+rescore path supports directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ann import SearchBackend
+from repro.ann.ivf import IVFIndex, build_ivf, ivf_rescore
+from repro.core.api import DriftAdapter
+from repro.core.registry import ChainedAdapter, SpaceRegistry
+from repro.core.trainer import FitConfig
+from repro.serve.router import QueryRouter, SearchResult
+
+Bridge = Union[DriftAdapter, ChainedAdapter]
+
+
+class UpgradeStage(enum.Enum):
+    CREATED = "created"
+    FITTED = "fitted"
+    SHADOWED = "shadowed"
+    CANARY = "canary"
+    BRIDGED = "bridged"
+    MIGRATING = "migrating"
+    COMPLETE = "complete"
+    ROLLED_BACK = "rolled_back"
+
+
+@dataclasses.dataclass
+class LifecycleEvent:
+    stage: str
+    t: float
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class ShadowReport:
+    """Recall of the bridged path against a re-embedded probe-set oracle."""
+
+    recall: float
+    k: int
+    n_queries: int
+    threshold: float
+    passed: bool
+
+
+@dataclasses.dataclass
+class CanaryStats:
+    fraction: float
+    canary_queries: int = 0
+    control_queries: int = 0
+
+
+class UpgradeHandle:
+    """State machine of one embedding-space upgrade on a VectorStore.
+
+    Stage transitions are method calls; every one is timestamped in
+    ``self.events`` (the auditable "estimated downtime" measurement of the
+    paper's Table 3 — the only serving interruption in the whole lifecycle
+    is the atomic adapter swap inside :meth:`start_canary`/:meth:`deploy`).
+
+    Rollback is one call at any pre-discard point: indexes mutate
+    functionally (``replace_rows`` returns new objects), so the snapshot
+    taken at creation is bit-identical pre-upgrade serving.
+    """
+
+    def __init__(
+        self,
+        store: "VectorStore",
+        to_version: str,
+        dim: Optional[int] = None,
+        corpus_new_provider: Optional[Callable] = None,
+        fit_config: Optional[FitConfig] = None,
+    ):
+        self.store = store
+        self.from_version = store.serving_version
+        self.to_version = to_version
+        self.corpus_new_provider = corpus_new_provider
+        self.fit_config = fit_config
+        store.registry.add_version(
+            to_version, int(dim if dim is not None else store.index.dim)
+        )
+        # rollback snapshot: object refs suffice — indexes never mutate
+        self._snap_index = store.index
+        self._snap_adapter = store.router.adapter
+        self._snap_version = store.serving_version
+        n = store.index.size
+        self._migrated = np.zeros(n, dtype=bool)
+        self._new_rows: Optional[np.ndarray] = None
+        # False while migration only buffers rows (legacy orchestrator
+        # semantics: the live index stays pure-old until cutover)
+        self._index_mixed = False
+        self.adapter: Optional[DriftAdapter] = None
+        self.shadow_report: Optional[ShadowReport] = None
+        self.canary: Optional[CanaryStats] = None
+        self._canary_ticks = 0
+        self.stage = UpgradeStage.CREATED
+        self.events: list[LifecycleEvent] = [
+            LifecycleEvent(self.stage.value, time.time(),
+                           f"{self.from_version} -> {to_version}")
+        ]
+
+    # -- helpers -------------------------------------------------------------
+    def _transition(self, stage: UpgradeStage, detail: str = "") -> None:
+        self.stage = stage
+        self.events.append(LifecycleEvent(stage.value, time.time(), detail))
+
+    def _require(self, *stages: UpgradeStage) -> None:
+        if self.stage not in stages:
+            raise RuntimeError(
+                f"invalid transition from stage {self.stage.value!r} "
+                f"(expected one of {[s.value for s in stages]})"
+            )
+
+    @property
+    def bridge_live(self) -> bool:
+        return self.stage in (
+            UpgradeStage.CANARY, UpgradeStage.BRIDGED, UpgradeStage.MIGRATING
+        )
+
+    @property
+    def progress(self) -> float:
+        return float(self._migrated.mean())
+
+    @property
+    def migrated_mask(self) -> np.ndarray:
+        return self._migrated
+
+    # -- stage 1: fit --------------------------------------------------------
+    def fit(
+        self,
+        b_pairs: jax.Array,
+        a_pairs: jax.Array,
+        config: Optional[FitConfig] = None,
+    ) -> DriftAdapter:
+        """Fit the bridge adapter on ⟨f_new, f_old⟩ pairs and register it as
+        the registry edge ``to_version -> from_version``."""
+        self._require(UpgradeStage.CREATED)
+        cfg = config or self.fit_config or FitConfig(kind="mlp")
+        self.adapter = DriftAdapter.fit(b_pairs, a_pairs, config=cfg)
+        self.store.registry.register_edge(
+            self.to_version, self.from_version, self.adapter
+        )
+        info = self.adapter.fit_info
+        self._transition(
+            UpgradeStage.FITTED,
+            f"kind={self.adapter.kind} pairs={int(b_pairs.shape[0])} "
+            f"fit={info.fit_seconds:.1f}s "
+            f"bytes={self.adapter.param_bytes}",
+        )
+        return self.adapter
+
+    # -- stage 2: shadow eval ------------------------------------------------
+    def shadow_eval(
+        self,
+        probe_queries: jax.Array,
+        probe_corpus_new: jax.Array,
+        probe_ids: Optional[np.ndarray] = None,
+        k: int = 10,
+        threshold: float = 0.8,
+    ) -> ShadowReport:
+        """Offline recall gate before any traffic shifts.
+
+        ``probe_corpus_new`` is a re-embedded (new-space) probe set —
+        row i is the f_new embedding of global row ``probe_ids[i]``
+        (``probe_ids=None`` ⇒ rows 0..P-1). The oracle is exact new-space
+        search over the probe set; the candidate is the bridged path on the
+        LIVE index, scored by recall@k against the oracle's probe-set ids.
+        Passing is advisory: canary/deploy stay available either way, the
+        report is recorded for the audit trail."""
+        self._require(UpgradeStage.FITTED, UpgradeStage.SHADOWED)
+        from repro.ann.flat import flat_search_jnp
+        from repro.ann.metrics import recall_at_k
+
+        _, oracle_local = flat_search_jnp(
+            jnp.asarray(probe_corpus_new), probe_queries, k=k
+        )
+        if probe_ids is not None:
+            oracle = jnp.asarray(probe_ids)[oracle_local]
+        else:
+            oracle = oracle_local
+        _, got = self.store.index.search_bridged(
+            self.adapter, probe_queries, k=k, **self.store._index_kwargs()
+        )
+        recall = float(recall_at_k(got, oracle))
+        self.shadow_report = ShadowReport(
+            recall=recall,
+            k=k,
+            n_queries=int(probe_queries.shape[0]),
+            threshold=threshold,
+            passed=recall >= threshold,
+        )
+        self._transition(
+            UpgradeStage.SHADOWED,
+            f"recall@{k}={recall:.3f} "
+            f"{'PASS' if recall >= threshold else 'FAIL'}",
+        )
+        return self.shadow_report
+
+    # -- stage 3: canary / full bridge --------------------------------------
+    def start_canary(self, fraction: float = 0.05) -> float:
+        """Install the bridge and route ``fraction`` of traffic through it.
+
+        Returns the measured swap wall time — the lifecycle's only serving
+        interruption (µs scale). The canary *assignment* lives at the
+        encoding front-end: :meth:`canary_assign` deterministically picks
+        which requests get encoded with f_new (and thereby served bridged);
+        per-arm counts accrue in ``self.canary``."""
+        self._require(
+            UpgradeStage.FITTED, UpgradeStage.SHADOWED, UpgradeStage.CANARY
+        )
+        if not 0.0 < fraction <= 1.0:
+            raise ValueError(f"canary fraction must be in (0, 1], got {fraction}")
+        t0 = time.perf_counter()
+        self.store.router.install_adapter(self.adapter)
+        dt = time.perf_counter() - t0
+        self.canary = CanaryStats(fraction=fraction)
+        self._transition(
+            UpgradeStage.CANARY,
+            f"fraction={fraction:g} swap={dt*1e6:.1f}us",
+        )
+        return dt
+
+    def canary_assign(self) -> bool:
+        """Deterministic traffic split: True ⇒ encode this request with
+        f_new (it will be served bridged)."""
+        self._require(UpgradeStage.CANARY)
+        f = self.canary.fraction
+        self._canary_ticks += 1
+        return int(self._canary_ticks * f) > int((self._canary_ticks - 1) * f)
+
+    def deploy(self) -> float:
+        """Promote to 100 % bridged traffic (or skip canary entirely)."""
+        self._require(
+            UpgradeStage.FITTED, UpgradeStage.SHADOWED, UpgradeStage.CANARY
+        )
+        t0 = time.perf_counter()
+        if self.store.router.adapter is not self.adapter:
+            self.store.router.install_adapter(self.adapter)
+        dt = time.perf_counter() - t0
+        self._transition(UpgradeStage.BRIDGED, f"swap={dt*1e6:.1f}us")
+        return dt
+
+    # -- stage 4: progressive migration --------------------------------------
+    def migrate_batch(
+        self, batch_size: int = 10_000, serve_mixed: bool = True
+    ) -> float:
+        """Advance background re-embedding by ≤ ``batch_size`` rows.
+
+        Fetches f_new rows from ``corpus_new_provider`` and (with
+        ``serve_mixed``, the default) overwrites them in the live index
+        through the protocol-level ``replace_rows`` (flat AND IVF), flipping
+        their bits in the migration mask: from the next query on, those rows
+        are served natively, the remainder bridged. With
+        ``serve_mixed=False`` rows only accumulate in the cutover buffer and
+        the live index stays pure-old — every query serves fully bridged
+        until cutover (the legacy orchestrator's semantics, for drivers that
+        search through a bare ``QueryRouter`` and so never see the
+        mixed-state merge). Returns the migrated fraction."""
+        self._require(
+            UpgradeStage.BRIDGED, UpgradeStage.CANARY, UpgradeStage.MIGRATING
+        )
+        if self.corpus_new_provider is None:
+            raise RuntimeError("no corpus_new_provider configured")
+        if self._index_mixed and not serve_mixed:
+            raise RuntimeError(
+                "migration already started with serve_mixed=True; the live "
+                "index holds f_new rows and cannot revert to buffered mode"
+            )
+        todo = np.flatnonzero(~self._migrated)[:batch_size]
+        if len(todo):
+            rows = np.asarray(self.corpus_new_provider(todo), np.float32)
+            if self._new_rows is None:
+                self._new_rows = np.zeros(
+                    (self._migrated.size, rows.shape[1]), np.float32
+                )
+            self._new_rows[todo] = rows
+            if serve_mixed:
+                self.store.router.replace_rows(
+                    jnp.asarray(todo), jnp.asarray(rows)
+                )
+                self._index_mixed = True
+            self._migrated[todo] = True
+        if self.stage != UpgradeStage.MIGRATING:
+            self._transition(UpgradeStage.MIGRATING)
+        return self.progress
+
+    # -- stage 5: cutover / rollback -----------------------------------------
+    def cutover(self) -> None:
+        """Swap to native new-space serving; uninstall the bridge.
+
+        The new index is rebuilt from the accumulated f_new rows with the
+        old index's backend preserved; IVF re-packs (build_ivf) so cell
+        geometry moves to the new space (during migration rows sat in their
+        old-space cells)."""
+        self._require(UpgradeStage.MIGRATING)
+        if not self._migrated.all():
+            raise RuntimeError(
+                f"re-embedding incomplete ({self.progress:.1%}); "
+                "finish migrate_batch loops before cutover"
+            )
+        old = self.store.index
+        corpus_new = jnp.asarray(self._new_rows)
+        if isinstance(old, IVFIndex):
+            new_index: SearchBackend = build_ivf(
+                jax.random.PRNGKey(0), corpus_new, n_cells=old.n_cells
+            )
+            new_index = dataclasses.replace(new_index, backend=old.backend)
+        else:
+            new_index = dataclasses.replace(old, corpus=corpus_new)
+        self.store.router.index = new_index
+        self.store.router.install_adapter(None)
+        self.store.serving_version = self.to_version
+        self.store._active = None
+        self._transition(UpgradeStage.COMPLETE, "native new-space serving")
+
+    def rollback(self) -> None:
+        """One call back to bit-identical pre-upgrade serving.
+
+        Valid at any stage (including post-cutover, while the handle is
+        retained): restores the snapshot index OBJECT — never mutated, since
+        migration goes through functional ``replace_rows`` — plus the
+        pre-upgrade adapter slot and serving version. The fitted edge stays
+        in the registry (it is a fitted artifact, not serving state). A
+        handle that is no longer the store's active upgrade (a NEWER upgrade
+        opened after this one cut over or rolled back) refuses, instead of
+        silently clobbering the in-flight lifecycle."""
+        active = self.store._active
+        if active is not None and active is not self:
+            raise RuntimeError(
+                f"stale handle: upgrade to {active.to_version!r} is now "
+                "active; roll that one back instead"
+            )
+        self.store.router.index = self._snap_index
+        self.store.router.install_adapter(self._snap_adapter)
+        self.store.serving_version = self._snap_version
+        self.store._active = None
+        self._transition(UpgradeStage.ROLLED_BACK, "pre-upgrade snapshot restored")
+
+    def timeline(self) -> list[dict]:
+        """events as plain dicts (the lifecycle bench JSON artifact)."""
+        return [dataclasses.asdict(e) for e in self.events]
+
+
+class VectorStore:
+    """Facade: one index + one registry + one router, versioned end to end."""
+
+    def __init__(
+        self,
+        index: SearchBackend,
+        version: str = "v1",
+        registry: Optional[SpaceRegistry] = None,
+        router: Optional[QueryRouter] = None,
+        nprobe: int = 8,
+    ):
+        self.registry = registry or SpaceRegistry()
+        self.registry.add_version(version, int(index.dim))
+        self.serving_version = version
+        self.router = router or QueryRouter(index)
+        if router is not None and router.index is not index:
+            raise ValueError("router and index arguments disagree")
+        self.nprobe = nprobe
+        self._active: Optional[UpgradeHandle] = None
+        # (space -> (registry revision, composed bridge)) resolution cache
+        self._bridges: dict[str, tuple[int, Bridge]] = {}
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def index(self) -> SearchBackend:
+        return self.router.index
+
+    @property
+    def active_upgrade(self) -> Optional[UpgradeHandle]:
+        return self._active
+
+    def _index_kwargs(self) -> dict:
+        """Per-index search knobs: the store's nprobe reaches EVERY IVF
+        probe (native, bridged, and both sides of the mixed merge)."""
+        if isinstance(self.index, IVFIndex):
+            return {"nprobe": min(self.nprobe, self.index.n_cells)}
+        return {}
+
+    def bridge(self, space: str) -> Bridge:
+        """Resolve (and cache) the bridge mapping ``space`` queries into the
+        serving space — composing/folding multi-hop chains via the registry.
+        The cache keys on the registry revision, so online edge refits are
+        picked up on the next query."""
+        cached = self._bridges.get(space)
+        if cached is not None and cached[0] == self.registry.revision:
+            return cached[1]
+        adapter = self.registry.adapter(space, self.serving_version)
+        if getattr(self.index, "backend", "") == "fused" and not isinstance(
+            adapter, ChainedAdapter
+        ):
+            adapter.as_fused_params()     # pre-fold off the query path
+        self._bridges[space] = (self.registry.revision, adapter)
+        return adapter
+
+    # -- serving -------------------------------------------------------------
+    def search(
+        self,
+        queries: jax.Array,
+        k: int = 10,
+        space: Optional[str] = None,
+        q_valid: int | None = None,
+    ) -> SearchResult:
+        """Serve top-k for queries embedded in ``space``.
+
+        ``space=None`` follows the live upgrade (new-space once the bridge
+        is deployed, as with a bare QueryRouter) or the serving version.
+        Explicit spaces route through the registry: the serving space is
+        native, anything else bridges through the composed chain. During
+        migration, new-space queries take the mixed-state merged scan."""
+        h = self._active
+        if space is None:
+            space = (
+                h.to_version if (h is not None and h.bridge_live)
+                else self.serving_version
+            )
+        if h is not None and h.stage == UpgradeStage.CANARY and h.canary:
+            # pad rows (q_valid) are not served queries
+            served = (
+                queries.shape[0] if q_valid is None
+                else min(int(q_valid), queries.shape[0])
+            )
+            if space == h.to_version:
+                h.canary.canary_queries += served
+            else:
+                h.canary.control_queries += served
+
+        t0 = time.perf_counter()
+        if h is not None and h.bridge_live and space == h.to_version:
+            scores, ids, kind = self._upgrade_path(h, queries, k, q_valid)
+        elif space == self.serving_version:
+            # native — bypasses any installed bridge adapter (canary control
+            # arm: old-encoder traffic keeps old-native serving)
+            scores, ids = self.index.search(
+                queries, k=k, q_valid=q_valid, **self._index_kwargs()
+            )
+            kind = "none"
+        else:
+            bridge = self.bridge(space)
+            scores, ids = self.index.search_bridged(
+                bridge, queries, k=k, q_valid=q_valid, **self._index_kwargs()
+            )
+            kind = bridge.kind
+        return SearchResult(
+            scores=scores,
+            ids=ids,
+            adapter_kind=kind,
+            latency_s=time.perf_counter() - t0,
+        )
+
+    def _upgrade_path(
+        self, h: UpgradeHandle, queries: jax.Array, k: int, q_valid
+    ) -> tuple[jax.Array, jax.Array, str]:
+        """New-space traffic while an upgrade is live: pure bridge before
+        migration starts (or while it only buffers, serve_mixed=False),
+        mixed-state merge during, native-rescore at 100 %."""
+        progress = h.progress if h._index_mixed else 0.0
+        if progress == 0.0:
+            s, i = self.index.search_bridged(
+                h.adapter, queries, k=k, q_valid=q_valid,
+                **self._index_kwargs(),
+            )
+            return s, i, h.adapter.kind
+        if progress == 1.0:
+            s, i = self._native_scan_mixed(h, queries, k, q_valid)
+            return s, i, "native-mixed"
+        s, i = self._mixed_search(h, queries, k, q_valid)
+        return s, i, f"mixed:{h.adapter.kind}"
+
+    def _native_scan_mixed(
+        self, h: UpgradeHandle, queries: jax.Array, k: int, q_valid
+    ) -> tuple[jax.Array, jax.Array]:
+        """Raw-q scoring against migrated (f_new) rows.
+
+        Flat: a plain native scan. IVF: cells still sit in old-space k-means
+        geometry until the cutover re-pack, so the probe runs on the bridged
+        query g(q) while the rescore scores raw q — the externally-probed
+        rescore path supports exactly this split."""
+        index = self.index
+        if isinstance(index, IVFIndex):
+            q_b = h.adapter.apply(queries)
+            nprobe = min(self.nprobe, index.n_cells)
+            _, probe = jax.lax.top_k(q_b @ index.centroids.T, nprobe)
+            return ivf_rescore(index, queries, probe, k=k, q_valid=q_valid)
+        return index.search(queries, k=k, q_valid=q_valid)
+
+    def _mixed_search(
+        self, h: UpgradeHandle, queries: jax.Array, k: int, q_valid
+    ) -> tuple[jax.Array, jax.Array]:
+        """Mixed-state merge: bridged scan masked to un-migrated rows +
+        native scan masked to migrated rows, top-k of the union.
+
+        Each side over-fetches 2k candidates so its top list survives the
+        masking (a side's top-k can contain rows owned by the other side;
+        beyond-2k contamination is the same tail-risk class as IVF's nprobe
+        approximation and is measured by the lifecycle recall gates)."""
+        kk = min(2 * k, self.index.size)
+        neg = jnp.finfo(jnp.float32).min
+        mig = jnp.asarray(h.migrated_mask)
+        s_b, i_b = self.index.search_bridged(
+            h.adapter, queries, k=kk, q_valid=q_valid, **self._index_kwargs()
+        )
+        s_n, i_n = self._native_scan_mixed(h, queries, kk, q_valid)
+        own_b = (i_b >= 0) & ~mig[jnp.clip(i_b, 0)]
+        own_n = (i_n >= 0) & mig[jnp.clip(i_n, 0)]
+        s = jnp.concatenate(
+            [jnp.where(own_b, s_b, neg), jnp.where(own_n, s_n, neg)], axis=1
+        )
+        i = jnp.concatenate([i_b, i_n], axis=1)
+        top_s, pos = jax.lax.top_k(s, k)
+        top_i = jnp.take_along_axis(i, pos, axis=1)
+        return top_s, jnp.where(top_s > neg, top_i, -1)
+
+    # -- lifecycle entry point ----------------------------------------------
+    def upgrade(
+        self,
+        to_version: str,
+        dim: Optional[int] = None,
+        corpus_new_provider: Optional[Callable] = None,
+        fit_config: Optional[FitConfig] = None,
+    ) -> UpgradeHandle:
+        """Open an upgrade lifecycle to ``to_version`` (one at a time)."""
+        if self._active is not None:
+            raise RuntimeError(
+                f"upgrade to {self._active.to_version!r} already active "
+                f"(stage {self._active.stage.value}); cut over or roll back "
+                "first"
+            )
+        if to_version == self.serving_version:
+            raise ValueError(f"already serving {to_version!r}")
+        self._active = UpgradeHandle(
+            self, to_version, dim=dim,
+            corpus_new_provider=corpus_new_provider, fit_config=fit_config,
+        )
+        return self._active
+
+    # -- persistence ---------------------------------------------------------
+    def save_registry(self, path: str) -> None:
+        self.registry.save(path)

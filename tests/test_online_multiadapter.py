@@ -13,6 +13,9 @@ from repro.core import (
     OnlineConfig,
 )
 
+# CI shards the fast tier on this marker (see ci.yml)
+pytestmark = pytest.mark.serving
+
 
 def _rot_pairs(seed, n, d):
     key = jax.random.PRNGKey(seed)
@@ -48,6 +51,72 @@ class TestOnlineManager:
             b, a = _rot_pairs(s, 60, 8)
             mgr.observe_pairs(np.asarray(b), np.asarray(a))
         assert mgr._buf_b.shape[0] == 100  # capped, newest kept
+
+
+def _naive_window(chunks, capacity):
+    """The O(n²) oracle the ring buffer replaced: concatenate everything,
+    keep the trailing window."""
+    return np.concatenate(chunks)[-capacity:]
+
+
+class TestRingPairBuffer:
+    def _check_matches_oracle(self, capacity, chunk_sizes, d=3):
+        from repro.core import RingPairBuffer
+
+        rng = np.random.default_rng(capacity * 1000 + len(chunk_sizes))
+        buf = RingPairBuffer(capacity)
+        chunks_b, chunks_a = [], []
+        for n in chunk_sizes:
+            b = rng.standard_normal((n, d)).astype(np.float32)
+            a = rng.standard_normal((n, d)).astype(np.float32)
+            chunks_b.append(b)
+            chunks_a.append(a)
+            buf.append(b, a)
+            got_b, got_a = buf.view()
+            np.testing.assert_array_equal(
+                got_b, _naive_window(chunks_b, capacity)
+            )
+            np.testing.assert_array_equal(
+                got_a, _naive_window(chunks_a, capacity)
+            )
+            assert len(buf) == min(sum(chunk_sizes[: len(chunks_b)]), capacity)
+
+    def test_matches_naive_trailing_window(self):
+        # wrap-around, exact-fill, overflow-in-one-chunk, tiny capacity
+        self._check_matches_oracle(7, [3, 3, 3, 3])
+        self._check_matches_oracle(10, [10, 5])
+        self._check_matches_oracle(5, [12])          # chunk > capacity
+        self._check_matches_oracle(1, [1, 1, 3])
+        self._check_matches_oracle(64, [1] * 130)    # many small appends
+
+    def test_property_matches_naive_trailing_window(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=50, deadline=None)
+        @given(
+            capacity=st.integers(1, 40),
+            chunk_sizes=st.lists(st.integers(1, 60), min_size=1, max_size=12),
+        )
+        def run(capacity, chunk_sizes):
+            self._check_matches_oracle(capacity, chunk_sizes)
+
+        run()
+
+    def test_append_validates_pair_counts(self):
+        from repro.core import RingPairBuffer
+
+        buf = RingPairBuffer(8)
+        with pytest.raises(ValueError):
+            buf.append(np.zeros((3, 2), np.float32), np.zeros((2, 2), np.float32))
+        with pytest.raises(ValueError):
+            RingPairBuffer(0)
+
+    def test_view_empty_raises(self):
+        from repro.core import RingPairBuffer
+
+        with pytest.raises(ValueError):
+            RingPairBuffer(4).view()
 
 
 class TestMultiAdapter:

@@ -1,0 +1,115 @@
+"""Adapter persistence round-trip: save → load → as_fused_params must give
+BIT-identical fused search results vs the pre-save adapter, for every
+adapter kind, with and without DSM (the deploy story ships serialized
+adapters to every router — serialization must not perturb serving)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ann import FlatIndex
+from repro.core import DriftAdapter, FitConfig, compose_adapters
+
+# CI shards the fast tier on this marker (see ci.yml)
+pytestmark = pytest.mark.serving
+
+D = 32
+
+
+def _unit(x):
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+@pytest.fixture(scope="module")
+def search_world():
+    key = jax.random.PRNGKey(0)
+    corpus = _unit(jax.random.normal(key, (400, D)))
+    q = _unit(jax.random.normal(jax.random.fold_in(key, 1), (16, D)))
+    b = _unit(jax.random.normal(jax.random.fold_in(key, 2), (600, D)))
+    r = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 3), (D, D)))[0]
+    return corpus, q, b, b @ r.T
+
+
+@pytest.mark.parametrize(
+    "kind", ["op", "la", pytest.param("mlp", marks=pytest.mark.slow)]
+)
+@pytest.mark.parametrize("use_dsm", [False, True])
+def test_save_load_fused_bit_identical(search_world, tmp_path, kind, use_dsm):
+    corpus, q, b, a = search_world
+    cfg = FitConfig(kind=kind, use_dsm=use_dsm, max_epochs=3)
+    adapter = DriftAdapter.fit(b, a, config=cfg)
+    path = str(tmp_path / f"{kind}_{use_dsm}.msgpack")
+    adapter.save(path)
+    loaded = DriftAdapter.load(path)
+    assert (loaded.kind, loaded.d_new, loaded.d_old) == (kind, D, D)
+    assert ("dsm" in loaded.params) == use_dsm
+
+    k0, f0 = adapter.as_fused_params()
+    k1, f1 = loaded.as_fused_params()
+    assert k0 == k1
+    for name in f0:
+        np.testing.assert_array_equal(np.asarray(f0[name]), np.asarray(f1[name]))
+
+    for backend in ("jnp", "fused"):
+        idx = FlatIndex(corpus=corpus, backend=backend)
+        s0, i0 = idx.search_bridged(adapter, q, k=10)
+        s1, i1 = idx.search_bridged(loaded, q, k=10)
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_composed_linear_adapter_round_trips(search_world, tmp_path):
+    """A folded version-chain adapter (kind='linear') is an ordinary
+    save/load-able artifact like any fitted adapter."""
+    corpus, q, b, a = search_world
+    op = DriftAdapter.fit(b, a, config=FitConfig(kind="op", use_dsm=False))
+    la = DriftAdapter.fit(
+        b, a, config=FitConfig(kind="la", use_dsm=True, max_epochs=2)
+    )
+    comp = compose_adapters([op, la])
+    assert comp.kind == "linear"
+    path = str(tmp_path / "composed.msgpack")
+    comp.save(path)
+    loaded = DriftAdapter.load(path)
+    idx = FlatIndex(corpus=corpus, backend="fused")
+    s0, i0 = idx.search_bridged(comp, q, k=10)
+    s1, i1 = idx.search_bridged(loaded, q, k=10)
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_identity_adapter_round_trips(search_world, tmp_path):
+    corpus, q, _, _ = search_world
+    ident = DriftAdapter.identity(D)
+    path = str(tmp_path / "identity.msgpack")
+    ident.save(path)
+    loaded = DriftAdapter.load(path)
+    idx = FlatIndex(corpus=corpus)
+    s0, i0 = idx.search_bridged(ident, q, k=5)
+    s1, i1 = idx.search_bridged(loaded, q, k=5)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+@pytest.mark.slow
+def test_rectangular_mlp_round_trips(tmp_path):
+    """d_new != d_old exercises the explicit residual projection P."""
+    key = jax.random.PRNGKey(4)
+    d_new, d_old = 48, 32
+    b = _unit(jax.random.normal(key, (500, d_new)))
+    proj = jax.random.normal(jax.random.fold_in(key, 1), (d_new, d_old))
+    a = _unit(b @ proj)
+    adapter = DriftAdapter.fit(
+        b, a, config=FitConfig(kind="mlp", max_epochs=3)
+    )
+    corpus = _unit(jax.random.normal(jax.random.fold_in(key, 2), (300, d_old)))
+    q = _unit(jax.random.normal(jax.random.fold_in(key, 3), (8, d_new)))
+    path = str(tmp_path / "rect.msgpack")
+    adapter.save(path)
+    loaded = DriftAdapter.load(path)
+    for backend in ("jnp", "fused"):
+        idx = FlatIndex(corpus=corpus, backend=backend)
+        s0, i0 = idx.search_bridged(adapter, q, k=5)
+        s1, i1 = idx.search_bridged(loaded, q, k=5)
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))

@@ -1,0 +1,291 @@
+"""SpaceRegistry unit tests: version graph, edge slots, multi-hop adapter
+composition (fold-to-one-matrix parity incl. the fused single-launch
+criterion), online-refit edge replacement, and registry persistence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ann import FlatIndex
+from repro.core import (
+    ChainedAdapter,
+    DriftAdapter,
+    FitConfig,
+    MultiAdapter,
+    OnlineAdapterManager,
+    OnlineConfig,
+    SpaceRegistry,
+    compose_adapters,
+)
+
+# CI shards the fast tier on this marker (see ci.yml)
+pytestmark = pytest.mark.serving
+
+D = 32
+
+
+def _unit(x):
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def _rot_adapter(seed, d=D, kind="op", use_dsm=False, max_epochs=None):
+    key = jax.random.PRNGKey(seed)
+    b = _unit(jax.random.normal(key, (800, d)))
+    r = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1), (d, d)))[0]
+    cfg = FitConfig(kind=kind, use_dsm=use_dsm)
+    if max_epochs is not None:
+        cfg = dataclasses.replace(cfg, max_epochs=max_epochs)
+    return DriftAdapter.fit(b, b @ r.T, config=cfg)
+
+
+@pytest.fixture(scope="module")
+def chain_world():
+    ad32 = _rot_adapter(0)               # v3 -> v2
+    ad21 = _rot_adapter(1)               # v2 -> v1
+    reg = SpaceRegistry()
+    for v in ("v1", "v2", "v3"):
+        reg.add_version(v, D)
+    reg.register_edge("v3", "v2", ad32)
+    reg.register_edge("v2", "v1", ad21)
+    q = _unit(jax.random.normal(jax.random.PRNGKey(9), (24, D)))
+    corpus = _unit(jax.random.normal(jax.random.PRNGKey(8), (600, D)))
+    return reg, ad32, ad21, q, corpus
+
+
+class TestGraph:
+    def test_add_version_idempotent_dim_checked(self):
+        reg = SpaceRegistry()
+        reg.add_version("v1", 16)
+        reg.add_version("v1", 16)        # idempotent
+        with pytest.raises(ValueError):
+            reg.add_version("v1", 32)
+
+    def test_edge_dim_validation(self):
+        reg = SpaceRegistry()
+        reg.add_version("v1", 16)
+        reg.add_version("v2", 16)
+        bad = DriftAdapter.identity(8)
+        with pytest.raises(ValueError):
+            reg.register_edge("v2", "v1", bad)
+
+    def test_unknown_version_rejected(self):
+        reg = SpaceRegistry()
+        reg.add_version("v1", 8)
+        with pytest.raises(KeyError):
+            reg.register_edge("v1", "nope", DriftAdapter.identity(8))
+
+    def test_path_and_missing_path(self, chain_world):
+        reg = chain_world[0]
+        assert reg.path("v3", "v1") == ["v3", "v2", "v1"]
+        with pytest.raises(KeyError):
+            reg.path("v1", "v3")         # no reverse edges registered
+
+    def test_self_adapter_is_identity(self, chain_world):
+        reg = chain_world[0]
+        ad = reg.adapter("v2", "v2")
+        assert ad.kind == "identity"
+
+    def test_atomic_edge_replacement_bumps_revision(self, chain_world):
+        reg = SpaceRegistry()
+        reg.add_version("v1", D)
+        reg.add_version("v2", D)
+        a1, a2 = _rot_adapter(3), _rot_adapter(4)
+        reg.register_edge("v2", "v1", a1)
+        rev = reg.revision
+        reg.register_edge("v2", "v1", a2)
+        assert reg.edge("v2", "v1") is a2
+        assert reg.revision > rev
+
+
+class TestComposition:
+    def test_linear_chain_folds_to_single_matrix(self, chain_world):
+        _, ad32, ad21, q, _ = chain_world
+        comp = compose_adapters([ad32, ad21])
+        assert isinstance(comp, DriftAdapter) and comp.kind == "linear"
+        fused_kind, fused = comp.as_fused_params()
+        assert fused_kind == "linear"    # ONE matrix -> one fused launch
+        seq = ad21.apply(ad32.apply(q, renormalize=False))
+        np.testing.assert_allclose(
+            np.asarray(comp.apply(q)), np.asarray(seq), atol=1e-5
+        )
+
+    def test_v1_to_v3_fused_single_launch_matches_sequential_jnp(
+        self, chain_world, monkeypatch
+    ):
+        """The acceptance criterion: composed OP/LA chain = ONE fused
+        launch, scores/ids matching the two-step jnp path."""
+        reg, ad32, ad21, q, corpus = chain_world
+        comp = reg.adapter("v3", "v1")
+
+        import repro.kernels.fused_search.ops as fused_ops
+
+        calls = {"n": 0}
+        orig = fused_ops.fused_bridged_search
+
+        def counting(*args, **kwargs):
+            calls["n"] += 1
+            return orig(*args, **kwargs)
+
+        monkeypatch.setattr(fused_ops, "fused_bridged_search", counting)
+        idx_fused = FlatIndex(corpus=corpus, backend="fused")
+        s_f, i_f = idx_fused.search_bridged(comp, q, k=10)
+        assert calls["n"] == 1
+
+        seq = ad21.apply(ad32.apply(q, renormalize=False))
+        s_j, i_j = FlatIndex(corpus=corpus).search(seq, k=10)
+        np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_j))
+        np.testing.assert_allclose(
+            np.asarray(s_f), np.asarray(s_j), atol=1e-5
+        )
+
+    @pytest.mark.slow
+    def test_dsm_chains_fold(self):
+        a1 = _rot_adapter(5, kind="op", use_dsm=True)
+        a2 = _rot_adapter(6, kind="la", use_dsm=True, max_epochs=3)
+        comp = compose_adapters([a1, a2])
+        assert comp.kind == "linear"
+        q = _unit(jax.random.normal(jax.random.PRNGKey(3), (8, D)))
+        seq = a2.apply(a1.apply(q, renormalize=False))
+        np.testing.assert_allclose(
+            np.asarray(comp.apply(q)), np.asarray(seq), atol=1e-5
+        )
+
+    @pytest.mark.slow
+    def test_single_mlp_chain_folds_to_mlp(self):
+        lin = _rot_adapter(7)
+        mlp = _rot_adapter(8, kind="mlp", use_dsm=True, max_epochs=2)
+        q = _unit(jax.random.normal(jax.random.PRNGKey(4), (8, D)))
+        for chain in ([lin, mlp], [mlp, lin], [lin, mlp, lin]):
+            comp = compose_adapters(chain)
+            assert isinstance(comp, DriftAdapter) and comp.kind == "mlp"
+            y = q
+            for link in chain[:-1]:
+                y = link.apply(y, renormalize=False)
+            seq = chain[-1].apply(y)
+            np.testing.assert_allclose(
+                np.asarray(comp.apply(q)), np.asarray(seq), atol=1e-4
+            )
+
+    @pytest.mark.slow
+    def test_two_mlp_chain_is_sequential(self):
+        m1 = _rot_adapter(10, kind="mlp", max_epochs=2)
+        m2 = _rot_adapter(11, kind="mlp", max_epochs=2)
+        comp = compose_adapters([m1, m2])
+        assert isinstance(comp, ChainedAdapter)
+        with pytest.raises(NotImplementedError):
+            comp.as_fused_params()
+        q = _unit(jax.random.normal(jax.random.PRNGKey(5), (8, D)))
+        seq = m2.apply(m1.apply(q, renormalize=False))
+        np.testing.assert_allclose(
+            np.asarray(comp.apply(q)), np.asarray(seq), atol=1e-6
+        )
+        # fused backend falls back to apply-then-search, identical results
+        corpus = _unit(jax.random.normal(jax.random.PRNGKey(6), (300, D)))
+        s_f, i_f = FlatIndex(corpus=corpus, backend="fused").search_bridged(
+            comp, q, k=5
+        )
+        s_j, i_j = FlatIndex(corpus=corpus).search(comp.apply(q), k=5)
+        np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_j))
+
+    def test_dimension_mismatch_rejected(self):
+        a = DriftAdapter.identity(8)
+        b = DriftAdapter.identity(16)
+        with pytest.raises(ValueError):
+            compose_adapters([a, b])
+
+
+class TestEdgeDecorations:
+    def test_domain_slots_and_multi_adapter_view(self):
+        reg = SpaceRegistry()
+        reg.add_version("v1", D)
+        reg.add_version("v2", D)
+        ads = [_rot_adapter(20 + i) for i in range(3)]
+        reg.register_domain_adapters("v2", "v1", ads)
+        assert reg.domains("v2", "v1") == [0, 1, 2]
+        multi = reg.multi_adapter("v2", "v1")
+        assert multi.n_domains == 3
+        q = _unit(jax.random.normal(jax.random.PRNGKey(0), (6, D)))
+        dom = jnp.asarray([2, 0, 1, 1, 2, 0], jnp.int32)
+        routed = multi.apply(q, dom)
+        for i in range(6):
+            np.testing.assert_allclose(
+                np.asarray(routed[i]),
+                np.asarray(ads[int(dom[i])].apply(q[i:i + 1])[0]),
+                atol=1e-5,
+            )
+        # unstack round-trips to slot-registrable adapters
+        for orig, back in zip(ads, multi.unstack()):
+            jax.tree_util.tree_map(
+                lambda a, b: np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b)
+                ),
+                orig.params, back.params,
+            )
+        assert MultiAdapter.from_registry(reg, "v2", "v1").n_domains == 3
+
+    def test_domain_slots_do_not_shadow_default_edge(self):
+        reg = SpaceRegistry()
+        reg.add_version("v1", D)
+        reg.add_version("v2", D)
+        default = _rot_adapter(30)
+        reg.register_edge("v2", "v1", default)
+        reg.register_edge("v2", "v1", _rot_adapter(31), domain=0)
+        assert reg.adapter("v2", "v1") is default
+        assert reg.adapter("v2", "v1", domain=0) is not default
+
+    def test_online_refit_replaces_edge_atomically(self):
+        reg = SpaceRegistry()
+        reg.add_version("v1", 16)
+        reg.add_version("v2", 16)
+        mgr = OnlineAdapterManager(
+            16, 16, OnlineConfig(kind="op"),
+            registry=reg, src="v2", dst="v1",
+        )
+        key = jax.random.PRNGKey(0)
+        b = _unit(jax.random.normal(key, (400, 16)))
+        r = jnp.linalg.qr(
+            jax.random.normal(jax.random.fold_in(key, 1), (16, 16))
+        )[0]
+        mgr.observe_pairs(np.asarray(b), np.asarray(b @ r.T))
+        first = mgr.tick()
+        assert reg.edge("v2", "v1") is first
+        mgr.observe_pairs(np.asarray(b), np.asarray(b @ r.T))
+        second = mgr.tick()
+        assert second is not first
+        assert reg.edge("v2", "v1") is second
+
+    def test_registry_decoration_requires_slot(self):
+        with pytest.raises(ValueError):
+            OnlineAdapterManager(8, 8, registry=SpaceRegistry())
+
+
+class TestPersistence:
+    def test_registry_save_load_roundtrip(self, chain_world, tmp_path):
+        reg, ad32, ad21, q, corpus = chain_world
+        reg2 = SpaceRegistry()
+        reg2.add_version("v1", D)
+        reg2.add_version("v2", D)
+        reg2.add_version("v3", D)
+        reg2.register_edge("v3", "v2", ad32)
+        reg2.register_edge("v2", "v1", ad21)
+        reg2.register_domain_adapters("v2", "v1", [_rot_adapter(40)])
+        path = str(tmp_path / "registry.msgpack")
+        reg2.save(path)
+        loaded = SpaceRegistry.load(path)
+        assert set(loaded.versions) == {"v1", "v2", "v3"}
+        assert loaded.versions["v2"].dim == D
+        assert loaded.edges() == reg2.edges()
+        # composed v3->v1 bridge gives bit-identical fused search after reload
+        idx = FlatIndex(corpus=corpus, backend="fused")
+        s0, i0 = idx.search_bridged(reg2.adapter("v3", "v1"), q, k=10)
+        s1, i1 = idx.search_bridged(loaded.adapter("v3", "v1"), q, k=10)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+        # domain slot round-trips
+        np.testing.assert_allclose(
+            np.asarray(loaded.adapter("v2", "v1", domain=0).apply(q)),
+            np.asarray(reg2.adapter("v2", "v1", domain=0).apply(q)),
+            atol=0,
+        )

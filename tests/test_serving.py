@@ -19,6 +19,9 @@ from repro.serve import (
     UpgradeOrchestrator,
 )
 
+# CI shards the fast tier on this marker (see ci.yml)
+pytestmark = pytest.mark.serving
+
 
 @pytest.fixture(scope="module")
 def upgrade_world():
@@ -83,9 +86,15 @@ class TestOrchestrator:
         bridged_recall = float(recall_at_k(router.search(q_new, 10).ids, gt))
         assert bridged_recall > 0.8
 
+        orch.reembed_batch(batch_size=2000)
+        assert orch.phase == Phase.REEMBEDDING
+        # legacy semantics: re-embedding only BUFFERS rows — the live index
+        # stays pure-old, so the router's plain bridged path (no mixed-state
+        # merge exists at router level) keeps full recall mid-migration
+        mid_recall = float(recall_at_k(router.search(q_new, 10).ids, gt))
+        assert mid_recall > 0.8
         while orch.progress < 1.0:
             orch.reembed_batch(batch_size=2000)
-        assert orch.phase == Phase.REEMBEDDING
         orch.cutover()
         assert orch.phase == Phase.SERVING_NEW
         final_recall = float(recall_at_k(router.search(q_new, 10).ids, gt))

@@ -1,0 +1,408 @@
+"""VectorStore + UpgradeHandle lifecycle tests: stage machine, shadow eval,
+canary, mixed-state migration serving (flat AND IVF through the
+protocol-level replace_rows), cutover, and bit-identical rollback."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ann import FlatIndex, build_ivf, flat_search_jnp, recall_at_k
+from repro.core import FitConfig
+from repro.data import CorpusConfig, make_corpus, make_drift, make_queries
+from repro.data.drift import MILD_TEXT
+from repro.serve import (
+    DualIndexServer,
+    QueryRouter,
+    UpgradeStage,
+    VectorStore,
+)
+
+# CI shards the fast tier on this marker (see ci.yml)
+pytestmark = pytest.mark.serving
+
+D = 64
+N = 2000
+OP_CFG = FitConfig(kind="op", use_dsm=False)
+
+
+@pytest.fixture(scope="module")
+def world():
+    dcfg = dataclasses.replace(MILD_TEXT, d_old=D, d_new=D)
+    ccfg = CorpusConfig(n_items=N, dim=D, n_clusters=60,
+                        spectrum_beta=1.0, seed=0)
+    corpus_old, _ = make_corpus(ccfg)
+    drift = make_drift(dcfg)
+    corpus_new = drift(corpus_old, 0)
+    q_old, _ = make_queries(ccfg, 80)
+    q_new = drift(q_old, 1)
+    _, gt = flat_search_jnp(corpus_new, q_new, k=10)
+    return corpus_old, corpus_new, q_old, q_new, gt
+
+
+def _store(world, kind="flat", backend="jnp"):
+    corpus_old = world[0]
+    if kind == "ivf":
+        index = build_ivf(jax.random.PRNGKey(2), corpus_old, n_cells=32)
+        index = dataclasses.replace(index, backend=backend)
+    else:
+        index = FlatIndex(corpus=corpus_old, backend=backend)
+    return VectorStore(index, version="v1")
+
+
+def _open(store, world, fit=True):
+    corpus_old, corpus_new = world[0], world[1]
+    h = store.upgrade(
+        "v2", corpus_new_provider=lambda ids: corpus_new[jnp.asarray(ids)]
+    )
+    if fit:
+        h.fit(corpus_new[:2000], corpus_old[:2000], config=OP_CFG)
+    return h
+
+
+class TestStageMachine:
+    def test_stage_guards(self, world):
+        store = _store(world)
+        h = _open(store, world, fit=False)
+        assert h.stage == UpgradeStage.CREATED
+        with pytest.raises(RuntimeError):
+            h.start_canary(0.1)          # not fitted yet
+        with pytest.raises(RuntimeError):
+            h.migrate_batch(10)
+        with pytest.raises(RuntimeError):
+            h.cutover()
+        h.fit(world[1][:2000], world[0][:2000], config=OP_CFG)
+        with pytest.raises(RuntimeError):
+            h.fit(world[1][:2000], world[0][:2000], config=OP_CFG)
+        h.rollback()
+        assert store.active_upgrade is None
+
+    def test_single_active_upgrade(self, world):
+        store = _store(world)
+        _open(store, world, fit=False)
+        with pytest.raises(RuntimeError):
+            store.upgrade("v3")
+        with pytest.raises(ValueError):
+            VectorStore(FlatIndex(corpus=world[0])).upgrade("v1")
+
+    def test_events_are_timestamped(self, world):
+        store = _store(world)
+        h = _open(store, world)
+        h.deploy()
+        stages = [e.stage for e in h.events]
+        assert stages == ["created", "fitted", "bridged"]
+        ts = [e.t for e in h.events]
+        assert ts == sorted(ts)
+
+
+class TestShadowAndCanary:
+    def test_shadow_eval_pass_and_fail(self, world):
+        corpus_old, corpus_new, _, q_new, _ = world
+        store = _store(world)
+        h = _open(store, world)
+        report = h.shadow_eval(q_new, corpus_new, k=10, threshold=0.5)
+        assert report.passed and report.recall > 0.8
+        # an oracle the bridge cannot match -> FAIL (unrelated "new" space)
+        bogus = jax.random.normal(jax.random.PRNGKey(99), corpus_new.shape)
+        bogus = bogus / jnp.linalg.norm(bogus, axis=1, keepdims=True)
+        report2 = h.shadow_eval(q_new, bogus, k=10, threshold=0.5)
+        assert not report2.passed
+        assert h.stage == UpgradeStage.SHADOWED
+
+    def test_shadow_eval_probe_ids_subset(self, world):
+        corpus_old, corpus_new, _, q_new, _ = world
+        store = _store(world)
+        h = _open(store, world)
+        probe = np.arange(0, N, 3)
+        report = h.shadow_eval(
+            q_new, corpus_new[jnp.asarray(probe)], probe_ids=probe,
+            k=5, threshold=0.0,
+        )
+        assert 0.0 <= report.recall <= 1.0
+
+    def test_canary_split_and_arms(self, world):
+        _, _, q_old, q_new, _ = world
+        store = _store(world)
+        h = _open(store, world)
+        h.start_canary(0.25)
+        picks = [h.canary_assign() for _ in range(400)]
+        assert sum(picks) == 100         # deterministic fraction
+        store.search(q_new, k=5)                       # canary arm (default)
+        store.search(q_old, k=5, space="v1")           # control arm
+        assert h.canary.canary_queries == 80
+        assert h.canary.control_queries == 80
+
+    def test_canary_counters_exclude_pad_rows(self, world):
+        _, _, _, q_new, _ = world
+        store = _store(world)
+        h = _open(store, world)
+        h.start_canary(0.5)
+        store.search(q_new[:8], k=5, q_valid=5)   # 3 trailing pad rows
+        assert h.canary.canary_queries == 5
+
+    def test_canary_control_arm_serves_native(self, world):
+        corpus_old, _, q_old, _, _ = world
+        store = _store(world)
+        baseline = store.search(q_old, k=10)
+        h = _open(store, world)
+        h.start_canary(0.5)
+        ctrl = store.search(q_old, k=10, space="v1")
+        np.testing.assert_array_equal(
+            np.asarray(ctrl.ids), np.asarray(baseline.ids)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ctrl.scores), np.asarray(baseline.scores)
+        )
+
+
+class TestMigrationServing:
+    # fused variants are the slowest interpret-mode combinations AND the CI
+    # lifecycle-smoke job drives the fused path end to end; the jnp variants
+    # keep the fast tier covering flat and IVF migration serving
+    @pytest.mark.parametrize("kind,backend", [
+        ("flat", "jnp"), ("ivf", "jnp"),
+        pytest.param("flat", "fused", marks=pytest.mark.slow),
+        pytest.param("ivf", "fused", marks=pytest.mark.slow),
+    ])
+    def test_full_lifecycle_recall(self, world, kind, backend):
+        _, corpus_new, _, q_new, gt = world
+        store = _store(world, kind=kind, backend=backend)
+        h = _open(store, world)
+        h.deploy()
+        r_bridged = float(recall_at_k(store.search(q_new, 10).ids, gt))
+        assert r_bridged > 0.8
+        h.migrate_batch(N // 3)
+        r_mixed = float(recall_at_k(store.search(q_new, 10).ids, gt))
+        assert r_mixed > 0.8             # mixed-state merge keeps recall up
+        while h.progress < 1.0:
+            h.migrate_batch(N // 3)
+        r_full = float(recall_at_k(store.search(q_new, 10).ids, gt))
+        assert r_full > 0.9
+        h.cutover()
+        assert store.serving_version == "v2"
+        assert store.index.backend == backend
+        r_final = float(recall_at_k(store.search(q_new, 10).ids, gt))
+        assert r_final > (0.99 if kind == "flat" else 0.9)
+
+    def test_mixed_state_at_zero_equals_pure_bridged(self, world):
+        _, _, _, q_new, _ = world
+        store = _store(world)
+        h = _open(store, world)
+        h.deploy()
+        before = store.search(q_new, k=10)
+        h.migrate_batch(0)               # MIGRATING stage, progress still 0
+        assert h.stage == UpgradeStage.MIGRATING and h.progress == 0.0
+        after = store.search(q_new, k=10)
+        np.testing.assert_array_equal(
+            np.asarray(before.ids), np.asarray(after.ids)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(before.scores), np.asarray(after.scores)
+        )
+
+    def test_migrated_rows_serve_natively(self, world):
+        """A migrated row must be retrievable by its EXACT new-space vector
+        with score ~1 (native scoring), not through the bridge."""
+        _, corpus_new, _, _, _ = world
+        store = _store(world)
+        h = _open(store, world)
+        h.deploy()
+        h.migrate_batch(500)             # rows 0..499 now f_new
+        probes = corpus_new[:16]
+        res = store.search(probes, k=1)
+        np.testing.assert_array_equal(
+            np.asarray(res.ids[:, 0]), np.arange(16)
+        )
+        assert float(jnp.min(res.scores[:, 0])) > 0.999
+
+    def test_ivf_replace_rows_via_router(self, world):
+        corpus_old, corpus_new, _, _, _ = world
+        index = build_ivf(jax.random.PRNGKey(2), corpus_old, n_cells=32)
+        router = QueryRouter(index)
+        ids = jnp.arange(50)
+        router.replace_rows(ids, corpus_new[:50])
+        assert router.index is not index          # functional swap
+        s, i = router.index.search(corpus_new[:8], k=1, nprobe=32)
+        np.testing.assert_array_equal(np.asarray(i[:, 0]), np.arange(8))
+
+    def test_buffered_migration_keeps_index_pure(self, world):
+        """serve_mixed=False (the orchestrator shim's mode): rows only
+        accumulate for cutover; the live index object never changes and
+        new-space queries keep the PURE bridged path."""
+        _, _, _, q_new, _ = world
+        store = _store(world)
+        h = _open(store, world)
+        h.deploy()
+        bridged = store.search(q_new, k=10)
+        live_index = store.index
+        h.migrate_batch(N // 2, serve_mixed=False)
+        assert store.index is live_index           # untouched
+        mid = store.search(q_new, k=10)
+        np.testing.assert_array_equal(
+            np.asarray(bridged.ids), np.asarray(mid.ids)
+        )
+        h.migrate_batch(N, serve_mixed=False)
+        h.cutover()
+        assert store.serving_version == "v2"
+
+    def test_mixed_then_buffered_rejected(self, world):
+        store = _store(world)
+        h = _open(store, world)
+        h.deploy()
+        h.migrate_batch(100)                       # mixed mode
+        with pytest.raises(RuntimeError):
+            h.migrate_batch(100, serve_mixed=False)
+
+    def test_ivf_nprobe_honored(self, world):
+        """The store's nprobe knob must reach the IVF probe on every path:
+        nprobe=n_cells makes bridged IVF exact (equal to flat bridged)."""
+        corpus_old, _, _, q_new, _ = world
+        store = _store(world, kind="ivf")
+        store.nprobe = store.index.n_cells
+        h = _open(store, world)
+        h.deploy()
+        ivf_res = store.search(q_new, k=10)
+        flat = FlatIndex(corpus=corpus_old)
+        _, flat_ids = flat.search_bridged(h.adapter, q_new, k=10)
+        np.testing.assert_array_equal(
+            np.asarray(ivf_res.ids), np.asarray(flat_ids)
+        )
+
+    def test_immutable_backend_still_rejected(self, world):
+        class Immutable:
+            backend = "jnp"
+
+            def __init__(self, inner):
+                self.inner = inner
+                self.size = inner.size
+                self.dim = inner.dim
+
+            def search(self, q, k=10, q_valid=None):
+                return self.inner.search(q, k=k, q_valid=q_valid)
+
+            def search_bridged(self, adapter, q, k=10, q_valid=None):
+                return self.inner.search_bridged(adapter, q, k=k, q_valid=q_valid)
+
+        router = QueryRouter(Immutable(FlatIndex(corpus=world[0])))
+        with pytest.raises(NotImplementedError):
+            router.replace_rows(jnp.arange(2), world[1][:2])
+
+
+class TestCutoverAndRollback:
+    def test_stale_handle_rollback_rejected(self, world):
+        """A retained post-cutover handle must not clobber a NEWER
+        in-flight upgrade's serving state."""
+        _, corpus_new, _, _, _ = world
+        store = _store(world)
+        h1 = _open(store, world)
+        h1.deploy()
+        while h1.progress < 1.0:
+            h1.migrate_batch(N)
+        h1.cutover()
+        h2 = store.upgrade("v3")
+        with pytest.raises(RuntimeError):
+            h1.rollback()
+        assert store.active_upgrade is h2
+
+    def test_ivf_replace_rows_unknown_id_is_keyerror(self, world):
+        index = build_ivf(jax.random.PRNGKey(2), world[0], n_cells=32)
+        with pytest.raises(KeyError):
+            index.replace_rows(jnp.asarray([N + 50]), world[1][:1])
+        with pytest.raises(KeyError):                # mixed known/unknown
+            index.replace_rows(jnp.asarray([0, N + 50]), world[1][:2])
+
+    def test_rollback_is_bit_identical(self, world):
+        _, corpus_new, _, q_new, _ = world
+        for kind, backend in (("flat", "fused"), ("ivf", "jnp")):
+            store = _store(world, kind=kind, backend=backend)
+            pre = store.search(q_new, k=10)
+            pre_index = store.index
+            h = _open(store, world)
+            h.deploy()
+            h.migrate_batch(1000)
+            h.rollback()
+            assert h.stage == UpgradeStage.ROLLED_BACK
+            assert store.active_upgrade is None
+            assert store.index is pre_index
+            post = store.search(q_new, k=10)
+            np.testing.assert_array_equal(
+                np.asarray(pre.ids), np.asarray(post.ids)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(pre.scores), np.asarray(post.scores)
+            )
+
+    def test_post_cutover_registry_still_bridges_old_versions(self, world):
+        """After cutover the fitted v2->v1 edge stays; a v2-space query is
+        native, and a NEW upgrade can open on top (v2 -> v3 chain)."""
+        _, corpus_new, _, q_new, gt = world
+        store = _store(world)
+        h = _open(store, world)
+        h.deploy()
+        while h.progress < 1.0:
+            h.migrate_batch(N)
+        h.cutover()
+        assert store.registry.has_edge("v2", "v1")
+        res = store.search(q_new, k=10)
+        assert res.adapter_kind == "none"
+        h2 = store.upgrade("v3")
+        assert h2.from_version == "v2"
+
+    def test_dual_index_baseline_from_store(self, world):
+        corpus_old, corpus_new, _, q_new, gt = world
+        store = _store(world)
+        h = _open(store, world)
+        h.deploy()
+        h.migrate_batch(1500)
+        dual = DualIndexServer.from_store(store)
+        assert int(dual.new_ids.shape[0]) == 1500
+        # 2x residency: both corpora resident vs one mixed index
+        single = store.index.corpus.size * 4
+        assert dual.resident_bytes > 1.4 * single
+        s, ids = dual.search(q_new, h.adapter.apply(q_new), k=10)
+        assert bool(jnp.all(s[:, :-1] >= s[:, 1:]))
+        assert float(recall_at_k(ids, gt)) > 0.8
+
+
+class TestRegistryRouting:
+    def test_multi_hop_store_search(self, world):
+        """v1-serving store bridges v3-space queries through v3->v2->v1."""
+        corpus_old, corpus_new, _, q_new, gt = world
+        dcfg = dataclasses.replace(MILD_TEXT, d_old=D, d_new=D, seed=123)
+        drift2 = make_drift(dcfg)
+        corpus_v3 = drift2(corpus_new, 0)
+        q_v3 = drift2(q_new, 1)
+        store = _store(world, backend="fused")
+        store.registry.add_version("v2", D)
+        store.registry.add_version("v3", D)
+        from repro.core import DriftAdapter
+
+        ad21 = DriftAdapter.fit(
+            corpus_new[:2000], corpus_old[:2000], config=OP_CFG
+        )
+        ad32 = DriftAdapter.fit(
+            corpus_v3[:2000], corpus_new[:2000], config=OP_CFG
+        )
+        store.registry.register_edge("v2", "v1", ad21)
+        store.registry.register_edge("v3", "v2", ad32)
+        res = store.search(q_v3, k=10, space="v3")
+        assert res.adapter_kind == "linear"      # folded chain
+        assert float(recall_at_k(res.ids, gt)) > 0.8
+
+    def test_bridge_cache_tracks_registry_revision(self, world):
+        corpus_old, corpus_new, _, q_new, _ = world
+        store = _store(world)
+        store.registry.add_version("v2", D)
+        from repro.core import DriftAdapter
+
+        a1 = DriftAdapter.fit(
+            corpus_new[:1000], corpus_old[:1000], config=OP_CFG
+        )
+        store.registry.register_edge("v2", "v1", a1)
+        assert store.bridge("v2") is a1
+        a2 = DriftAdapter.fit(
+            corpus_new[1000:2000], corpus_old[1000:2000], config=OP_CFG
+        )
+        store.registry.register_edge("v2", "v1", a2)   # online refit swap
+        assert store.bridge("v2") is a2
