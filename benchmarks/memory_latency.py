@@ -157,6 +157,170 @@ TPU_CAVEAT = (
 )
 
 
+def bench_mixed_query_path(
+    adapter: DriftAdapter,
+    corpus: jax.Array,
+    batch: int = 256,
+    k: int = 10,
+    migrated_frac: float = 0.5,
+) -> dict:
+    """Mixed-state query: one bitmap-masked launch vs the retired two-scan
+    merge (PR 3's production path: a bridged scan and a native scan, each
+    over-fetching 2k candidates, masked against the migration bitmap and
+    merged on host).
+
+    Timing is gated on EXACT score/id parity between the one-pass kernel
+    and the jnp two-scan reference (each side masked to its own rows BEFORE
+    its top-k — `kernels/mixed_scan/ref.py`); the legacy over-fetch merge
+    is additionally scored against that reference, since its 2k window can
+    lose candidates (the tail-risk the one-pass kernel removes). Same
+    interleaved median-of-pair-ratios methodology as the other sections.
+    """
+    import statistics
+    import time
+
+    from repro.kernels.mixed_scan import mixed_bridged_search, mixed_scan_ref
+
+    n, d = corpus.shape
+    rng = np.random.default_rng(11)
+    migrated = np.zeros(n, bool)
+    migrated[rng.permutation(n)[: int(round(migrated_frac * n))]] = True
+    mig = jnp.asarray(migrated)
+    q = jax.random.normal(jax.random.PRNGKey(3), (batch, adapter.d_new))
+    q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+    block_rows = n
+    fused_kind, fused = adapter.as_fused_params()
+    neg = float(jnp.finfo(jnp.float32).min)
+    kk = min(2 * k, n)
+
+    def two_scan(qx):
+        # the retired mixed-state production path, verbatim: over-fetch 2k
+        # per side, mask by ownership, merge on host
+        s_b, i_b = fused_bridged_search(
+            fused_kind, fused, qx, corpus, k=kk, block_rows=block_rows
+        )
+        s_n, i_n = topk_scan(corpus, qx, k=kk, block_rows=block_rows)
+        own_b = (i_b >= 0) & ~mig[jnp.clip(i_b, 0)]
+        own_n = (i_n >= 0) & mig[jnp.clip(i_n, 0)]
+        s = jnp.concatenate(
+            [jnp.where(own_b, s_b, neg), jnp.where(own_n, s_n, neg)], axis=1
+        )
+        i = jnp.concatenate([i_b, i_n], axis=1)
+        top_s, pos = jax.lax.top_k(s, k)
+        top_i = jnp.take_along_axis(i, pos, axis=1)
+        return top_s, jnp.where(top_s > neg, top_i, -1)
+
+    def one_pass(qx):
+        return mixed_bridged_search(
+            fused_kind, fused, qx, corpus, mig, k=k, block_rows=block_rows
+        )
+
+    # -- parity gate (one-pass kernel vs the exact two-scan reference) -----
+    ref_s, ref_i = mixed_scan_ref(
+        adapter.kind, adapter.params, q, corpus, mig, k=k
+    )
+    s, i = one_pass(q)
+    np.testing.assert_allclose(
+        np.asarray(s), np.asarray(ref_s), atol=1e-5,
+        err_msg="one-pass mixed scan scores diverge from reference",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(i), np.asarray(ref_i),
+        err_msg="one-pass mixed scan ids diverge from reference",
+    )
+    # the legacy merge is NOT gated — its over-fetch window is approximate;
+    # report how often it disagrees with the exact result instead
+    _, legacy_i = two_scan(q)
+    overfetch_mismatches = int(
+        (np.asarray(legacy_i) != np.asarray(ref_i)).sum()
+    )
+
+    def _once(fn):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(q))
+        return (time.perf_counter() - t0) * 1e6
+
+    samples = {"two_scan": [], "one_pass": []}
+    ratios = []
+    for _ in range(20):
+        tu = _once(two_scan)
+        tf = _once(one_pass)
+        samples["two_scan"].append(tu)
+        samples["one_pass"].append(tf)
+        ratios.append(tu / tf)
+
+    # -- HBM traffic model (exact f32 byte counts per batch) ---------------
+    # The two-scan path reads the corpus AND the queries twice (one scan
+    # each side), writes/reads back 2×(B, 2k) candidate lists for the host
+    # merge, and reads the (N,) bitmap once for the ownership masks. The
+    # one-pass path reads corpus + queries + bitmap once and writes only
+    # the final (B, k).
+    w_fused = sum(
+        x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(fused)
+    )
+    bitmap_bytes = 4 * n
+    out_bytes = _bytes_f32((batch, k), (batch, k))
+    cand_bytes = 2 * _bytes_f32((batch, kk), (batch, kk))   # write + read
+    bytes_two_scan = (
+        2 * _bytes_f32((batch, d), (n, d))
+        + w_fused + 2 * cand_bytes + bitmap_bytes + out_bytes
+    )
+    bytes_one_pass = (
+        _bytes_f32((batch, d), (n, d)) + w_fused + bitmap_bytes + out_bytes
+    )
+    return {
+        "batch": batch,
+        "k": k,
+        "corpus_rows": n,
+        "d": d,
+        "migrated_frac": migrated_frac,
+        "kernel_launches_two_scan": 2,
+        "kernel_launches_one_pass": 1,
+        "us_per_batch_two_scan": round(
+            statistics.median(samples["two_scan"]), 1
+        ),
+        "us_per_batch_one_pass": round(
+            statistics.median(samples["one_pass"]), 1
+        ),
+        "speedup": round(statistics.median(ratios), 3),
+        "hbm_bytes_two_scan": bytes_two_scan,
+        "hbm_bytes_one_pass": bytes_one_pass,
+        "hbm_bytes_saved_per_batch": bytes_two_scan - bytes_one_pass,
+        "overfetch_id_mismatches": overfetch_mismatches,
+        "parity": "exact vs two-scan reference (atol 1e-5 scores, ids equal)",
+        "caveat": TPU_CAVEAT,
+    }
+
+
+def run_mixed(adapter: DriftAdapter | None = None) -> dict:
+    """Standalone mixed-state fused-vs-two-scan section → BENCH_mixed.json
+    (the CI bench artifact)."""
+    d = 768
+    if adapter is None:
+        key = jax.random.PRNGKey(0)
+        b = jax.random.normal(key, (8_000, d))
+        b = b / jnp.linalg.norm(b, axis=1, keepdims=True)
+        r = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1), (d, d)))[0]
+        adapter = DriftAdapter.fit(
+            b, b @ r.T, kind="op",
+            config=FitConfig(kind="op", use_dsm=False),
+        )
+        corpus = (b @ r.T)[:4096]
+    else:
+        key = jax.random.PRNGKey(0)
+        corpus = jax.random.normal(key, (4096, adapter.d_old))
+        corpus = corpus / jnp.linalg.norm(corpus, axis=1, keepdims=True)
+    out = bench_mixed_query_path(adapter, corpus)
+    emit("a1.mixed_one_pass.query_path_us", out["us_per_batch_one_pass"],
+         out["hbm_bytes_one_pass"])
+    emit("a1.mixed_two_scan.query_path_us", out["us_per_batch_two_scan"],
+         out["hbm_bytes_two_scan"])
+    emit("a1.mixed_one_pass_vs_two_scan.speedup", 0.0, out["speedup"])
+    print(f"# caveat: {TPU_CAVEAT}", flush=True)
+    save_json("BENCH_mixed", out)
+    return out
+
+
 def bench_ivf_fused_path(
     adapter: DriftAdapter,
     corpus: jax.Array,
@@ -329,6 +493,9 @@ def run(scale: Scale) -> dict:
 
     # IVF bridged path: two fused launches vs adapter + gather + einsum
     out["ivf_query_path"] = run_ivf(adapter_la)
+
+    # Mixed-state path: one bitmap-masked launch vs the two-scan merge
+    out["mixed_query_path"] = run_mixed(adapter_la)
     out["caveat"] = TPU_CAVEAT
 
     # Table 5 projection — adapter columns measured, re-embed/build modeled
@@ -364,9 +531,16 @@ if __name__ == "__main__":
         help="run just the IVF fused-vs-unfused section (the CI bench "
         "artifact: BENCH_ivf.json)",
     )
+    ap.add_argument(
+        "--mixed-only", action="store_true",
+        help="run just the mixed-state one-pass-vs-two-scan section (the "
+        "CI bench artifact: BENCH_mixed.json)",
+    )
     args = ap.parse_args()
     if args.ivf_only:
         run_ivf()
+    elif args.mixed_only:
+        run_mixed()
     else:
         from benchmarks.common import DEFAULT
 

@@ -1,37 +1,39 @@
-"""§5.6 — continuous online adaptation under lazy background re-embedding.
+"""§5.6 — continuous online adaptation under lazy background re-embedding,
+driven through the `VectorStore` upgrade lifecycle.
 
-Scenario: 5 % of the corpus is re-encoded with f_new each hour and moved to
-a new-space segment. Ground truth is the evolving oracle (all-new space).
+Scenario: 5 % of the corpus is re-encoded with f_new each hour. Ground truth
+is the evolving oracle (all-new space). The mixed-state index, the migration
+bitmap, and the serving path all come from the lifecycle API now — nothing
+is simulated by hand:
 
-Strategies compared over 24 ticks:
   * fixed_t0  — the T=0 adapter maps every query into the legacy space and
-    searches the WHOLE mixed index with it: refreshed (new-space) rows are
+    searches the WHOLE mixed index with it (a bare bridged scan that is
+    blind to the migration bitmap): refreshed (new-space) rows are
     increasingly mismatched → ARR decays toward the paper's ~0.83.
-  * online    — segment-aware serving + hourly refit: the old segment is
-    searched with g(q), the new segment with q directly, top-k merged; the
-    adapter refits each tick on the pairs the re-embedder just produced
-    (rolling buffer). ARR stays > 0.95 (paper's claim).
+  * online    — `store.search` during migration takes the bitmap-masked
+    mixed-state path (one fused launch on `backend="fused"`), and an
+    `OnlineAdapterManager` DECORATES the upgrade's registry edge
+    (`registry=, src=, dst=`): each tick it refits on the pairs the
+    re-embedder just produced and atomically replaces the edge — the store
+    resolves its bridge through the registry (revision-keyed cache), so the
+    very next query serves with the fresh adapter. ARR stays > 0.95.
+
+The runbook documents this flow: docs/upgrade-runbook.md §"Online refits
+during migration".
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ann import flat_search_jnp, recall_at_k
-from repro.core import DriftAdapter, FitConfig, OnlineAdapterManager, OnlineConfig
+from repro.ann import FlatIndex, recall_at_k
+from repro.core import FitConfig, OnlineAdapterManager, OnlineConfig
 from repro.data.drift import MILD_TEXT
+from repro.serve import VectorStore
 from benchmarks.common import Scale, build_scenario, emit, save_json
 
 TICKS = 24
 REFRESH_FRAC = 0.05
-
-
-def _merge_topk(s1, i1, s2, i2, k):
-    s = jnp.concatenate([s1, s2], axis=1)
-    i = jnp.concatenate([i1, i2], axis=1)
-    top_s, pos = jax.lax.top_k(s, k)
-    return top_s, jnp.take_along_axis(i, pos, axis=1)
 
 
 def run(scale: Scale) -> dict:
@@ -42,59 +44,69 @@ def run(scale: Scale) -> dict:
         corpus_seed=0, pair_seed=5,
     )
     k = 10
-    rng = np.random.default_rng(0)
-    order = rng.permutation(n)          # refresh order
-    fixed = DriftAdapter.fit(
-        scen.pairs_b, scen.pairs_a, kind="mlp",
+
+    # one store, one lifecycle: the handle owns the migration bitmap and
+    # replace_rows mutations; serving reads both through search_mixed
+    store = VectorStore(FlatIndex(corpus=scen.corpus_old), version="t0")
+    handle = store.upgrade(
+        "t1",
+        corpus_new_provider=lambda ids: scen.corpus_new[jnp.asarray(ids)],
+    )
+    fixed = handle.fit(
+        scen.pairs_b, scen.pairs_a,
         config=FitConfig(kind="mlp", use_dsm=True),
     )
+    handle.deploy()
+
+    # the online arm decorates the SAME registry edge the store serves
+    # from: every refit is an atomic edge replacement, picked up by the
+    # store's revision-keyed bridge cache on the next query
     mgr = OnlineAdapterManager(
         d_new=scen.pairs_b.shape[1], d_old=scen.pairs_a.shape[1],
         config=OnlineConfig(kind="mlp", max_epochs_per_refit=10),
+        registry=store.registry, src="t1", dst="t0",
     )
     mgr.observe_pairs(np.asarray(scen.pairs_b), np.asarray(scen.pairs_a))
     mgr.tick()
 
     per_refresh = int(n * REFRESH_FRAC)
     history = {"fixed_t0": [], "online": [], "frac_new": []}
-    corpus_mixed = scen.corpus_old
     for t in range(1, TICKS + 1):
-        newly = order[(t - 1) * per_refresh : t * per_refresh]
+        # background re-embedder: migrate the next 5 % through the handle
+        # (replace_rows + bitmap flip) and emit the fresh ⟨f_new, f_old⟩
+        # pairs for exactly the rows the handle reports it migrated
+        handle.migrate_batch(per_refresh)
+        newly = handle.last_migrated_ids
         if len(newly):
-            corpus_mixed = corpus_mixed.at[newly].set(scen.corpus_new[newly])
-            # background re-embedder emits fresh ⟨f_new, f_old⟩ pairs
             mgr.observe_pairs(
-                np.asarray(scen.corpus_new[newly]),
-                np.asarray(scen.corpus_old[newly]),
+                np.asarray(scen.corpus_new[jnp.asarray(newly)]),
+                np.asarray(scen.corpus_old[jnp.asarray(newly)]),
             )
-        online_adapter = mgr.tick() or mgr.adapter
+        mgr.tick()
 
-        refreshed = order[: t * per_refresh]
-        is_new = np.zeros(n, bool)
-        is_new[refreshed] = True
-
-        # fixed_t0: one mapped query against the mixed index
-        _, ids_fixed = flat_search_jnp(corpus_mixed, fixed.apply(scen.q_new), k=k)
+        # fixed_t0: the frozen adapter against the whole mixed index,
+        # blind to the migration bitmap (the pre-mixed-serving failure mode)
+        _, ids_fixed = store.index.search_bridged(fixed, scen.q_new, k=k)
         arr_fixed = float(recall_at_k(ids_fixed, scen.gt))
 
-        # online: segment-aware (old segment via adapter, new directly)
-        mask_new = jnp.asarray(is_new)
-        old_part = jnp.where(mask_new[:, None], 0.0, scen.corpus_old)
-        new_part = jnp.where(mask_new[:, None], scen.corpus_new, 0.0)
-        s_o, i_o = flat_search_jnp(old_part, online_adapter.apply(scen.q_new), k=k)
-        s_n, i_n = flat_search_jnp(new_part, scen.q_new, k=k)
-        _, ids_on = _merge_topk(s_o, i_o, s_n, i_n, k)
-        arr_online = float(recall_at_k(ids_on, scen.gt))
+        # online: the store's mixed-state path + the refit-decorated edge
+        res = store.search(scen.q_new, k=k)
+        assert res.adapter_kind.startswith(
+            ("mixed:", "native")
+        ), res.adapter_kind
+        arr_online = float(recall_at_k(res.ids, scen.gt))
 
         history["fixed_t0"].append(arr_fixed)
         history["online"].append(arr_online)
-        history["frac_new"].append(t * REFRESH_FRAC)
+        history["frac_new"].append(float(handle.progress))
 
     out = {
         "history": history,
         "fixed_final": history["fixed_t0"][-1],
         "online_min": min(history["online"]),
         "refits": mgr.refits,
+        "lifecycle_stage": handle.stage.value,
+        "progress": float(handle.progress),
     }
     emit("online.fixed_t0.final_arr", 0.0, round(out["fixed_final"], 4))
     emit("online.retrained.min_arr", 0.0, round(out["online_min"], 4))

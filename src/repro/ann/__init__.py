@@ -24,7 +24,14 @@ from typing import Protocol, runtime_checkable
 import jax
 
 from repro.ann.flat import FlatIndex, flat_search_jnp
-from repro.ann.ivf import IVFIndex, build_ivf, ivf_rescore, ivf_search
+from repro.ann.ivf import (
+    IVFIndex,
+    build_ivf,
+    ivf_rescore,
+    ivf_rescore_mixed,
+    ivf_search,
+    migration_cells,
+)
 from repro.ann.kmeans import kmeans_fit
 from repro.ann.metrics import arr, mrr, recall_at_k
 from repro.ann.sharded import sharded_ivf_search, sharded_search
@@ -74,6 +81,25 @@ class SearchBackend(Protocol):
         single-launch fused form are served apply-then-search)."""
         ...
 
+    def search_mixed(
+        self,
+        adapter,
+        queries: jax.Array,
+        migrated: jax.Array,
+        k: int = 10,
+        q_valid: int | None = None,
+        probe_space: str = "mapped",
+    ) -> tuple[jax.Array, jax.Array]:
+        """Top-k over a MIXED-STATE index (mid-migration): rows whose
+        ``migrated`` bit is set hold f_new vectors and score against the raw
+        queries, the rest hold f_old and score against the adapter-mapped
+        queries. On ``backend="fused"`` this is one launch (flat:
+        ``kernels/mixed_scan``) or two (IVF: probe + bitmap-masked rescore).
+        ``probe_space`` selects which query form probes cell geometry
+        ("mapped" for forward bridges, "raw" for inverse/control-arm
+        bridges); indexes without a probe stage ignore it."""
+        ...
+
 
 __all__ = [
     "SearchBackend",
@@ -82,7 +108,9 @@ __all__ = [
     "IVFIndex",
     "build_ivf",
     "ivf_rescore",
+    "ivf_rescore_mixed",
     "ivf_search",
+    "migration_cells",
     "kmeans_fit",
     "arr",
     "mrr",

@@ -141,6 +141,47 @@ class FlatIndex:
             )
         return self.search(adapter.apply(queries), k=k, q_valid=q_valid)
 
+    def search_mixed(
+        self,
+        adapter,
+        queries: jax.Array,
+        migrated: jax.Array,
+        k: int = 10,
+        q_valid: int | None = None,
+        probe_space: str = "mapped",
+    ) -> tuple[jax.Array, jax.Array]:
+        """Mixed-state search: migrated rows (bitmap set) hold f_new vectors
+        and are scored with raw ``queries``; the rest hold f_old and are
+        scored with ``adapter``-transformed queries.
+
+        On the "fused" backend this is ONE ``kernels/mixed_scan`` launch —
+        adapter transform + dual-score scan + bitmap select + running top-k
+        in VMEM. Other backends (and bridges without a single-launch fused
+        form) take the exact jnp two-scan merge, each side masked to its own
+        rows BEFORE its top-k — the same results, more launches.
+        ``probe_space`` is accepted for protocol uniformity with the IVF
+        index (flat has no probe stage; it is ignored here).
+        """
+        del probe_space
+        if self.backend == "fused":
+            from repro.kernels.mixed_scan import ops as mixed_ops
+
+            try:
+                fused_kind, fused = adapter.as_fused_params()
+            except NotImplementedError:
+                pass        # multi-MLP chains: exact jnp merge below
+            else:
+                return mixed_ops.mixed_bridged_search(
+                    fused_kind, fused, queries, self.corpus, migrated, k=k,
+                    block_rows=min(self.block_rows, 2048), q_valid=q_valid,
+                )
+        from repro.kernels.mixed_scan.ref import mixed_merge_scan
+
+        return mixed_merge_scan(
+            queries, adapter.apply(queries), self.corpus, migrated, k=k,
+            block_rows=self.block_rows,
+        )
+
     # Mutation path for the lazy/background re-embedding scenario (§5.6):
     # rows are overwritten in place as items get re-encoded by f_new.
     def replace_rows(self, ids: jax.Array, new_rows: jax.Array) -> "FlatIndex":

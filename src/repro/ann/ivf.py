@@ -13,9 +13,11 @@ the f32 sublane of 8 for the rescore kernel) so spills are rare.
 Backends: "jnp"/"pallas" rescore probed cells with a gather + einsum (the
 (B, nprobe, cap, d) candidate tensor is materialized); "fused" streams each
 probed cell's (cap, d) tile straight into VMEM via kernels/ivf_rescore —
-``search`` is two kernel launches (centroid top-k probe, gather-rescore) and
+``search`` is two kernel launches (centroid top-k probe, gather-rescore),
 ``search_bridged`` is the same two launches with the adapter folded into the
-probe (kernels/fused_search, ``return_queries``), zero jnp glue between.
+probe (kernels/fused_search, ``return_queries``), zero jnp glue between, and
+``search_mixed`` (mid-migration) stays two launches too: the migration
+bitmap rides the packed cell layout into a bitmap-masked rescore.
 """
 from __future__ import annotations
 
@@ -147,6 +149,87 @@ class IVFIndex:
             self, adapter.apply(queries), k=k, nprobe=nprobe, q_valid=q_valid
         )
 
+    def search_mixed(
+        self,
+        adapter,
+        queries: jax.Array,
+        migrated: jax.Array,
+        k: int = 10,
+        nprobe: int = 8,
+        q_valid: int | None = None,
+        probe_space: str = "mapped",
+        mig_cells: jax.Array | None = None,
+    ) -> tuple[jax.Array, jax.Array]:
+        """Mixed-state search: migrated rows (bitmap set) hold f_new vectors
+        and rescore against raw ``queries``; the rest rescore against the
+        ``adapter``-transformed queries.
+
+        On the "fused" backend this is EXACTLY two launches: (1) the fused
+        probe over the centroid table (adapter folded in, transformed
+        queries emitted from VMEM); (2) the bitmap-masked
+        ``kernels/ivf_rescore`` mixed rescore — the migration bitmap rides
+        the packed (C, cap) cell layout through the same scalar-prefetch
+        index_map as the cell ids. Other backends probe in jnp and rescore
+        through the mixed gather oracle.
+
+        ``probe_space`` picks which query form probes the centroid table:
+        "mapped" (default — new-space queries; cells keep old-space k-means
+        geometry until the cutover re-pack, so g(q) probes) or "raw" (the
+        inverse/control-arm path: the query already lives in the cells'
+        native space, so raw q probes and the ADAPTER side is the mapped
+        one). The rescore side-selection is identical either way.
+
+        ``mig_cells`` accepts the pre-packed (C, cap) bitmap from
+        ``migration_cells`` so hot-path callers (the store caches it per
+        migrate_batch) skip the O(C·cap) repack per query batch.
+        """
+        if nprobe > self.n_cells:
+            raise ValueError(
+                f"nprobe={nprobe} exceeds n_cells={self.n_cells}"
+            )
+        if probe_space not in ("mapped", "raw"):
+            raise ValueError(
+                f"probe_space must be 'mapped' or 'raw', got {probe_space!r}"
+            )
+        if mig_cells is None:
+            mig_cells = migration_cells(self.cell_ids, migrated)
+        if self.backend == "fused":
+            from repro.kernels.fused_search import ops as fused_ops
+            from repro.kernels.ivf_rescore import ops as rescore_ops
+            from repro.kernels.topk_scan import ops as topk_ops
+
+            br = min(1024, -(-self.n_cells // 128) * 128)
+            try:
+                fused_kind, fused = adapter.as_fused_params()
+            except NotImplementedError:
+                fused_kind = None
+            if fused_kind is not None and probe_space == "mapped":
+                # launch 1: adapter-folded probe, q' emitted from VMEM
+                _, probe, q_mapped = fused_ops.fused_bridged_search(
+                    fused_kind, fused, queries, self.centroids, k=nprobe,
+                    block_rows=br, return_queries=True, q_valid=q_valid,
+                )
+            else:
+                # raw-probe (inverse/control arm) or unfoldable chain: the
+                # probe is a plain native launch; the mapped side applies
+                # outside the kernel
+                q_mapped = adapter.apply(queries)
+                probe_q = queries if probe_space == "raw" else q_mapped
+                _, probe = topk_ops.topk_scan(
+                    self.centroids, probe_q, k=nprobe, block_rows=br
+                )
+            # launch 2: bitmap-masked mixed rescore
+            return rescore_ops.ivf_rescore_mixed_fused(
+                self.cells, self.cell_ids, mig_cells, queries, q_mapped,
+                probe, k=k, q_valid=q_valid,
+            )
+        q_mapped = adapter.apply(queries)
+        probe_q = queries if probe_space == "raw" else q_mapped
+        _, probe = jax.lax.top_k(probe_q @ self.centroids.T, nprobe)
+        return ivf_rescore_mixed(
+            self, queries, q_mapped, probe, mig_cells, k=k
+        )
+
 
 # Register as a pytree so IVFIndex flows through jit/pjit (n_items and the
 # backend selector are static aux data).
@@ -251,6 +334,22 @@ def build_ivf(
     )
 
 
+@jax.jit
+def migration_cells(
+    cell_ids: jax.Array, migrated: jax.Array
+) -> jax.Array:
+    """Pack a per-row migration bitmap into the (C, cap) cell layout.
+
+    Slot (c, s) is 1 iff ``cell_ids[c, s]`` names a migrated row; pad slots
+    (id -1) are 0 (they are NEG-masked in every rescore anyway). This is the
+    bitmap operand the mixed rescore kernel streams cell-aligned through
+    the scalar-prefetch index_map.
+    """
+    mig = jnp.asarray(migrated).astype(bool)
+    packed = mig[jnp.clip(cell_ids, 0)] & (cell_ids >= 0)
+    return packed.astype(jnp.int32)
+
+
 def _score_probed(
     index: IVFIndex, qb: jax.Array, probe: jax.Array, k: int
 ) -> tuple[jax.Array, jax.Array]:
@@ -338,4 +437,37 @@ def ivf_rescore(
         return None, _score_probed(index, qb, pb, k)
 
     _, (scores, ids) = jax.lax.scan(search_block, None, (qblocks, pblocks))
+    return scores.reshape(-1, k)[:qn], ids.reshape(-1, k)[:qn]
+
+
+@partial(jax.jit, static_argnames=("k", "query_block"))
+def ivf_rescore_mixed(
+    index: IVFIndex,
+    queries: jax.Array,
+    q_mapped: jax.Array,
+    probe: jax.Array,
+    mig_cells: jax.Array,
+    k: int = 10,
+    query_block: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Blocked jnp mixed-state rescore (the "jnp"/"pallas" engine): per
+    candidate, the packed migration bitmap picks the raw-q score (migrated
+    rows, f_new) or the mapped-q score (un-migrated, f_old). Delegates to
+    the mixed kernel's gather oracle per query block."""
+    from repro.kernels.ivf_rescore.ref import ivf_rescore_mixed_ref
+
+    qn = queries.shape[0]
+    qblocks = _pad_to_blocks(queries, query_block)
+    mblocks = _pad_to_blocks(q_mapped, query_block)
+    pblocks = _pad_to_blocks(probe, query_block)
+
+    def search_block(_, inp):
+        qb, mb, pb = inp
+        return None, ivf_rescore_mixed_ref(
+            index.cells, index.cell_ids, mig_cells, qb, mb, pb, k
+        )
+
+    _, (scores, ids) = jax.lax.scan(
+        search_block, None, (qblocks, mblocks, pblocks)
+    )
     return scores.reshape(-1, k)[:qn], ids.reshape(-1, k)[:qn]

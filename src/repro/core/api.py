@@ -88,6 +88,39 @@ class DriftAdapter:
             self._fused = fold_fused_params(self.kind, self.params, self.d_new)
         return self._fused
 
+    def pseudo_inverse(self) -> "DriftAdapter":
+        """Least-squares inverse bridge: maps LEGACY-space vectors back into
+        the new space (the old→new edge of the version graph, cf. Learning
+        Backward Compatible Embeddings).
+
+        Only linear-foldable kinds (op / la / linear / identity, ± DSM)
+        invert in closed form: the folded map y = A x + b (A = diag(s)·M,
+        b = diag(s)·t) inverts to x = A⁺(y − b). For orthogonal Procrustes
+        A⁺ = Aᵀ, so the inverse is exact; for general linear maps it is the
+        least-squares inverse. The final ℓ2 renorm makes the result
+        scale-free, which is what inner-product search over unit rows needs.
+        MLP adapters (and chains containing one) have no closed-form
+        inverse and raise NotImplementedError.
+        """
+        fused_kind, fused = self.as_fused_params()
+        if fused_kind != "linear":
+            raise NotImplementedError(
+                f"kind={self.kind!r} has no closed-form pseudo-inverse "
+                "(only linear-foldable adapters invert; refit an explicit "
+                "old->new adapter instead)"
+            )
+        import jax.numpy as jnp
+
+        a = fused["m"] * fused["s"][:, None]          # diag(s) @ M
+        b = fused["s"] * fused["t"]                   # diag(s) @ t
+        a_pinv = jnp.linalg.pinv(a)
+        return DriftAdapter(
+            kind="linear",
+            params={"core": {"M": a_pinv, "t": -(a_pinv @ b)}},
+            d_new=self.d_old,
+            d_old=self.d_new,
+        )
+
     # -- introspection ------------------------------------------------------
     @property
     def param_count(self) -> int:

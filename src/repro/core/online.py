@@ -160,7 +160,12 @@ class OnlineAdapterManager:
         )
         self.refits += 1
         if self.registry is not None:
-            self.registry.register_edge(
+            # register_bridge (not register_edge): a refit that replaces
+            # the forward edge must keep any AUTO-derived pseudo-inverse
+            # edge in lockstep — otherwise the canary control arm would
+            # score migrated rows through the stale inverse of the
+            # original fit. Explicitly fitted reverse edges are preserved.
+            self.registry.register_bridge(
                 self.src, self.dst, self.adapter, domain=self.domain
             )
         return self.adapter

@@ -205,6 +205,9 @@ class SpaceRegistry:
     def __init__(self):
         self.versions: dict[str, SpaceVersion] = {}
         self._edges: dict[tuple[str, str, Optional[int]], DriftAdapter] = {}
+        # reverse edges register_bridge derived analytically (vs fitted):
+        # only these may be silently refreshed by a later register_bridge
+        self._auto_inverse: set[tuple[str, str, Optional[int]]] = set()
         # bumped on every mutation — serving layers key bridge caches on it
         self.revision = 0
 
@@ -258,7 +261,50 @@ class SpaceRegistry:
                 f"{src}->{dst} needs {sv.dim}->{dv.dim}"
             )
         self._edges[(src, dst, domain)] = adapter
+        # a direct registration takes ownership of the slot: it is no
+        # longer an auto-derived inverse that register_bridge may refresh
+        self._auto_inverse.discard((src, dst, domain))
         self.revision += 1
+
+    def register_bridge(
+        self,
+        src: str,
+        dst: str,
+        adapter: DriftAdapter,
+        domain: Optional[int] = None,
+    ) -> Optional[DriftAdapter]:
+        """Register the forward ``(src, dst)`` edge AND, when the adapter is
+        linear-foldable, its ``(dst, src)`` pseudo-inverse edge.
+
+        The inverse edge is what makes mixed-index serving exact for
+        queries that arrive in the DESTINATION space (the canary control
+        arm during a migration: old-encoder queries must score migrated
+        f_new rows through the old→new map instead of being served from the
+        un-migrated rows only). Returns the registered inverse adapter, or
+        None when the kind has no closed-form inverse (MLP/chain — the
+        forward edge is still registered).
+
+        An EXPLICITLY fitted reverse edge is never clobbered: only reverse
+        edges this method itself derived (tracked by provenance) are
+        refreshed on re-registration — so an online refit that replaces
+        the forward edge through here keeps the pseudo-inverse in lockstep
+        without degrading a hand-fitted old→new adapter."""
+        self.register_edge(src, dst, adapter, domain=domain)
+        inv_key = (dst, src, domain)
+        if inv_key in self._edges and inv_key not in self._auto_inverse:
+            return None          # explicit reverse adapter wins
+        try:
+            inverse = adapter.pseudo_inverse()
+        except (NotImplementedError, AttributeError):
+            # an owned inverse we can no longer derive (e.g. a linear fit
+            # refit as MLP) must not go stale — drop it; consumers fall
+            # back to inverse-less serving
+            if inv_key in self._auto_inverse:
+                self.remove_edge(dst, src, domain)
+            return None
+        self.register_edge(dst, src, inverse, domain=domain)
+        self._auto_inverse.add(inv_key)
+        return inverse
 
     def register_domain_adapters(
         self, src: str, dst: str, adapters: Sequence[DriftAdapter]
@@ -271,6 +317,7 @@ class SpaceRegistry:
         self, src: str, dst: str, domain: Optional[int] = None
     ) -> None:
         del self._edges[(src, dst, domain)]
+        self._auto_inverse.discard((src, dst, domain))
         self.revision += 1
 
     def edge(

@@ -1,7 +1,18 @@
 """IVF gather-rescore: probed-cell streaming matmul + running top-k in one
 Pallas launch — the kernel that removes the (B, nprobe, cap, d) HBM gather
 from the IVF serving path."""
-from repro.kernels.ivf_rescore.ops import ivf_rescore_fused
-from repro.kernels.ivf_rescore.ref import ivf_rescore_ref
+from repro.kernels.ivf_rescore.ops import (
+    ivf_rescore_fused,
+    ivf_rescore_mixed_fused,
+)
+from repro.kernels.ivf_rescore.ref import (
+    ivf_rescore_mixed_ref,
+    ivf_rescore_ref,
+)
 
-__all__ = ["ivf_rescore_fused", "ivf_rescore_ref"]
+__all__ = [
+    "ivf_rescore_fused",
+    "ivf_rescore_mixed_fused",
+    "ivf_rescore_mixed_ref",
+    "ivf_rescore_ref",
+]

@@ -18,6 +18,14 @@ the owning query ``j // nprobe`` are masked to NEG so their folds are
 no-ops. The corpus-axis steps are sequential ("arbitrary") so the running
 top-k scratch persists; query tiles are independent ("parallel").
 
+Two kernels share this body through ``_rescore_step`` (the score function
+is the only difference): the plain rescore scores one query form; the
+MIXED-STATE variant scores the cell tile against BOTH the raw and the
+adapter-mapped query tiles and lets the migration bitmap — packed into the
+same (C, cap) layout as the cell ids and streamed through the same
+index_map — select per candidate slot which score enters the fold, so
+mixed-state IVF stays two launches total (probe + mixed rescore).
+
 Layout requirements (enforced by ``build_ivf`` / the ops wrapper): cap is a
 multiple of 8 (f32 sublane); d should be a multiple of 128 on real TPU
 (same caveat as topk_scan).
@@ -34,6 +42,41 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.topk_scan.kernel import NEG, _CompilerParams, _fold_block
 
 
+def _rescore_step(score, qv_ref, cid_ref, out_s_ref, out_i_ref,
+                  best_s, best_i, *, k, nprobe, q_tile):
+    """Shared per-step body: q_valid tile skip, ownership + pad masking,
+    running top-k fold, final emit. ``score()`` returns the (Qt, cap)
+    scores of the current cell tile (the only side-specific part)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    # q_valid rides the scalar-prefetch channel (NOT a static python int):
+    # per-bucket valid counts from the micro-batcher never retrace or
+    # recompile the kernel — the skip predicate is data, not code
+    @pl.when(i * q_tile < qv_ref[0])
+    def _tile():
+        @pl.when(j == 0)
+        def _init():
+            best_s[...] = jnp.full_like(best_s[...], NEG)
+            best_i[...] = jnp.full_like(best_i[...], -1)
+
+        q_local = j // nprobe              # which tile row owns this step
+        scores = score()                                   # (Qt, cap)
+        cand = jnp.broadcast_to(cid_ref[...], scores.shape)
+        rows = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+        # pads (id -1) and non-owning rows fold as NEG → no-ops in the merge
+        scores = jnp.where((cand >= 0) & (rows == q_local), scores, NEG)
+        new_s, new_i = _fold_block(scores, cand, best_s[...], best_i[...], k)
+        best_s[...] = new_s
+        best_i[...] = new_i
+
+        @pl.when(j == nb - 1)
+        def _emit():
+            out_s_ref[...] = best_s[...]
+            out_i_ref[...] = best_i[...]
+
+
 def _ivf_rescore_kernel(
     probe_ref,      # (Q, nprobe) SMEM — scalar-prefetched probe table
     qv_ref,         # (1,) SMEM — scalar-prefetched valid-query count
@@ -48,37 +91,111 @@ def _ivf_rescore_kernel(
     k: int,
     nprobe: int,
 ):
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    nb = pl.num_programs(1)
-    q_tile = q_ref.shape[0]
+    del probe_ref   # consumed by the BlockSpec index_map, not the body
+    _rescore_step(
+        lambda: jnp.dot(
+            q_ref[...], cell_ref[0].T, preferred_element_type=jnp.float32
+        ),
+        qv_ref, cid_ref, out_s_ref, out_i_ref, best_s, best_i,
+        k=k, nprobe=nprobe, q_tile=q_ref.shape[0],
+    )
 
-    # q_valid rides the scalar-prefetch channel (NOT a static python int):
-    # per-bucket valid counts from the micro-batcher never retrace or
-    # recompile the kernel — the skip predicate is data, not code
-    @pl.when(i * q_tile < qv_ref[0])
-    def _tile():
-        @pl.when(j == 0)
-        def _init():
-            best_s[...] = jnp.full_like(best_s[...], NEG)
-            best_i[...] = jnp.full_like(best_i[...], -1)
 
-        q_local = j // nprobe              # which tile row owns this step
-        scores = jnp.dot(
+def _ivf_rescore_mixed_kernel(
+    probe_ref,      # (Q, nprobe) SMEM — scalar-prefetched probe table
+    qv_ref,         # (1,) SMEM — scalar-prefetched valid-query count
+    q_ref,          # (Qt, d) VMEM — raw query tile (scores migrated rows)
+    qm_ref,         # (Qt, d) VMEM — adapter-mapped tile (un-migrated rows)
+    cell_ref,       # (1, cap, d) VMEM — the probed cell's packed vectors
+    cid_ref,        # (1, cap) VMEM — the cell's global row ids, -1 = pad
+    mig_ref,        # (1, cap) VMEM — per-slot migration bits, cid-aligned
+    out_s_ref,      # (Qt, k)
+    out_i_ref,      # (Qt, k)
+    best_s,         # scratch (Qt, k) f32
+    best_i,         # scratch (Qt, k) i32
+    *,
+    k: int,
+    nprobe: int,
+):
+    del probe_ref   # consumed by the BlockSpec index_map, not the body
+
+    def dual_score():
+        s_native = jnp.dot(
             q_ref[...], cell_ref[0].T, preferred_element_type=jnp.float32
         )                                                  # (Qt, cap)
-        cand = jnp.broadcast_to(cid_ref[...], scores.shape)
-        rows = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
-        # pads (id -1) and non-owning rows fold as NEG → no-ops in the merge
-        scores = jnp.where((cand >= 0) & (rows == q_local), scores, NEG)
-        new_s, new_i = _fold_block(scores, cand, best_s[...], best_i[...], k)
-        best_s[...] = new_s
-        best_i[...] = new_i
+        s_bridged = jnp.dot(
+            qm_ref[...], cell_ref[0].T, preferred_element_type=jnp.float32
+        )
+        migrated = jnp.broadcast_to(mig_ref[...], s_native.shape) > 0
+        return jnp.where(migrated, s_native, s_bridged)
 
-        @pl.when(j == nb - 1)
-        def _emit():
-            out_s_ref[...] = best_s[...]
-            out_i_ref[...] = best_i[...]
+    _rescore_step(
+        dual_score, qv_ref, cid_ref, out_s_ref, out_i_ref, best_s, best_i,
+        k=k, nprobe=nprobe, q_tile=q_ref.shape[0],
+    )
+
+
+def _rescore_call(
+    kernel,
+    query_arrays: tuple,    # one or more (Q, d) arrays, tile-resident
+    cells: jax.Array,       # (C, cap, d)
+    cell_ids: jax.Array,    # (C, cap)
+    extra_cell_arrays: tuple,  # zero or more (C, cap) arrays, cell-streamed
+    probe: jax.Array,       # (Q, nprobe) int32
+    q_valid: jax.Array,     # (1,) int32
+    *,
+    k: int,
+    q_tile: int,
+    interpret: bool,
+):
+    """Shared pallas_call builder: every rescore variant differs only in
+    how many query tiles ride along and which (C, cap) side tables stream
+    through the probe-driven index_map next to the cell ids."""
+    c, cap, d = cells.shape
+    q, nprobe = probe.shape
+    assert q % q_tile == 0
+    assert all(qa.shape == (q, d) for qa in query_arrays)
+    grid = (q // q_tile, q_tile * nprobe)
+
+    def cell_map(i, j, p, qv):
+        return (p[i * q_tile + j // nprobe, j % nprobe], 0, 0)
+
+    def slot_map(i, j, p, qv):
+        return cell_map(i, j, p, qv)[:2]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            *[
+                pl.BlockSpec((q_tile, d), lambda i, j, p, qv: (i, 0))
+                for _ in query_arrays
+            ],
+            pl.BlockSpec((1, cap, d), cell_map),
+            pl.BlockSpec((1, cap), slot_map),
+            *[pl.BlockSpec((1, cap), slot_map) for _ in extra_cell_arrays],
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile, k), lambda i, j, p, qv: (i, 0)),
+            pl.BlockSpec((q_tile, k), lambda i, j, p, qv: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((q_tile, k), jnp.float32),
+            pltpu.VMEM((q_tile, k), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(kernel, k=k, nprobe=nprobe),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(probe, q_valid, *query_arrays, cells, cell_ids, *extra_cell_arrays)
 
 
 def ivf_rescore_pallas(
@@ -99,43 +216,30 @@ def ivf_rescore_pallas(
     ``q_valid`` is a DYNAMIC (1,) scalar so per-bucket counts from the
     micro-batcher share one compiled kernel.
     """
-    c, cap, d = cells.shape
-    q, nprobe = probe.shape
-    assert q % q_tile == 0 and queries.shape == (q, d)
-    grid = (q // q_tile, q_tile * nprobe)
-
-    def cell_map(i, j, p, qv):
-        return (p[i * q_tile + j // nprobe, j % nprobe], 0, 0)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((q_tile, d), lambda i, j, p, qv: (i, 0)),
-            pl.BlockSpec((1, cap, d), cell_map),
-            pl.BlockSpec(
-                (1, cap), lambda i, j, p, qv: cell_map(i, j, p, qv)[:2]
-            ),
-        ],
-        out_specs=[
-            pl.BlockSpec((q_tile, k), lambda i, j, p, qv: (i, 0)),
-            pl.BlockSpec((q_tile, k), lambda i, j, p, qv: (i, 0)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((q_tile, k), jnp.float32),
-            pltpu.VMEM((q_tile, k), jnp.int32),
-        ],
+    return _rescore_call(
+        _ivf_rescore_kernel, (queries,), cells, cell_ids, (), probe,
+        q_valid, k=k, q_tile=q_tile, interpret=interpret,
     )
-    kernel = functools.partial(_ivf_rescore_kernel, k=k, nprobe=nprobe)
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((q, k), jnp.float32),
-            jax.ShapeDtypeStruct((q, k), jnp.int32),
-        ],
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
-        ),
+
+
+def ivf_rescore_mixed_pallas(
+    cells: jax.Array,       # (C, cap, d) packed cell vectors, zero pads
+    cell_ids: jax.Array,    # (C, cap) int32 global row ids, -1 = pad
+    mig_cells: jax.Array,   # (C, cap) int32 migration bits, cid-aligned
+    queries: jax.Array,     # (Q, d) raw — padded to q_tile multiple upstream
+    q_mapped: jax.Array,    # (Q, d) adapter-mapped — padded like queries
+    probe: jax.Array,       # (Q, nprobe) int32 cell ids, in [0, C)
+    q_valid: jax.Array,     # (1,) int32 — valid-query count (dynamic)
+    *,
+    k: int,
+    q_tile: int = 8,
+    interpret: bool = False,
+):
+    """Mixed-state rescore: per probed cell, score both query forms and let
+    the migration bitmap pick per slot; top-k per query. Same grid, probe
+    prefetch, and q_valid contract as ``ivf_rescore_pallas``."""
+    return _rescore_call(
+        _ivf_rescore_mixed_kernel, (queries, q_mapped), cells, cell_ids,
+        (mig_cells,), probe, q_valid, k=k, q_tile=q_tile,
         interpret=interpret,
-    )(probe, q_valid, queries, cells, cell_ids)
+    )

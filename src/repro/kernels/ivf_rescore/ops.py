@@ -14,9 +14,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import is_cpu as _is_cpu, pad_rows as _pad_rows
-from repro.kernels.ivf_rescore.kernel import ivf_rescore_pallas
+from repro.kernels.ivf_rescore.kernel import (
+    ivf_rescore_mixed_pallas,
+    ivf_rescore_pallas,
+)
 
-__all__ = ["ivf_rescore_fused"]
+__all__ = ["ivf_rescore_fused", "ivf_rescore_mixed_fused"]
 
 
 @partial(jax.jit, static_argnames=("k", "q_tile", "interpret"))
@@ -55,6 +58,53 @@ def ivf_rescore_fused(
         cells,
         cell_ids,
         _pad_rows(queries, q_tile),
+        _pad_rows(probe, q_tile),
+        jnp.asarray(qv, jnp.int32).reshape(1),
+        k=k,
+        q_tile=q_tile,
+        interpret=interpret,
+    )
+    return out_s[:q], out_i[:q]
+
+
+@partial(jax.jit, static_argnames=("k", "q_tile", "interpret"))
+def ivf_rescore_mixed_fused(
+    cells: jax.Array,
+    cell_ids: jax.Array,
+    mig_cells: jax.Array,
+    queries: jax.Array,
+    q_mapped: jax.Array,
+    probe: jax.Array,
+    k: int = 10,
+    q_valid=None,
+    q_tile: int = 8,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Mixed-state rescore in one launch: each probed (cap, d) cell tile is
+    scored against raw q AND the adapter-mapped q', and ``mig_cells`` — the
+    migration bitmap packed into the same (C, cap) layout as ``cell_ids``
+    (see ``ann/ivf.migration_cells``) — selects per slot which score enters
+    the running top-k. The bitmap is a DEVICE operand, so migrate_batch
+    flipping bits never retraces. Same padding, probe-clamping, and dynamic
+    ``q_valid`` contract as ``ivf_rescore_fused``.
+    """
+    if interpret is None:
+        interpret = _is_cpu()
+    c, cap, _ = cells.shape
+    if cap % 8:
+        raise ValueError(
+            f"cell capacity {cap} is not a multiple of 8 — rebuild the index "
+            "with build_ivf (it rounds cap up to the f32 sublane)"
+        )
+    q = queries.shape[0]
+    qv = q if q_valid is None else jnp.minimum(q, q_valid)
+    probe = jnp.clip(probe.astype(jnp.int32), 0, c - 1)
+    out_s, out_i = ivf_rescore_mixed_pallas(
+        cells,
+        cell_ids,
+        mig_cells.astype(jnp.int32),
+        _pad_rows(queries, q_tile),
+        _pad_rows(q_mapped, q_tile),
         _pad_rows(probe, q_tile),
         jnp.asarray(qv, jnp.int32).reshape(1),
         k=k,

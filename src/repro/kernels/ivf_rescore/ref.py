@@ -31,3 +31,32 @@ def ivf_rescore_ref(
     top_s, pos = jax.lax.top_k(scores, k)
     top_i = jnp.take_along_axis(cand_ids, pos, axis=1)
     return top_s, top_i
+
+
+def ivf_rescore_mixed_ref(
+    cells: jax.Array,       # (C, cap, d)
+    cell_ids: jax.Array,    # (C, cap) int32, -1 = pad
+    mig_cells: jax.Array,   # (C, cap) int32 migration bits, cid-aligned
+    queries: jax.Array,     # (Q, d) raw
+    q_mapped: jax.Array,    # (Q, d) adapter-mapped
+    probe: jax.Array,       # (Q, nprobe) int32
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Mixed-state oracle: gather the probed cells, score both query forms,
+    select per candidate by the packed migration bitmap, top-k.
+
+    Materializes the (Q, nprobe, cap, d) candidate tensor the mixed kernel
+    avoids; the kernel's parity gate pins to this exact math.
+    """
+    q, d = queries.shape
+    neg = jnp.finfo(jnp.float32).min
+    cand_vecs = cells[probe].reshape(q, -1, d)            # (Q, np*cap, d)
+    cand_ids = cell_ids[probe].reshape(q, -1)             # (Q, np*cap)
+    cand_mig = mig_cells[probe].reshape(q, -1)
+    s_native = jnp.einsum("bd,bnd->bn", queries, cand_vecs)
+    s_bridged = jnp.einsum("bd,bnd->bn", q_mapped, cand_vecs)
+    scores = jnp.where(cand_mig > 0, s_native, s_bridged)
+    scores = jnp.where(cand_ids >= 0, scores, neg)
+    top_s, pos = jax.lax.top_k(scores, k)
+    top_i = jnp.take_along_axis(cand_ids, pos, axis=1)
+    return top_s, top_i

@@ -1,0 +1,17 @@
+"""One-pass bitmap-masked mixed-state scan: during a migration window each
+corpus block is scored against BOTH g(q) and raw q in a single launch, the
+per-row migration bitmap selecting which score enters the running top-k —
+no 2k-per-side over-fetch, no host merge."""
+from repro.kernels.mixed_scan.ops import mixed_bridged_search
+from repro.kernels.mixed_scan.ref import (
+    masked_topk_scan,
+    mixed_merge_scan,
+    mixed_scan_ref,
+)
+
+__all__ = [
+    "mixed_bridged_search",
+    "masked_topk_scan",
+    "mixed_merge_scan",
+    "mixed_scan_ref",
+]

@@ -1,0 +1,202 @@
+"""Pallas TPU kernel: one-pass bitmap-masked mixed-state scan.
+
+During a migration window (paper §5.6 deferred re-embedding, cf. DeDrift's
+split-index serving) the index is MIXED-STATE: migrated rows already hold
+f_new vectors, the rest still hold f_old. A new-space query used to be
+served by TWO full fused scans — a bridged scan g(q) whose top list was
+masked to un-migrated rows and a native scan q masked to migrated rows —
+each over-fetching 2k candidates so its top list survived the masking, then
+merged on host.
+
+This kernel serves the same query in ONE launch: each corpus block is
+scored against BOTH the adapter-transformed query g(q) (in VMEM scratch,
+computed once on the first corpus step — the fused_search machinery) and
+the raw query q; a per-row migration bitmap, streamed block-aligned with
+the corpus, selects per row which of the two scores enters the single
+running top-k in VMEM. No over-fetch, no host merge, and the selection is
+exact (the two-scan path could lose a candidate past its 2k window).
+
+Grid: (query_tiles, corpus_blocks); corpus axis sequential ("arbitrary") so
+the VMEM carries (transformed tile + running top-k) persist across it. The
+bitmap rides its own BlockSpec, (1, block_rows) per step, so it streams
+HBM→VMEM alongside the corpus block it masks.
+
+Mixed state requires d_new == d_old: migration overwrites rows of the SAME
+(N, d) corpus tensor in place (``replace_rows``), so raw q and g(q) score
+against the same blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fused_search.kernel import (
+    _linear_transform,
+    _mlp_transform,
+)
+from repro.kernels.topk_scan.kernel import NEG, _CompilerParams, _fold_block
+
+
+def _mixed_step(transform, x_ref, c_ref, g_ref, out_refs, qx, best_s, best_i,
+                *, k, block_rows, n_valid, q_valid):
+    """Dual-score + bitmap-select + fold body; ``transform`` runs on step 0.
+
+    Per corpus block: s_bridged = g(q)·Cᵀ, s_native = q·Cᵀ, then the block's
+    bitmap slice picks s_native for migrated rows and s_bridged for the
+    rest — every corpus row enters the running top-k exactly once, with the
+    score of the space it actually lives in.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+    q_tile = qx.shape[0]
+
+    # query tiles entirely past q_valid are micro-batcher padding: skip the
+    # transform + both matmuls + fold + emit (their output rows are undefined)
+    @pl.when(i * q_tile < q_valid)
+    def _tile():
+        @pl.when(j == 0)
+        def _init():
+            qx[...] = transform()
+            best_s[...] = jnp.full_like(best_s[...], NEG)
+            best_i[...] = jnp.full_like(best_i[...], -1)
+
+        raw = x_ref[...].astype(jnp.float32)
+        s_bridged = jnp.dot(
+            qx[...], c_ref[...].T, preferred_element_type=jnp.float32
+        )                                                      # (Qt, C)
+        s_native = jnp.dot(
+            raw, c_ref[...].T, preferred_element_type=jnp.float32
+        )
+        migrated = g_ref[...][0] > 0                           # (C,)
+        scores = jnp.where(migrated[None, :], s_native, s_bridged)
+        row_ids = j * block_rows + jax.lax.broadcasted_iota(
+            jnp.int32, scores.shape, 1
+        )
+        scores = jnp.where(row_ids < n_valid, scores, NEG)
+        new_s, new_i = _fold_block(
+            scores, row_ids, best_s[...], best_i[...], k
+        )
+        best_s[...] = new_s
+        best_i[...] = new_i
+
+        @pl.when(j == nb - 1)
+        def _emit():
+            out_refs[0][...] = best_s[...]
+            out_refs[1][...] = best_i[...]
+
+
+def _mixed_linear_kernel(
+    x_ref, m_ref, t_ref, s_ref, c_ref, g_ref, *refs,
+    k, block_rows, n_valid, q_valid, renormalize,
+):
+    out_refs, (qx, best_s, best_i) = refs[:-3], refs[-3:]
+    _mixed_step(
+        lambda: _linear_transform(x_ref, m_ref, t_ref, s_ref, renormalize),
+        x_ref, c_ref, g_ref, out_refs, qx, best_s, best_i,
+        k=k, block_rows=block_rows, n_valid=n_valid, q_valid=q_valid,
+    )
+
+
+def _mixed_mlp_kernel(
+    x_ref, w1_ref, b1_ref, w2_ref, b2_ref, p_ref, s_ref, c_ref, g_ref, *refs,
+    k, block_rows, n_valid, q_valid, renormalize,
+):
+    out_refs, (qx, best_s, best_i) = refs[:-3], refs[-3:]
+    _mixed_step(
+        lambda: _mlp_transform(
+            x_ref, w1_ref, b1_ref, w2_ref, b2_ref, p_ref, s_ref, renormalize
+        ),
+        x_ref, c_ref, g_ref, out_refs, qx, best_s, best_i,
+        k=k, block_rows=block_rows, n_valid=n_valid, q_valid=q_valid,
+    )
+
+
+def _call(kernel, weights, queries, corpus, migrated, weight_shapes, *, k, d,
+          q_tile, block_rows, interpret):
+    n, _ = corpus.shape
+    q, _ = queries.shape
+    assert n % block_rows == 0 and q % q_tile == 0
+    assert migrated.shape == (1, n)
+    grid = (q // q_tile, n // block_rows)
+    rep = lambda i, j: (0, 0)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_tile, d), lambda i, j: (i, 0)),
+            *[pl.BlockSpec(s, rep) for s in weight_shapes],
+            pl.BlockSpec((block_rows, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, block_rows), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((q_tile, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((q_tile, d), jnp.float32),
+            pltpu.VMEM((q_tile, k), jnp.float32),
+            pltpu.VMEM((q_tile, k), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(queries, *weights, corpus, migrated)
+
+
+def mixed_linear_scan_pallas(
+    queries, m, t, s, corpus, migrated, *, k, n_valid, q_valid=None,
+    renormalize=True, q_tile=128, block_rows=1024, interpret=False,
+):
+    """queries (Q, d) × bitmap-selected {raw | S·(M q + t)} scores over
+    corpus (N, d) → top-k. ``migrated`` is the (1, N) int bitmap: 1 ⇒ the
+    row holds an f_new vector and is scored with raw q, 0 ⇒ f_old, scored
+    with the transformed query. Q, N, and the bitmap must be pre-padded to
+    q_tile / block_rows multiples (pad bits are dead — n_valid masks them).
+    """
+    d = corpus.shape[1]
+    kernel = functools.partial(
+        _mixed_linear_kernel, k=k, block_rows=block_rows, n_valid=n_valid,
+        q_valid=queries.shape[0] if q_valid is None else q_valid,
+        renormalize=renormalize,
+    )
+    weights = (m, t.reshape(1, -1), s.reshape(1, -1))
+    shapes = (m.shape, (1, d), (1, d))
+    return _call(
+        kernel, weights, queries, corpus, migrated, shapes, k=k, d=d,
+        q_tile=q_tile, block_rows=block_rows, interpret=interpret,
+    )
+
+
+def mixed_mlp_scan_pallas(
+    queries, w1, b1, w2, b2, p, s, corpus, migrated, *, k, n_valid,
+    q_valid=None, renormalize=True, q_tile=128, block_rows=1024,
+    interpret=False,
+):
+    """Residual-MLP variant of the one-pass mixed-state scan."""
+    d = corpus.shape[1]
+    hidden = w2.shape[1]
+    kernel = functools.partial(
+        _mixed_mlp_kernel, k=k, block_rows=block_rows, n_valid=n_valid,
+        q_valid=queries.shape[0] if q_valid is None else q_valid,
+        renormalize=renormalize,
+    )
+    weights = (
+        w1, b1.reshape(1, -1), w2, b2.reshape(1, -1), p, s.reshape(1, -1)
+    )
+    shapes = (
+        w1.shape, (1, hidden), w2.shape, (1, d), p.shape, (1, d)
+    )
+    return _call(
+        kernel, weights, queries, corpus, migrated, shapes, k=k, d=d,
+        q_tile=q_tile, block_rows=block_rows, interpret=interpret,
+    )

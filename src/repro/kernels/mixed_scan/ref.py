@@ -1,0 +1,120 @@
+"""Pure-jnp oracle for the mixed-state scan kernel: the exact TWO-SCAN form.
+
+The kernel computes a single top-k over per-row bitmap-selected scores.
+This reference computes the mathematically equivalent two-scan merge — a
+bridged scan over the un-migrated rows and a native scan over the migrated
+rows, each masked to its OWN rows *before* its top-k (so neither side can
+lose a candidate to the other's crowding, unlike the retired 2k-over-fetch
+production path), merged on score. Every corpus row is a real candidate on
+exactly one side, so the merged top-k equals the kernel's one-pass top-k
+exactly — validating the fused kernel against a genuinely different
+formulation of the same search.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adapters import adapter_apply
+
+NEG = float(jnp.finfo(jnp.float32).min)
+
+
+@partial(jax.jit, static_argnames=("k", "block_rows"))
+def masked_topk_scan(
+    queries: jax.Array,
+    corpus: jax.Array,
+    keep: jax.Array,
+    k: int,
+    block_rows: int = 65536,
+) -> tuple[jax.Array, jax.Array]:
+    """Exact top-k over the corpus rows where ``keep`` is set.
+
+    Blocked like ``flat_search_jnp`` (the (Q, N) score matrix never
+    materializes) but rows outside ``keep`` are masked to NEG *before* the
+    per-block top-k — excluded rows cannot crowd real candidates out of any
+    window. Rows that end up with no real candidate emit NEG/-1 slots.
+    """
+    n, d = corpus.shape
+    q = queries.shape[0]
+    block_rows = min(block_rows, n)
+    nblocks = -(-n // block_rows)
+    padded = nblocks * block_rows
+    if padded != n:
+        corpus = jnp.concatenate(
+            [corpus, jnp.zeros((padded - n, d), corpus.dtype)], axis=0
+        )
+    keep = jnp.concatenate(
+        [keep.astype(bool), jnp.zeros((padded - n,), bool)]
+    ) if padded != n else keep.astype(bool)
+    blocks = corpus.reshape(nblocks, block_rows, d)
+    keep_blocks = keep.reshape(nblocks, block_rows)
+
+    def scan_block(carry, inp):
+        best_s, best_i = carry
+        block, kb_mask, bidx = inp
+        scores = (queries @ block.T).astype(jnp.float32)      # (Q, B)
+        scores = jnp.where(kb_mask[None, :], scores, NEG)
+        kb = min(k, block_rows)
+        blk_s, blk_pos = jax.lax.top_k(scores, kb)
+        blk_i = bidx * block_rows + blk_pos
+        cat_s = jnp.concatenate([best_s, blk_s], axis=1)
+        cat_i = jnp.concatenate([best_i, blk_i.astype(jnp.int32)], axis=1)
+        top_s, pos = jax.lax.top_k(cat_s, k)
+        top_i = jnp.take_along_axis(cat_i, pos, axis=1)
+        return (top_s, top_i), None
+
+    init = (
+        jnp.full((q, k), NEG, jnp.float32),
+        jnp.full((q, k), -1, jnp.int32),
+    )
+    (scores, ids), _ = jax.lax.scan(
+        scan_block, init, (blocks, keep_blocks, jnp.arange(nblocks))
+    )
+    return scores, jnp.where(scores > NEG, ids, -1)
+
+
+@partial(jax.jit, static_argnames=("k", "block_rows"))
+def mixed_merge_scan(
+    q_raw: jax.Array,
+    q_mapped: jax.Array,
+    corpus: jax.Array,
+    migrated: jax.Array,
+    k: int = 10,
+    block_rows: int = 65536,
+) -> tuple[jax.Array, jax.Array]:
+    """Exact two-scan mixed-state merge over a pre-mapped query pair.
+
+    Bridged side: g(q) against the un-migrated rows; native side: raw q
+    against the migrated rows; the two (disjoint-candidate) top lists merge
+    on score. This IS the jnp serving path for mixed-state stores on the
+    "jnp"/"pallas" backends, and the parity oracle the one-pass kernel is
+    gated against.
+    """
+    mig = jnp.asarray(migrated, bool)
+    s_b, i_b = masked_topk_scan(q_mapped, corpus, ~mig, k, block_rows)
+    s_n, i_n = masked_topk_scan(q_raw, corpus, mig, k, block_rows)
+    s = jnp.concatenate([s_b, s_n], axis=1)
+    i = jnp.concatenate([i_b, i_n], axis=1)
+    top_s, pos = jax.lax.top_k(s, k)
+    top_i = jnp.take_along_axis(i, pos, axis=1)
+    return top_s, jnp.where(top_s > NEG, top_i, -1)
+
+
+def mixed_scan_ref(
+    kind: str,
+    params: dict,
+    queries: jax.Array,
+    corpus: jax.Array,
+    migrated: jax.Array,
+    k: int = 10,
+    renormalize: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Adapter-kind entry point: apply the core-library adapter math, then
+    the exact two-scan merge — the production math the one-pass kernel
+    replaces, pinned to `repro/core/adapters.py:adapter_apply` (not a
+    lookalike)."""
+    q_mapped = adapter_apply(kind, params, queries, renormalize=renormalize)
+    return mixed_merge_scan(queries, q_mapped, corpus, migrated, k=k)

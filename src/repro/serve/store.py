@@ -22,12 +22,22 @@ full lifecycle as explicit, audited stages::
     # pre-upgrade serving (indexes are functional; the snapshot never mutated)
 
 During migration the index is a mixed-state store (cf. DeDrift): migrated
-rows hold f_new vectors, the rest f_old. A new-space query is then served by
-TWO scans masked against the migration bitmap — the bridged scan g(q) keeps
-only un-migrated candidates, the native scan q keeps only migrated ones —
-merged on score. On IVF the native side probes with g(q) (cells still live
-in old-space k-means geometry) but rescores with raw q, which the two-launch
-rescore path supports directly.
+rows hold f_new vectors, the rest f_old. A new-space query is served by the
+protocol-level ``search_mixed``: on ``backend="fused"`` that is ONE
+``kernels/mixed_scan`` launch (flat) — each corpus block scored against
+both g(q) and raw q, the migration bitmap selecting per row which score
+enters the single running top-k — or two launches (IVF: adapter-folded
+probe + bitmap-masked rescore; cells keep old-space k-means geometry until
+the cutover re-pack, so g(q) probes while the bitmap splits the rescore).
+Other backends serve the exact jnp two-scan merge, each side masked to its
+own rows before its top-k.
+
+Old-space queries against the mixed index (the canary CONTROL arm while
+migration runs) are exact too, when the bridge kind permits: ``fit``
+registers the old→new pseudo-inverse edge for linear-foldable kinds
+(cf. Learning Backward Compatible Embeddings), and the control arm then
+runs the same mixed scan with the bitmap inverted — raw q_old scores the
+un-migrated f_old rows, g⁻¹(q_old) the migrated f_new rows.
 """
 from __future__ import annotations
 
@@ -41,7 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ann import SearchBackend
-from repro.ann.ivf import IVFIndex, build_ivf, ivf_rescore
+from repro.ann.ivf import IVFIndex, build_ivf, ivf_rescore, migration_cells
 from repro.core.api import DriftAdapter
 from repro.core.registry import ChainedAdapter, SpaceRegistry
 from repro.core.trainer import FitConfig
@@ -121,6 +131,14 @@ class UpgradeHandle:
         self._snap_version = store.serving_version
         n = store.index.size
         self._migrated = np.zeros(n, dtype=bool)
+        # device-side bitmap (+ IVF (C, cap) packing) cache: the serving
+        # path must not pay an O(N) host→device upload (or an O(C·cap)
+        # repack) per query batch — only per migrate_batch
+        self._mask_cache: dict = {}
+        # row ids the LAST migrate_batch call actually migrated (drivers
+        # feeding an online refit loop consume these instead of guessing
+        # the handle's selection order)
+        self.last_migrated_ids: np.ndarray = np.empty(0, np.int64)
         self._new_rows: Optional[np.ndarray] = None
         # False while migration only buffers rows (legacy orchestrator
         # semantics: the live index stays pure-old until cutover)
@@ -161,6 +179,27 @@ class UpgradeHandle:
     def migrated_mask(self) -> np.ndarray:
         return self._migrated
 
+    def _device_migration(
+        self, index: SearchBackend, inverted: bool = False
+    ) -> tuple[jax.Array, Optional[jax.Array]]:
+        """Cached (bitmap, IVF mig_cells) device operands for search_mixed.
+
+        Invalidated by migrate_batch; safe across the functional index
+        swaps replace_rows performs because the packed cell-id layout never
+        changes mid-migration (only the cutover re-pack rebuilds it, and
+        the mixed path is dead by then)."""
+        key = "inv" if inverted else "fwd"
+        hit = self._mask_cache.get(key)
+        if hit is None:
+            mask = ~self._migrated if inverted else self._migrated
+            bitmap = jnp.asarray(mask)
+            cells = (
+                migration_cells(index.cell_ids, bitmap)
+                if isinstance(index, IVFIndex) else None
+            )
+            hit = self._mask_cache[key] = (bitmap, cells)
+        return hit
+
     # -- stage 1: fit --------------------------------------------------------
     def fit(
         self,
@@ -169,11 +208,14 @@ class UpgradeHandle:
         config: Optional[FitConfig] = None,
     ) -> DriftAdapter:
         """Fit the bridge adapter on ⟨f_new, f_old⟩ pairs and register it as
-        the registry edge ``to_version -> from_version``."""
+        the registry edge ``to_version -> from_version`` — plus, for
+        linear-foldable kinds, the ``from_version -> to_version``
+        pseudo-inverse edge that keeps the canary control arm exact while
+        the index is mixed-state."""
         self._require(UpgradeStage.CREATED)
         cfg = config or self.fit_config or FitConfig(kind="mlp")
         self.adapter = DriftAdapter.fit(b_pairs, a_pairs, config=cfg)
-        self.store.registry.register_edge(
+        inverse = self.store.registry.register_bridge(
             self.to_version, self.from_version, self.adapter
         )
         info = self.adapter.fit_info
@@ -181,7 +223,8 @@ class UpgradeHandle:
             UpgradeStage.FITTED,
             f"kind={self.adapter.kind} pairs={int(b_pairs.shape[0])} "
             f"fit={info.fit_seconds:.1f}s "
-            f"bytes={self.adapter.param_bytes}",
+            f"bytes={self.adapter.param_bytes} "
+            f"inverse={'yes' if inverse is not None else 'no'}",
         )
         return self.adapter
 
@@ -316,6 +359,11 @@ class UpgradeHandle:
                 )
                 self._index_mixed = True
             self._migrated[todo] = True
+            self._mask_cache.clear()
+        # published only AFTER the rows actually migrated: a provider that
+        # raises mid-batch must not leave drivers (online refit loops)
+        # believing these rows hold f_new vectors
+        self.last_migrated_ids = todo
         if self.stage != UpgradeStage.MIGRATING:
             self._transition(UpgradeStage.MIGRATING)
         return self.progress
@@ -445,7 +493,9 @@ class VectorStore:
         is deployed, as with a bare QueryRouter) or the serving version.
         Explicit spaces route through the registry: the serving space is
         native, anything else bridges through the composed chain. During
-        migration, new-space queries take the mixed-state merged scan."""
+        migration, new-space queries take the bitmap-masked mixed scan
+        (one fused launch on flat, two on IVF) and serving-space queries
+        take the inverse-edge mixed scan when the bridge kind permits."""
         h = self._active
         if space is None:
             space = (
@@ -468,17 +518,40 @@ class VectorStore:
             scores, ids, kind = self._upgrade_path(h, queries, k, q_valid)
         elif space == self.serving_version:
             # native — bypasses any installed bridge adapter (canary control
-            # arm: old-encoder traffic keeps old-native serving)
-            scores, ids = self.index.search(
-                queries, k=k, q_valid=q_valid, **self._index_kwargs()
-            )
-            kind = "none"
+            # arm: old-encoder traffic keeps old-native serving). While a
+            # migration holds the index mixed-state, the control arm scores
+            # migrated rows through the pseudo-inverse edge when one exists
+            # (exact serving) instead of from the un-migrated rows only.
+            out = None
+            if self._serving_mixed(h):
+                out = self._inverse_mixed(h, queries, k, q_valid)
+            if out is not None:
+                scores, ids = out[0], out[1]
+                kind = f"inverse-mixed:{out[2]}"
+            else:
+                scores, ids = self.index.search(
+                    queries, k=k, q_valid=q_valid, **self._index_kwargs()
+                )
+                kind = "none"
         else:
+            # a THIRD registered space (neither the upgrade target nor the
+            # serving version): bridge into the serving space, then — while
+            # the index is mixed-state — the same inverse-mixed scan keeps
+            # its migrated rows exact too (without an inverse edge the
+            # bridged scan is bitmap-blind, approximate on migrated rows)
             bridge = self.bridge(space)
-            scores, ids = self.index.search_bridged(
-                bridge, queries, k=k, q_valid=q_valid, **self._index_kwargs()
-            )
-            kind = bridge.kind
+            out = None
+            if self._serving_mixed(h):
+                out = self._inverse_mixed(h, bridge.apply(queries), k, q_valid)
+            if out is not None:
+                scores, ids = out[0], out[1]
+                kind = f"mixed-bridged:{bridge.kind}"
+            else:
+                scores, ids = self.index.search_bridged(
+                    bridge, queries, k=k, q_valid=q_valid,
+                    **self._index_kwargs()
+                )
+                kind = bridge.kind
         return SearchResult(
             scores=scores,
             ids=ids,
@@ -486,27 +559,52 @@ class VectorStore:
             latency_s=time.perf_counter() - t0,
         )
 
+    @staticmethod
+    def _serving_mixed(h: Optional[UpgradeHandle]) -> bool:
+        """True while the LIVE index holds a mix of f_old and f_new rows."""
+        return (
+            h is not None and h.bridge_live and h._index_mixed
+            and h.progress > 0.0
+        )
+
+    def _live_bridge(self, h: UpgradeHandle) -> Bridge:
+        """The bridge serving the live upgrade, resolved THROUGH the
+        registry (cached on its revision): an OnlineAdapterManager
+        decorating the ``to_version -> from_version`` edge atomically
+        swaps what mid-migration traffic serves with, refit by refit."""
+        try:
+            return self.bridge(h.to_version)
+        except KeyError:          # edge removed out-of-band: handle's copy
+            return h.adapter
+
     def _upgrade_path(
         self, h: UpgradeHandle, queries: jax.Array, k: int, q_valid
     ) -> tuple[jax.Array, jax.Array, str]:
         """New-space traffic while an upgrade is live: pure bridge before
         migration starts (or while it only buffers, serve_mixed=False),
-        mixed-state merge during, native-rescore at 100 %."""
+        one-launch mixed-state scan during, native-rescore at 100 %."""
         progress = h.progress if h._index_mixed else 0.0
+        bridge = self._live_bridge(h)
         if progress == 0.0:
             s, i = self.index.search_bridged(
-                h.adapter, queries, k=k, q_valid=q_valid,
+                bridge, queries, k=k, q_valid=q_valid,
                 **self._index_kwargs(),
             )
-            return s, i, h.adapter.kind
+            return s, i, bridge.kind
         if progress == 1.0:
-            s, i = self._native_scan_mixed(h, queries, k, q_valid)
+            s, i = self._native_scan_mixed(bridge, queries, k, q_valid)
             return s, i, "native-mixed"
-        s, i = self._mixed_search(h, queries, k, q_valid)
-        return s, i, f"mixed:{h.adapter.kind}"
+        bitmap, mig_cells = h._device_migration(self.index)
+        kwargs = self._index_kwargs()
+        if mig_cells is not None:
+            kwargs["mig_cells"] = mig_cells
+        s, i = self.index.search_mixed(
+            bridge, queries, bitmap, k=k, q_valid=q_valid, **kwargs,
+        )
+        return s, i, f"mixed:{bridge.kind}"
 
     def _native_scan_mixed(
-        self, h: UpgradeHandle, queries: jax.Array, k: int, q_valid
+        self, bridge: Bridge, queries: jax.Array, k: int, q_valid
     ) -> tuple[jax.Array, jax.Array]:
         """Raw-q scoring against migrated (f_new) rows.
 
@@ -516,38 +614,38 @@ class VectorStore:
         rescore path supports exactly this split."""
         index = self.index
         if isinstance(index, IVFIndex):
-            q_b = h.adapter.apply(queries)
+            q_b = bridge.apply(queries)
             nprobe = min(self.nprobe, index.n_cells)
             _, probe = jax.lax.top_k(q_b @ index.centroids.T, nprobe)
             return ivf_rescore(index, queries, probe, k=k, q_valid=q_valid)
         return index.search(queries, k=k, q_valid=q_valid)
 
-    def _mixed_search(
+    def _inverse_mixed(
         self, h: UpgradeHandle, queries: jax.Array, k: int, q_valid
-    ) -> tuple[jax.Array, jax.Array]:
-        """Mixed-state merge: bridged scan masked to un-migrated rows +
-        native scan masked to migrated rows, top-k of the union.
-
-        Each side over-fetches 2k candidates so its top list survives the
-        masking (a side's top-k can contain rows owned by the other side;
-        beyond-2k contamination is the same tail-risk class as IVF's nprobe
-        approximation and is measured by the lifecycle recall gates)."""
-        kk = min(2 * k, self.index.size)
-        neg = jnp.finfo(jnp.float32).min
-        mig = jnp.asarray(h.migrated_mask)
-        s_b, i_b = self.index.search_bridged(
-            h.adapter, queries, k=kk, q_valid=q_valid, **self._index_kwargs()
+    ) -> Optional[tuple[jax.Array, jax.Array, str]]:
+        """Serving-space queries against the mixed index, exact via the
+        inverse edge: the same ``search_mixed`` with the bitmap INVERTED —
+        the query scores the un-migrated f_old rows raw, and the
+        pseudo-inverse g⁻¹(q) scores the migrated f_new rows. The probe
+        (IVF) stays on the raw query: the cells still live in its own
+        old-space geometry. ``queries`` must already BE in the serving
+        space (the control arm passes them through; third-space traffic
+        bridges into it first). Returns None when no inverse edge exists
+        (MLP bridges): callers fall back to bitmap-blind serving, which
+        scores migrated rows only approximately."""
+        try:
+            inverse = self.registry.edge(self.serving_version, h.to_version)
+        except KeyError:
+            return None
+        bitmap, mig_cells = h._device_migration(self.index, inverted=True)
+        kwargs = self._index_kwargs()
+        if isinstance(self.index, IVFIndex):
+            kwargs["probe_space"] = "raw"
+            kwargs["mig_cells"] = mig_cells
+        s, i = self.index.search_mixed(
+            inverse, queries, bitmap, k=k, q_valid=q_valid, **kwargs,
         )
-        s_n, i_n = self._native_scan_mixed(h, queries, kk, q_valid)
-        own_b = (i_b >= 0) & ~mig[jnp.clip(i_b, 0)]
-        own_n = (i_n >= 0) & mig[jnp.clip(i_n, 0)]
-        s = jnp.concatenate(
-            [jnp.where(own_b, s_b, neg), jnp.where(own_n, s_n, neg)], axis=1
-        )
-        i = jnp.concatenate([i_b, i_n], axis=1)
-        top_s, pos = jax.lax.top_k(s, k)
-        top_i = jnp.take_along_axis(i, pos, axis=1)
-        return top_s, jnp.where(top_s > neg, top_i, -1)
+        return s, i, inverse.kind
 
     # -- lifecycle entry point ----------------------------------------------
     def upgrade(

@@ -1,0 +1,439 @@
+"""One-pass mixed-state scan: kernel parity vs the exact jnp two-scan
+reference across migration fractions and bitmap edge cases, the bitmap-
+masked IVF rescore, q_valid ragged batches, launch-count contracts (ONE
+pallas_call flat / TWO IVF), and the pseudo-inverse control-arm path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ann import FlatIndex, build_ivf, migration_cells
+from repro.core import DriftAdapter, FitConfig
+from repro.kernels.ivf_rescore import (
+    ivf_rescore_mixed_fused,
+    ivf_rescore_mixed_ref,
+)
+from repro.kernels.mixed_scan import (
+    mixed_bridged_search,
+    mixed_merge_scan,
+    mixed_scan_ref,
+)
+from repro.kernels.topk_scan.ops import topk_scan
+
+# The mixed-state scan IS the serving layer's migration-window hot path;
+# riding the serving shard also keeps the two CI fast-tier shards balanced
+# (see ci.yml: the gate's wall time is the slower shard).
+pytestmark = pytest.mark.serving
+
+D = 128
+# endpoints + midpoint ride the fast tier; the quarter fractions (same
+# code path, different bitmap densities) ride the full tier
+FRACTIONS = (
+    0.0,
+    pytest.param(0.25, marks=pytest.mark.slow),
+    0.5,
+    pytest.param(0.75, marks=pytest.mark.slow),
+    1.0,
+)
+# one fast parity kind; the rest ride the full tier (the transform code is
+# shared with fused_search, which sweeps every kind ± DSM in the fast tier)
+KINDS = [
+    ("op", False),
+    pytest.param("la", True, marks=pytest.mark.slow),
+    pytest.param("mlp", True, marks=pytest.mark.slow),
+]
+
+
+@pytest.fixture(scope="module")
+def world():
+    key = jax.random.PRNGKey(0)
+    b = jax.random.normal(key, (2000, D))
+    b = b / jnp.linalg.norm(b, axis=1, keepdims=True)
+    r = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1), (D, D)))[0]
+    a = b @ r.T
+    corpus = jax.random.normal(jax.random.PRNGKey(2), (1500, D))
+    corpus = corpus / jnp.linalg.norm(corpus, axis=1, keepdims=True)
+    queries = jax.random.normal(jax.random.PRNGKey(3), (97, D))
+    return b, a, corpus, queries
+
+
+def _fit(world, kind, dsm):
+    b, a, _, _ = world
+    return DriftAdapter.fit(
+        b, a, kind=kind, config=FitConfig(kind=kind, use_dsm=dsm, max_epochs=2)
+    )
+
+
+def _mask(n: int, frac: float, pattern: str = "random") -> np.ndarray:
+    m = np.zeros(n, bool)
+    if pattern == "random":
+        count = int(round(frac * n))
+        m[np.random.default_rng(7).permutation(n)[:count]] = True
+    return m
+
+
+class TestKernelParity:
+    @pytest.mark.parametrize("kind,dsm", KINDS)
+    @pytest.mark.parametrize("frac", FRACTIONS)
+    def test_matches_two_scan_reference(self, world, kind, dsm, frac):
+        """The one-pass bitmap-select kernel equals the exact two-scan
+        merge (each side masked to its OWN rows before top-k) at every
+        migration fraction — including both pure endpoints."""
+        _, _, corpus, queries = world
+        ad = _fit(world, kind, dsm)
+        mig = jnp.asarray(_mask(corpus.shape[0], frac))
+        fk, fp = ad.as_fused_params()
+        s, i = mixed_bridged_search(
+            fk, fp, queries, corpus, mig, k=7, block_rows=512, interpret=True
+        )
+        rs, ri = mixed_scan_ref(ad.kind, ad.params, queries, corpus, mig, k=7)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+    def test_all_zero_bitmap_equals_pure_bridged(self, world):
+        """frac=0: every row is un-migrated, so the mixed scan must equal
+        the plain one-pass bridged search (same fold, same ids)."""
+        _, _, corpus, queries = world
+        ad = _fit(world, "op", False)
+        fk, fp = ad.as_fused_params()
+        mig = jnp.zeros(corpus.shape[0], bool)
+        s, i = mixed_bridged_search(
+            fk, fp, queries, corpus, mig, k=6, block_rows=512, interpret=True
+        )
+        idx = FlatIndex(corpus=corpus, backend="fused")
+        bs, bi = idx.search_bridged(ad, queries, k=6)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(bs), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(bi))
+
+    def test_all_one_bitmap_equals_native_scan(self, world):
+        """frac=1: every row is migrated, so the adapter is dead weight and
+        the mixed scan must equal a native top-k of the RAW queries."""
+        _, _, corpus, queries = world
+        ad = _fit(world, "op", False)
+        fk, fp = ad.as_fused_params()
+        mig = jnp.ones(corpus.shape[0], bool)
+        s, i = mixed_bridged_search(
+            fk, fp, queries, corpus, mig, k=6, block_rows=512, interpret=True
+        )
+        ns, ni = topk_scan(corpus, queries, k=6, block_rows=512)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(ns), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ni))
+
+    def test_alternating_and_single_row_bitmaps(self, world):
+        """Adversarial bitmaps: strict alternation (every block mixes both
+        sides) and a single migrated row (the native side must surface that
+        one row IFF it wins on raw-q score)."""
+        _, _, corpus, queries = world
+        ad = _fit(world, "op", False)
+        fk, fp = ad.as_fused_params()
+        n = corpus.shape[0]
+        for mask in (np.arange(n) % 2 == 1, np.arange(n) == 137):
+            mig = jnp.asarray(mask)
+            s, i = mixed_bridged_search(
+                fk, fp, queries, corpus, mig, k=5, block_rows=512,
+                interpret=True,
+            )
+            rs, ri = mixed_scan_ref(
+                ad.kind, ad.params, queries, corpus, mig, k=5
+            )
+            np.testing.assert_allclose(
+                np.asarray(s), np.asarray(rs), atol=1e-5
+            )
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+    def test_single_row_bitmap_surfaces_exact_match(self, world):
+        """Plant a query equal to the ONE migrated row's (f_new) vector:
+        raw-q scoring must rank that row first with score ~1 — the case the
+        retired 2k-over-fetch merge could miss when the bridged top list
+        crowded it out."""
+        _, _, corpus, _ = world
+        ad = _fit(world, "op", False)
+        fk, fp = ad.as_fused_params()
+        mig = jnp.asarray(np.arange(corpus.shape[0]) == 421)
+        probe = corpus[421:422]
+        s, i = mixed_bridged_search(
+            fk, fp, probe, corpus, mig, k=3, block_rows=512, interpret=True
+        )
+        assert int(i[0, 0]) == 421
+        assert float(s[0, 0]) > 0.999
+
+    @pytest.mark.parametrize(
+        "qn", [1, pytest.param(13, marks=pytest.mark.slow), 97]
+    )
+    def test_ragged_query_counts(self, world, qn):
+        """Non-multiple-of-tile query counts pad to the 128-row tile and
+        strip cleanly — row j of any prefix equals row j of the full batch."""
+        _, _, corpus, queries = world
+        ad = _fit(world, "op", False)
+        fk, fp = ad.as_fused_params()
+        mig = jnp.asarray(_mask(corpus.shape[0], 0.5))
+        fs, fi = mixed_bridged_search(
+            fk, fp, queries, corpus, mig, k=4, block_rows=512, interpret=True
+        )
+        s, i = mixed_bridged_search(
+            fk, fp, queries[:qn], corpus, mig, k=4, block_rows=512,
+            interpret=True,
+        )
+        np.testing.assert_allclose(
+            np.asarray(s), np.asarray(fs[:qn]), atol=1e-5
+        )
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(fi[:qn]))
+
+    def test_q_valid_preserves_valid_rows(self, world):
+        _, _, corpus, _ = world
+        ad = _fit(world, "op", False)
+        fk, fp = ad.as_fused_params()
+        mig = jnp.asarray(_mask(corpus.shape[0], 0.5))
+        q = jax.random.normal(jax.random.PRNGKey(5), (256, D))
+        full_s, full_i = mixed_bridged_search(
+            fk, fp, q, corpus, mig, k=4, block_rows=512, interpret=True
+        )
+        s, i = mixed_bridged_search(
+            fk, fp, q, corpus, mig, k=4, block_rows=512, q_valid=100,
+            interpret=True,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(i[:100]), np.asarray(full_i[:100])
+        )
+        np.testing.assert_allclose(
+            np.asarray(s[:100]), np.asarray(full_s[:100]), atol=1e-5
+        )
+
+    def test_rejects_rectangular_spaces(self, world):
+        """Mixed state overwrites rows in place, so d_new must equal d_old."""
+        _, _, corpus, queries = world
+        ad = _fit(world, "op", False)
+        fk, fp = ad.as_fused_params()
+        with pytest.raises(ValueError, match="d_new == d_old"):
+            mixed_bridged_search(
+                fk, fp, queries[:, :64], corpus,
+                jnp.zeros(corpus.shape[0], bool), k=3,
+            )
+
+
+class TestIVFMixed:
+    @pytest.mark.parametrize(
+        "frac",
+        [pytest.param(0.0, marks=pytest.mark.slow), 0.5,
+         pytest.param(1.0, marks=pytest.mark.slow)],
+    )
+    def test_mixed_rescore_kernel_parity(self, world, frac):
+        _, _, corpus, queries = world
+        index = build_ivf(jax.random.PRNGKey(2), corpus, n_cells=16)
+        mig = _mask(corpus.shape[0], frac)
+        mig_cells = migration_cells(index.cell_ids, jnp.asarray(mig))
+        ad = _fit(world, "op", False)
+        qm = ad.apply(queries)
+        probe = jax.lax.top_k(qm @ index.centroids.T, 4)[1].astype(jnp.int32)
+        rs, ri = ivf_rescore_mixed_ref(
+            index.cells, index.cell_ids, mig_cells, queries, qm, probe, 6
+        )
+        s, i = ivf_rescore_mixed_fused(
+            index.cells, index.cell_ids, mig_cells, queries, qm, probe,
+            k=6, interpret=True,
+        )
+        np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+    def test_index_mixed_jnp_vs_fused(self, world):
+        _, _, corpus, queries = world
+        index = build_ivf(jax.random.PRNGKey(2), corpus, n_cells=16)
+        ad = _fit(world, "op", False)
+        mig = jnp.asarray(_mask(corpus.shape[0], 0.4))
+        sj, ij = dataclasses.replace(index, backend="jnp").search_mixed(
+            ad, queries, mig, k=5, nprobe=4
+        )
+        sf, if_ = dataclasses.replace(index, backend="fused").search_mixed(
+            ad, queries, mig, k=5, nprobe=4
+        )
+        np.testing.assert_allclose(np.asarray(sf), np.asarray(sj), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(if_), np.asarray(ij))
+
+    def test_full_probe_equals_flat_mixed(self, world):
+        """nprobe = n_cells makes mixed IVF exact: it must agree with the
+        flat mixed scan on ids (every row is a candidate on both paths)."""
+        _, _, corpus, queries = world
+        index = dataclasses.replace(
+            build_ivf(jax.random.PRNGKey(2), corpus, n_cells=8),
+            backend="jnp",
+        )
+        ad = _fit(world, "op", False)
+        mig = jnp.asarray(_mask(corpus.shape[0], 0.5))
+        s_ivf, i_ivf = index.search_mixed(
+            ad, queries, mig, k=5, nprobe=index.n_cells
+        )
+        s_flat, i_flat = mixed_merge_scan(
+            queries, ad.apply(queries), corpus, mig, k=5
+        )
+        np.testing.assert_allclose(
+            np.asarray(s_ivf), np.asarray(s_flat), atol=1e-5
+        )
+        np.testing.assert_array_equal(np.asarray(i_ivf), np.asarray(i_flat))
+
+    def test_raw_probe_space(self, world):
+        """probe_space="raw" must probe with the untransformed queries (the
+        inverse/control-arm path) and still rescore by the bitmap."""
+        _, _, corpus, queries = world
+        index = build_ivf(jax.random.PRNGKey(2), corpus, n_cells=16)
+        ad = _fit(world, "op", False)
+        mig = jnp.asarray(_mask(corpus.shape[0], 0.4))
+        qm = ad.apply(queries)
+        probe = jax.lax.top_k(queries @ index.centroids.T, 4)[1]
+        mig_cells = migration_cells(index.cell_ids, mig)
+        rs, ri = ivf_rescore_mixed_ref(
+            index.cells, index.cell_ids, mig_cells, queries, qm,
+            probe.astype(jnp.int32), 5,
+        )
+        for backend in ("jnp", "fused"):
+            s, i = dataclasses.replace(index, backend=backend).search_mixed(
+                ad, queries, mig, k=5, nprobe=4, probe_space="raw"
+            )
+            np.testing.assert_allclose(
+                np.asarray(s), np.asarray(rs), atol=1e-5
+            )
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+    def test_rejects_bad_probe_space(self, world):
+        _, _, corpus, queries = world
+        index = build_ivf(jax.random.PRNGKey(2), corpus, n_cells=16)
+        ad = _fit(world, "op", False)
+        with pytest.raises(ValueError, match="probe_space"):
+            index.search_mixed(
+                ad, queries, jnp.zeros(corpus.shape[0], bool),
+                probe_space="sideways",
+            )
+
+
+class TestLaunchCounts:
+    def _counting(self, monkeypatch):
+        from jax.experimental import pallas as real_pl
+
+        launches = []
+        orig = real_pl.pallas_call
+
+        def counting(kernel, *a, **kw):
+            launches.append(getattr(kernel, "func", kernel).__name__)
+            return orig(kernel, *a, **kw)
+
+        monkeypatch.setattr(real_pl, "pallas_call", counting)
+        return launches
+
+    def test_flat_mixed_is_exactly_one_launch(self, world, monkeypatch):
+        """The acceptance contract: a mixed-state query on backend="fused"
+        traces exactly ONE pallas_call — transform, dual scan, bitmap
+        select, and top-k all inside it; no second scan, no host merge."""
+        _, _, corpus, queries = world
+        launches = self._counting(monkeypatch)
+        index = FlatIndex(corpus=corpus, backend="fused")
+        ad = DriftAdapter.identity(D)
+        mig = jnp.asarray(_mask(corpus.shape[0], 0.5))
+        # this (shape, k) combo is traced nowhere else in the suite, so the
+        # jitted op traces (and counts) here
+        s, i = index.search_mixed(ad, queries, mig, k=9)
+        assert launches == ["_mixed_linear_kernel"]
+        rs, ri = mixed_merge_scan(queries, ad.apply(queries), corpus, mig, k=9)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+    def test_ivf_mixed_is_exactly_two_launches(self, world, monkeypatch):
+        """Mixed-state IVF on backend="fused": the adapter-folded probe and
+        the bitmap-masked rescore — two launches total, same count as the
+        pure bridged path."""
+        _, _, corpus, queries = world
+        launches = self._counting(monkeypatch)
+        index = dataclasses.replace(
+            build_ivf(jax.random.PRNGKey(2), corpus, n_cells=16),
+            backend="fused",
+        )
+        ad = DriftAdapter.identity(D)
+        mig = jnp.asarray(_mask(corpus.shape[0], 0.5))
+        s, i = index.search_mixed(ad, queries, mig, k=3, nprobe=5)
+        assert launches == [
+            "_fused_linear_kernel", "_ivf_rescore_mixed_kernel"
+        ], launches
+        sj, ij = dataclasses.replace(index, backend="jnp").search_mixed(
+            ad, queries, mig, k=3, nprobe=5
+        )
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sj), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ij))
+
+
+class TestPseudoInverse:
+    def test_orthogonal_inverse_is_exact(self, world):
+        """OP folds to an orthogonal matrix, whose pseudo-inverse is its
+        transpose: the round-trip preserves direction exactly (up to the
+        ℓ2 renorm both applications end with)."""
+        b, _, _, _ = world
+        ad = _fit(world, "op", False)
+        inv = ad.pseudo_inverse()
+        assert (inv.d_new, inv.d_old) == (ad.d_old, ad.d_new)
+        x = b[:64]
+        rt = inv.apply(ad.apply(x))
+        cos = jnp.sum(rt * (x / jnp.linalg.norm(x, axis=1, keepdims=True)),
+                      axis=1)
+        assert float(jnp.min(cos)) > 0.999
+
+    @pytest.mark.slow
+    def test_low_rank_inverse_is_least_squares(self, world):
+        """LA folds to a LOW-RANK matrix — no full round-trip exists; the
+        inverse must still satisfy the Moore–Penrose identities
+        A·A⁺·A = A and A⁺·A·A⁺ = A⁺ (least-squares inverse)."""
+        ad = _fit(world, "la", True)
+        inv = ad.pseudo_inverse()
+        _, fwd = ad.as_fused_params()
+        a = np.asarray(fwd["m"] * fwd["s"][:, None])
+        a_pinv = np.asarray(inv.params["core"]["M"])
+        np.testing.assert_allclose(a @ a_pinv @ a, a, atol=1e-3)
+        np.testing.assert_allclose(a_pinv @ a @ a_pinv, a_pinv, atol=1e-3)
+
+    @pytest.mark.slow
+    def test_mlp_has_no_inverse(self, world):
+        ad = _fit(world, "mlp", True)
+        with pytest.raises(NotImplementedError):
+            ad.pseudo_inverse()
+
+    def test_register_bridge_adds_inverse_edge(self, world):
+        from repro.core.registry import SpaceRegistry
+
+        reg = SpaceRegistry()
+        reg.add_version("v1", D)
+        reg.add_version("v2", D)
+        ad = _fit(world, "op", False)
+        inv = reg.register_bridge("v2", "v1", ad)
+        assert inv is not None
+        assert reg.has_edge("v2", "v1") and reg.has_edge("v1", "v2")
+        assert reg.edge("v1", "v2") is inv
+        # MLP: forward edge only
+        reg2 = SpaceRegistry()
+        reg2.add_version("v1", D)
+        reg2.add_version("v2", D)
+        assert reg2.register_bridge("v2", "v1", _fit(world, "mlp", True)) is None
+        assert reg2.has_edge("v2", "v1") and not reg2.has_edge("v1", "v2")
+
+    def test_register_bridge_keeps_explicit_reverse_edge(self, world):
+        """A hand-fitted old→new adapter must never be clobbered by the
+        analytic pseudo-inverse; auto-derived inverses DO refresh in
+        lockstep with forward re-registrations (online refits), and an
+        owned inverse that can no longer be derived is dropped."""
+        from repro.core.registry import SpaceRegistry
+
+        reg = SpaceRegistry()
+        reg.add_version("v1", D)
+        reg.add_version("v2", D)
+        explicit = _fit(world, "op", False)        # plays the fitted reverse
+        reg.register_edge("v1", "v2", explicit)
+        assert reg.register_bridge("v2", "v1", _fit(world, "op", False)) is None
+        assert reg.edge("v1", "v2") is explicit    # untouched
+        # auto inverse: refreshed by a later register_bridge…
+        reg2 = SpaceRegistry()
+        reg2.add_version("v1", D)
+        reg2.add_version("v2", D)
+        inv1 = reg2.register_bridge("v2", "v1", _fit(world, "op", False))
+        inv2 = reg2.register_bridge("v2", "v1", _fit(world, "la", False))
+        assert inv1 is not None and inv2 is not None and inv2 is not inv1
+        assert reg2.edge("v1", "v2") is inv2
+        # …and dropped when the refit kind has no closed-form inverse
+        assert reg2.register_bridge("v2", "v1", _fit(world, "mlp", True)) is None
+        assert not reg2.has_edge("v1", "v2")

@@ -289,6 +289,196 @@ class TestMigrationServing:
             router.replace_rows(jnp.arange(2), world[1][:2])
 
 
+class TestMixedStateServing:
+    FRACS = (0.25, 0.5, 0.75)
+
+    def test_fused_matches_jnp_across_fractions(self, world):
+        """The acceptance contract at the store level: the ONE-launch fused
+        mixed path serves the same ids/scores as the jnp two-scan reference
+        path at every migration fraction (flat index)."""
+        _, _, _, q_new, _ = world
+        stores = {
+            be: _store(world, backend=be) for be in ("jnp", "fused")
+        }
+        handles = {be: _open(stores[be], world) for be in stores}
+        for h in handles.values():
+            h.deploy()
+        done = 0.0
+        for frac in self.FRACS:
+            step = int(round((frac - done) * N))
+            done = frac
+            res = {}
+            for be, h in handles.items():
+                h.migrate_batch(step)
+                assert abs(h.progress - frac) < 1e-9
+                res[be] = stores[be].search(q_new, k=10)
+                assert res[be].adapter_kind == "mixed:op"
+            np.testing.assert_array_equal(
+                np.asarray(res["fused"].ids), np.asarray(res["jnp"].ids)
+            )
+            np.testing.assert_allclose(
+                np.asarray(res["fused"].scores),
+                np.asarray(res["jnp"].scores), atol=1e-5,
+            )
+
+    @pytest.mark.slow
+    def test_ivf_fused_matches_jnp_mid_migration(self, world):
+        _, _, _, q_new, _ = world
+        res = {}
+        for be in ("jnp", "fused"):
+            store = _store(world, kind="ivf", backend=be)
+            h = _open(store, world)
+            h.deploy()
+            h.migrate_batch(N // 2)
+            res[be] = store.search(q_new, k=10)
+        np.testing.assert_array_equal(
+            np.asarray(res["fused"].ids), np.asarray(res["jnp"].ids)
+        )
+        np.testing.assert_allclose(
+            np.asarray(res["fused"].scores), np.asarray(res["jnp"].scores),
+            atol=1e-5,
+        )
+
+    def test_control_arm_scores_migrated_rows_via_inverse(self, world):
+        """Mid-migration, an OLD-space query whose item has ALREADY been
+        re-embedded must still retrieve it: the inverse edge maps q_old
+        into the new space for the migrated rows (without it, the migrated
+        row's f_new vector scores garbage against raw q_old)."""
+        corpus_old, _, _, _, _ = world
+        store = _store(world)
+        h = _open(store, world)           # op bridge → inverse registered
+        assert store.registry.has_edge("v1", "v2")
+        h.deploy()
+        h.migrate_batch(500)              # rows 0..499 now f_new
+        probes = corpus_old[:16]          # old-space queries for migrated rows
+        res = store.search(probes, k=1, space="v1")
+        assert res.adapter_kind == "inverse-mixed:linear"
+        np.testing.assert_array_equal(
+            np.asarray(res.ids[:, 0]), np.arange(16)
+        )
+        assert float(jnp.min(res.scores[:, 0])) > 0.9
+
+    def test_third_space_queries_stay_exact_mid_migration(self, world):
+        """Queries from a space that is neither the upgrade target nor the
+        serving version must also see the bitmap: they bridge into the
+        serving space and ride the inverse-mixed scan, so a MIGRATED row
+        is still retrievable by its third-space query (a bitmap-blind
+        bridged scan would score that row's f_new vector with the v0→v1
+        map as if it were f_old)."""
+        corpus_old, _, _, _, _ = world
+        from repro.core import DriftAdapter
+        from repro.data import make_drift
+        from repro.data.drift import MILD_TEXT
+
+        dcfg = dataclasses.replace(MILD_TEXT, d_old=D, d_new=D, seed=321)
+        drift0 = make_drift(dcfg)
+        corpus_v0 = drift0(corpus_old, 0)
+        store = _store(world)
+        h = _open(store, world)           # op bridge → inverse registered
+        store.registry.add_version("v0", D)
+        store.registry.register_edge(
+            "v0", "v1",
+            DriftAdapter.fit(corpus_v0[:2000], corpus_old[:2000],
+                             config=OP_CFG),
+        )
+        h.deploy()
+        h.migrate_batch(500)              # rows 0..499 now f_new
+        probes = corpus_v0[:16]           # v0-space queries for migrated rows
+        res = store.search(probes, k=1, space="v0")
+        assert res.adapter_kind == "mixed-bridged:op"
+        np.testing.assert_array_equal(
+            np.asarray(res.ids[:, 0]), np.arange(16)
+        )
+        assert float(jnp.min(res.scores[:, 0])) > 0.9
+
+    def test_control_arm_without_inverse_stays_native(self, world):
+        """MLP bridges have no closed-form inverse: the control arm keeps
+        the plain native scan (status quo) instead of failing."""
+        _, _, q_old, _, _ = world
+        store = _store(world)
+        h = store.upgrade(
+            "v2", corpus_new_provider=lambda ids: world[1][jnp.asarray(ids)]
+        )
+        h.fit(world[1][:1000], world[0][:1000],
+              config=FitConfig(kind="mlp", max_epochs=2))
+        assert not store.registry.has_edge("v1", "v2")
+        h.deploy()
+        h.migrate_batch(500)
+        res = store.search(q_old, k=5, space="v1")
+        assert res.adapter_kind == "none"
+
+    def test_online_refit_reaches_mixed_serving(self, world):
+        """An OnlineAdapterManager decorating the upgrade edge atomically
+        swaps what MID-MIGRATION traffic serves with: the store resolves
+        the bridge through the registry, not the handle's frozen copy."""
+        corpus_old, corpus_new, _, q_new, _ = world
+        from repro.core import OnlineAdapterManager, OnlineConfig
+
+        store = _store(world)
+        h = _open(store, world)
+        h.deploy()
+        h.migrate_batch(500)
+        before = store.search(q_new, k=10)
+        mgr = OnlineAdapterManager(
+            d_new=D, d_old=D,
+            config=OnlineConfig(kind="op", max_epochs_per_refit=1, seed=3),
+            registry=store.registry, src="v2", dst="v1",
+        )
+        mgr.observe_pairs(
+            np.asarray(corpus_new[500:1500]), np.asarray(corpus_old[500:1500])
+        )
+        refit = mgr.tick()
+        assert refit is not None
+        after = store.search(q_new, k=10)
+        assert store.bridge("v2") is refit          # revision-keyed cache
+        assert after.adapter_kind == "mixed:op"
+        # the swap really changed the serving adapter (different fit window)
+        assert not np.array_equal(
+            np.asarray(before.scores), np.asarray(after.scores)
+        )
+
+    def test_online_refit_refreshes_inverse_edge(self, world):
+        """A refit replacing the forward edge must keep the auto-derived
+        pseudo-inverse in lockstep: the control arm may not score migrated
+        rows through the inverse of the ORIGINAL fit."""
+        corpus_old, corpus_new, _, _, _ = world
+        from repro.core import OnlineAdapterManager, OnlineConfig
+
+        store = _store(world)
+        h = _open(store, world)                     # registers both edges
+        stale_inverse = store.registry.edge("v1", "v2")
+        h.deploy()
+        h.migrate_batch(500)
+        mgr = OnlineAdapterManager(
+            d_new=D, d_old=D,
+            config=OnlineConfig(kind="op", max_epochs_per_refit=1, seed=3),
+            registry=store.registry, src="v2", dst="v1",
+        )
+        mgr.observe_pairs(
+            np.asarray(corpus_new[500:1500]), np.asarray(corpus_old[500:1500])
+        )
+        assert mgr.tick() is not None
+        fresh_inverse = store.registry.edge("v1", "v2")
+        assert fresh_inverse is not stale_inverse
+        res = store.search(corpus_old[:16], k=1, space="v1")
+        assert res.adapter_kind == "inverse-mixed:linear"
+        np.testing.assert_array_equal(
+            np.asarray(res.ids[:, 0]), np.arange(16)
+        )
+
+    def test_migrate_batch_reports_migrated_ids(self, world):
+        store = _store(world)
+        h = _open(store, world)
+        h.deploy()
+        h.migrate_batch(300)
+        np.testing.assert_array_equal(h.last_migrated_ids, np.arange(300))
+        h.migrate_batch(300)
+        np.testing.assert_array_equal(
+            h.last_migrated_ids, np.arange(300, 600)
+        )
+        assert h.migrated_mask[:600].all() and not h.migrated_mask[600:].any()
+
+
 class TestCutoverAndRollback:
     def test_stale_handle_rollback_rejected(self, world):
         """A retained post-cutover handle must not clobber a NEWER

@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""Docs consistency gate (stdlib-only; CI `docs` job).
+
+Two checks over README.md + docs/*.md:
+
+1. Intra-repo markdown links ``[text](target)`` resolve: any target that is
+   not an external URL or a pure #anchor must name a file (or directory)
+   that exists, relative to the file containing the link. In-page and
+   cross-page #anchors are checked against the target's headings.
+
+2. Code references in docs/*.md of the form ``path/to/file.py:symbol``
+   (backticked, path relative to the repo root) name a real file AND a
+   symbol that actually occurs in it — docs rot loudly, not silently,
+   when code moves.
+
+Exit status: number of failures (0 = green).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
+# `path:symbol` — a repo-relative source path plus a python identifier
+# (dotted attribute access allowed: Class.method)
+CODE_REF_RE = re.compile(
+    r"`([A-Za-z0-9_\-./]+\.(?:py|yml|md)):([A-Za-z_][A-Za-z0-9_.]*)`"
+)
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, dash spaces."""
+    text = re.sub(r"[`*]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set[str]:
+    return {slugify(h) for h in HEADING_RE.findall(path.read_text())}
+
+
+def check_links(md: pathlib.Path) -> list[str]:
+    errors = []
+    for target in LINK_RE.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = md if not path_part else (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md":
+            if anchor not in anchors_of(dest):
+                errors.append(
+                    f"{md.relative_to(ROOT)}: missing anchor "
+                    f"#{anchor} in {dest.relative_to(ROOT)}"
+                )
+    return errors
+
+
+def check_code_refs(md: pathlib.Path) -> list[str]:
+    errors = []
+    for path_str, symbol in CODE_REF_RE.findall(md.read_text()):
+        src = ROOT / path_str
+        if not src.exists():
+            errors.append(
+                f"{md.relative_to(ROOT)}: code ref names missing file "
+                f"{path_str}"
+            )
+            continue
+        text = src.read_text()
+        # every dotted component must occur as a word in the file
+        missing = [
+            part for part in symbol.split(".")
+            if not re.search(rf"\b{re.escape(part)}\b", text)
+        ]
+        if missing:
+            errors.append(
+                f"{md.relative_to(ROOT)}: code ref {path_str}:{symbol} — "
+                f"symbol(s) {missing} not found in {path_str}"
+            )
+    return errors
+
+
+def main() -> int:
+    docs = sorted((ROOT / "docs").glob("*.md"))
+    if not docs:
+        print("FAIL: docs/ contains no markdown pages")
+        return 1
+    errors: list[str] = []
+    for md in [ROOT / "README.md", *docs]:
+        errors.extend(check_links(md))
+    for md in docs:
+        errors.extend(check_code_refs(md))
+    for e in errors:
+        print(f"FAIL: {e}")
+    n_refs = sum(len(CODE_REF_RE.findall(p.read_text())) for p in docs)
+    print(
+        f"checked {len(docs) + 1} pages, {n_refs} code refs: "
+        f"{len(errors)} failure(s)"
+    )
+    return min(len(errors), 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
