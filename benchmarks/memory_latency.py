@@ -6,11 +6,14 @@ measured (batch-amortized µs/query) + TPU roofline projection. Table 5's
 re-embed / index-build columns are modeled with the same reference rates
 the paper uses; the adapter columns are measured here.
 
-The fused section times the one-pass bridged search (kernels/fused_search:
-adapter + scan + top-k in a single launch) against the production two-launch
-path (kernels/adapter_apply then kernels/topk_scan, transformed queries
-round-tripping HBM in between), asserts exact score/id parity against the
-jnp reference, and reports the HBM bytes each path moves.
+The fused section times the one-pass bridged search (the engine's
+linear/MLP-stage flat launch: adapter + scan + top-k in one pallas_call)
+against the production two-launch path (kernels/adapter_apply then the
+identity-stage scan, transformed queries round-tripping HBM in between),
+asserts exact score/id parity against the jnp reference, and reports the
+HBM bytes each path moves. The engine section (--engine-only) A/Bs the
+packed dual-query mixed scan (ONE matmul per corpus block, post-matmul
+bitmap select) against the two-matmul variant, parity-gated bit-exact.
 """
 from __future__ import annotations
 
@@ -23,11 +26,13 @@ import numpy as np
 from repro.ann import build_ivf, ivf_search
 from repro.core import DriftAdapter, FitConfig
 from repro.kernels.adapter_apply.ops import adapter_apply_fused
-from repro.kernels.fused_search import (
+from repro.kernels.engine import (
     fused_bridged_search,
-    fused_bridged_search_ref,
+    mixed_bridged_search,
+    topk_scan,
 )
-from repro.kernels.topk_scan.ops import topk_scan
+from repro.kernels.fused_search.ref import fused_bridged_search_ref
+from repro.kernels.mixed_scan.ref import mixed_scan_ref
 from repro.launch.roofline import PEAK_FLOPS
 from benchmarks.common import Scale, emit, save_json, time_per_call_us
 
@@ -179,8 +184,6 @@ def bench_mixed_query_path(
     import statistics
     import time
 
-    from repro.kernels.mixed_scan import mixed_bridged_search, mixed_scan_ref
-
     n, d = corpus.shape
     rng = np.random.default_rng(11)
     migrated = np.zeros(n, bool)
@@ -318,6 +321,140 @@ def run_mixed(adapter: DriftAdapter | None = None) -> dict:
     emit("a1.mixed_one_pass_vs_two_scan.speedup", 0.0, out["speedup"])
     print(f"# caveat: {TPU_CAVEAT}", flush=True)
     save_json("BENCH_mixed", out)
+    return out
+
+
+def bench_engine_packed_dual(
+    adapter: DriftAdapter,
+    corpus: jax.Array,
+    batch: int = 256,
+    k: int = 10,
+    migrated_frac: float = 0.5,
+) -> dict:
+    """Packed dual-query mixed scan vs the two-matmul variant (the ROADMAP
+    single-matmul open item, now an engine plan knob).
+
+    Both run the SAME engine kernel family — the only difference is the
+    query stage: packed stacks [q; g(q)] into one (2·B_tile, d) VMEM
+    scratch so each corpus block pays ONE MXU matmul with the bitmap
+    selecting post-matmul; unpacked pays two matmuls per block. The gate is
+    BIT-exact (scores and ids) between the variants, plus 1e-5 parity
+    against the exact two-scan reference. Same interleaved
+    median-of-pair-ratios methodology as the other sections. Interpret-mode
+    timing mostly reflects the fold, not the MXU — the TPU caveat applies
+    doubly here (the packed win is an MXU-pass count, invisible on CPU).
+    """
+    import statistics
+    import time
+
+    n, d = corpus.shape
+    rng = np.random.default_rng(13)
+    migrated = np.zeros(n, bool)
+    migrated[rng.permutation(n)[: int(round(migrated_frac * n))]] = True
+    mig = jnp.asarray(migrated)
+    q = jax.random.normal(jax.random.PRNGKey(5), (batch, adapter.d_new))
+    q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+    block_rows = n
+    fused_kind, fused = adapter.as_fused_params()
+
+    def packed(qx):
+        return mixed_bridged_search(
+            fused_kind, fused, qx, corpus, mig, k=k, block_rows=block_rows,
+            packed=True,
+        )
+
+    def unpacked(qx):
+        return mixed_bridged_search(
+            fused_kind, fused, qx, corpus, mig, k=k, block_rows=block_rows,
+            packed=False,
+        )
+
+    # -- parity gate: BIT-exact between variants, 1e-5 vs the reference ----
+    s_p, i_p = packed(q)
+    s_u, i_u = unpacked(q)
+    np.testing.assert_array_equal(
+        np.asarray(s_p), np.asarray(s_u),
+        err_msg="packed dual-query scores diverge from the two-matmul scan",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(i_p), np.asarray(i_u),
+        err_msg="packed dual-query ids diverge from the two-matmul scan",
+    )
+    ref_s, ref_i = mixed_scan_ref(
+        adapter.kind, adapter.params, q, corpus, mig, k=k
+    )
+    np.testing.assert_allclose(
+        np.asarray(s_p), np.asarray(ref_s), atol=1e-5,
+        err_msg="packed dual-query scores diverge from the two-scan ref",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(i_p), np.asarray(ref_i),
+        err_msg="packed dual-query ids diverge from the two-scan ref",
+    )
+
+    def _once(fn):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(q))
+        return (time.perf_counter() - t0) * 1e6
+
+    samples = {"packed": [], "unpacked": []}
+    ratios = []
+    for _ in range(20):
+        tu = _once(unpacked)
+        tp = _once(packed)
+        samples["unpacked"].append(tu)
+        samples["packed"].append(tp)
+        ratios.append(tu / tp)
+
+    blocks = -(-n // block_rows)
+    return {
+        "batch": batch,
+        "k": k,
+        "corpus_rows": n,
+        "d": d,
+        "migrated_frac": migrated_frac,
+        "kernel_launches_each": 1,
+        "matmuls_per_block_packed": 1,
+        "matmuls_per_block_unpacked": 2,
+        "mxu_passes_saved_per_batch": blocks * -(-batch // 128),
+        "us_per_batch_packed": round(statistics.median(samples["packed"]), 1),
+        "us_per_batch_unpacked": round(
+            statistics.median(samples["unpacked"]), 1
+        ),
+        "speedup": round(statistics.median(ratios), 3),
+        "parity": "bit-exact packed vs unpacked; atol 1e-5 vs two-scan ref",
+        "caveat": TPU_CAVEAT + (
+            "; the packed win is an MXU-pass count, invisible to the CPU "
+            "interpreter"
+        ),
+    }
+
+
+def run_engine(adapter: DriftAdapter | None = None) -> dict:
+    """Standalone packed-vs-two-matmul engine section → BENCH_engine.json
+    (the CI bench artifact)."""
+    d = 768
+    if adapter is None:
+        key = jax.random.PRNGKey(0)
+        b = jax.random.normal(key, (8_000, d))
+        b = b / jnp.linalg.norm(b, axis=1, keepdims=True)
+        r = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1), (d, d)))[0]
+        adapter = DriftAdapter.fit(
+            b, b @ r.T, kind="op",
+            config=FitConfig(kind="op", use_dsm=False),
+        )
+        corpus = (b @ r.T)[:4096]
+    else:
+        key = jax.random.PRNGKey(0)
+        corpus = jax.random.normal(key, (4096, adapter.d_old))
+        corpus = corpus / jnp.linalg.norm(corpus, axis=1, keepdims=True)
+    out = bench_engine_packed_dual(adapter, corpus)
+    emit("a1.engine_packed.query_path_us", out["us_per_batch_packed"],
+         out["mxu_passes_saved_per_batch"])
+    emit("a1.engine_unpacked.query_path_us", out["us_per_batch_unpacked"], 0)
+    emit("a1.engine_packed_vs_unpacked.speedup", 0.0, out["speedup"])
+    print(f"# caveat: {out['caveat']}", flush=True)
+    save_json("BENCH_engine", out)
     return out
 
 
@@ -496,6 +633,9 @@ def run(scale: Scale) -> dict:
 
     # Mixed-state path: one bitmap-masked launch vs the two-scan merge
     out["mixed_query_path"] = run_mixed(adapter_la)
+
+    # Engine packed dual-query vs two-matmul mixed scan
+    out["engine_packed_dual"] = run_engine(adapter_la)
     out["caveat"] = TPU_CAVEAT
 
     # Table 5 projection — adapter columns measured, re-embed/build modeled
@@ -536,11 +676,18 @@ if __name__ == "__main__":
         help="run just the mixed-state one-pass-vs-two-scan section (the "
         "CI bench artifact: BENCH_mixed.json)",
     )
+    ap.add_argument(
+        "--engine-only", action="store_true",
+        help="run just the packed-dual-query vs two-matmul engine section "
+        "(the CI bench artifact: BENCH_engine.json)",
+    )
     args = ap.parse_args()
     if args.ivf_only:
         run_ivf()
     elif args.mixed_only:
         run_mixed()
+    elif args.engine_only:
+        run_engine()
     else:
         from benchmarks.common import DEFAULT
 

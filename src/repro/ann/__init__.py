@@ -3,18 +3,20 @@
 Every index carries a ``backend`` selector choosing its scan engine:
 
 * ``"jnp"``    — pure-jnp blocked scan (reference; always available)
-* ``"pallas"`` — kernels/topk_scan: fused matmul + streaming top-k
-* ``"fused"``  — kernels/fused_search: the one-pass bridged query path —
-  adapter transform + corpus scan + running top-k in a single launch
-  (``search_bridged``); plain ``search`` falls back to the pallas scan.
+* ``"pallas"`` — the engine's identity-stage flat scan (matmul + streaming
+  top-k in one launch)
+* ``"fused"``  — the one-pass bridged query path: adapter transform +
+  corpus scan + running top-k in a single ``kernels/engine`` launch
+  (``search_bridged``); plain ``search`` falls back to the identity scan.
 
+Every index method compiles a ``kernels/engine`` ScanPlan and executes it;
 ``QueryRouter`` (serve/router.py) talks to indexes only through this
 protocol, so swapping engines is a constructor argument, not a code change.
 
 For IVF, "jnp" and "pallas" coincide (gather + batched matmul rescore);
 "fused" serves ``search`` and ``search_bridged`` as exactly two kernel
 launches — centroid probe (with the adapter folded in when bridged), then
-the kernels/ivf_rescore streaming gather-rescore.
+the engine's streaming IVF-layout gather-rescore.
 
 ``sharded_search`` / ``sharded_ivf_search`` run the same engines per shard
 (corpus rows / IVF cells sharded) and all-gather only k-candidate sets.
@@ -30,6 +32,7 @@ from repro.ann.ivf import (
     ivf_rescore,
     ivf_rescore_mixed,
     ivf_search,
+    ivf_search_jnp,
     migration_cells,
 )
 from repro.ann.kmeans import kmeans_fit
@@ -93,11 +96,14 @@ class SearchBackend(Protocol):
         """Top-k over a MIXED-STATE index (mid-migration): rows whose
         ``migrated`` bit is set hold f_new vectors and score against the raw
         queries, the rest hold f_old and score against the adapter-mapped
-        queries. On ``backend="fused"`` this is one launch (flat:
-        ``kernels/mixed_scan``) or two (IVF: probe + bitmap-masked rescore).
-        ``probe_space`` selects which query form probes cell geometry
-        ("mapped" for forward bridges, "raw" for inverse/control-arm
-        bridges); indexes without a probe stage ignore it."""
+        queries. On ``backend="fused"`` this is one engine launch (flat:
+        packed dual-query bitmap scan) or two (IVF: probe + bitmap-masked
+        rescore). ``probe_space`` selects which query form probes cell
+        geometry ("mapped" for forward bridges, "raw" for inverse/
+        control-arm bridges); indexes without a probe stage ignore it.
+        Implementations also accept ``invert=True``, flipping the bitmap
+        selection in-kernel (the inverse/control-arm scan reuses the same
+        forward bitmap)."""
         ...
 
 
@@ -110,6 +116,7 @@ __all__ = [
     "ivf_rescore",
     "ivf_rescore_mixed",
     "ivf_search",
+    "ivf_search_jnp",
     "migration_cells",
     "kmeans_fit",
     "arr",

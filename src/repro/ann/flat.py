@@ -7,11 +7,15 @@ top-k merge, so the full (Q, N) score matrix is never materialized.
 
 The scan loop has three interchangeable engines (the SearchBackend selector):
   * ``backend="jnp"``   — pure jnp reference (always available, CPU-friendly)
-  * ``backend="pallas"``— the fused kernels/topk_scan Pallas kernel
-  * ``backend="fused"`` — like "pallas", plus ``search_bridged`` runs the
-    one-pass kernels/fused_search kernel: adapter transform + scan + top-k
-    in a single launch, transformed queries never round-tripping HBM.
+  * ``backend="pallas"``— the engine's identity-stage flat scan kernel
+  * ``backend="fused"`` — like "pallas", plus bridged / mixed-state queries
+    run the adapter transform INSIDE the launch (one `kernels/engine` flat
+    launch per query batch, transformed queries never round-tripping HBM)
 All produce identical results (tests assert exact agreement on scores).
+
+Every search method compiles a :class:`~repro.kernels.engine.plan.ScanPlan`
+and executes it — the backend/bridge/migration decision tree lives in the
+engine's plan compiler, not here.
 """
 from __future__ import annotations
 
@@ -102,16 +106,10 @@ class FlatIndex:
         """Native-space top-k. ``q_valid`` marks trailing rows as
         micro-batcher padding: the kernel engines skip those query tiles
         (their output rows are undefined); the jnp engine ignores it."""
-        if self.backend in ("pallas", "fused"):
-            from repro.kernels.topk_scan import ops as topk_ops
+        from repro.kernels.engine import compile_plan, execute_plan
 
-            return topk_ops.topk_scan(
-                self.corpus, queries, k=k,
-                block_rows=min(self.block_rows, 2048), q_valid=q_valid,
-            )
-        return flat_search_jnp(
-            self.corpus, queries, k=k, block_rows=self.block_rows
-        )
+        plan = compile_plan(self)
+        return execute_plan(plan, queries, index=self, k=k, q_valid=q_valid)
 
     def search_bridged(
         self,
@@ -122,24 +120,15 @@ class FlatIndex:
     ) -> tuple[jax.Array, jax.Array]:
         """Search with new-space queries bridged through ``adapter``.
 
-        On the "fused" backend this is ONE kernel launch (adapter transform
-        + corpus scan + running top-k); otherwise the adapter applies first
-        and the result feeds the backend's plain scan.
+        On the "fused" backend this is ONE engine launch (adapter transform
+        + corpus scan + running top-k); otherwise the plan compiles to a
+        sequential prelude (apply the adapter, then the backend's plain
+        scan) — ≥2-MLP chains take that prelude on every backend.
         """
-        if self.backend == "fused":
-            from repro.kernels.fused_search import ops as fused_ops
+        from repro.kernels.engine import compile_plan, execute_plan
 
-            try:
-                fused_kind, fused = adapter.as_fused_params()
-            except NotImplementedError:
-                # multi-MLP version chains have no single-launch form:
-                # apply sequentially, then one native fused scan
-                return self.search(adapter.apply(queries), k=k, q_valid=q_valid)
-            return fused_ops.fused_bridged_search(
-                fused_kind, fused, queries, self.corpus, k=k,
-                block_rows=min(self.block_rows, 2048), q_valid=q_valid,
-            )
-        return self.search(adapter.apply(queries), k=k, q_valid=q_valid)
+        plan = compile_plan(self, adapter, mode="bridged")
+        return execute_plan(plan, queries, index=self, k=k, q_valid=q_valid)
 
     def search_mixed(
         self,
@@ -149,37 +138,29 @@ class FlatIndex:
         k: int = 10,
         q_valid: int | None = None,
         probe_space: str = "mapped",
+        invert: bool = False,
     ) -> tuple[jax.Array, jax.Array]:
         """Mixed-state search: migrated rows (bitmap set) hold f_new vectors
         and are scored with raw ``queries``; the rest hold f_old and are
-        scored with ``adapter``-transformed queries.
+        scored with ``adapter``-transformed queries. ``invert=True`` flips
+        that selection in-kernel (the inverse/control-arm scan reuses the
+        SAME forward bitmap).
 
-        On the "fused" backend this is ONE ``kernels/mixed_scan`` launch —
-        adapter transform + dual-score scan + bitmap select + running top-k
-        in VMEM. Other backends (and bridges without a single-launch fused
-        form) take the exact jnp two-scan merge, each side masked to its own
-        rows BEFORE its top-k — the same results, more launches.
-        ``probe_space`` is accepted for protocol uniformity with the IVF
-        index (flat has no probe stage; it is ignored here).
+        On the "fused" backend this is ONE ``kernels/engine`` launch —
+        adapter transform + packed dual-score scan + bitmap select +
+        running top-k in VMEM. Other backends (and bridges without a
+        single-launch fused form) take the exact jnp two-scan merge, each
+        side masked to its own rows BEFORE its top-k — the same results,
+        more launches. ``probe_space`` is accepted for protocol uniformity
+        with the IVF index (flat has no probe stage; it is ignored here).
         """
         del probe_space
-        if self.backend == "fused":
-            from repro.kernels.mixed_scan import ops as mixed_ops
+        from repro.kernels.engine import compile_plan, execute_plan
 
-            try:
-                fused_kind, fused = adapter.as_fused_params()
-            except NotImplementedError:
-                pass        # multi-MLP chains: exact jnp merge below
-            else:
-                return mixed_ops.mixed_bridged_search(
-                    fused_kind, fused, queries, self.corpus, migrated, k=k,
-                    block_rows=min(self.block_rows, 2048), q_valid=q_valid,
-                )
-        from repro.kernels.mixed_scan.ref import mixed_merge_scan
-
-        return mixed_merge_scan(
-            queries, adapter.apply(queries), self.corpus, migrated, k=k,
-            block_rows=self.block_rows,
+        plan = compile_plan(self, adapter, mode="mixed", invert=invert)
+        return execute_plan(
+            plan, queries, index=self, k=k, q_valid=q_valid,
+            migrated=migrated,
         )
 
     # Mutation path for the lazy/background re-embedding scenario (§5.6):

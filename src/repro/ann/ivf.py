@@ -12,12 +12,15 @@ the f32 sublane of 8 for the rescore kernel) so spills are rare.
 
 Backends: "jnp"/"pallas" rescore probed cells with a gather + einsum (the
 (B, nprobe, cap, d) candidate tensor is materialized); "fused" streams each
-probed cell's (cap, d) tile straight into VMEM via kernels/ivf_rescore —
+probed cell's (cap, d) tile straight into VMEM via the engine's IVF layout —
 ``search`` is two kernel launches (centroid top-k probe, gather-rescore),
 ``search_bridged`` is the same two launches with the adapter folded into the
-probe (kernels/fused_search, ``return_queries``), zero jnp glue between, and
-``search_mixed`` (mid-migration) stays two launches too: the migration
-bitmap rides the packed cell layout into a bitmap-masked rescore.
+probe (flat-layout engine launch, ``return_queries``), zero jnp glue
+between, and ``search_mixed`` (mid-migration) stays two launches too: the
+migration bitmap rides the packed cell layout into a bitmap-masked rescore.
+
+Every search method compiles a ``kernels/engine`` ScanPlan and executes it —
+the backend/bridge/migration decision tree lives in the plan compiler.
 """
 from __future__ import annotations
 
@@ -98,13 +101,18 @@ class IVFIndex:
         """Native-space probe + rescore.
 
         "jnp" and "pallas" coincide here (gather + batched matmul); "fused"
-        runs two kernel launches — topk_scan over the centroid table, then
-        the ivf_rescore streaming kernel — never materializing the gathered
-        (B, nprobe, cap, d) candidate tensor. ``q_valid`` marks trailing
-        rows as micro-batcher padding: the fused launches skip those query
-        tiles and their output rows are undefined.
+        runs two kernel launches — an identity-stage flat scan over the
+        centroid table, then the engine's streaming IVF rescore — never
+        materializing the gathered (B, nprobe, cap, d) candidate tensor.
+        ``q_valid`` marks trailing rows as micro-batcher padding: the fused
+        launches skip those query tiles and their output rows are undefined.
         """
-        return ivf_search(self, queries, k=k, nprobe=nprobe, q_valid=q_valid)
+        from repro.kernels.engine import compile_plan, execute_plan
+
+        plan = compile_plan(self)
+        return execute_plan(
+            plan, queries, index=self, k=k, q_valid=q_valid, nprobe=nprobe
+        )
 
     def search_bridged(
         self,
@@ -117,36 +125,18 @@ class IVFIndex:
         """Bridged search: adapter-mapped queries probe + rescore.
 
         On the "fused" backend a bridged query is EXACTLY two kernel
-        launches: (1) fused_search over the centroid table — adapter
-        transform + probe top-k in one launch, emitting the transformed
-        queries from VMEM; (2) the ivf_rescore gather-rescore kernel over
-        the probed cells. Other backends apply the adapter separately, then
-        run the standard probe path.
+        launches: (1) a flat-layout engine launch over the centroid table —
+        adapter transform + probe top-k in one launch, emitting the
+        transformed queries from VMEM; (2) the engine's streaming IVF
+        rescore over the probed cells. Other backends (and ≥2-MLP chains)
+        compile to a sequential prelude: apply the adapter, then the
+        standard probe path.
         """
-        if nprobe > self.n_cells:
-            raise ValueError(
-                f"nprobe={nprobe} exceeds n_cells={self.n_cells}"
-            )
-        if self.backend == "fused":
-            from repro.kernels.fused_search import ops as fused_ops
+        from repro.kernels.engine import compile_plan, execute_plan
 
-            try:
-                fused_kind, fused = adapter.as_fused_params()
-            except NotImplementedError:
-                # multi-MLP version chains: sequential apply, fused probe
-                return ivf_search(
-                    self, adapter.apply(queries), k=k, nprobe=nprobe,
-                    q_valid=q_valid,
-                )
-            # centroid table is small: size the block to its padded rows
-            br = min(1024, -(-self.n_cells // 128) * 128)
-            _, probe, q_mapped = fused_ops.fused_bridged_search(
-                fused_kind, fused, queries, self.centroids, k=nprobe,
-                block_rows=br, return_queries=True, q_valid=q_valid,
-            )
-            return ivf_rescore(self, q_mapped, probe, k=k, q_valid=q_valid)
-        return ivf_search(
-            self, adapter.apply(queries), k=k, nprobe=nprobe, q_valid=q_valid
+        plan = compile_plan(self, adapter, mode="bridged")
+        return execute_plan(
+            plan, queries, index=self, k=k, q_valid=q_valid, nprobe=nprobe
         )
 
     def search_mixed(
@@ -159,18 +149,21 @@ class IVFIndex:
         q_valid: int | None = None,
         probe_space: str = "mapped",
         mig_cells: jax.Array | None = None,
+        invert: bool = False,
     ) -> tuple[jax.Array, jax.Array]:
         """Mixed-state search: migrated rows (bitmap set) hold f_new vectors
         and rescore against raw ``queries``; the rest rescore against the
-        ``adapter``-transformed queries.
+        ``adapter``-transformed queries. ``invert=True`` flips that
+        selection in-kernel (the inverse/control-arm rescore reuses the
+        SAME forward bitmap packing).
 
         On the "fused" backend this is EXACTLY two launches: (1) the fused
         probe over the centroid table (adapter folded in, transformed
-        queries emitted from VMEM); (2) the bitmap-masked
-        ``kernels/ivf_rescore`` mixed rescore — the migration bitmap rides
-        the packed (C, cap) cell layout through the same scalar-prefetch
-        index_map as the cell ids. Other backends probe in jnp and rescore
-        through the mixed gather oracle.
+        queries emitted from VMEM); (2) the engine's bitmap-masked mixed
+        rescore — the migration bitmap rides the packed (C, cap) cell
+        layout through the same scalar-prefetch index_map as the cell ids.
+        Other backends probe in jnp and rescore through the mixed gather
+        oracle.
 
         ``probe_space`` picks which query form probes the centroid table:
         "mapped" (default — new-space queries; cells keep old-space k-means
@@ -183,51 +176,15 @@ class IVFIndex:
         ``migration_cells`` so hot-path callers (the store caches it per
         migrate_batch) skip the O(C·cap) repack per query batch.
         """
-        if nprobe > self.n_cells:
-            raise ValueError(
-                f"nprobe={nprobe} exceeds n_cells={self.n_cells}"
-            )
-        if probe_space not in ("mapped", "raw"):
-            raise ValueError(
-                f"probe_space must be 'mapped' or 'raw', got {probe_space!r}"
-            )
-        if mig_cells is None:
-            mig_cells = migration_cells(self.cell_ids, migrated)
-        if self.backend == "fused":
-            from repro.kernels.fused_search import ops as fused_ops
-            from repro.kernels.ivf_rescore import ops as rescore_ops
-            from repro.kernels.topk_scan import ops as topk_ops
+        from repro.kernels.engine import compile_plan, execute_plan
 
-            br = min(1024, -(-self.n_cells // 128) * 128)
-            try:
-                fused_kind, fused = adapter.as_fused_params()
-            except NotImplementedError:
-                fused_kind = None
-            if fused_kind is not None and probe_space == "mapped":
-                # launch 1: adapter-folded probe, q' emitted from VMEM
-                _, probe, q_mapped = fused_ops.fused_bridged_search(
-                    fused_kind, fused, queries, self.centroids, k=nprobe,
-                    block_rows=br, return_queries=True, q_valid=q_valid,
-                )
-            else:
-                # raw-probe (inverse/control arm) or unfoldable chain: the
-                # probe is a plain native launch; the mapped side applies
-                # outside the kernel
-                q_mapped = adapter.apply(queries)
-                probe_q = queries if probe_space == "raw" else q_mapped
-                _, probe = topk_ops.topk_scan(
-                    self.centroids, probe_q, k=nprobe, block_rows=br
-                )
-            # launch 2: bitmap-masked mixed rescore
-            return rescore_ops.ivf_rescore_mixed_fused(
-                self.cells, self.cell_ids, mig_cells, queries, q_mapped,
-                probe, k=k, q_valid=q_valid,
-            )
-        q_mapped = adapter.apply(queries)
-        probe_q = queries if probe_space == "raw" else q_mapped
-        _, probe = jax.lax.top_k(probe_q @ self.centroids.T, nprobe)
-        return ivf_rescore_mixed(
-            self, queries, q_mapped, probe, mig_cells, k=k
+        plan = compile_plan(
+            self, adapter, mode="mixed", invert=invert,
+            probe_space=probe_space,
+        )
+        return execute_plan(
+            plan, queries, index=self, k=k, q_valid=q_valid,
+            migrated=migrated, mig_cells=mig_cells, nprobe=nprobe,
         )
 
 
@@ -368,7 +325,6 @@ def _pad_to_blocks(x: jax.Array, block: int) -> jax.Array:
     return pad_rows(x, block).reshape(-1, block, *x.shape[1:])
 
 
-@partial(jax.jit, static_argnames=("k", "nprobe", "query_block"))
 def ivf_search(
     index: IVFIndex,
     queries: jax.Array,
@@ -379,23 +335,41 @@ def ivf_search(
 ) -> tuple[jax.Array, jax.Array]:
     """Approximate top-k: probe the ``nprobe`` nearest cells per query.
 
-    ``q_valid`` is a DYNAMIC argument (int/scalar array or None): varying
-    per-bucket valid counts from the micro-batcher do not retrace."""
+    Routes through the engine plan layer on the "fused" backend (probe +
+    streaming rescore, two launches); the other backends take the blocked
+    jnp gather path. ``q_valid`` is a DYNAMIC argument (int/scalar array
+    or None): varying per-bucket valid counts from the micro-batcher do
+    not retrace."""
+    if index.backend == "fused":
+        from repro.kernels.engine import compile_plan, execute_plan
+
+        plan = compile_plan(index)
+        return execute_plan(
+            plan, queries, index=index, k=k, q_valid=q_valid, nprobe=nprobe
+        )
+    n_cells = index.centroids.shape[0]
+    if nprobe > n_cells:
+        raise ValueError(f"nprobe={nprobe} exceeds n_cells={n_cells}")
+    return ivf_search_jnp(
+        index, queries, k=k, nprobe=nprobe, query_block=query_block
+    )
+
+
+@partial(jax.jit, static_argnames=("k", "nprobe", "query_block"))
+def ivf_search_jnp(
+    index: IVFIndex,
+    queries: jax.Array,
+    k: int = 10,
+    nprobe: int = 8,
+    query_block: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """The blocked jnp probe + gather-rescore path (the "jnp"/"pallas"
+    engine, and the oracle the fused two-launch path is parity-gated
+    against)."""
     n_cells = index.centroids.shape[0]
     if nprobe > n_cells:          # shapes are static under jit: trace-time
         raise ValueError(f"nprobe={nprobe} exceeds n_cells={n_cells}")
     qn = queries.shape[0]
-    if index.backend == "fused":
-        from repro.kernels.topk_scan import ops as topk_ops
-
-        # the probe's 128-row tiles are never wholly skippable under pow2
-        # bucketing, so q_valid is not forwarded (it would be quantized
-        # away anyway); the rescore's 8-row tiles do skip
-        br = min(1024, -(-n_cells // 128) * 128)
-        _, probe = topk_ops.topk_scan(
-            index.centroids, queries, k=nprobe, block_rows=br
-        )
-        return ivf_rescore(index, queries, probe, k=k, q_valid=q_valid)
     qblocks = _pad_to_blocks(queries, query_block)
 
     def search_block(_, qb):
@@ -419,12 +393,12 @@ def ivf_rescore(
     """Candidate rescore for externally-probed queries (the fused bridged
     path: probe ids + transformed queries come out of one kernel launch).
 
-    On the "fused" backend this is the ivf_rescore Pallas kernel — probed
-    (cap, d) cell tiles stream HBM→VMEM, no gathered candidate tensor; on
-    "jnp"/"pallas" it is the blocked gather + einsum scan."""
+    On the "fused" backend this is the engine's streaming IVF-layout launch
+    — probed (cap, d) cell tiles stream HBM→VMEM, no gathered candidate
+    tensor; on "jnp"/"pallas" it is the blocked gather + einsum scan."""
     qn = q_mapped.shape[0]
     if index.backend == "fused":
-        from repro.kernels.ivf_rescore import ops as rescore_ops
+        from repro.kernels.engine import ops as rescore_ops
 
         return rescore_ops.ivf_rescore_fused(
             index.cells, index.cell_ids, q_mapped, probe, k=k, q_valid=q_valid

@@ -9,20 +9,21 @@ independent of corpus size N — which is what makes the billion-row
 projection in the paper's Table 5 workable.
 
 Every shard runs the same ``backend`` engine the single-device indexes use
-("jnp" | "pallas" | "fused"). On ``backend="fused"`` with an installed
-adapter's ``as_fused_params()`` handed in via ``fused``, each shard serves
-the bridged query as ONE local kernels/fused_search launch — adapter
-transform + local corpus scan + running top-k in VMEM — and only the
-k-candidate sets cross the interconnect. This replaces the old
-adapter-then-jnp-scan per shard (the adapter launch and the HBM round-trip
-of transformed queries paid once per shard).
+("jnp" | "pallas" | "fused"); the per-shard serving path is a
+``kernels/engine`` ScanPlan compiled ONCE outside the shard_map closure.
+On ``backend="fused"`` with an installed adapter's ``as_fused_params()``
+handed in via ``fused``, each shard serves the bridged query as ONE local
+engine launch — adapter transform + local corpus scan + running top-k in
+VMEM — and only the k-candidate sets cross the interconnect. This replaces
+the old adapter-then-jnp-scan per shard (the adapter launch and the HBM
+round-trip of transformed queries paid once per shard).
 
 ``sharded_ivf_search`` extends the same story to IVF: the packed cell
 tensor is sharded cell-wise, the (small) centroid table is replicated, every
 shard derives the SAME global probe set and rescans only the probed cells it
 owns (others point at a NEG-masked dummy cell) — so the merged result is
 exactly the single-device answer, and on "fused" each shard's rescore is
-one kernels/ivf_rescore launch.
+one engine IVF-layout launch.
 """
 from __future__ import annotations
 
@@ -98,8 +99,8 @@ def sharded_search(
     adapter_fn: optional params-free callable applied to queries on every
             shard before search (the installed DriftAdapter's apply).
     backend: per-shard scan engine — "jnp" (blocked jnp scan), "pallas"
-            (kernels/topk_scan), "fused" (kernels/fused_search one-launch
-            bridged path when ``fused`` is given, topk_scan otherwise).
+            (identity-stage engine scan), "fused" (one-launch bridged
+            engine path when ``fused`` is given, identity scan otherwise).
     fused:  the installed adapter's ``as_fused_params()`` (kind, weights);
             with backend="fused" each shard runs adapter transform + scan +
             top-k as ONE local launch — no per-shard adapter launch, no HBM
@@ -115,31 +116,41 @@ def sharded_search(
 
     corpus_spec = P(corpus_axes if len(corpus_axes) > 1 else corpus_axes[0])
 
+    # compile the per-shard plan ONCE, outside the shard_map closure: the
+    # engine's plan layer owns the backend/bridge dispatch the shards used
+    # to hand-roll (flat layout; bridged = one fused launch per shard)
+    from repro.kernels.engine import compile_plan, ops as engine_ops
+
+    plan = compile_plan(
+        None,
+        bridge=fused,
+        mode="bridged" if fused is not None else "native",
+        index_type="flat",
+        backend=backend,
+    )
+
     def local_search(corpus_shard, queries_rep):
         offset = _shard_index(mesh, corpus_axes) * rows_per_shard
-        if backend == "fused" and fused is not None:
-            from repro.kernels.fused_search.ops import fused_bridged_search
-
+        # dispatch on the plan's launch specs — what the plan says runs is
+        # what runs (an in-kernel transform means the one-launch fused path)
+        if plan.launches and plan.launches[0].transform != "identity":
             fused_kind, fused_params = fused
-            s, i = fused_bridged_search(
+            s, i = engine_ops.fused_bridged_search(
                 fused_kind, fused_params, queries_rep, corpus_shard,
                 k=k, block_rows=kernel_rows,
-            )
-        elif backend in ("pallas", "fused"):
-            from repro.kernels.topk_scan.ops import topk_scan
-
-            if adapter_fn is not None:
-                queries_rep = adapter_fn(queries_rep)
-            s, i = topk_scan(
-                corpus_shard, queries_rep, k=k, block_rows=kernel_rows
             )
         else:
             if adapter_fn is not None:
                 queries_rep = adapter_fn(queries_rep)
-            s, i = flat_search_jnp(
-                corpus_shard, queries_rep, k=k,
-                block_rows=min(block_rows, rows_per_shard),
-            )
+            if plan.launches:
+                s, i = engine_ops.topk_scan(
+                    corpus_shard, queries_rep, k=k, block_rows=kernel_rows
+                )
+            else:
+                s, i = flat_search_jnp(
+                    corpus_shard, queries_rep, k=k,
+                    block_rows=min(block_rows, rows_per_shard),
+                )
         return _merge_candidates(s, i + offset, corpus_axes, k)
 
     in_specs = (corpus_spec, P())
@@ -180,8 +191,8 @@ def sharded_ivf_search(
     sharded cell_ids carry them).
 
     Engine selection mirrors ``IVFIndex``: ``index.backend == "fused"``
-    runs the per-shard rescore as one kernels/ivf_rescore launch (and, with
-    ``fused`` given, the probe as one kernels/fused_search launch emitting
+    runs the per-shard rescore as one engine IVF-layout launch (and, with
+    ``fused`` given, the probe as one adapter-folded engine launch emitting
     the transformed queries from VMEM); other backends use the jnp
     gather + einsum rescore.
 
@@ -202,21 +213,33 @@ def sharded_ivf_search(
 
     cell_spec = P(cell_axes if len(cell_axes) > 1 else cell_axes[0])
 
-    def local_search(cells_shard, ids_shard, queries_rep):
-        if backend == "fused" and fused is not None:
-            from repro.kernels.fused_search.ops import fused_bridged_search
+    # per-shard plan, compiled once: fused probe + streaming rescore on the
+    # "fused" engine, jnp probe + gather-rescore oracle otherwise
+    from repro.kernels.engine import compile_plan, ops as engine_ops
 
+    plan = compile_plan(
+        None,
+        bridge=fused,
+        mode="bridged" if fused is not None else "native",
+        index_type="ivf",
+        backend=backend,
+    )
+
+    def local_search(cells_shard, ids_shard, queries_rep):
+        # dispatch on the plan's launch specs: a transforming probe is the
+        # adapter-folded fused path
+        if plan.launches and plan.launches[0].transform != "identity":
             fused_kind, fused_params = fused
-            _, probe, qm = fused_bridged_search(
+            _, probe, qm = engine_ops.fused_bridged_search(
                 fused_kind, fused_params, queries_rep, centroids,
                 k=nprobe, block_rows=br, return_queries=True,
             )
         else:
             qm = queries_rep if adapter_fn is None else adapter_fn(queries_rep)
-            if backend == "fused":
-                from repro.kernels.topk_scan.ops import topk_scan
-
-                _, probe = topk_scan(centroids, qm, k=nprobe, block_rows=br)
+            if plan.launches:
+                _, probe = engine_ops.topk_scan(
+                    centroids, qm, k=nprobe, block_rows=br
+                )
             else:
                 _, probe = jax.lax.top_k(qm @ centroids.T, nprobe)
         # redirect probe entries owned by other shards to the dummy cell
@@ -230,10 +253,10 @@ def sharded_ivf_search(
         ids_aug = jnp.concatenate(
             [ids_shard, jnp.full((1, cap), -1, ids_shard.dtype)]
         )
-        if backend == "fused":
-            from repro.kernels.ivf_rescore.ops import ivf_rescore_fused
-
-            s, i = ivf_rescore_fused(cells_aug, ids_aug, qm, local_p, k=k)
+        if plan.launches:
+            s, i = engine_ops.ivf_rescore_fused(
+                cells_aug, ids_aug, qm, local_p, k=k
+            )
         else:
             from repro.kernels.ivf_rescore.ref import ivf_rescore_ref
 

@@ -83,7 +83,7 @@ class DriftAdapter:
         Returns ("linear" | "mlp", {weight name: array}).
         """
         if self._fused is None:
-            from repro.kernels.fused_search.ops import fold_fused_params
+            from repro.kernels.common import fold_fused_params
 
             self._fused = fold_fused_params(self.kind, self.params, self.d_new)
         return self._fused

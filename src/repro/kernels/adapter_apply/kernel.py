@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused Drift-Adapter query transform.
+"""Pallas TPU kernel: standalone Drift-Adapter query transform.
 
 One VMEM pass per query tile computes the paper's entire query-path add-on
 (§3 + App. A.1): residual MLP (GELU, 256 hidden) → optional rectangular
@@ -9,104 +9,77 @@ each query exactly once from HBM and writes the transformed query once —
 this is the `<10 µs` added-latency component realized as a single fused
 launch instead of 5 separate HLO ops (matmul, gelu, matmul, scale, norm).
 
-Supports kinds "mlp" (with/without P projection), "op"/"la" folded into a
-single matrix (R or UVᵀ precomposed in ops.py), all with optional DSM.
+The transform math itself is the engine's query stage
+(`kernels/engine/core.py:_apply_transform`) — the SAME body the one-pass
+scan kernels run on their first corpus step, so the standalone launch
+(still the benchmarks' unfused baseline) can never diverge from the fused
+paths. Supports kinds "mlp" (with/without P projection), "op"/"la" folded
+into a single matrix (R or UVᵀ precomposed in ops.py), all with optional
+DSM.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-def _mlp_kernel(
-    x_ref,      # (T, d_new)
-    w1_ref,     # (hidden, d_new)
-    b1_ref,     # (1, hidden)
-    w2_ref,     # (d_old, hidden)
-    b2_ref,     # (1, d_old)
-    p_ref,      # (d_old, d_new) residual projection (identity pre-built ok)
-    s_ref,      # (1, d_old) DSM diagonal (ones if unused)
-    out_ref,    # (T, d_old)
-    *,
-    renormalize: bool,
-):
-    x = x_ref[...].astype(jnp.float32)
-    h = jax.nn.gelu(
-        jnp.dot(x, w1_ref[...].T, preferred_element_type=jnp.float32)
-        + b1_ref[0]
-    )
-    y = (
-        jnp.dot(x, p_ref[...].T, preferred_element_type=jnp.float32)
-        + jnp.dot(h, w2_ref[...].T, preferred_element_type=jnp.float32)
-        + b2_ref[0]
-    )
-    y = y * s_ref[0]
-    if renormalize:
-        norm = jnp.sqrt(jnp.sum(y * y, axis=1, keepdims=True)) + 1e-12
-        y = y / norm
-    out_ref[...] = y
+from repro.kernels.engine.core import (
+    WEIGHT_FIELDS,
+    _apply_transform,
+    weight_operands,
+)
 
 
-def _linear_kernel(
-    x_ref, m_ref, t_ref, s_ref, out_ref, *, renormalize: bool
-):
-    """OP / LA collapsed to a single matrix: y = S·(M x + t), renormalized."""
-    x = x_ref[...].astype(jnp.float32)
-    y = jnp.dot(x, m_ref[...].T, preferred_element_type=jnp.float32) + t_ref[0]
-    y = y * s_ref[0]
-    if renormalize:
-        norm = jnp.sqrt(jnp.sum(y * y, axis=1, keepdims=True)) + 1e-12
-        y = y / norm
-    out_ref[...] = y
+def _make_apply_kernel(transform: str, renormalize: bool):
+    n_w = len(WEIGHT_FIELDS[transform])
+
+    def kernel(*refs):
+        x_ref = refs[0]
+        w_refs = refs[1:1 + n_w]
+        out_ref = refs[1 + n_w]
+        out_ref[...] = _apply_transform(transform, x_ref, w_refs, renormalize)
+
+    kernel.__name__ = f"_apply_{transform}"
+    kernel.__qualname__ = kernel.__name__
+    return kernel
+
+
+def _apply_call(transform, x, fused, d_old, *, renormalize, tile, interpret):
+    q = x.shape[0]
+    assert q % tile == 0
+    w_arrays, w_shapes = weight_operands(transform, fused)
+    rep = lambda i: (0, 0)
+    return pl.pallas_call(
+        _make_apply_kernel(transform, renormalize),
+        grid=(q // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, x.shape[1]), lambda i: (i, 0)),
+            *[pl.BlockSpec(s, rep) for s in w_shapes],
+        ],
+        out_specs=pl.BlockSpec((tile, d_old), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, d_old), jnp.float32),
+        interpret=interpret,
+    )(x, *w_arrays)
 
 
 def mlp_adapter_pallas(
     x, w1, b1, w2, b2, p, s, *, renormalize=True, tile=128, interpret=False
 ):
-    q, d_new = x.shape
-    d_old, hidden = w2.shape
-    assert q % tile == 0
-    kernel = functools.partial(_mlp_kernel, renormalize=renormalize)
-    rep = lambda i: (0, 0)
-    return pl.pallas_call(
-        kernel,
-        grid=(q // tile,),
-        in_specs=[
-            pl.BlockSpec((tile, d_new), lambda i: (i, 0)),
-            pl.BlockSpec(w1.shape, rep),
-            pl.BlockSpec((1, hidden), rep),
-            pl.BlockSpec(w2.shape, rep),
-            pl.BlockSpec((1, d_old), rep),
-            pl.BlockSpec(p.shape, rep),
-            pl.BlockSpec((1, d_old), rep),
-        ],
-        out_specs=pl.BlockSpec((tile, d_old), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((q, d_old), jnp.float32),
+    d_old = w2.shape[0]
+    fused = {"w1": w1, "b1": b1, "w2": w2, "b2": b2, "p": p, "s": s}
+    return _apply_call(
+        "mlp", x, fused, d_old, renormalize=renormalize, tile=tile,
         interpret=interpret,
-    )(x, w1, b1.reshape(1, -1), w2, b2.reshape(1, -1), p, s.reshape(1, -1))
+    )
 
 
 def linear_adapter_pallas(
     x, m, t, s, *, renormalize=True, tile=128, interpret=False
 ):
-    q, d_new = x.shape
+    """OP / LA collapsed to a single matrix: y = S·(M x + t), renormalized."""
     d_old = m.shape[0]
-    assert q % tile == 0
-    kernel = functools.partial(_linear_kernel, renormalize=renormalize)
-    rep = lambda i: (0, 0)
-    return pl.pallas_call(
-        kernel,
-        grid=(q // tile,),
-        in_specs=[
-            pl.BlockSpec((tile, d_new), lambda i: (i, 0)),
-            pl.BlockSpec(m.shape, rep),
-            pl.BlockSpec((1, d_old), rep),
-            pl.BlockSpec((1, d_old), rep),
-        ],
-        out_specs=pl.BlockSpec((tile, d_old), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((q, d_old), jnp.float32),
+    fused = {"m": m, "t": t, "s": s}
+    return _apply_call(
+        "linear", x, fused, d_old, renormalize=renormalize, tile=tile,
         interpret=interpret,
-    )(x, m, t.reshape(1, -1), s.reshape(1, -1))
+    )

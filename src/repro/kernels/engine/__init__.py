@@ -1,0 +1,48 @@
+"""The unified scan-engine package: ONE Pallas core (transform → score →
+select → running top-k, parameterized along the query-stage / source-layout
+/ score-select axes), the five public launch wrappers the legacy kernel
+packages now re-export, and the ScanPlan compiler the serving layers call
+instead of hand-dispatching among kernel packages."""
+from repro.kernels.engine.core import (
+    LAYOUTS,
+    SELECTS,
+    TRANSFORMS,
+    kernel_name,
+)
+from repro.kernels.engine.ops import (
+    FUSED_KINDS,
+    fold_fused_params,
+    fused_bridged_search,
+    ivf_rescore_fused,
+    ivf_rescore_mixed_fused,
+    mixed_bridged_search,
+    topk_scan,
+)
+from repro.kernels.engine.plan import (
+    LaunchSpec,
+    ScanPlan,
+    ServingState,
+    build_plan,
+    compile_plan,
+    execute_plan,
+)
+
+__all__ = [
+    "FUSED_KINDS",
+    "LAYOUTS",
+    "SELECTS",
+    "TRANSFORMS",
+    "LaunchSpec",
+    "ScanPlan",
+    "ServingState",
+    "build_plan",
+    "compile_plan",
+    "execute_plan",
+    "fold_fused_params",
+    "fused_bridged_search",
+    "ivf_rescore_fused",
+    "ivf_rescore_mixed_fused",
+    "kernel_name",
+    "mixed_bridged_search",
+    "topk_scan",
+]

@@ -1,0 +1,521 @@
+"""The ONE Pallas scan core behind every serving kernel.
+
+Four kernel packages (`topk_scan`, `fused_search`, `mixed_scan`,
+`ivf_rescore`) used to re-implement the same transform → score →
+running-top-k loop. This module is the single parameterized core they all
+collapsed into, built along three orthogonal axes:
+
+* **query stage** — ``transform``: ``"identity"`` (scan the raw queries),
+  ``"linear"`` (OP/LA/identity chains folded to ``y = S·(M x + t)``) or
+  ``"mlp"`` (residual MLP ``y = S·(P x + W₂ GELU(W₁ x + b₁) + b₂)``), each
+  ± ℓ2 renorm. The transform runs ONCE per query tile, on the first
+  sequential grid step, into VMEM scratch — transformed queries never
+  round-trip HBM. For dual-score scans the stage can run PACKED: the
+  scratch holds ``[q; g(q)]`` stacked (2·q_tile rows) so each corpus block
+  pays a SINGLE matmul, both score sets falling out of one MXU pass.
+
+* **source layout** — ``layout``: ``"flat"`` streams contiguous
+  ``(block_rows, d)`` corpus blocks HBM→VMEM via a dense grid axis;
+  ``"ivf"`` streams one probed ``(cap, d)`` cell tile per step through a
+  scalar-prefetch index_map (the probe table addresses HBM by content —
+  the ``(B, nprobe, cap, d)`` gather never materializes).
+
+* **score select** — ``select``: ``"plain"`` (every candidate keeps its
+  one score) or ``"bitmap"`` (dual-score: a streamed migration bitmap
+  picks per row which of the native/bridged scores enters the fold), with
+  ``invert=True`` flipping the selection — the inverse/control-arm scan is
+  the same launch with the SAME forward bitmap, bit-flipped in-kernel.
+
+Shared invariants live here exactly once: the argmax-free ``_fold_block``
+running top-k, NEG masking (pad corpus rows, pad cell slots ``id == -1``,
+non-owning tile rows), and the whole-tile ``q_valid`` skip predicate.
+
+Kernel *names* encode the axes (``_scan_<transform>_<layout>_<select>
+[_inv][_packed]``) so the pallas_call-counting launch tests assert not just
+how many launches a serving path takes but which plan each one executes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = float(jnp.finfo(jnp.float32).min)
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both so the kernel
+# runs on the pinned container jax as well as newer releases.
+_CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
+TRANSFORMS = ("identity", "linear", "mlp")
+LAYOUTS = ("flat", "ivf")
+SELECTS = ("plain", "bitmap")
+
+# flat weight-dict field order per query stage (fold_fused_params layout)
+WEIGHT_FIELDS = {
+    "identity": (),
+    "linear": ("m", "t", "s"),
+    "mlp": ("w1", "b1", "w2", "b2", "p", "s"),
+}
+# fields shipped as (1, d) row vectors (biases / DSM diagonals)
+_ROW_FIELDS = frozenset({"t", "s", "b1", "b2"})
+
+
+def kernel_name(
+    transform: str,
+    layout: str,
+    select: str,
+    invert: bool = False,
+    packed: bool = False,
+) -> str:
+    """The canonical engine kernel name for a launch's axis coordinates —
+    the single naming source shared by the kernel factories, the ScanPlan
+    compiler, and the launch-count tests."""
+    parts = ["_scan", transform, layout, select]
+    if invert:
+        parts.append("inv")
+    if packed:
+        parts.append("packed")
+    return "_".join(parts)
+
+
+def _fold_block(scores, ids, best_s, best_i, k: int):
+    """Merge (Qt, C) block scores+ids into carried (Qt, k). Returns updated
+    (best_s, best_i) as values. Vectorized, no argmax/gather."""
+    merged_s = jnp.concatenate([best_s, scores], axis=1)   # (Qt, k+C)
+    merged_i = jnp.concatenate([best_i, ids], axis=1)
+    width = merged_s.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, merged_s.shape, 1)
+    out_s = []
+    out_i = []
+    for _slot in range(k):
+        m = jnp.max(merged_s, axis=1)                      # (Qt,)
+        hit = merged_s == m[:, None]
+        pos = jnp.min(jnp.where(hit, iota, width), axis=1) # first max pos
+        sel = iota == pos[:, None]                         # one-hot (Qt, k+C)
+        picked_i = jnp.sum(jnp.where(sel, merged_i, 0), axis=1)
+        out_s.append(m)
+        out_i.append(picked_i)
+        merged_s = jnp.where(sel, NEG, merged_s)
+        # blank the picked id too: when a row runs out of real candidates
+        # (score NEG), later slots must re-select as -1, not repeat the id
+        merged_i = jnp.where(sel, -1, merged_i)
+    return jnp.stack(out_s, axis=1), jnp.stack(out_i, axis=1)
+
+
+def _l2_renorm(y):
+    norm = jnp.sqrt(jnp.sum(y * y, axis=1, keepdims=True)) + 1e-12
+    return y / norm
+
+
+def _apply_transform(transform, x_ref, w_refs, renormalize: bool):
+    """The query stage: map the raw (Qt, d_new) tile into (Qt, d_old)."""
+    x = x_ref[...].astype(jnp.float32)
+    if transform == "linear":
+        m_ref, t_ref, s_ref = w_refs
+        y = jnp.dot(
+            x, m_ref[...].T, preferred_element_type=jnp.float32
+        ) + t_ref[0]
+        y = y * s_ref[0]
+    elif transform == "mlp":
+        w1_ref, b1_ref, w2_ref, b2_ref, p_ref, s_ref = w_refs
+        h = jax.nn.gelu(
+            jnp.dot(x, w1_ref[...].T, preferred_element_type=jnp.float32)
+            + b1_ref[0]
+        )
+        y = (
+            jnp.dot(x, p_ref[...].T, preferred_element_type=jnp.float32)
+            + jnp.dot(h, w2_ref[...].T, preferred_element_type=jnp.float32)
+            + b2_ref[0]
+        )
+        y = y * s_ref[0]
+    else:
+        raise ValueError(f"no in-kernel transform for {transform!r}")
+    return _l2_renorm(y) if renormalize else y
+
+
+def weight_operands(transform: str, fused: dict) -> tuple[tuple, tuple]:
+    """(arrays, block shapes) of a stage's replicated weight operands —
+    row-vector fields reshaped to (1, d) so every operand stays 2D."""
+    arrays = []
+    shapes = []
+    for f in WEIGHT_FIELDS[transform]:
+        w = fused[f]
+        if f in _ROW_FIELDS:
+            w = w.reshape(1, -1)
+        arrays.append(w)
+        shapes.append(w.shape)
+    return tuple(arrays), tuple(shapes)
+
+
+# ---------------------------------------------------------------------------
+# flat layout: contiguous corpus blocks on a dense grid axis
+# ---------------------------------------------------------------------------
+
+def make_flat_kernel(
+    *,
+    transform: str,
+    select: str,
+    invert: bool,
+    packed: bool,
+    renormalize: bool,
+    return_queries: bool,
+    k: int,
+    block_rows: int,
+    n_valid: int,
+    q_valid: int,
+):
+    """Build the flat-layout scan kernel for one axis combination.
+
+    ``select == "bitmap"`` implies dual scoring (raw + transformed), which
+    requires a non-identity transform; ``packed`` stacks both query forms
+    into one scratch so each corpus block is ONE matmul.
+    """
+    dual = select == "bitmap"
+    has_qx = transform != "identity"
+    n_w = len(WEIGHT_FIELDS[transform])
+    if dual and not has_qx:
+        raise ValueError("bitmap select needs a query transform (dual score)")
+    if packed and not dual:
+        raise ValueError("packed query stage only applies to dual scoring")
+    if return_queries and (not has_qx or dual):
+        raise ValueError("return_queries needs a plain transformed stage")
+
+    def kernel(*refs):
+        x_ref = refs[0]
+        w_refs = refs[1:1 + n_w]
+        c_ref = refs[1 + n_w]
+        pos = 2 + n_w
+        g_ref = None
+        if dual:
+            g_ref = refs[pos]
+            pos += 1
+        n_out = 3 if return_queries else 2
+        out_refs = refs[pos:pos + n_out]
+        scratch = refs[pos + n_out:]
+        if has_qx:
+            qx, best_s, best_i = scratch
+        else:
+            best_s, best_i = scratch
+            qx = None
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        nb = pl.num_programs(1)
+        q_tile = x_ref.shape[0]
+
+        # query tiles entirely past q_valid are micro-batcher padding: skip
+        # the transform + matmul + fold + emit (their output is undefined)
+        @pl.when(i * q_tile < q_valid)
+        def _tile():
+            @pl.when(j == 0)
+            def _init():
+                if has_qx:
+                    t = _apply_transform(transform, x_ref, w_refs, renormalize)
+                    if packed:
+                        # [q; g(q)] stacked: one matmul scores both forms
+                        qx[...] = jnp.concatenate(
+                            [x_ref[...].astype(jnp.float32), t], axis=0
+                        )
+                    else:
+                        qx[...] = t
+                best_s[...] = jnp.full_like(best_s[...], NEG)
+                best_i[...] = jnp.full_like(best_i[...], -1)
+                if return_queries:
+                    out_refs[2][...] = qx[...]
+
+            if dual:
+                if packed:
+                    both = jnp.dot(
+                        qx[...], c_ref[...].T,
+                        preferred_element_type=jnp.float32,
+                    )                                      # (2·Qt, C)
+                    s_native = both[:q_tile]
+                    s_bridged = both[q_tile:]
+                else:
+                    s_bridged = jnp.dot(
+                        qx[...], c_ref[...].T,
+                        preferred_element_type=jnp.float32,
+                    )
+                    s_native = jnp.dot(
+                        x_ref[...].astype(jnp.float32), c_ref[...].T,
+                        preferred_element_type=jnp.float32,
+                    )
+                use_native = g_ref[...][0] > 0             # (C,)
+                if invert:
+                    use_native = ~use_native
+                scores = jnp.where(use_native[None, :], s_native, s_bridged)
+            else:
+                qq = qx[...] if has_qx else x_ref[...]
+                scores = jnp.dot(
+                    qq, c_ref[...].T, preferred_element_type=jnp.float32
+                )                                          # (Qt, C)
+            row_ids = j * block_rows + jax.lax.broadcasted_iota(
+                jnp.int32, scores.shape, 1
+            )
+            scores = jnp.where(row_ids < n_valid, scores, NEG)
+            new_s, new_i = _fold_block(
+                scores, row_ids, best_s[...], best_i[...], k
+            )
+            best_s[...] = new_s
+            best_i[...] = new_i
+
+            @pl.when(j == nb - 1)
+            def _emit():
+                out_refs[0][...] = best_s[...]
+                out_refs[1][...] = best_i[...]
+
+    kernel.__name__ = kernel_name(transform, "flat", select, invert, packed)
+    kernel.__qualname__ = kernel.__name__
+    return kernel
+
+
+def flat_scan_pallas(
+    queries: jax.Array,          # (Q, d_new) — padded to q_tile multiple
+    corpus: jax.Array,           # (N, d_old) — padded to block_rows multiple
+    fused: dict | None = None,   # stage weights (fold_fused_params layout)
+    bitmap: jax.Array | None = None,   # (1, N) int — bitmap select only
+    *,
+    transform: str = "identity",
+    select: str = "plain",
+    invert: bool = False,
+    packed: bool = False,
+    renormalize: bool = True,
+    return_queries: bool = False,
+    k: int,
+    n_valid: int,
+    q_valid: int | None = None,
+    q_tile: int = 128,
+    block_rows: int = 1024,
+    interpret: bool = False,
+):
+    """One flat-layout launch: [transform →] score → select → running top-k.
+
+    Returns ``(scores (Q, k), ids (Q, k))`` plus the transformed queries
+    ``(Q, d_old)`` when ``return_queries``.
+    """
+    n, d_old = corpus.shape
+    q, d_new = queries.shape
+    assert n % block_rows == 0 and q % q_tile == 0
+    dual = select == "bitmap"
+    if dual:
+        assert bitmap is not None and bitmap.shape == (1, n)
+    grid = (q // q_tile, n // block_rows)
+    kernel = make_flat_kernel(
+        transform=transform, select=select, invert=invert, packed=packed,
+        renormalize=renormalize, return_queries=return_queries, k=k,
+        block_rows=block_rows, n_valid=n_valid,
+        q_valid=q if q_valid is None else q_valid,
+    )
+    w_arrays, w_shapes = (
+        weight_operands(transform, fused) if transform != "identity"
+        else ((), ())
+    )
+    rep = lambda i, j: (0, 0)
+    in_specs = [
+        pl.BlockSpec((q_tile, d_new), lambda i, j: (i, 0)),
+        *[pl.BlockSpec(s, rep) for s in w_shapes],
+        pl.BlockSpec((block_rows, d_old), lambda i, j: (j, 0)),
+    ]
+    operands = [queries, *w_arrays, corpus]
+    if dual:
+        # the bitmap streams HBM→VMEM block-aligned with the corpus rows
+        in_specs.append(pl.BlockSpec((1, block_rows), lambda i, j: (0, j)))
+        operands.append(bitmap)
+    out_specs = [
+        pl.BlockSpec((q_tile, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((q_tile, k), lambda i, j: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((q, k), jnp.float32),
+        jax.ShapeDtypeStruct((q, k), jnp.int32),
+    ]
+    if return_queries:
+        out_specs.append(pl.BlockSpec((q_tile, d_old), lambda i, j: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((q, d_old), jnp.float32))
+    scratch = []
+    if transform != "identity":
+        qx_rows = 2 * q_tile if (dual and packed) else q_tile
+        scratch.append(pltpu.VMEM((qx_rows, d_old), jnp.float32))
+    scratch += [
+        pltpu.VMEM((q_tile, k), jnp.float32),
+        pltpu.VMEM((q_tile, k), jnp.int32),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# ivf layout: scalar-prefetch probed-cell streaming
+# ---------------------------------------------------------------------------
+
+def make_ivf_kernel(
+    *,
+    select: str,
+    invert: bool,
+    dual: bool,
+    k: int,
+    nprobe: int,
+    q_tile: int,
+):
+    """Build the IVF-layout scan kernel for one axis combination.
+
+    The query stage is identity here: the probe launch (a flat-layout scan
+    over the centroid table) already emitted the transformed queries from
+    VMEM, so the rescore consumes one — or, for dual scoring, both — query
+    forms as tile-resident operands.
+    """
+    if select == "bitmap" and not dual:
+        raise ValueError("bitmap select needs a second query form (dual)")
+
+    def kernel(probe_ref, qv_ref, *refs):
+        del probe_ref   # consumed by the BlockSpec index_map, not the body
+        q_ref = refs[0]
+        pos = 1
+        qm_ref = None
+        if dual:
+            qm_ref = refs[pos]
+            pos += 1
+        cell_ref = refs[pos]
+        cid_ref = refs[pos + 1]
+        pos += 2
+        mig_ref = None
+        if select == "bitmap":
+            mig_ref = refs[pos]
+            pos += 1
+        out_s_ref, out_i_ref = refs[pos:pos + 2]
+        best_s, best_i = refs[pos + 2:]
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        nb = pl.num_programs(1)
+
+        # q_valid rides the scalar-prefetch channel (NOT a static python
+        # int): per-bucket valid counts from the micro-batcher never
+        # retrace or recompile — the skip predicate is data, not code
+        @pl.when(i * q_tile < qv_ref[0])
+        def _tile():
+            @pl.when(j == 0)
+            def _init():
+                best_s[...] = jnp.full_like(best_s[...], NEG)
+                best_i[...] = jnp.full_like(best_i[...], -1)
+
+            q_local = j // nprobe          # which tile row owns this step
+            s_native = jnp.dot(
+                q_ref[...], cell_ref[0].T, preferred_element_type=jnp.float32
+            )                                              # (Qt, cap)
+            if dual:
+                s_bridged = jnp.dot(
+                    qm_ref[...], cell_ref[0].T,
+                    preferred_element_type=jnp.float32,
+                )
+                use_native = (
+                    jnp.broadcast_to(mig_ref[...], s_native.shape) > 0
+                )
+                if invert:
+                    use_native = ~use_native
+                scores = jnp.where(use_native, s_native, s_bridged)
+            else:
+                scores = s_native
+            cand = jnp.broadcast_to(cid_ref[...], scores.shape)
+            rows = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+            # pads (id -1) and non-owning rows fold as NEG → no-ops
+            scores = jnp.where((cand >= 0) & (rows == q_local), scores, NEG)
+            new_s, new_i = _fold_block(
+                scores, cand, best_s[...], best_i[...], k
+            )
+            best_s[...] = new_s
+            best_i[...] = new_i
+
+            @pl.when(j == nb - 1)
+            def _emit():
+                out_s_ref[...] = best_s[...]
+                out_i_ref[...] = best_i[...]
+
+    kernel.__name__ = kernel_name("identity", "ivf", select, invert)
+    kernel.__qualname__ = kernel.__name__
+    return kernel
+
+
+def ivf_scan_pallas(
+    cells: jax.Array,        # (C, cap, d) packed cell vectors, zero pads
+    cell_ids: jax.Array,     # (C, cap) int32 global row ids, -1 = pad
+    queries: jax.Array,      # (Q, d) — padded to q_tile multiple upstream
+    probe: jax.Array,        # (Q, nprobe) int32 cell ids, in [0, C)
+    q_valid: jax.Array,      # (1,) int32 — valid-query count (dynamic)
+    q_mapped: jax.Array | None = None,   # (Q, d) second query form (dual)
+    mig_cells: jax.Array | None = None,  # (C, cap) bitmap, cid-aligned
+    *,
+    select: str = "plain",
+    invert: bool = False,
+    k: int,
+    q_tile: int = 8,
+    interpret: bool = False,
+):
+    """One IVF-layout launch: stream each query's probed cells, score,
+    select, running top-k. The probe table is a scalar-prefetch operand so
+    each grid step's BlockSpec index_map DMAs exactly ONE probed cell's
+    (cap, d) tile HBM→VMEM."""
+    c, cap, d = cells.shape
+    q, nprobe = probe.shape
+    assert q % q_tile == 0
+    dual = q_mapped is not None
+    if select == "bitmap":
+        assert dual and mig_cells is not None
+    grid = (q // q_tile, q_tile * nprobe)
+    kernel = make_ivf_kernel(
+        select=select, invert=invert, dual=dual, k=k, nprobe=nprobe,
+        q_tile=q_tile,
+    )
+
+    def cell_map(i, j, p, qv):
+        return (p[i * q_tile + j // nprobe, j % nprobe], 0, 0)
+
+    def slot_map(i, j, p, qv):
+        return cell_map(i, j, p, qv)[:2]
+
+    query_arrays = (queries,) + ((q_mapped,) if dual else ())
+    extra_cell = (mig_cells,) if select == "bitmap" else ()
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            *[
+                pl.BlockSpec((q_tile, d), lambda i, j, p, qv: (i, 0))
+                for _ in query_arrays
+            ],
+            pl.BlockSpec((1, cap, d), cell_map),
+            pl.BlockSpec((1, cap), slot_map),
+            *[pl.BlockSpec((1, cap), slot_map) for _ in extra_cell],
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile, k), lambda i, j, p, qv: (i, 0)),
+            pl.BlockSpec((q_tile, k), lambda i, j, p, qv: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((q_tile, k), jnp.float32),
+            pltpu.VMEM((q_tile, k), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(probe, q_valid, *query_arrays, cells, cell_ids, *extra_cell)

@@ -1,0 +1,331 @@
+"""Jitted public entry points of the scan engine.
+
+These are the SAME five wrappers the four legacy kernel packages exposed —
+``topk_scan``, ``fused_bridged_search``, ``mixed_bridged_search``,
+``ivf_rescore_fused``, ``ivf_rescore_mixed_fused`` — now thin jit shells
+over the one parameterized core in :mod:`repro.kernels.engine.core`. Each
+pads its inputs to tile multiples, launches exactly ONE engine kernel, and
+strips padding; the legacy packages re-export these names so old imports
+keep working.
+
+New engine-only knobs:
+
+* ``mixed_bridged_search(..., packed=True)`` — the dual-score mixed scan
+  stacks ``[q; g(q)]`` in VMEM and pays a SINGLE matmul per corpus block
+  (post-matmul bitmap selection) instead of two; exact-parity-gated
+  against the two-matmul variant (``benchmarks/memory_latency.py
+  --engine-only``).
+* ``invert=True`` on both mixed entry points — the inverse/control-arm
+  scan (serving-space queries against a mixed index) reuses the SAME
+  forward migration bitmap and flips the selection in-kernel, so the
+  serving layer caches one bitmap instead of two.
+
+``interpret=True`` on CPU (this container); compiled Mosaic on real TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import (
+    fold_fused_params,
+    is_cpu as _is_cpu,
+    pad_rows as _pad_rows,
+    quantize_q_valid as _quantize_q_valid,
+)
+from repro.kernels.engine.core import flat_scan_pallas, ivf_scan_pallas
+
+FUSED_KINDS = ("linear", "mlp")
+
+__all__ = [
+    "FUSED_KINDS",
+    "fold_fused_params",
+    "topk_scan",
+    "fused_bridged_search",
+    "mixed_bridged_search",
+    "ivf_rescore_fused",
+    "ivf_rescore_mixed_fused",
+]
+
+
+def _check_kind(fused_kind: str) -> None:
+    if fused_kind not in FUSED_KINDS:
+        raise ValueError(f"unknown fused kind {fused_kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# flat layout entry points
+# ---------------------------------------------------------------------------
+
+@partial(
+    jax.jit,
+    static_argnames=("k", "q_tile", "block_rows", "q_valid", "interpret"),
+)
+def _topk_scan_jit(
+    corpus, queries, k, q_tile, block_rows, q_valid, interpret
+):
+    n = corpus.shape[0]
+    q = queries.shape[0]
+    out_s, out_i = flat_scan_pallas(
+        _pad_rows(queries, q_tile), _pad_rows(corpus, block_rows),
+        transform="identity", select="plain",
+        k=k, n_valid=n, q_valid=q_valid,
+        q_tile=q_tile, block_rows=block_rows, interpret=interpret,
+    )
+    return out_s[:q], out_i[:q]
+
+
+def topk_scan(
+    corpus: jax.Array,
+    queries: jax.Array,
+    k: int = 10,
+    q_tile: int = 128,
+    block_rows: int = 1024,
+    q_valid: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Native corpus scan: identity query stage, flat layout, plain select.
+
+    With ``q_valid`` set, rows ≥ q_valid are micro-batcher padding: query
+    tiles entirely past it skip all compute and those output rows are
+    undefined (the batcher never reads them). The count is quantized to
+    tile granularity BEFORE the jit boundary, so varying per-bucket counts
+    do not retrace."""
+    if interpret is None:
+        interpret = _is_cpu()
+    q_valid = _quantize_q_valid(queries.shape[0], q_valid, q_tile)
+    return _topk_scan_jit(
+        corpus, queries, k=k, q_tile=q_tile, block_rows=block_rows,
+        q_valid=q_valid, interpret=interpret,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "fused_kind", "k", "renormalize", "q_tile", "block_rows",
+        "q_valid", "return_queries", "interpret",
+    ),
+)
+def _fused_bridged_search_jit(
+    fused_kind, fused, queries, corpus, k, renormalize, q_tile, block_rows,
+    q_valid, return_queries, interpret,
+):
+    n = corpus.shape[0]
+    q = queries.shape[0]
+    out = flat_scan_pallas(
+        _pad_rows(queries, q_tile), _pad_rows(corpus, block_rows), fused,
+        transform=fused_kind, select="plain", renormalize=renormalize,
+        return_queries=return_queries, k=k, n_valid=n, q_valid=q_valid,
+        q_tile=q_tile, block_rows=block_rows, interpret=interpret,
+    )
+    return tuple(o[:q] for o in out)
+
+
+def fused_bridged_search(
+    fused_kind: str,
+    fused: dict,
+    queries: jax.Array,
+    corpus: jax.Array,
+    k: int = 10,
+    renormalize: bool = True,
+    q_tile: int = 128,
+    block_rows: int = 1024,
+    q_valid: int | None = None,
+    return_queries: bool = False,
+    interpret: bool | None = None,
+):
+    """One launch: adapter transform + corpus scan + running top-k.
+
+    ``fused`` comes from fold_fused_params / DriftAdapter.as_fused_params.
+    Returns (scores (Q, k), ids (Q, k)) — plus the transformed queries
+    (Q, d_old) when ``return_queries`` (the IVF probe path needs them).
+    ``q_valid`` follows the topk_scan contract (whole-tile skip, quantized
+    pre-jit so per-bucket counts never retrace).
+    """
+    _check_kind(fused_kind)
+    if interpret is None:
+        interpret = _is_cpu()
+    q_valid = _quantize_q_valid(queries.shape[0], q_valid, q_tile)
+    return _fused_bridged_search_jit(
+        fused_kind, fused, queries, corpus, k=k, renormalize=renormalize,
+        q_tile=q_tile, block_rows=block_rows, q_valid=q_valid,
+        return_queries=return_queries, interpret=interpret,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "fused_kind", "k", "renormalize", "q_tile", "block_rows",
+        "q_valid", "invert", "packed", "interpret",
+    ),
+)
+def _mixed_bridged_search_jit(
+    fused_kind, fused, queries, corpus, migrated, k, renormalize, q_tile,
+    block_rows, q_valid, invert, packed, interpret,
+):
+    n = corpus.shape[0]
+    q = queries.shape[0]
+    # pad bits are dead (n_valid masks their rows to NEG before the fold)
+    mig_p = _pad_rows(migrated.astype(jnp.int32), block_rows).reshape(1, -1)
+    out = flat_scan_pallas(
+        _pad_rows(queries, q_tile), _pad_rows(corpus, block_rows), fused,
+        mig_p, transform=fused_kind, select="bitmap", invert=invert,
+        packed=packed, renormalize=renormalize, k=k, n_valid=n,
+        q_valid=q_valid, q_tile=q_tile, block_rows=block_rows,
+        interpret=interpret,
+    )
+    return tuple(o[:q] for o in out)
+
+
+def mixed_bridged_search(
+    fused_kind: str,
+    fused: dict,
+    queries: jax.Array,
+    corpus: jax.Array,
+    migrated: jax.Array,
+    k: int = 10,
+    renormalize: bool = True,
+    q_tile: int = 128,
+    block_rows: int = 1024,
+    q_valid: int | None = None,
+    invert: bool = False,
+    packed: bool = True,
+    interpret: bool | None = None,
+):
+    """One launch: adapter transform + bitmap-selected dual scan + top-k.
+
+    ``migrated`` is the (N,) migration bitmap (bool or int: nonzero ⇒ the
+    row holds an f_new vector, scored with raw q; zero ⇒ f_old, scored
+    with g(q)). It is a DEVICE operand — migrate_batch flipping bits never
+    retraces. ``invert=True`` flips the selection in-kernel (the inverse /
+    control-arm scan keeps using the same forward bitmap). ``packed=True``
+    (default) stacks [q; g(q)] so each corpus block pays one matmul; the
+    two-matmul variant (``packed=False``) is kept for the A/B bench and is
+    bit-identical. Mixed state requires d_new == d_old (rows migrate in
+    place). ``q_valid`` follows the topk_scan contract.
+    """
+    _check_kind(fused_kind)
+    if queries.shape[1] != corpus.shape[1]:
+        raise ValueError(
+            f"mixed-state scan needs d_new == d_old (rows migrate in place); "
+            f"got queries d={queries.shape[1]} vs corpus d={corpus.shape[1]}"
+        )
+    if migrated.shape != (corpus.shape[0],):
+        raise ValueError(
+            f"migration bitmap shape {migrated.shape} != ({corpus.shape[0]},)"
+        )
+    if interpret is None:
+        interpret = _is_cpu()
+    q_valid = _quantize_q_valid(queries.shape[0], q_valid, q_tile)
+    return _mixed_bridged_search_jit(
+        fused_kind, fused, queries, corpus, migrated, k=k,
+        renormalize=renormalize, q_tile=q_tile, block_rows=block_rows,
+        q_valid=q_valid, invert=invert, packed=packed, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# ivf layout entry points
+# ---------------------------------------------------------------------------
+
+def _check_cap(cells: jax.Array) -> None:
+    cap = cells.shape[1]
+    if cap % 8:
+        raise ValueError(
+            f"cell capacity {cap} is not a multiple of 8 — rebuild the index "
+            "with build_ivf (it rounds cap up to the f32 sublane)"
+        )
+
+
+@partial(jax.jit, static_argnames=("k", "q_tile", "interpret"))
+def ivf_rescore_fused(
+    cells: jax.Array,
+    cell_ids: jax.Array,
+    queries: jax.Array,
+    probe: jax.Array,
+    k: int = 10,
+    q_valid=None,
+    q_tile: int = 8,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One launch: stream each query's probed (cap, d) cell tiles HBM→VMEM,
+    matmul + pad-masked running top-k — no (Q, nprobe, cap, d) gather.
+
+    cells (C, cap, d) / cell_ids (C, cap) come from ``build_ivf`` (cap is a
+    multiple of 8 there); probe (Q, nprobe) from any centroid probe. With
+    ``q_valid`` set, rows ≥ q_valid are treated as padding: tiles entirely
+    past it skip all work and those output rows are undefined. q_valid is a
+    DYNAMIC argument (int or scalar array) — per-bucket counts from the
+    micro-batcher hit one compiled kernel, no retraces.
+    """
+    if interpret is None:
+        interpret = _is_cpu()
+    _check_cap(cells)
+    c = cells.shape[0]
+    q = queries.shape[0]
+    qv = q if q_valid is None else jnp.minimum(q, q_valid)
+    probe = jnp.clip(probe.astype(jnp.int32), 0, c - 1)
+    out_s, out_i = ivf_scan_pallas(
+        cells,
+        cell_ids,
+        _pad_rows(queries, q_tile),
+        _pad_rows(probe, q_tile),
+        jnp.asarray(qv, jnp.int32).reshape(1),
+        select="plain",
+        k=k,
+        q_tile=q_tile,
+        interpret=interpret,
+    )
+    return out_s[:q], out_i[:q]
+
+
+@partial(jax.jit, static_argnames=("k", "q_tile", "invert", "interpret"))
+def ivf_rescore_mixed_fused(
+    cells: jax.Array,
+    cell_ids: jax.Array,
+    mig_cells: jax.Array,
+    queries: jax.Array,
+    q_mapped: jax.Array,
+    probe: jax.Array,
+    k: int = 10,
+    q_valid=None,
+    q_tile: int = 8,
+    invert: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Mixed-state rescore in one launch: each probed (cap, d) cell tile is
+    scored against raw q AND the adapter-mapped q', and ``mig_cells`` — the
+    migration bitmap packed into the same (C, cap) layout as ``cell_ids``
+    (see ``ann/ivf.migration_cells``) — selects per slot which score enters
+    the running top-k. The bitmap is a DEVICE operand, so migrate_batch
+    flipping bits never retraces; ``invert=True`` flips the selection
+    in-kernel (the control-arm rescore reuses the forward packing). Same
+    padding, probe-clamping, and dynamic ``q_valid`` contract as
+    ``ivf_rescore_fused``.
+    """
+    if interpret is None:
+        interpret = _is_cpu()
+    _check_cap(cells)
+    c = cells.shape[0]
+    q = queries.shape[0]
+    qv = q if q_valid is None else jnp.minimum(q, q_valid)
+    probe = jnp.clip(probe.astype(jnp.int32), 0, c - 1)
+    out_s, out_i = ivf_scan_pallas(
+        cells,
+        cell_ids,
+        _pad_rows(queries, q_tile),
+        _pad_rows(probe, q_tile),
+        jnp.asarray(qv, jnp.int32).reshape(1),
+        q_mapped=_pad_rows(q_mapped, q_tile),
+        mig_cells=mig_cells.astype(jnp.int32),
+        select="bitmap",
+        invert=invert,
+        k=k,
+        q_tile=q_tile,
+        interpret=interpret,
+    )
+    return out_s[:q], out_i[:q]

@@ -1,0 +1,442 @@
+"""ScanPlan — the compiler from serving state to engine launches.
+
+The serving layers used to hand-dispatch among four kernel packages (is the
+backend fused? does the bridge fold? is the index mixed-state? which side
+probes?). That decision tree now lives HERE, once: ``compile_plan`` maps an
+(index, bridge, mode) triple onto a :class:`ScanPlan` — an explicit record
+of the engine launches a query will take — and ``execute_plan`` runs it.
+``build_plan(registry, index, serving_state)`` is the top-level compiler:
+it resolves the bridge through the version graph (multi-hop chains fold via
+``compose_adapters``; ≥2-MLP chains compile to a sequential prelude) and
+picks the mode from the migration state, exactly mirroring what
+``VectorStore.search`` serves.
+
+The launch-count invariants are carried BY the plan: flat bridged = 1
+launch, IVF bridged = 2, mixed flat = 1, mixed IVF = 2 — and the
+pallas_call-counting tests assert that executing a plan traces exactly
+``[spec.kernel for spec in plan.launches]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.engine.core import kernel_name
+
+MODES = ("native", "bridged", "mixed")
+INDEX_TYPES = ("flat", "ivf", "protocol")
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchSpec:
+    """One engine launch: a coordinate on the (transform × layout × select)
+    axes plus its role in the serving path."""
+
+    role: str                 # "scan" | "probe" | "rescore"
+    layout: str               # "flat" | "ivf"
+    transform: str            # "identity" | "linear" | "mlp"
+    select: str = "plain"     # "plain" | "bitmap"
+    invert: bool = False
+    packed: bool = False
+    return_queries: bool = False
+
+    @property
+    def kernel(self) -> str:
+        """The engine kernel __name__ this launch traces (what the
+        pallas_call-counting tests see)."""
+        return kernel_name(
+            self.transform, self.layout, self.select, self.invert,
+            self.packed,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingState:
+    """Where a query batch sits in the version graph / upgrade lifecycle."""
+
+    query_space: str                     # space the queries are embedded in
+    serving_version: str                 # the index's native space
+    target_space: Optional[str] = None   # live upgrade's to_version (if any)
+    mixed: bool = False                  # index holds f_old AND f_new rows
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ScanPlan:
+    """A compiled serving path: static structure + the resolved bridge."""
+
+    mode: str                          # "native" | "bridged" | "mixed"
+    index_type: str                    # "flat" | "ivf" | "protocol"
+    backend: str                       # "jnp" | "pallas" | "fused"
+    launches: tuple[LaunchSpec, ...]   # engine launches (() = pure jnp)
+    fused_kind: Optional[str] = None   # "linear" | "mlp" when one launch
+                                       # carries the transform in-kernel
+    sequential: bool = False           # bridge applies OUTSIDE the kernels
+    invert: bool = False               # flip the bitmap selection
+    packed: bool = False               # mixed flat: [q; g(q)] single matmul
+    probe_space: str = "mapped"        # IVF probe query form
+    bridge: object = None              # resolved adapter (None for native)
+    prelude: object = None             # adapter applied to queries up front
+
+    @property
+    def launch_count(self) -> int:
+        return len(self.launches)
+
+    def kernels(self) -> tuple[str, ...]:
+        """The exact pallas kernel names executing this plan traces."""
+        return tuple(spec.kernel for spec in self.launches)
+
+
+def _index_type(index) -> str:
+    if hasattr(index, "cells") and hasattr(index, "centroids"):
+        return "ivf"
+    if hasattr(index, "corpus"):
+        return "flat"
+    return "protocol"
+
+
+def _foldable_kind(bridge) -> Optional[str]:
+    """The bridge's single-launch fused kind, or None (≥2-MLP chains).
+
+    ``bridge`` is a DriftAdapter/ChainedAdapter — or an already-folded
+    ``(kind, params)`` tuple (the sharded searchers ship those)."""
+    if bridge is None:
+        return None
+    if isinstance(bridge, tuple):
+        return bridge[0]
+    try:
+        fused_kind, _ = bridge.as_fused_params()
+    except NotImplementedError:
+        return None
+    return fused_kind
+
+
+def compile_plan(
+    index,
+    bridge=None,
+    mode: str = "native",
+    *,
+    invert: bool = False,
+    probe_space: str = "mapped",
+    packed: bool = True,
+    prelude=None,
+    index_type: Optional[str] = None,
+    backend: Optional[str] = None,
+) -> ScanPlan:
+    """Map (index, bridge, mode) onto the engine launches that serve it.
+
+    ``index`` may be None when ``index_type``/``backend`` are given
+    explicitly (the sharded searchers compile per-shard plans without an
+    index object). ``prelude`` is an adapter applied to the queries before
+    the plan runs (third-space traffic bridging into the serving space).
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown plan mode {mode!r}; expected {MODES}")
+    if probe_space not in ("mapped", "raw"):
+        raise ValueError(
+            f"probe_space must be 'mapped' or 'raw', got {probe_space!r}"
+        )
+    if mode != "native" and bridge is None:
+        raise ValueError(f"mode={mode!r} needs a bridge adapter")
+    itype = index_type or _index_type(index)
+    be = backend if backend is not None else getattr(index, "backend", "jnp")
+    kernels_on = be in ("pallas", "fused")
+
+    if itype == "protocol":
+        # opaque SearchBackend: the plan delegates through its methods
+        return ScanPlan(
+            mode=mode, index_type=itype, backend=be, launches=(),
+            fused_kind=_foldable_kind(bridge) if mode != "native" else None,
+            invert=invert, probe_space=probe_space, bridge=bridge,
+        )
+
+    fused_kind = _foldable_kind(bridge) if mode != "native" else None
+    sequential = mode != "native" and fused_kind is None
+    if (
+        mode != "native"
+        and isinstance(bridge, tuple)
+        and (be != "fused" or sequential)
+    ):
+        # a pre-folded (kind, params) tuple has no .apply: it cannot serve
+        # the sequential/prelude paths, only in-kernel fused transforms
+        raise ValueError(
+            "pre-folded (kind, params) bridges require backend='fused' "
+            "with a foldable kind; pass the adapter object instead"
+        )
+
+    launches: tuple[LaunchSpec, ...] = ()
+    if itype == "flat":
+        if mode == "native" or (mode == "bridged" and
+                                (be != "fused" or sequential)):
+            # plain scan; a sequential bridge maps the queries up front
+            if kernels_on:
+                launches = (LaunchSpec("scan", "flat", "identity"),)
+            if mode == "bridged":
+                prelude = bridge
+        elif mode == "bridged":
+            launches = (LaunchSpec("scan", "flat", fused_kind),)
+        elif mode == "mixed":
+            if be == "fused" and not sequential:
+                launches = (LaunchSpec(
+                    "scan", "flat", fused_kind, select="bitmap",
+                    invert=invert, packed=packed,
+                ),)
+            # else: the exact jnp two-scan merge — zero engine launches
+    else:  # ivf
+        fused_engine = be == "fused"
+        if mode == "native":
+            if fused_engine:
+                launches = (
+                    LaunchSpec("probe", "flat", "identity"),
+                    LaunchSpec("rescore", "ivf", "identity"),
+                )
+        elif mode == "bridged":
+            if fused_engine:
+                fused_probe = fused_kind is not None
+                probe_t = fused_kind if fused_probe else "identity"
+                launches = (
+                    LaunchSpec(
+                        "probe", "flat", probe_t, return_queries=fused_probe,
+                    ),
+                    LaunchSpec("rescore", "ivf", "identity"),
+                )
+                if not fused_probe:
+                    prelude = bridge
+            else:
+                # jnp/pallas engines apply the bridge outside, always
+                prelude = bridge
+        else:  # mixed
+            if fused_engine:
+                fused_probe = (
+                    fused_kind is not None and probe_space == "mapped"
+                )
+                probe_t = fused_kind if fused_probe else "identity"
+                launches = (
+                    LaunchSpec(
+                        "probe", "flat", probe_t, return_queries=fused_probe,
+                    ),
+                    LaunchSpec(
+                        "rescore", "ivf", "identity", select="bitmap",
+                        invert=invert,
+                    ),
+                )
+
+    return ScanPlan(
+        mode=mode, index_type=itype, backend=be, launches=launches,
+        fused_kind=fused_kind, sequential=sequential, invert=invert,
+        packed=packed if (mode == "mixed" and itype == "flat") else False,
+        probe_space=probe_space, bridge=bridge, prelude=prelude,
+    )
+
+
+def build_plan(registry, index, state: ServingState) -> ScanPlan:
+    """The top-level compiler: resolve the bridge through the version
+    graph and pick the serving mode from the migration state.
+
+    * ``query_space == serving_version``, no migration → native.
+    * ``query_space == target_space`` of a mixed-state upgrade → the
+      forward bitmap-masked mixed scan (bridge resolved target→serving;
+      multi-hop chains fold through the registry).
+    * ``query_space == serving_version`` while mixed → the inverse scan
+      (same bitmap, selection inverted, raw-space probe) through the
+      ``serving → target`` reverse edge; without one the plan degrades to
+      the approximate native scan.
+    * any other registered space → bridged into the serving space
+      (folding per ``compose_adapters``; ≥2-MLP chains get a sequential
+      prelude); while mixed, the bridged queries additionally ride the
+      inverse scan so migrated rows stay exact.
+    """
+    qs, sv = state.query_space, state.serving_version
+    mixed = state.mixed and state.target_space is not None
+
+    if qs == sv and not mixed:
+        return compile_plan(index, mode="native")
+    if mixed and qs == state.target_space:
+        bridge = registry.adapter(qs, sv)
+        return compile_plan(index, bridge, mode="mixed")
+    if qs == sv:  # mixed: the control arm, queries in the serving space
+        if registry.has_edge(sv, state.target_space):
+            inverse = registry.edge(sv, state.target_space)
+            return compile_plan(
+                index, inverse, mode="mixed", invert=True, probe_space="raw"
+            )
+        return compile_plan(index, mode="native")
+    bridge = registry.adapter(qs, sv)
+    if mixed and registry.has_edge(sv, state.target_space):
+        inverse = registry.edge(sv, state.target_space)
+        return compile_plan(
+            index, inverse, mode="mixed", invert=True, probe_space="raw",
+            prelude=bridge,
+        )
+    return compile_plan(index, bridge, mode="bridged")
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+def _probe_rows(n_cells: int) -> int:
+    """The centroid table is small: size the scan block to its padded rows."""
+    return min(1024, -(-n_cells // 128) * 128)
+
+
+def _fused_params(bridge) -> tuple[str, dict]:
+    """The (kind, weights) of a foldable bridge — adapter object or
+    already-folded tuple."""
+    if isinstance(bridge, tuple):
+        return bridge
+    return bridge.as_fused_params()
+
+
+def execute_plan(
+    plan: ScanPlan,
+    queries: jax.Array,
+    *,
+    index,
+    k: int = 10,
+    q_valid=None,
+    migrated: jax.Array | None = None,
+    mig_cells: jax.Array | None = None,
+    nprobe: int = 8,
+) -> tuple[jax.Array, jax.Array]:
+    """Run a compiled plan. ``migrated`` (flat: (N,) bitmap) and
+    ``mig_cells`` (IVF: the (C, cap) packed bitmap, computed from
+    ``migrated`` when absent) are only read in mixed mode."""
+    if plan.prelude is not None and plan.index_type != "protocol":
+        queries = plan.prelude.apply(queries)
+    if plan.index_type == "protocol":
+        if plan.mode == "native":
+            return index.search(queries, k=k, q_valid=q_valid)
+        if plan.mode == "bridged":
+            return index.search_bridged(
+                plan.bridge, queries, k=k, q_valid=q_valid
+            )
+        return index.search_mixed(
+            plan.bridge, queries, migrated, k=k, q_valid=q_valid,
+            invert=plan.invert,
+        )
+    if plan.index_type == "flat":
+        return _execute_flat(plan, queries, index, k, q_valid, migrated)
+    return _execute_ivf(
+        plan, queries, index, k, q_valid, migrated, mig_cells, nprobe
+    )
+
+
+def _execute_flat(plan, queries, index, k, q_valid, migrated):
+    from repro.ann.flat import flat_search_jnp
+    from repro.kernels.engine import ops as E
+
+    corpus = index.corpus
+    br = min(index.block_rows, 2048)
+    if plan.mode in ("native", "bridged"):
+        # the launch specs ARE the dispatch: an in-kernel transform means
+        # the one-launch fused path; an identity scan serves native queries
+        # and prelude-mapped sequential bridges; no launches means jnp
+        if plan.launches and plan.launches[0].transform != "identity":
+            _, fused = _fused_params(plan.bridge)
+            return E.fused_bridged_search(
+                plan.fused_kind, fused, queries, corpus, k=k,
+                block_rows=br, q_valid=q_valid,
+            )
+        if plan.launches:
+            return E.topk_scan(
+                corpus, queries, k=k, block_rows=br, q_valid=q_valid
+            )
+        return flat_search_jnp(
+            corpus, queries, k=k, block_rows=index.block_rows
+        )
+    # mixed
+    if plan.launches:
+        _, fused = _fused_params(plan.bridge)
+        return E.mixed_bridged_search(
+            plan.fused_kind, fused, queries, corpus, migrated, k=k,
+            block_rows=br, q_valid=q_valid, invert=plan.invert,
+            packed=plan.packed,
+        )
+    # the exact jnp two-scan merge, each side masked to its OWN rows
+    from repro.kernels.mixed_scan.ref import mixed_merge_scan
+
+    mig = jnp.asarray(migrated, bool)
+    if plan.invert:
+        mig = ~mig
+    return mixed_merge_scan(
+        queries, plan.bridge.apply(queries), corpus, mig, k=k,
+        block_rows=index.block_rows,
+    )
+
+
+def _execute_ivf(plan, queries, index, k, q_valid, migrated, mig_cells,
+                 nprobe):
+    from repro.ann.ivf import (
+        ivf_rescore_mixed,
+        ivf_search_jnp,
+        migration_cells,
+    )
+    from repro.kernels.engine import ops as E
+
+    if nprobe > index.n_cells:
+        raise ValueError(
+            f"nprobe={nprobe} exceeds n_cells={index.n_cells}"
+        )
+    br = _probe_rows(index.n_cells)
+    fused_engine = bool(plan.launches)
+    if plan.mode in ("native", "bridged"):
+        # the launch specs ARE the dispatch: a transforming probe is the
+        # fused two-launch bridged path; an identity probe serves native
+        # queries and prelude-mapped sequential bridges; no launches = jnp
+        if fused_engine and plan.launches[0].transform != "identity":
+            _, fused = _fused_params(plan.bridge)
+            _, probe, q_mapped = E.fused_bridged_search(
+                plan.fused_kind, fused, queries, index.centroids, k=nprobe,
+                block_rows=br, return_queries=True, q_valid=q_valid,
+            )
+            return E.ivf_rescore_fused(
+                index.cells, index.cell_ids, q_mapped, probe, k=k,
+                q_valid=q_valid,
+            )
+        if fused_engine:
+            # the probe's 128-row tiles are never wholly skippable under
+            # pow2 bucketing, so q_valid is not forwarded there (it would
+            # quantize away); the rescore's 8-row tiles do skip
+            _, probe = E.topk_scan(
+                index.centroids, queries, k=nprobe, block_rows=br
+            )
+            return E.ivf_rescore_fused(
+                index.cells, index.cell_ids, queries, probe, k=k,
+                q_valid=q_valid,
+            )
+        return ivf_search_jnp(index, queries, k=k, nprobe=nprobe)
+    # mixed
+    if mig_cells is None:
+        mig_cells = migration_cells(index.cell_ids, migrated)
+    if fused_engine:
+        fused_probe = plan.launches[0].return_queries
+        if fused_probe:
+            _, fused = _fused_params(plan.bridge)
+            _, probe, q_mapped = E.fused_bridged_search(
+                plan.fused_kind, fused, queries, index.centroids, k=nprobe,
+                block_rows=br, return_queries=True, q_valid=q_valid,
+            )
+        else:
+            # raw-space probe (inverse/control arm) or unfoldable chain:
+            # the probe is a plain native launch; the mapped side applies
+            # outside the kernel
+            q_mapped = plan.bridge.apply(queries)
+            probe_q = queries if plan.probe_space == "raw" else q_mapped
+            _, probe = E.topk_scan(
+                index.centroids, probe_q, k=nprobe, block_rows=br
+            )
+        return E.ivf_rescore_mixed_fused(
+            index.cells, index.cell_ids, mig_cells, queries, q_mapped,
+            probe, k=k, q_valid=q_valid, invert=plan.invert,
+        )
+    q_mapped = plan.bridge.apply(queries)
+    probe_q = queries if plan.probe_space == "raw" else q_mapped
+    _, probe = jax.lax.top_k(probe_q @ index.centroids.T, nprobe)
+    if plan.invert:
+        # forward packing, inverted selection (pad slots flip to "native"
+        # but their id == -1 NEG mask wins either way)
+        mig_cells = (mig_cells == 0).astype(jnp.int32)
+    return ivf_rescore_mixed(index, queries, q_mapped, probe, mig_cells, k=k)

@@ -1,114 +1,8 @@
-"""Jitted public wrapper for the one-pass bridged search kernel.
-
-Two layers:
-
-* ``fold_fused_params(kind, params, d_new)`` — eager, one-time: collapses a
-  DriftAdapter param pytree into the kernel's flat weight dict. OP and LA
-  precompose to a single (d_old, d_new) matrix + bias (UVᵀ materialized —
-  exactly what ``DriftAdapter.as_fused_params()`` ships to routers);
-  identity becomes the unit matrix; MLP keeps its two-matmul structure with
-  the residual projection P explicit and the DSM diagonal folded in.
-
-* ``fused_bridged_search(fused_kind, fused, queries, corpus, ...)`` — jitted
-  per (kind, shapes): pads queries/corpus to tile multiples, launches the
-  fused Pallas kernel, strips padding. ``interpret=True`` on CPU (this
-  container); compiled Mosaic on real TPU.
-"""
-from __future__ import annotations
-
-from functools import partial
-
-import jax
-
-from repro.kernels.common import (
-    fold_fused_params,
-    is_cpu as _is_cpu,
-    pad_rows as _pad_rows,
-    quantize_q_valid as _quantize_q_valid,
-)
-from repro.kernels.fused_search.kernel import (
-    fused_linear_search_pallas,
-    fused_mlp_search_pallas,
-)
-
-FUSED_KINDS = ("linear", "mlp")
+"""Legacy entry point — the one-pass bridged search now lives in the
+unified scan engine (`kernels/engine`: linear/MLP query stage, flat
+layout, plain select). This shim re-exports it so old imports keep
+working; `fold_fused_params` stays single-sourced in `kernels/common.py`."""
+from repro.kernels.common import fold_fused_params
+from repro.kernels.engine.ops import FUSED_KINDS, fused_bridged_search
 
 __all__ = ["FUSED_KINDS", "fold_fused_params", "fused_bridged_search"]
-
-
-@partial(
-    jax.jit,
-    static_argnames=(
-        "fused_kind", "k", "renormalize", "q_tile", "block_rows",
-        "q_valid", "return_queries", "interpret",
-    ),
-)
-def _fused_bridged_search_jit(
-    fused_kind: str,
-    fused: dict,
-    queries: jax.Array,
-    corpus: jax.Array,
-    k: int,
-    renormalize: bool,
-    q_tile: int,
-    block_rows: int,
-    q_valid: int | None,
-    return_queries: bool,
-    interpret: bool,
-):
-    n = corpus.shape[0]
-    q = queries.shape[0]
-    corpus_p = _pad_rows(corpus, block_rows)
-    queries_p = _pad_rows(queries, q_tile)
-    common = dict(
-        k=k, n_valid=n, q_valid=q_valid,
-        renormalize=renormalize, q_tile=q_tile,
-        block_rows=block_rows, return_queries=return_queries,
-        interpret=interpret,
-    )
-    if fused_kind == "linear":
-        out = fused_linear_search_pallas(
-            queries_p, fused["m"], fused["t"], fused["s"], corpus_p, **common
-        )
-    elif fused_kind == "mlp":
-        out = fused_mlp_search_pallas(
-            queries_p, fused["w1"], fused["b1"], fused["w2"], fused["b2"],
-            fused["p"], fused["s"], corpus_p, **common
-        )
-    else:
-        raise ValueError(f"unknown fused kind {fused_kind!r}")
-    return tuple(o[:q] for o in out)
-
-
-def fused_bridged_search(
-    fused_kind: str,
-    fused: dict,
-    queries: jax.Array,
-    corpus: jax.Array,
-    k: int = 10,
-    renormalize: bool = True,
-    q_tile: int = 128,
-    block_rows: int = 1024,
-    q_valid: int | None = None,
-    return_queries: bool = False,
-    interpret: bool | None = None,
-):
-    """One launch: adapter transform + corpus scan + running top-k.
-
-    ``fused`` comes from fold_fused_params / DriftAdapter.as_fused_params.
-    Returns (scores (Q, k), ids (Q, k)) — plus the transformed queries
-    (Q, d_old) when ``return_queries`` (the IVF probe path needs them).
-    With ``q_valid`` set, rows ≥ q_valid are micro-batcher padding: query
-    tiles entirely past it skip all compute (transform included) and those
-    output rows are undefined (the batcher never reads them). The count is
-    quantized to tile granularity BEFORE the jit boundary, so varying
-    per-bucket counts do not retrace.
-    """
-    if interpret is None:
-        interpret = _is_cpu()
-    q_valid = _quantize_q_valid(queries.shape[0], q_valid, q_tile)
-    return _fused_bridged_search_jit(
-        fused_kind, fused, queries, corpus, k=k, renormalize=renormalize,
-        q_tile=q_tile, block_rows=block_rows, q_valid=q_valid,
-        return_queries=return_queries, interpret=interpret,
-    )

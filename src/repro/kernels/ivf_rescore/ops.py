@@ -1,114 +1,10 @@
-"""Jitted public wrapper for the IVF gather-rescore kernel.
-
-Pads queries and the probe table to ``q_tile`` multiples, clamps probe ids
-into [0, C) (padded query rows carry whatever the probe producer left there
-— out-of-range ids would be undefined behavior in the BlockSpec index_map),
-launches, strips padding. ``interpret=True`` on CPU (this container);
-compiled Mosaic on real TPU.
-"""
-from __future__ import annotations
-
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-
-from repro.kernels.common import is_cpu as _is_cpu, pad_rows as _pad_rows
-from repro.kernels.ivf_rescore.kernel import (
-    ivf_rescore_mixed_pallas,
-    ivf_rescore_pallas,
+"""Legacy entry point — the streaming IVF gather-rescore now lives in the
+unified scan engine (`kernels/engine`: identity query stage, scalar-
+prefetch IVF cell layout, plain/bitmap select ± invert). This shim
+re-exports it so old imports keep working."""
+from repro.kernels.engine.ops import (
+    ivf_rescore_fused,
+    ivf_rescore_mixed_fused,
 )
 
 __all__ = ["ivf_rescore_fused", "ivf_rescore_mixed_fused"]
-
-
-@partial(jax.jit, static_argnames=("k", "q_tile", "interpret"))
-def ivf_rescore_fused(
-    cells: jax.Array,
-    cell_ids: jax.Array,
-    queries: jax.Array,
-    probe: jax.Array,
-    k: int = 10,
-    q_valid=None,
-    q_tile: int = 8,
-    interpret: bool | None = None,
-) -> tuple[jax.Array, jax.Array]:
-    """One launch: stream each query's probed (cap, d) cell tiles HBM→VMEM,
-    matmul + pad-masked running top-k — no (Q, nprobe, cap, d) gather.
-
-    cells (C, cap, d) / cell_ids (C, cap) come from ``build_ivf`` (cap is a
-    multiple of 8 there); probe (Q, nprobe) from any centroid probe. With
-    ``q_valid`` set, rows ≥ q_valid are treated as padding: tiles entirely
-    past it skip all work and those output rows are undefined. q_valid is a
-    DYNAMIC argument (int or scalar array) — per-bucket counts from the
-    micro-batcher hit one compiled kernel, no retraces.
-    """
-    if interpret is None:
-        interpret = _is_cpu()
-    c, cap, _ = cells.shape
-    if cap % 8:
-        raise ValueError(
-            f"cell capacity {cap} is not a multiple of 8 — rebuild the index "
-            "with build_ivf (it rounds cap up to the f32 sublane)"
-        )
-    q = queries.shape[0]
-    qv = q if q_valid is None else jnp.minimum(q, q_valid)
-    probe = jnp.clip(probe.astype(jnp.int32), 0, c - 1)
-    out_s, out_i = ivf_rescore_pallas(
-        cells,
-        cell_ids,
-        _pad_rows(queries, q_tile),
-        _pad_rows(probe, q_tile),
-        jnp.asarray(qv, jnp.int32).reshape(1),
-        k=k,
-        q_tile=q_tile,
-        interpret=interpret,
-    )
-    return out_s[:q], out_i[:q]
-
-
-@partial(jax.jit, static_argnames=("k", "q_tile", "interpret"))
-def ivf_rescore_mixed_fused(
-    cells: jax.Array,
-    cell_ids: jax.Array,
-    mig_cells: jax.Array,
-    queries: jax.Array,
-    q_mapped: jax.Array,
-    probe: jax.Array,
-    k: int = 10,
-    q_valid=None,
-    q_tile: int = 8,
-    interpret: bool | None = None,
-) -> tuple[jax.Array, jax.Array]:
-    """Mixed-state rescore in one launch: each probed (cap, d) cell tile is
-    scored against raw q AND the adapter-mapped q', and ``mig_cells`` — the
-    migration bitmap packed into the same (C, cap) layout as ``cell_ids``
-    (see ``ann/ivf.migration_cells``) — selects per slot which score enters
-    the running top-k. The bitmap is a DEVICE operand, so migrate_batch
-    flipping bits never retraces. Same padding, probe-clamping, and dynamic
-    ``q_valid`` contract as ``ivf_rescore_fused``.
-    """
-    if interpret is None:
-        interpret = _is_cpu()
-    c, cap, _ = cells.shape
-    if cap % 8:
-        raise ValueError(
-            f"cell capacity {cap} is not a multiple of 8 — rebuild the index "
-            "with build_ivf (it rounds cap up to the f32 sublane)"
-        )
-    q = queries.shape[0]
-    qv = q if q_valid is None else jnp.minimum(q, q_valid)
-    probe = jnp.clip(probe.astype(jnp.int32), 0, c - 1)
-    out_s, out_i = ivf_rescore_mixed_pallas(
-        cells,
-        cell_ids,
-        mig_cells.astype(jnp.int32),
-        _pad_rows(queries, q_tile),
-        _pad_rows(q_mapped, q_tile),
-        _pad_rows(probe, q_tile),
-        jnp.asarray(qv, jnp.int32).reshape(1),
-        k=k,
-        q_tile=q_tile,
-        interpret=interpret,
-    )
-    return out_s[:q], out_i[:q]

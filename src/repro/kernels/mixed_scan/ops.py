@@ -1,120 +1,7 @@
-"""Jitted public wrapper for the one-pass mixed-state scan kernel.
-
-``mixed_bridged_search(fused_kind, fused, queries, corpus, migrated, ...)``
-pads queries / corpus / bitmap to tile multiples, launches the kernel, and
-strips padding — the mixed-state analogue of
-``fused_search.ops.fused_bridged_search``. The migration bitmap is a
-DEVICE-SIDE operand (not a static argument): every migrate_batch flips bits
-in the same (N,) array, so the per-batch mask changes never retrace or
-recompile the kernel.
-
-``interpret=True`` on CPU (this container); compiled Mosaic on real TPU.
-"""
-from __future__ import annotations
-
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-
-from repro.kernels.common import (
-    is_cpu as _is_cpu,
-    pad_rows as _pad_rows,
-    quantize_q_valid as _quantize_q_valid,
-)
-from repro.kernels.mixed_scan.kernel import (
-    mixed_linear_scan_pallas,
-    mixed_mlp_scan_pallas,
-)
+"""Legacy entry point — the one-pass bitmap-masked mixed-state scan now
+lives in the unified scan engine (`kernels/engine`: linear/MLP query stage
+with the packed dual-query option, flat layout, bitmap select ± invert).
+This shim re-exports it so old imports keep working."""
+from repro.kernels.engine.ops import mixed_bridged_search
 
 __all__ = ["mixed_bridged_search"]
-
-
-@partial(
-    jax.jit,
-    static_argnames=(
-        "fused_kind", "k", "renormalize", "q_tile", "block_rows",
-        "q_valid", "interpret",
-    ),
-)
-def _mixed_bridged_search_jit(
-    fused_kind: str,
-    fused: dict,
-    queries: jax.Array,
-    corpus: jax.Array,
-    migrated: jax.Array,
-    k: int,
-    renormalize: bool,
-    q_tile: int,
-    block_rows: int,
-    q_valid: int | None,
-    interpret: bool,
-):
-    n = corpus.shape[0]
-    q = queries.shape[0]
-    corpus_p = _pad_rows(corpus, block_rows)
-    queries_p = _pad_rows(queries, q_tile)
-    # pad bits are dead (n_valid masks their rows to NEG before the fold)
-    mig_p = _pad_rows(migrated.astype(jnp.int32), block_rows).reshape(1, -1)
-    common = dict(
-        k=k, n_valid=n, q_valid=q_valid, renormalize=renormalize,
-        q_tile=q_tile, block_rows=block_rows, interpret=interpret,
-    )
-    if fused_kind == "linear":
-        out = mixed_linear_scan_pallas(
-            queries_p, fused["m"], fused["t"], fused["s"], corpus_p, mig_p,
-            **common,
-        )
-    elif fused_kind == "mlp":
-        out = mixed_mlp_scan_pallas(
-            queries_p, fused["w1"], fused["b1"], fused["w2"], fused["b2"],
-            fused["p"], fused["s"], corpus_p, mig_p, **common,
-        )
-    else:
-        raise ValueError(f"unknown fused kind {fused_kind!r}")
-    return tuple(o[:q] for o in out)
-
-
-def mixed_bridged_search(
-    fused_kind: str,
-    fused: dict,
-    queries: jax.Array,
-    corpus: jax.Array,
-    migrated: jax.Array,
-    k: int = 10,
-    renormalize: bool = True,
-    q_tile: int = 128,
-    block_rows: int = 1024,
-    q_valid: int | None = None,
-    interpret: bool | None = None,
-):
-    """One launch: adapter transform + dual-score scan + bitmap select +
-    running top-k over a mixed-state corpus.
-
-    ``fused`` comes from fold_fused_params / DriftAdapter.as_fused_params;
-    ``migrated`` is the (N,) migration bitmap (bool or int: nonzero ⇒ the
-    row holds an f_new vector, scored with raw q; zero ⇒ f_old, scored with
-    g(q)). Returns (scores (Q, k), ids (Q, k)). Mixed state requires
-    d_new == d_old (rows migrate in place). ``q_valid`` follows the
-    fused_search contract: rows ≥ q_valid are micro-batcher padding, whole
-    query tiles past it skip all compute, and the count is quantized to
-    tile granularity BEFORE the jit boundary so per-bucket counts never
-    retrace.
-    """
-    if queries.shape[1] != corpus.shape[1]:
-        raise ValueError(
-            f"mixed-state scan needs d_new == d_old (rows migrate in place); "
-            f"got queries d={queries.shape[1]} vs corpus d={corpus.shape[1]}"
-        )
-    if migrated.shape != (corpus.shape[0],):
-        raise ValueError(
-            f"migration bitmap shape {migrated.shape} != ({corpus.shape[0]},)"
-        )
-    if interpret is None:
-        interpret = _is_cpu()
-    q_valid = _quantize_q_valid(queries.shape[0], q_valid, q_tile)
-    return _mixed_bridged_search_jit(
-        fused_kind, fused, queries, corpus, migrated, k=k,
-        renormalize=renormalize, q_tile=q_tile, block_rows=block_rows,
-        q_valid=q_valid, interpret=interpret,
-    )

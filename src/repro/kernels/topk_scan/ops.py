@@ -1,61 +1,6 @@
-"""Jitted public wrapper for the topk_scan Pallas kernel: pads inputs to
-tile multiples, dispatches, strips padding. interpret=True on CPU (this
-container); compiled Mosaic on real TPU."""
-from __future__ import annotations
+"""Legacy entry point — the native corpus scan now lives in the unified
+scan engine (`kernels/engine`: identity query stage, flat layout, plain
+select). This shim re-exports it so old imports keep working."""
+from repro.kernels.engine.ops import topk_scan
 
-from functools import partial
-
-import jax
-
-from repro.kernels.common import (
-    is_cpu as _is_cpu,
-    pad_rows as _pad_rows,
-    quantize_q_valid as _quantize_q_valid,
-)
-from repro.kernels.topk_scan.kernel import topk_scan_pallas
-
-
-@partial(
-    jax.jit,
-    static_argnames=("k", "q_tile", "block_rows", "q_valid", "interpret"),
-)
-def _topk_scan_jit(
-    corpus: jax.Array,
-    queries: jax.Array,
-    k: int,
-    q_tile: int,
-    block_rows: int,
-    q_valid: int | None,
-    interpret: bool,
-) -> tuple[jax.Array, jax.Array]:
-    n = corpus.shape[0]
-    q = queries.shape[0]
-    out_s, out_i = topk_scan_pallas(
-        _pad_rows(corpus, block_rows), _pad_rows(queries, q_tile),
-        k=k, n_valid=n, q_valid=q_valid,
-        q_tile=q_tile, block_rows=block_rows, interpret=interpret,
-    )
-    return out_s[:q], out_i[:q]
-
-
-def topk_scan(
-    corpus: jax.Array,
-    queries: jax.Array,
-    k: int = 10,
-    q_tile: int = 128,
-    block_rows: int = 1024,
-    q_valid: int | None = None,
-    interpret: bool | None = None,
-) -> tuple[jax.Array, jax.Array]:
-    """With ``q_valid`` set, rows ≥ q_valid are micro-batcher padding: query
-    tiles entirely past it skip all compute and those output rows are
-    undefined (the batcher never reads them). The count is quantized to
-    tile granularity BEFORE the jit boundary, so varying per-bucket counts
-    do not retrace."""
-    if interpret is None:
-        interpret = _is_cpu()
-    q_valid = _quantize_q_valid(queries.shape[0], q_valid, q_tile)
-    return _topk_scan_jit(
-        corpus, queries, k=k, q_tile=q_tile, block_rows=block_rows,
-        q_valid=q_valid, interpret=interpret,
-    )
+__all__ = ["topk_scan"]

@@ -44,6 +44,10 @@ class QueryRouter:
         self._adapter = adapter
         self.queries_served = 0
         self.swaps = 0
+        # (cache key, compiled ScanPlan): the plan only changes when the
+        # adapter slot or the index's shape (type/backend) does — the hot
+        # path must not pay a plan compile per query batch
+        self._plan_cache: tuple = (None, None)
         self._prefold(adapter)
 
     def _prefold(self, adapter: Optional[DriftAdapter]) -> None:
@@ -68,14 +72,22 @@ class QueryRouter:
         """``q_valid`` (micro-batcher pass-through) marks trailing query
         rows as padding the fused launches skip; rows past it come back
         undefined and must not be read."""
+        from repro.kernels.engine import compile_plan, execute_plan
+
         t0 = time.perf_counter()
         adapter = self._adapter      # read once — atomicity
-        if adapter is not None:
-            scores, ids = self.index.search_bridged(
-                adapter, queries, k=k, q_valid=q_valid
+        key = (id(adapter), type(self.index),
+               getattr(self.index, "backend", ""))
+        cached_key, plan = self._plan_cache
+        if cached_key != key:
+            plan = compile_plan(
+                self.index, adapter,
+                mode="native" if adapter is None else "bridged",
             )
-        else:
-            scores, ids = self.index.search(queries, k=k, q_valid=q_valid)
+            self._plan_cache = (key, plan)
+        scores, ids = execute_plan(
+            plan, queries, index=self.index, k=k, q_valid=q_valid
+        )
         # pad rows are not served queries
         self.queries_served += (
             queries.shape[0] if q_valid is None

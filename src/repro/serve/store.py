@@ -22,22 +22,24 @@ full lifecycle as explicit, audited stages::
     # pre-upgrade serving (indexes are functional; the snapshot never mutated)
 
 During migration the index is a mixed-state store (cf. DeDrift): migrated
-rows hold f_new vectors, the rest f_old. A new-space query is served by the
-protocol-level ``search_mixed``: on ``backend="fused"`` that is ONE
-``kernels/mixed_scan`` launch (flat) — each corpus block scored against
-both g(q) and raw q, the migration bitmap selecting per row which score
-enters the single running top-k — or two launches (IVF: adapter-folded
-probe + bitmap-masked rescore; cells keep old-space k-means geometry until
-the cutover re-pack, so g(q) probes while the bitmap splits the rescore).
-Other backends serve the exact jnp two-scan merge, each side masked to its
-own rows before its top-k.
+rows hold f_new vectors, the rest f_old. A new-space query is served by a
+``kernels/engine`` mixed ScanPlan: on ``backend="fused"`` that is ONE
+packed dual-query launch (flat) — each corpus block pays a single matmul
+against the stacked [q; g(q)] tile, the migration bitmap selecting per row
+which score enters the single running top-k — or two launches (IVF:
+adapter-folded probe + bitmap-masked rescore; cells keep old-space k-means
+geometry until the cutover re-pack, so g(q) probes while the bitmap splits
+the rescore). Other backends serve the exact jnp two-scan merge, each side
+masked to its own rows before its top-k.
 
 Old-space queries against the mixed index (the canary CONTROL arm while
-migration runs) are exact too, when the bridge kind permits: ``fit``
-registers the old→new pseudo-inverse edge for linear-foldable kinds
-(cf. Learning Backward Compatible Embeddings), and the control arm then
-runs the same mixed scan with the bitmap inverted — raw q_old scores the
-un-migrated f_old rows, g⁻¹(q_old) the migrated f_new rows.
+migration runs) are exact too: ``fit`` registers the old→new
+pseudo-inverse edge for linear-foldable kinds (cf. Learning Backward
+Compatible Embeddings) and FITS an explicit old→new adapter on the
+reversed pair set for kinds without a closed form (MLP), and the control
+arm then runs the same mixed scan with the selection inverted in-kernel —
+raw q_old scores the un-migrated f_old rows, g⁻¹(q_old) the migrated
+f_new rows.
 """
 from __future__ import annotations
 
@@ -180,24 +182,25 @@ class UpgradeHandle:
         return self._migrated
 
     def _device_migration(
-        self, index: SearchBackend, inverted: bool = False
+        self, index: SearchBackend
     ) -> tuple[jax.Array, Optional[jax.Array]]:
         """Cached (bitmap, IVF mig_cells) device operands for search_mixed.
 
-        Invalidated by migrate_batch; safe across the functional index
-        swaps replace_rows performs because the packed cell-id layout never
-        changes mid-migration (only the cutover re-pack rebuilds it, and
-        the mixed path is dead by then)."""
-        key = "inv" if inverted else "fwd"
-        hit = self._mask_cache.get(key)
+        Only the FORWARD bitmap is ever materialized: the inverse/control-
+        arm scan flips the selection in-kernel (``invert=True``), so one
+        cached upload serves both directions. Invalidated by migrate_batch;
+        safe across the functional index swaps replace_rows performs
+        because the packed cell-id layout never changes mid-migration (only
+        the cutover re-pack rebuilds it, and the mixed path is dead by
+        then)."""
+        hit = self._mask_cache.get("fwd")
         if hit is None:
-            mask = ~self._migrated if inverted else self._migrated
-            bitmap = jnp.asarray(mask)
+            bitmap = jnp.asarray(self._migrated)
             cells = (
                 migration_cells(index.cell_ids, bitmap)
                 if isinstance(index, IVFIndex) else None
             )
-            hit = self._mask_cache[key] = (bitmap, cells)
+            hit = self._mask_cache["fwd"] = (bitmap, cells)
         return hit
 
     # -- stage 1: fit --------------------------------------------------------
@@ -206,25 +209,43 @@ class UpgradeHandle:
         b_pairs: jax.Array,
         a_pairs: jax.Array,
         config: Optional[FitConfig] = None,
+        reverse_config: Optional[FitConfig] = None,
+        fit_reverse: bool = True,
     ) -> DriftAdapter:
         """Fit the bridge adapter on ⟨f_new, f_old⟩ pairs and register it as
-        the registry edge ``to_version -> from_version`` — plus, for
-        linear-foldable kinds, the ``from_version -> to_version``
-        pseudo-inverse edge that keeps the canary control arm exact while
-        the index is mixed-state."""
+        the registry edge ``to_version -> from_version`` — plus the
+        ``from_version -> to_version`` reverse edge that keeps the canary
+        control arm exact while the index is mixed-state: the closed-form
+        pseudo-inverse for linear-foldable kinds, or — when no closed form
+        exists (MLP bridges) and ``fit_reverse`` is on — an EXPLICIT
+        old→new adapter fitted on the REVERSED pair set (``reverse_config``
+        defaults to the forward config), so MLP upgrades stop falling back
+        to the approximate bitmap-blind native scan mid-migration."""
         self._require(UpgradeStage.CREATED)
         cfg = config or self.fit_config or FitConfig(kind="mlp")
         self.adapter = DriftAdapter.fit(b_pairs, a_pairs, config=cfg)
         inverse = self.store.registry.register_bridge(
             self.to_version, self.from_version, self.adapter
         )
+        inv_note = "analytic" if inverse is not None else "no"
+        if inverse is None and fit_reverse and not self.store.registry.has_edge(
+            self.from_version, self.to_version
+        ):
+            reverse = DriftAdapter.fit(
+                a_pairs, b_pairs, config=reverse_config or cfg
+            )
+            self.store.registry.register_edge(
+                self.from_version, self.to_version, reverse
+            )
+            inverse = reverse
+            inv_note = "fitted"
         info = self.adapter.fit_info
         self._transition(
             UpgradeStage.FITTED,
             f"kind={self.adapter.kind} pairs={int(b_pairs.shape[0])} "
             f"fit={info.fit_seconds:.1f}s "
             f"bytes={self.adapter.param_bytes} "
-            f"inverse={'yes' if inverse is not None else 'no'}",
+            f"inverse={inv_note}",
         )
         return self.adapter
 
@@ -446,6 +467,10 @@ class VectorStore:
         self._active: Optional[UpgradeHandle] = None
         # (space -> (registry revision, composed bridge)) resolution cache
         self._bridges: dict[str, tuple[int, Bridge]] = {}
+        # compiled ScanPlan cache — the serving hot paths must not pay a
+        # plan compile per query batch; keyed on everything a plan depends
+        # on (bridge identity, mode/invert/probe_space, index shape)
+        self._plans: dict[tuple, object] = {}
 
     # -- introspection -------------------------------------------------------
     @property
@@ -462,6 +487,25 @@ class VectorStore:
         if isinstance(self.index, IVFIndex):
             return {"nprobe": min(self.nprobe, self.index.n_cells)}
         return {}
+
+    def _plan(self, bridge, mode, invert=False, probe_space="mapped"):
+        """Cached ScanPlan for the current index + bridge (keeping the
+        bridge object alive in the cache keeps its id() stable)."""
+        from repro.kernels.engine import compile_plan
+
+        key = (
+            mode, invert, probe_space, id(bridge), type(self.index),
+            getattr(self.index, "backend", ""),
+        )
+        hit = self._plans.get(key)
+        if hit is None:
+            if len(self._plans) > 32:     # refit churn: keep it bounded
+                self._plans.clear()
+            hit = self._plans[key] = compile_plan(
+                self.index, bridge, mode=mode, invert=invert,
+                probe_space=probe_space,
+            )
+        return hit
 
     def bridge(self, space: str) -> Bridge:
         """Resolve (and cache) the bridge mapping ``space`` queries into the
@@ -529,8 +573,12 @@ class VectorStore:
                 scores, ids = out[0], out[1]
                 kind = f"inverse-mixed:{out[2]}"
             else:
-                scores, ids = self.index.search(
-                    queries, k=k, q_valid=q_valid, **self._index_kwargs()
+                from repro.kernels.engine import execute_plan
+
+                scores, ids = execute_plan(
+                    self._plan(None, "native"), queries, index=self.index,
+                    k=k, q_valid=q_valid,
+                    nprobe=self._index_kwargs().get("nprobe", 8),
                 )
                 kind = "none"
         else:
@@ -547,9 +595,12 @@ class VectorStore:
                 scores, ids = out[0], out[1]
                 kind = f"mixed-bridged:{bridge.kind}"
             else:
-                scores, ids = self.index.search_bridged(
-                    bridge, queries, k=k, q_valid=q_valid,
-                    **self._index_kwargs()
+                from repro.kernels.engine import execute_plan
+
+                scores, ids = execute_plan(
+                    self._plan(bridge, "bridged"), queries, index=self.index,
+                    k=k, q_valid=q_valid,
+                    nprobe=self._index_kwargs().get("nprobe", 8),
                 )
                 kind = bridge.kind
         return SearchResult(
@@ -583,23 +634,25 @@ class VectorStore:
         """New-space traffic while an upgrade is live: pure bridge before
         migration starts (or while it only buffers, serve_mixed=False),
         one-launch mixed-state scan during, native-rescore at 100 %."""
+        from repro.kernels.engine import execute_plan
+
         progress = h.progress if h._index_mixed else 0.0
         bridge = self._live_bridge(h)
+        nprobe = self._index_kwargs().get("nprobe", 8)
         if progress == 0.0:
-            s, i = self.index.search_bridged(
-                bridge, queries, k=k, q_valid=q_valid,
-                **self._index_kwargs(),
+            s, i = execute_plan(
+                self._plan(bridge, "bridged"), queries, index=self.index,
+                k=k, q_valid=q_valid, nprobe=nprobe,
             )
             return s, i, bridge.kind
         if progress == 1.0:
             s, i = self._native_scan_mixed(bridge, queries, k, q_valid)
             return s, i, "native-mixed"
         bitmap, mig_cells = h._device_migration(self.index)
-        kwargs = self._index_kwargs()
-        if mig_cells is not None:
-            kwargs["mig_cells"] = mig_cells
-        s, i = self.index.search_mixed(
-            bridge, queries, bitmap, k=k, q_valid=q_valid, **kwargs,
+        s, i = execute_plan(
+            self._plan(bridge, "mixed"), queries, index=self.index, k=k,
+            q_valid=q_valid, migrated=bitmap, mig_cells=mig_cells,
+            nprobe=nprobe,
         )
         return s, i, f"mixed:{bridge.kind}"
 
@@ -624,26 +677,28 @@ class VectorStore:
         self, h: UpgradeHandle, queries: jax.Array, k: int, q_valid
     ) -> Optional[tuple[jax.Array, jax.Array, str]]:
         """Serving-space queries against the mixed index, exact via the
-        inverse edge: the same ``search_mixed`` with the bitmap INVERTED —
-        the query scores the un-migrated f_old rows raw, and the
-        pseudo-inverse g⁻¹(q) scores the migrated f_new rows. The probe
-        (IVF) stays on the raw query: the cells still live in its own
-        old-space geometry. ``queries`` must already BE in the serving
-        space (the control arm passes them through; third-space traffic
-        bridges into it first). Returns None when no inverse edge exists
-        (MLP bridges): callers fall back to bitmap-blind serving, which
-        scores migrated rows only approximately."""
+        inverse edge: the same mixed scan with the selection INVERTED
+        in-kernel (the cached forward bitmap is reused as-is) — the query
+        scores the un-migrated f_old rows raw, and the inverse bridge
+        g⁻¹(q) scores the migrated f_new rows. The probe (IVF) stays on
+        the raw query: the cells still live in its own old-space geometry.
+        ``queries`` must already BE in the serving space (the control arm
+        passes them through; third-space traffic bridges into it first).
+        Returns None when no inverse edge exists: callers fall back to
+        bitmap-blind serving, which scores migrated rows only
+        approximately."""
+        from repro.kernels.engine import execute_plan
+
         try:
             inverse = self.registry.edge(self.serving_version, h.to_version)
         except KeyError:
             return None
-        bitmap, mig_cells = h._device_migration(self.index, inverted=True)
-        kwargs = self._index_kwargs()
-        if isinstance(self.index, IVFIndex):
-            kwargs["probe_space"] = "raw"
-            kwargs["mig_cells"] = mig_cells
-        s, i = self.index.search_mixed(
-            inverse, queries, bitmap, k=k, q_valid=q_valid, **kwargs,
+        bitmap, mig_cells = h._device_migration(self.index)
+        s, i = execute_plan(
+            self._plan(inverse, "mixed", invert=True, probe_space="raw"),
+            queries, index=self.index, k=k, q_valid=q_valid,
+            migrated=bitmap, mig_cells=mig_cells,
+            nprobe=self._index_kwargs().get("nprobe", 8),
         )
         return s, i, inverse.kind
 

@@ -1,0 +1,453 @@
+"""Scan-engine tests: ScanPlan compilation across the (space-graph ×
+index type × migration state) matrix, pallas_call-counted launch
+invariants asserted against the compiled plans, and the old-vs-engine
+parity matrix (every serving path vs the exact jnp production math it
+replaced, across backends, indexes, serving states, and ragged q_valid).
+
+Rides the serving CI shard (and the blocking kernel-parity job runs this
+file in full, slow sweeps included)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ann import FlatIndex, build_ivf, migration_cells
+from repro.core import DriftAdapter, FitConfig
+from repro.core.registry import ChainedAdapter, SpaceRegistry
+from repro.kernels.engine import (
+    ServingState,
+    build_plan,
+    compile_plan,
+    execute_plan,
+    kernel_name,
+    mixed_bridged_search,
+)
+from repro.kernels.mixed_scan.ref import mixed_merge_scan
+
+pytestmark = pytest.mark.serving
+
+D = 64
+N = 1500
+
+
+@pytest.fixture(scope="module")
+def world():
+    key = jax.random.PRNGKey(0)
+    corpus = jax.random.normal(key, (N, D))
+    corpus = corpus / jnp.linalg.norm(corpus, axis=1, keepdims=True)
+    rot = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1), (D, D)))[0]
+    b = corpus @ rot.T
+    queries = jax.random.normal(jax.random.PRNGKey(3), (97, D))
+    queries = queries / jnp.linalg.norm(queries, axis=1, keepdims=True)
+    op = DriftAdapter.fit(
+        b[:800], corpus[:800],
+        config=FitConfig(kind="op", use_dsm=False),
+    )
+    mlp = DriftAdapter.fit(
+        b[:800], corpus[:800],
+        config=FitConfig(kind="mlp", max_epochs=2),
+    )
+    mig = np.zeros(N, bool)
+    mig[np.random.default_rng(7).permutation(N)[:700]] = True
+    return corpus, b, queries, op, mlp, jnp.asarray(mig)
+
+
+_CACHE: dict = {}
+
+
+def _flat(world, backend):
+    return FlatIndex(corpus=world[0], backend=backend)
+
+
+def _ivf(world, backend):
+    if "ivf" not in _CACHE:
+        _CACHE["ivf"] = build_ivf(jax.random.PRNGKey(2), world[0],
+                                  n_cells=16)
+    return dataclasses.replace(_CACHE["ivf"], backend=backend)
+
+
+def _chain2mlp(world):
+    if "chain" not in _CACHE:
+        _CACHE["chain"] = ChainedAdapter([world[4], DriftAdapter.fit(
+            world[0][:400], world[1][:400],
+            config=FitConfig(kind="mlp", max_epochs=1),
+        )])
+    return _CACHE["chain"]
+
+
+class TestPlanCompilation:
+    """Every (index type × backend × mode × bridge shape) maps to the
+    expected launches — the launch-count invariants live IN the plan."""
+
+    def test_flat_native(self, world):
+        for be, n in (("jnp", 0), ("pallas", 1), ("fused", 1)):
+            plan = compile_plan(_flat(world, be))
+            assert plan.launch_count == n
+            if n:
+                assert plan.kernels() == ("_scan_identity_flat_plain",)
+
+    def test_flat_bridged_one_launch_per_kind(self, world):
+        for bridge, kind in ((world[3], "linear"), (world[4], "mlp")):
+            plan = compile_plan(_flat(world, "fused"), bridge, mode="bridged")
+            assert plan.launch_count == 1 and not plan.sequential
+            assert plan.kernels() == (kernel_name(kind, "flat", "plain"),)
+
+    def test_flat_bridged_sequential_backends(self, world):
+        for be, n in (("jnp", 0), ("pallas", 1)):
+            plan = compile_plan(_flat(world, be), world[3], mode="bridged")
+            assert plan.launch_count == n
+            assert plan.prelude is world[3]      # apply-then-search
+
+    def test_flat_bridged_chain_fallback(self, world):
+        chain = _chain2mlp(world)
+        plan = compile_plan(_flat(world, "fused"), chain, mode="bridged")
+        assert plan.sequential and plan.fused_kind is None
+        assert plan.prelude is chain
+        assert plan.kernels() == ("_scan_identity_flat_plain",)
+
+    def test_flat_mixed_one_packed_launch(self, world):
+        plan = compile_plan(_flat(world, "fused"), world[3], mode="mixed")
+        assert plan.launch_count == 1 and plan.packed
+        assert plan.kernels() == ("_scan_linear_flat_bitmap_packed",)
+        inv = compile_plan(
+            _flat(world, "fused"), world[3], mode="mixed", invert=True
+        )
+        assert inv.kernels() == ("_scan_linear_flat_bitmap_inv_packed",)
+
+    def test_flat_mixed_jnp_and_chain_take_two_scan_merge(self, world):
+        for be, bridge in (("jnp", world[3]), ("pallas", world[3]),
+                           ("fused", _chain2mlp(world))):
+            plan = compile_plan(_flat(world, be), bridge, mode="mixed")
+            assert plan.launch_count == 0
+
+    def test_ivf_native(self, world):
+        for be, n in (("jnp", 0), ("pallas", 0), ("fused", 2)):
+            plan = compile_plan(_ivf(world, be))
+            assert plan.launch_count == n
+        plan = compile_plan(_ivf(world, "fused"))
+        assert plan.kernels() == (
+            "_scan_identity_flat_plain", "_scan_identity_ivf_plain",
+        )
+
+    def test_ivf_bridged_two_launches(self, world):
+        plan = compile_plan(_ivf(world, "fused"), world[3], mode="bridged")
+        assert plan.launch_count == 2
+        assert plan.kernels() == (
+            "_scan_linear_flat_plain", "_scan_identity_ivf_plain",
+        )
+        assert plan.launches[0].return_queries   # q' emitted from VMEM
+        chain = _chain2mlp(world)
+        seq = compile_plan(_ivf(world, "fused"), chain, mode="bridged")
+        assert seq.sequential and seq.prelude is chain
+        assert seq.kernels() == (
+            "_scan_identity_flat_plain", "_scan_identity_ivf_plain",
+        )
+
+    def test_ivf_mixed_two_launches(self, world):
+        plan = compile_plan(_ivf(world, "fused"), world[3], mode="mixed")
+        assert plan.kernels() == (
+            "_scan_linear_flat_plain", "_scan_identity_ivf_bitmap",
+        )
+        raw = compile_plan(
+            _ivf(world, "fused"), world[3], mode="mixed", invert=True,
+            probe_space="raw",
+        )
+        assert raw.kernels() == (
+            "_scan_identity_flat_plain", "_scan_identity_ivf_bitmap_inv",
+        )
+
+    def test_mode_validation(self, world):
+        with pytest.raises(ValueError, match="mode"):
+            compile_plan(_flat(world, "jnp"), mode="sideways")
+        with pytest.raises(ValueError, match="bridge"):
+            compile_plan(_flat(world, "jnp"), mode="bridged")
+        with pytest.raises(ValueError, match="probe_space"):
+            compile_plan(
+                _flat(world, "jnp"), world[3], mode="mixed",
+                probe_space="sideways",
+            )
+
+
+class TestBuildPlan:
+    """The registry-level compiler: space graph + migration state in,
+    ScanPlan out."""
+
+    def _registry(self, world, kinds=("op", "op")):
+        """v3 --e32--> v2 --e21--> v1 (serving). Cached per kinds tuple —
+        every test reads, none mutates."""
+        if ("reg", kinds) in _CACHE:
+            return _CACHE[("reg", kinds)]
+        corpus, b = world[0], world[1]
+        reg = SpaceRegistry()
+        for v in ("v1", "v2", "v3"):
+            reg.add_version(v, D)
+        cfg = {
+            "op": FitConfig(kind="op", use_dsm=False),
+            "mlp": FitConfig(kind="mlp", max_epochs=1),
+        }
+        reg.register_bridge(
+            "v2", "v1",
+            DriftAdapter.fit(b[:400], corpus[:400], config=cfg[kinds[1]]),
+        )
+        reg.register_bridge(
+            "v3", "v2",
+            DriftAdapter.fit(corpus[:400], b[:400], config=cfg[kinds[0]]),
+        )
+        _CACHE[("reg", kinds)] = reg
+        return reg
+
+    def test_native_when_query_space_is_serving(self, world):
+        reg = self._registry(world)
+        plan = build_plan(
+            reg, _flat(world, "fused"), ServingState("v1", "v1")
+        )
+        assert plan.mode == "native" and plan.launch_count == 1
+
+    def test_v1_to_v3_chain_folds_to_one_launch(self, world):
+        """The v3→v1 bridge composes two OP hops into ONE folded-linear
+        launch (the acceptance criterion from the registry PR, now a plan
+        property)."""
+        reg = self._registry(world)
+        plan = build_plan(
+            reg, _flat(world, "fused"), ServingState("v3", "v1")
+        )
+        assert plan.mode == "bridged" and plan.launch_count == 1
+        assert plan.fused_kind == "linear"
+        assert plan.kernels() == ("_scan_linear_flat_plain",)
+
+    def test_two_mlp_chain_compiles_to_sequential_fallback(self, world):
+        reg = self._registry(world, kinds=("mlp", "mlp"))
+        plan = build_plan(
+            reg, _flat(world, "fused"), ServingState("v3", "v1")
+        )
+        assert plan.sequential and plan.fused_kind is None
+        assert isinstance(plan.prelude, ChainedAdapter)
+        assert plan.kernels() == ("_scan_identity_flat_plain",)
+
+    def test_mixed_states_per_index_type(self, world):
+        for make, counts in ((_flat, (1, 1)), (_ivf, (2, 2))):
+            reg = self._registry(world)
+            index = make(world, "fused")
+            fwd = build_plan(
+                reg, index, ServingState("v2", "v1", target_space="v2",
+                                         mixed=True)
+            )
+            assert fwd.mode == "mixed" and fwd.launch_count == counts[0]
+            assert not fwd.invert
+            inv = build_plan(
+                reg, index, ServingState("v1", "v1", target_space="v2",
+                                         mixed=True)
+            )
+            assert inv.mode == "mixed" and inv.launch_count == counts[1]
+            assert inv.invert and inv.probe_space == "raw"
+            assert inv.bridge is reg.edge("v1", "v2")
+
+    def test_control_arm_without_inverse_degrades_to_native(self, world):
+        # an MLP bridge edge registers no auto-inverse (and nothing fitted
+        # an explicit one here), so the control arm has no reverse path
+        reg = self._registry(world, kinds=("op", "mlp"))
+        assert not reg.has_edge("v1", "v2")
+        plan = build_plan(
+            reg, _flat(world, "fused"),
+            ServingState("v1", "v1", target_space="v2", mixed=True),
+        )
+        assert plan.mode == "native"
+
+    def test_third_space_rides_inverse_scan_with_prelude(self, world):
+        reg = self._registry(world)
+        plan = build_plan(
+            reg, _flat(world, "fused"),
+            ServingState("v3", "v1", target_space="v2", mixed=True),
+        )
+        assert plan.mode == "mixed" and plan.invert
+        assert plan.prelude is not None          # v3 → v1 bridge first
+        assert plan.bridge is reg.edge("v1", "v2")
+
+
+class TestLaunchInvariants:
+    """pallas_call-counted: executing a plan traces exactly the kernels it
+    compiled — the four legacy launch-count contracts plus the inverse
+    variants, asserted against the engine."""
+
+    def _counting(self, monkeypatch):
+        from jax.experimental import pallas as real_pl
+
+        # drop every cached jit trace so each plan's launches re-trace (and
+        # count) here even when another test already compiled the same
+        # (shape, k, nprobe) combination
+        jax.clear_caches()
+        launches = []
+        orig = real_pl.pallas_call
+
+        def counting(kernel, *a, **kw):
+            launches.append(getattr(kernel, "func", kernel).__name__)
+            return orig(kernel, *a, **kw)
+
+        monkeypatch.setattr(real_pl, "pallas_call", counting)
+        return launches
+
+    # the two mixed rows (the acceptance contract's newest paths) ride the
+    # fast tier; the remaining six rows of the matrix run in the blocking
+    # kernel-parity CI job (which executes this file slow-included)
+    @pytest.mark.parametrize(
+        "make,mode,invert,k",
+        [
+            pytest.param(_flat, "native", False, 11, marks=pytest.mark.slow),
+            pytest.param(_flat, "bridged", False, 11, marks=pytest.mark.slow),
+            (_flat, "mixed", False, 11),
+            pytest.param(_flat, "mixed", True, 11, marks=pytest.mark.slow),
+            pytest.param(_ivf, "native", False, 11, marks=pytest.mark.slow),
+            pytest.param(_ivf, "bridged", False, 11, marks=pytest.mark.slow),
+            (_ivf, "mixed", False, 11),
+            pytest.param(_ivf, "mixed", True, 11, marks=pytest.mark.slow),
+        ],
+    )
+    def test_traced_launches_match_plan(self, world, monkeypatch, make,
+                                        mode, invert, k):
+        corpus, b, queries, op, _, mig = world
+        index = make(world, "fused")
+        launches = self._counting(monkeypatch)
+        plan = compile_plan(
+            index, op if mode != "native" else None, mode=mode,
+            invert=invert, probe_space="raw" if invert else "mapped",
+        )
+        execute_plan(
+            plan, queries, index=index, k=k, migrated=mig, nprobe=4
+        )
+        assert launches == list(plan.kernels()), (launches, plan.kernels())
+
+
+class TestParityMatrix:
+    """Old-vs-engine: every fused serving path must reproduce the exact
+    jnp production math, bit-identical ids and 1e-5 scores, across the
+    (backend × index × serving state × q_valid) matrix."""
+
+    @pytest.mark.parametrize("index_type", ["flat", "ivf"])
+    def test_fused_matches_jnp_smoke(self, world, index_type):
+        """Fast-tier smoke: the mixed path (the widest-surface state) on
+        both index types; the full matrix rides the slow tier below."""
+        self._check(world, index_type, "mixed", None, "op")
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("q_valid", [None, 97, 41])
+    @pytest.mark.parametrize("state", ["native", "bridged", "mixed",
+                                       "mixed_inv"])
+    @pytest.mark.parametrize("index_type", ["flat", "ivf"])
+    def test_fused_matches_jnp(self, world, index_type, state, q_valid):
+        self._check(world, index_type, state, q_valid, "op")
+
+    def _check(self, world, index_type, state, q_valid, kind):
+        corpus, b, queries, op, mlp, mig = world
+        ad = mlp if kind == "mlp" else op
+        make = _flat if index_type == "flat" else _ivf
+        fused = make(world, "fused")
+        ref = make(world, "jnp")
+        kw = {} if index_type == "flat" else {"nprobe": 4}
+        mode = "mixed" if state.startswith("mixed") else state
+        invert = state == "mixed_inv"
+        bridge = None if state == "native" else ad
+        out = {}
+        for name, index in (("fused", fused), ("jnp", ref)):
+            plan = compile_plan(
+                index, bridge, mode=mode, invert=invert,
+                probe_space="raw" if invert else "mapped",
+            )
+            s, i = execute_plan(
+                plan, queries, index=index, k=7, q_valid=q_valid,
+                migrated=mig, **kw,
+            )
+            n = queries.shape[0] if q_valid is None else min(q_valid, 97)
+            out[name] = (np.asarray(s)[:n], np.asarray(i)[:n])
+        np.testing.assert_array_equal(out["fused"][1], out["jnp"][1])
+        np.testing.assert_allclose(
+            out["fused"][0], out["jnp"][0], atol=1e-5
+        )
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("q_valid", [None, 64, 17])
+    @pytest.mark.parametrize("state", ["native", "bridged", "mixed",
+                                       "mixed_inv"])
+    @pytest.mark.parametrize("index_type", ["flat", "ivf"])
+    def test_fused_matches_jnp_mlp_wide(self, world, index_type, state,
+                                        q_valid):
+        """The widest sweep (MLP transform × every state × ragged counts)
+        rides the slow tier / kernel-parity CI job."""
+        self._check(world, index_type, state, q_valid, "mlp")
+
+
+class TestPackedDualQuery:
+    """The single-matmul mixed variant (ROADMAP open item): packing
+    [q; g(q)] and selecting post-matmul must be BIT-identical to the
+    two-matmul dual scan and to the exact two-scan merge."""
+
+    @pytest.mark.parametrize(
+        "kind",
+        ["op", pytest.param("mlp", marks=pytest.mark.slow)],
+    )
+    def test_packed_equals_unpacked_and_ref(self, world, kind):
+        corpus, b, queries, op, mlp, mig = world
+        ad = op if kind == "op" else mlp
+        fk, fp = ad.as_fused_params()
+        outs = {
+            packed: mixed_bridged_search(
+                fk, fp, queries, corpus, mig, k=7, block_rows=512,
+                packed=packed, interpret=True,
+            )
+            for packed in (False, True)
+        }
+        np.testing.assert_array_equal(
+            np.asarray(outs[True][0]), np.asarray(outs[False][0])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(outs[True][1]), np.asarray(outs[False][1])
+        )
+        rs, ri = mixed_merge_scan(
+            queries, ad.apply(queries), corpus, mig, k=7
+        )
+        np.testing.assert_allclose(
+            np.asarray(outs[True][0]), np.asarray(rs), atol=1e-5
+        )
+        np.testing.assert_array_equal(np.asarray(outs[True][1]),
+                                      np.asarray(ri))
+
+    @pytest.mark.slow
+    def test_invert_flag_equals_inverted_bitmap(self, world):
+        corpus, _, queries, op, _, mig = world
+        fk, fp = op.as_fused_params()
+        s_flag, i_flag = mixed_bridged_search(
+            fk, fp, queries, corpus, mig, k=6, block_rows=512, invert=True,
+            interpret=True,
+        )
+        s_bit, i_bit = mixed_bridged_search(
+            fk, fp, queries, corpus, ~jnp.asarray(mig, bool), k=6,
+            block_rows=512, interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(i_flag), np.asarray(i_bit))
+        np.testing.assert_array_equal(np.asarray(s_flag), np.asarray(s_bit))
+
+
+class TestMigrationCellsInvert:
+    """IVF inverse selection: the in-kernel invert over the FORWARD
+    (C, cap) packing equals re-packing the inverted host bitmap."""
+
+    @pytest.mark.slow
+    def test_invert_equals_repacked(self, world):
+        from repro.kernels.engine import ivf_rescore_mixed_fused
+
+        corpus, _, queries, op, _, mig = world
+        index = _ivf(world, "fused")
+        qm = op.apply(queries)
+        _, probe = jax.lax.top_k(queries @ index.centroids.T, 4)
+        fwd = migration_cells(index.cell_ids, mig)
+        repacked = migration_cells(index.cell_ids, ~jnp.asarray(mig, bool))
+        s_flag, i_flag = ivf_rescore_mixed_fused(
+            index.cells, index.cell_ids, fwd, queries, qm, probe, k=5,
+            invert=True,
+        )
+        s_bit, i_bit = ivf_rescore_mixed_fused(
+            index.cells, index.cell_ids, repacked, queries, qm, probe, k=5,
+        )
+        np.testing.assert_array_equal(np.asarray(i_flag), np.asarray(i_bit))
+        np.testing.assert_array_equal(np.asarray(s_flag), np.asarray(s_bit))

@@ -162,8 +162,13 @@ class TestTwoLaunchPath:
         # else in the suite, so both jitted ops trace (and count) here
         s, i = index.search_bridged(adapter, queries, k=5, nprobe=3)
         assert len(launches) == 2, launches
-        assert launches[0] == "_fused_linear_kernel"
-        assert launches[1] == "_ivf_rescore_kernel"
+        assert launches[0] == "_scan_linear_flat_plain"
+        assert launches[1] == "_scan_identity_ivf_plain"
+        # the plan carries the same invariant: what traced is what compiled
+        from repro.kernels.engine import compile_plan
+
+        plan = compile_plan(index, adapter, mode="bridged")
+        assert list(plan.kernels()) == launches
         # and it is still the same search
         ref_s, ref_i = ivf_search(
             dataclasses.replace(index, backend="jnp"), queries, k=5, nprobe=3

@@ -332,7 +332,12 @@ class TestLaunchCounts:
         # this (shape, k) combo is traced nowhere else in the suite, so the
         # jitted op traces (and counts) here
         s, i = index.search_mixed(ad, queries, mig, k=9)
-        assert launches == ["_mixed_linear_kernel"]
+        assert launches == ["_scan_linear_flat_bitmap_packed"]
+        # the plan carries the same invariant: what traced is what compiled
+        from repro.kernels.engine import compile_plan
+
+        plan = compile_plan(index, ad, mode="mixed")
+        assert list(plan.kernels()) == launches
         rs, ri = mixed_merge_scan(queries, ad.apply(queries), corpus, mig, k=9)
         np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-5)
         np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
@@ -351,8 +356,12 @@ class TestLaunchCounts:
         mig = jnp.asarray(_mask(corpus.shape[0], 0.5))
         s, i = index.search_mixed(ad, queries, mig, k=3, nprobe=5)
         assert launches == [
-            "_fused_linear_kernel", "_ivf_rescore_mixed_kernel"
+            "_scan_linear_flat_plain", "_scan_identity_ivf_bitmap"
         ], launches
+        from repro.kernels.engine import compile_plan
+
+        plan = compile_plan(index, ad, mode="mixed")
+        assert list(plan.kernels()) == launches
         sj, ij = dataclasses.replace(index, backend="jnp").search_mixed(
             ad, queries, mig, k=3, nprobe=5
         )

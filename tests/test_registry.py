@@ -119,7 +119,7 @@ class TestComposition:
         reg, ad32, ad21, q, corpus = chain_world
         comp = reg.adapter("v3", "v1")
 
-        import repro.kernels.fused_search.ops as fused_ops
+        import repro.kernels.engine.ops as fused_ops
 
         calls = {"n": 0}
         orig = fused_ops.fused_bridged_search

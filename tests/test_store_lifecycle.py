@@ -391,21 +391,65 @@ class TestMixedStateServing:
         )
         assert float(jnp.min(res.scores[:, 0])) > 0.9
 
-    def test_control_arm_without_inverse_stays_native(self, world):
-        """MLP bridges have no closed-form inverse: the control arm keeps
-        the plain native scan (status quo) instead of failing."""
+    def test_mlp_control_arm_rides_fitted_reverse_edge(self, world):
+        """MLP bridges have no closed-form inverse — so ``fit`` now trains
+        an EXPLICIT old→new adapter on the reversed pair set and registers
+        it, and the control arm serves the exact inverse-mixed scan instead
+        of falling back to the approximate bitmap-blind native scan."""
+        corpus_old, _, q_old, _, _ = world
+        store = _store(world)
+        h = store.upgrade(
+            "v2", corpus_new_provider=lambda ids: world[1][jnp.asarray(ids)]
+        )
+        h.fit(world[1][:2000], world[0][:2000],
+              config=FitConfig(kind="mlp", max_epochs=8))
+        assert store.registry.has_edge("v1", "v2")
+        assert store.registry.edge("v1", "v2").kind == "mlp"
+        h.deploy()
+        h.migrate_batch(500)
+        res = store.search(q_old, k=5, space="v1")
+        assert res.adapter_kind == "inverse-mixed:mlp"
+        # regression — exact mid-migration retrieval for MLP upgrades: an
+        # old-space query for an ALREADY-MIGRATED item must still retrieve
+        # it (the fitted reverse maps q_old onto the row's f_new vector;
+        # without the edge, raw q_old scores garbage against f_new)
+        probes = corpus_old[:16]          # rows 0..499 are migrated
+        got = store.search(probes, k=1, space="v1")
+        np.testing.assert_array_equal(
+            np.asarray(got.ids[:, 0]), np.arange(16)
+        )
+
+    @pytest.mark.slow
+    def test_fit_reverse_opt_out_and_explicit_edge_priority(self, world):
+        """``fit(fit_reverse=False)`` preserves the old native-fallback
+        behavior, and a hand-registered reverse edge is never clobbered by
+        the auto-fitted one."""
         _, _, q_old, _, _ = world
         store = _store(world)
         h = store.upgrade(
             "v2", corpus_new_provider=lambda ids: world[1][jnp.asarray(ids)]
         )
         h.fit(world[1][:1000], world[0][:1000],
-              config=FitConfig(kind="mlp", max_epochs=2))
+              config=FitConfig(kind="mlp", max_epochs=2), fit_reverse=False)
         assert not store.registry.has_edge("v1", "v2")
         h.deploy()
         h.migrate_batch(500)
         res = store.search(q_old, k=5, space="v1")
         assert res.adapter_kind == "none"
+        h.rollback()
+        # pre-registered explicit reverse wins over the auto-fit
+        from repro.core import DriftAdapter
+
+        store2 = _store(world)
+        explicit = DriftAdapter.fit(world[0][:1000], world[1][:1000],
+                                    config=OP_CFG)
+        h2 = store2.upgrade(
+            "v2", corpus_new_provider=lambda ids: world[1][jnp.asarray(ids)]
+        )
+        store2.registry.register_edge("v1", "v2", explicit)
+        h2.fit(world[1][:1000], world[0][:1000],
+               config=FitConfig(kind="mlp", max_epochs=2))
+        assert store2.registry.edge("v1", "v2") is explicit
 
     def test_online_refit_reaches_mixed_serving(self, world):
         """An OnlineAdapterManager decorating the upgrade edge atomically
