@@ -149,10 +149,24 @@ class OnlineAdapterManager:
             return None
         if self._tick % self.config.refit_every_ticks != 0:
             return None
+        return self._refit(seed_salt=self._tick)
+
+    def refit_now(self) -> Optional[DriftAdapter]:
+        """Off-schedule refit — the RefitGovernor's trigger primitive.
+
+        Refits on the current buffer immediately, regardless of the tick
+        schedule, without advancing the tick counter. Returns the swapped
+        adapter, or None when the buffer is empty (the governor treats
+        that as "no action taken" and stays armed)."""
+        if len(self._buffer) == 0:
+            return None
+        return self._refit(seed_salt=self._tick + 1000 * (self.refits + 1))
+
+    def _refit(self, seed_salt: int) -> DriftAdapter:
         cfg = FitConfig(
             kind=self.config.kind,
             max_epochs=self.config.max_epochs_per_refit,
-            seed=self.config.seed + self._tick,
+            seed=self.config.seed + seed_salt,
         )
         buf_b, buf_a = self._buffer.view()
         self.adapter = DriftAdapter.fit(

@@ -405,6 +405,28 @@ class SpaceRegistry:
             [self._edges[(a, b, None)] for a, b in zip(hops, hops[1:])]
         )
 
+    # -- observability -------------------------------------------------------
+    def summary(self) -> dict:
+        """JSON-ready registry view for the obs layer: version table, edge
+        list with kinds and inverse provenance, and the revision counter
+        (what bridge caches key on). Rides the governor bench artifact so
+        a BENCH_governor.json timeline is auditable against the version
+        graph that served it."""
+        return {
+            "versions": {v.name: v.dim for v in self.versions.values()},
+            "edges": [
+                {
+                    "src": src,
+                    "dst": dst,
+                    "domain": domain,
+                    "kind": self._edges[(src, dst, domain)].kind,
+                    "auto_inverse": (src, dst, domain) in self._auto_inverse,
+                }
+                for src, dst, domain in self.edges()
+            ],
+            "revision": self.revision,
+        }
+
     # -- persistence ---------------------------------------------------------
     def save(self, path: str) -> None:
         """One msgpack blob: version table + every edge's params."""

@@ -300,10 +300,18 @@ def execute_plan(
     migrated: jax.Array | None = None,
     mig_cells: jax.Array | None = None,
     nprobe: int = 8,
+    telemetry=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Run a compiled plan. ``migrated`` (flat: (N,) bitmap) and
     ``mig_cells`` (IVF: the (C, cap) packed bitmap, computed from
-    ``migrated`` when absent) are only read in mixed mode."""
+    ``migrated`` when absent) are only read in mixed mode.
+
+    ``telemetry`` is an optional duck-typed observability sink (see
+    ``repro.obs.telemetry.Telemetry``): its ``record_plan(plan)`` is called
+    once per execution — pure python counter bumps over the plan's static
+    launch specs, so instrumentation cannot perturb what traces."""
+    if telemetry is not None:
+        telemetry.record_plan(plan)
     if plan.prelude is not None and plan.index_type != "protocol":
         queries = plan.prelude.apply(queries)
     if plan.index_type == "protocol":

@@ -9,6 +9,12 @@ batched decode/search traffic, and optionally simulate a live upgrade.
     PYTHONPATH=src python -m repro.launch.serve --lifecycle \
         --items 2000 --queries 200 --dim 128 --backend fused \
         --out experiments/bench/BENCH_lifecycle.json
+
+    # injected-drift governor scenario (two arms: governor off/on), the
+    # CI drift-gate driver — writes experiments/bench/BENCH_governor.json:
+    PYTHONPATH=src python -m repro.launch.serve --governor \
+        --items 2000 --queries 200 --dim 128 --backend fused --adapter op \
+        --out experiments/bench/BENCH_governor.json
 """
 from __future__ import annotations
 
@@ -123,6 +129,220 @@ def run_lifecycle(args) -> None:
         )
 
 
+def _run_governor_arm(args, governor_on: bool) -> dict:
+    """One arm of the injected-drift scenario.
+
+    World: corpus embedded in v1; the v2 encoder is a drift transform whose
+    ``rotation_theta`` STEPS UP at ``--inject-tick`` (same seed ⇒ same skew
+    generator, so the step is a pure extra rotation of the new space: the
+    pinned exhaustive oracle stays valid — orthogonal maps preserve inner
+    products — while the adapter fitted at θ₀ goes stale). With the
+    governor off, the stale bridge serves degraded recall for the rest of
+    the run; with it on, the alarm pauses migration, triggers an
+    ``OnlineAdapterManager.refit_now`` on the freshest pair window, and
+    re-embeds rows baked pre-drift (``refresh_migrated``), recovering the
+    recall delta. Returns the arm's timeline + outcome dict."""
+    import dataclasses
+
+    from repro.core.online import OnlineAdapterManager, OnlineConfig
+    from repro.obs import DriftMonitor, GovernorConfig, RefitGovernor
+
+    ccfg = CorpusConfig(n_items=args.items, dim=args.dim,
+                        n_clusters=max(200, args.items // 150), seed=0)
+    corpus_old, _ = make_corpus(ccfg)
+    base_cfg = dataclasses.replace(
+        MILD_TEXT, d_old=args.dim, d_new=args.dim
+    )
+    theta0 = base_cfg.rotation_theta
+
+    def drift_at(theta: float):
+        return make_drift(
+            dataclasses.replace(base_cfg, rotation_theta=theta)
+        )
+
+    current = {"drift": drift_at(theta0), "theta": theta0}
+    q_raw = make_queries(ccfg, args.queries)[0]
+    n_canary = min(128, args.queries // 2)
+    canary_raw, traffic_raw = q_raw[:n_canary], q_raw[n_canary:]
+
+    store = VectorStore(_make_index(args, corpus_old), version="v1")
+    telemetry = store.attach_telemetry()
+    handle = store.upgrade(
+        "v2",
+        corpus_new_provider=lambda ids: current["drift"](
+            corpus_old[jax.numpy.asarray(ids)], 0
+        ),
+    )
+    corpus_new0 = current["drift"](corpus_old, 0)
+    pairs_b, pairs_a, _ = make_pairs(
+        jax.random.PRNGKey(0), corpus_old, corpus_new0,
+        min(5_000, args.items)
+    )
+    handle.fit(pairs_b, pairs_a, config=FitConfig(kind=args.adapter))
+    handle.deploy()
+
+    q_can0 = current["drift"](canary_raw, 1)
+    _, oracle = flat_search_jnp(corpus_new0, q_can0, k=10)
+    monitor = DriftMonitor(store, telemetry)
+    base_recall = monitor.arm(q_can0, oracle)
+
+    # fresh-pairs-only window: the refit must fit the post-injection
+    # space, not a pre/post mixture, so the ring holds exactly one tick
+    manager = OnlineAdapterManager(
+        args.dim, args.dim,
+        OnlineConfig(kind=args.adapter, buffer_size=args.pairs_per_tick,
+                     seed=1),
+        registry=store.registry, src="v2", dst="v1",
+    )
+    governor = (
+        RefitGovernor(monitor, manager, GovernorConfig())
+        if governor_on else None
+    )
+
+    per_tick = max(1, args.items // 8)
+    timeline: list[dict] = []
+    lineage_mid: dict = {}
+    tag = "gov-on " if governor_on else "gov-off"
+    for t in range(1, args.ticks + 1):
+        theta = theta0 + (args.theta_step if t >= args.inject_tick else 0.0)
+        if theta != current["theta"]:
+            current["drift"] = drift_at(theta)
+            current["theta"] = theta
+        store.search(current["drift"](traffic_raw, 1), k=10)
+        pair_ids = np.random.default_rng(100 + t).choice(
+            args.items, size=min(args.pairs_per_tick, args.items),
+            replace=False,
+        )
+        rows_old = corpus_old[jax.numpy.asarray(pair_ids)]
+        manager.observe_pairs(
+            np.asarray(current["drift"](rows_old, 0)), np.asarray(rows_old)
+        )
+        q_can_t = current["drift"](canary_raw, 1)
+        if governor is not None:
+            actions = [a.value for a in governor.step(probe_queries=q_can_t)]
+            signals = governor.events[-1].signals
+        else:
+            actions = []
+            signals = monitor.collect(probe_queries=q_can_t).to_dict()
+        if t == args.inject_tick:
+            lineage_mid = store.lineage_report().to_dict()
+        if handle.stage.name in ("CANARY", "BRIDGED", "MIGRATING"):
+            handle.migrate_batch(per_tick)
+        timeline.append({
+            "tick": t,
+            "theta": round(theta, 4),
+            "progress": round(handle.progress, 4),
+            "paused": handle.migration_paused,
+            "actions": actions,
+            "recall_delta": signals["recall_delta"],
+            "score_kl": signals["score_kl"],
+            "signals": signals,
+        })
+        print(f"[{tag}] tick={t:2d} θ={theta:.2f} "
+              f"Δrecall={signals['recall_delta']:+.4f} "
+              f"KL={signals['score_kl']:.4f} "
+              f"progress={handle.progress:5.1%}"
+              f"{' paused' if handle.migration_paused else ''}"
+              f"{' ' + ','.join(actions) if actions else ''}")
+
+    arm: dict = {
+        "baseline_recall": round(base_recall, 4),
+        "timeline": timeline,
+        "min_recall_delta": round(
+            min(row["recall_delta"] for row in timeline), 6
+        ),
+        "final_recall_delta": round(timeline[-1]["recall_delta"], 6),
+    }
+    if governor is None:
+        return arm
+
+    # drain the upgrade to completion and cut over: the post-cutover store
+    # must be single-space (the check_lineage CI gate)
+    if handle.stage.name not in ("CANARY", "BRIDGED", "MIGRATING"):
+        raise SystemExit(
+            f"governor gate: upgrade ended in stage {handle.stage.name} "
+            "(fail-safe rollback fired?) — cannot reach cutover"
+        )
+    if handle.migration_paused:
+        handle.resume_migration()
+    while handle.progress < 1.0:
+        handle.migrate_batch(per_tick)
+    handle.cutover()
+    q_can_final = current["drift"](canary_raw, 1)
+    res = store.search(q_can_final, k=10)
+    arm.update({
+        "governor_events": governor.timeline(),
+        "governor_summary": governor.summary(),
+        "post_cutover_recall": round(float(recall_at_k(res.ids, oracle)), 4),
+        "lineage_mid": lineage_mid,
+        "lineage": store.lineage_report().to_dict(),
+        "lifecycle_events": handle.timeline(),
+        "registry": store.registry.summary(),
+        "telemetry": telemetry.counters(),
+    })
+    return arm
+
+
+def run_governor(args) -> None:
+    """Both arms of the injected-drift scenario + the drift-gate asserts,
+    serialized to ``experiments/bench/BENCH_governor.json``."""
+    from repro.obs import GovernorConfig
+
+    off = _run_governor_arm(args, governor_on=False)
+    on = _run_governor_arm(args, governor_on=True)
+    gcfg = GovernorConfig()
+    payload = {
+        "config": {
+            "items": args.items, "queries": args.queries, "dim": args.dim,
+            "backend": args.backend, "index": args.index,
+            "adapter": args.adapter, "ticks": args.ticks,
+            "inject_tick": args.inject_tick,
+            "theta_step": args.theta_step,
+            "pairs_per_tick": args.pairs_per_tick,
+            "platform": jax.default_backend(),
+        },
+        "caveat": (
+            "CPU interpret-mode timings; re-measure on real TPU"
+            if jax.default_backend() == "cpu" else ""
+        ),
+        "thresholds": {
+            "recall_delta_min": gcfg.recall_delta_min,
+            "kl_max": gcfg.kl_max,
+            "recall_floor": gcfg.recall_floor,
+            "cooldown_ticks": gcfg.cooldown_ticks,
+        },
+        "arms": {"governor_off": off, "governor_on": on},
+        "lineage_mid": on["lineage_mid"],
+        "lineage": on["lineage"],
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+    # the drift-gate asserts (mirrored by CI):
+    if off["min_recall_delta"] > gcfg.recall_delta_min:
+        raise SystemExit(
+            "governor gate: governor-off arm never degraded past "
+            f"{gcfg.recall_delta_min} (min Δrecall "
+            f"{off['min_recall_delta']}) — drift injection too weak"
+        )
+    if on["governor_summary"]["refits_triggered"] < 1:
+        raise SystemExit("governor gate: no auto-refit triggered")
+    if on["final_recall_delta"] < gcfg.recall_delta_min:
+        raise SystemExit(
+            f"governor gate: post-recovery Δrecall {on['final_recall_delta']}"
+            f" < {gcfg.recall_delta_min}"
+        )
+    if on["lineage"]["is_mixed"]:
+        raise SystemExit("governor gate: store still mixed after cutover")
+    print(
+        f"governor gate OK: off-arm min Δrecall {off['min_recall_delta']}, "
+        f"on-arm refits {on['governor_summary']['refits_triggered']}, "
+        f"recovered Δrecall {on['final_recall_delta']}"
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--items", type=int, default=50_000)
@@ -139,11 +359,27 @@ def main() -> None:
     ap.add_argument("--lifecycle", action="store_true",
                     help="drive the VectorStore lifecycle and emit a "
                          "bridged-recall + migration-progress timeline JSON")
+    ap.add_argument("--governor", action="store_true",
+                    help="run the injected-drift auto-refit scenario "
+                         "(governor off vs on) and emit BENCH_governor.json")
+    ap.add_argument("--ticks", type=int, default=10,
+                    help="[--governor] monitoring ticks per arm")
+    ap.add_argument("--inject-tick", type=int, default=4,
+                    help="[--governor] tick at which rotation_theta steps up")
+    ap.add_argument("--theta-step", type=float, default=0.15,
+                    help="[--governor] injected extra rotation angle — sized "
+                         "to land between the refit alarm (Δrecall < −0.01) "
+                         "and the rollback floor (−0.10)")
+    ap.add_argument("--pairs-per-tick", type=int, default=512,
+                    help="[--governor] fresh ⟨f_new, f_old⟩ pairs per tick")
     ap.add_argument("--out", default="experiments/bench/BENCH_lifecycle.json")
     args = ap.parse_args()
 
     if args.lifecycle:
         run_lifecycle(args)
+        return
+    if args.governor:
+        run_governor(args)
         return
 
     corpus_old, corpus_new, q_new, oracle = _build_world(args)

@@ -1,0 +1,47 @@
+"""Drift observability layer — the control loop over the upgrade lifecycle.
+
+Three pieces turn the operator-driven lifecycle API into a self-healing
+one (ROADMAP "Drift observability + auto-refit governor"):
+
+* :mod:`repro.obs.telemetry` — cheap hot-path instrumentation. The store
+  and router push per-batch score moments into device-side accumulators
+  (:class:`ScoreMomentSketch`: a handful of jnp adds, NO per-query host
+  transfer) and bump python-side path/launch counters; everything crosses
+  to the host only when the monitor aggregates on its cadence.
+* :mod:`repro.obs.monitor` — :class:`DriftMonitor` computes the live
+  retrieval-drift signals: canary-set recall delta against a probe set
+  pinned at arm time, score-distribution KL / cosine shift between the
+  armed baseline window and the current window, and per-space lineage
+  counts (rows by source space, mixed-state fraction, missing rows).
+* :mod:`repro.obs.governor` — :class:`RefitGovernor` acts on thresholds
+  with hysteresis: trigger ``OnlineAdapterManager`` refits, pause/resume
+  ``UpgradeHandle.migrate_batch``, and fail-safe ``rollback`` when the
+  recall delta breaches the floor. Its timeline serializes into
+  ``BENCH_governor.json`` (same artifact family as BENCH_lifecycle).
+
+Default thresholds follow the axiom re-embed playbook (SNIPPETS.md):
+KL alarm at 0.10–0.15, recall delta floor ≥ −0.01 for cutover-grade
+serving; the lineage audit mirrors horadus's ``embedding-lineage``
+``--fail-on-mixed`` CI gate (``tools/check_lineage.py``).
+"""
+from repro.obs.governor import (
+    GovernorAction,
+    GovernorConfig,
+    GovernorEvent,
+    RefitGovernor,
+)
+from repro.obs.monitor import DriftMonitor, DriftSignals, LineageReport
+from repro.obs.telemetry import ScoreMomentSketch, Telemetry, gaussian_kl
+
+__all__ = [
+    "DriftMonitor",
+    "DriftSignals",
+    "LineageReport",
+    "GovernorAction",
+    "GovernorConfig",
+    "GovernorEvent",
+    "RefitGovernor",
+    "ScoreMomentSketch",
+    "Telemetry",
+    "gaussian_kl",
+]

@@ -1,0 +1,208 @@
+"""`RefitGovernor` — the auto-refit control loop over the lifecycle API.
+
+Today's operators drive refits and migration pacing by hand (the runbook's
+"Online refits during migration" flow). The governor closes the loop: each
+``step()`` reads one :class:`~repro.obs.monitor.DriftSignals` tick and acts
+on configured thresholds, with hysteresis so a noisy signal hovering at a
+threshold cannot cause a refit storm:
+
+* **alarm** (recall delta below ``recall_delta_min`` OR score KL above
+  ``kl_max``) → pause ``migrate_batch`` (don't bake rows with a stale
+  encoder/adapter) and — at most once per ``cooldown_ticks``, and only
+  after ``confirm_ticks`` consecutive breached ticks — trigger ONE
+  ``OnlineAdapterManager.refit_now()``, which atomically replaces the
+  registry edge the store serves from.
+* **recovered** (signals back inside thresholds) → resume migration and
+  re-arm the trigger latch.
+* **floor breach** (recall delta at/below ``recall_floor``) → fail-safe
+  ``UpgradeHandle.rollback()``: bit-identical pre-upgrade serving beats
+  continuing to serve degraded results.
+
+Default thresholds are the axiom playbook's (SNIPPETS.md): KL max 0.15
+(start 0.10–0.15, tighten if stable), recall delta min −0.01.
+
+Every decision is appended to ``self.events``; ``timeline()`` serializes
+the whole run for ``experiments/bench/BENCH_governor.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Optional
+
+from repro.obs.monitor import DriftMonitor, DriftSignals
+
+
+class GovernorAction(enum.Enum):
+    NONE = "none"
+    REFIT = "refit"
+    PAUSE_MIGRATION = "pause_migration"
+    RESUME_MIGRATION = "resume_migration"
+    ROLLBACK = "rollback"
+
+
+@dataclasses.dataclass
+class GovernorConfig:
+    """Thresholds + hysteresis knobs (defaults: axiom re-embed playbook)."""
+
+    recall_delta_min: float = -0.01   # refit trigger (≥ −0.01 to cut over)
+    kl_max: float = 0.15              # score-distribution KL alarm
+    recall_floor: float = -0.10       # fail-safe rollback, well past alarm
+    cooldown_ticks: int = 3           # min ticks between refits (hysteresis)
+    confirm_ticks: int = 1            # consecutive breached ticks to act
+    pause_migration_on_alarm: bool = True
+    rollback_on_floor: bool = True
+    # after a refit, re-embed already-migrated rows with the current
+    # provider (UpgradeHandle.refresh_migrated): a refit repairs the
+    # bridged side only — rows baked before the drift stay stale otherwise
+    refresh_migrated_on_refit: bool = True
+
+
+@dataclasses.dataclass
+class GovernorEvent:
+    tick: int
+    t: float
+    action: str
+    signals: dict
+    detail: str = ""
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class RefitGovernor:
+    """Acts on monitor signals: refit / pause / resume / rollback."""
+
+    def __init__(
+        self,
+        monitor: DriftMonitor,
+        manager=None,
+        config: Optional[GovernorConfig] = None,
+    ):
+        self.monitor = monitor
+        self.manager = manager          # OnlineAdapterManager (refit_now)
+        self.config = config or GovernorConfig()
+        self.events: list[GovernorEvent] = []
+        self.refits_triggered = 0
+        self.rollbacks = 0
+        self._tick = 0
+        self._breach_streak = 0
+        self._last_refit_tick: Optional[int] = None
+        self._paused_by_us = False
+
+    # -- helpers -------------------------------------------------------------
+    @property
+    def _handle(self):
+        return self.monitor.store.active_upgrade
+
+    def _log(self, action: GovernorAction, signals: DriftSignals,
+             detail: str = "") -> None:
+        self.events.append(GovernorEvent(
+            tick=self._tick, t=time.time(), action=action.value,
+            signals=signals.to_dict(), detail=detail,
+        ))
+
+    def _breached(self, s: DriftSignals) -> bool:
+        return (
+            s.recall_delta < self.config.recall_delta_min
+            or s.score_kl > self.config.kl_max
+        )
+
+    def _in_cooldown(self) -> bool:
+        return (
+            self._last_refit_tick is not None
+            and self._tick - self._last_refit_tick < self.config.cooldown_ticks
+        )
+
+    # -- the control loop ----------------------------------------------------
+    def step(self, probe_queries=None) -> list[GovernorAction]:
+        """One governor tick: collect signals, decide, act.
+
+        Returns the actions taken (possibly empty). ``probe_queries``
+        passes through to ``DriftMonitor.collect`` (the current query
+        encoder's canary encodings when the encoder is what drifts)."""
+        self._tick += 1
+        cfg = self.config
+        signals = self.monitor.collect(probe_queries=probe_queries)
+        actions: list[GovernorAction] = []
+        handle = self._handle
+
+        # fail-safe first: a floor breach outranks every other response
+        if (
+            cfg.rollback_on_floor
+            and signals.recall_delta <= cfg.recall_floor
+            and handle is not None
+        ):
+            handle.rollback()
+            self.rollbacks += 1
+            self._paused_by_us = False
+            self._breach_streak = 0
+            actions.append(GovernorAction.ROLLBACK)
+            self._log(
+                GovernorAction.ROLLBACK, signals,
+                f"recall_delta={signals.recall_delta:.4f} <= "
+                f"floor={cfg.recall_floor}",
+            )
+            return actions
+
+        if self._breached(signals):
+            self._breach_streak += 1
+            if (
+                cfg.pause_migration_on_alarm
+                and handle is not None
+                and not handle.migration_paused
+            ):
+                handle.pause_migration(
+                    reason=f"governor alarm tick={self._tick}"
+                )
+                self._paused_by_us = True
+                actions.append(GovernorAction.PAUSE_MIGRATION)
+                self._log(GovernorAction.PAUSE_MIGRATION, signals)
+            if (
+                self.manager is not None
+                and self._breach_streak >= cfg.confirm_ticks
+                and not self._in_cooldown()
+            ):
+                adapter = self.manager.refit_now()
+                if adapter is not None:
+                    self.refits_triggered += 1
+                    self._last_refit_tick = self._tick
+                    refreshed = 0
+                    if (
+                        cfg.refresh_migrated_on_refit
+                        and handle is not None
+                        and handle.progress > 0
+                    ):
+                        refreshed = handle.refresh_migrated()
+                    actions.append(GovernorAction.REFIT)
+                    self._log(
+                        GovernorAction.REFIT, signals,
+                        f"refit #{self.refits_triggered} "
+                        f"(streak={self._breach_streak}, "
+                        f"refreshed_rows={refreshed})",
+                    )
+        else:
+            self._breach_streak = 0
+            if self._paused_by_us and handle is not None:
+                handle.resume_migration()
+                self._paused_by_us = False
+                actions.append(GovernorAction.RESUME_MIGRATION)
+                self._log(GovernorAction.RESUME_MIGRATION, signals)
+
+        if not actions:
+            self._log(GovernorAction.NONE, signals)
+        return actions
+
+    # -- reporting -----------------------------------------------------------
+    def timeline(self) -> list[dict]:
+        """Events as plain dicts (the BENCH_governor.json timeline)."""
+        return [e.to_dict() for e in self.events]
+
+    def summary(self) -> dict:
+        return {
+            "ticks": self._tick,
+            "refits_triggered": self.refits_triggered,
+            "rollbacks": self.rollbacks,
+            "last_refit_tick": self._last_refit_tick,
+        }

@@ -1,0 +1,171 @@
+"""`DriftMonitor` — live retrieval-drift signals over a VectorStore.
+
+Three signal families, mirroring what the axiom re-embed playbook alarms
+on and what horadus's embedding-lineage audit counts:
+
+* **Canary recall delta.** A probe set (queries + exhaustive-search oracle
+  ids) is PINNED at ``arm()`` time together with the recall the serving
+  path achieves right then. Every ``collect`` re-runs the canaries through
+  ``store.search`` (the real serving path — bridged/mixed/native, whatever
+  is live) and reports ``recall − baseline_recall``. Drift in either the
+  query encoder or the adapter shows up here first.
+* **Score-distribution shift.** The store's :class:`~repro.obs.telemetry.
+  Telemetry` sketches accumulate top-1 score moments on-device; ``collect``
+  pulls one window per cadence and reports the Gaussian KL of the current
+  window against the window pinned at arm time, plus the raw mean shift
+  (cosine scores on normalized embeddings — the playbook's "cosine shift").
+* **Lineage counts.** Rows by source space, the mixed-state fraction, and
+  missing-lineage rows, straight from the store's row-lineage table — the
+  numbers ``tools/check_lineage.py --fail-on-mixed`` gates on in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.ann.metrics import recall_at_k
+from repro.obs.telemetry import Telemetry, gaussian_kl
+
+
+@dataclasses.dataclass
+class LineageReport:
+    """Per-space row counts of a (possibly mixed-state) store."""
+
+    rows_by_space: dict[str, int]
+    missing: int
+    total: int
+    serving_version: str
+    target_space: Optional[str] = None
+
+    @property
+    def mixed_fraction(self) -> float:
+        """Fraction of rows NOT in the dominant space (0.0 = pure)."""
+        if self.total == 0 or not self.rows_by_space:
+            return 0.0
+        dominant = max(self.rows_by_space.values())
+        return 1.0 - dominant / self.total
+
+    @property
+    def is_mixed(self) -> bool:
+        return len(self.rows_by_space) > 1 or self.missing > 0
+
+    def to_dict(self) -> dict:
+        return {
+            "rows_by_space": dict(self.rows_by_space),
+            "missing": self.missing,
+            "total": self.total,
+            "serving_version": self.serving_version,
+            "target_space": self.target_space,
+            "mixed_fraction": round(self.mixed_fraction, 6),
+            "is_mixed": self.is_mixed,
+        }
+
+
+@dataclasses.dataclass
+class DriftSignals:
+    """One cadence tick's worth of drift evidence."""
+
+    recall: float                     # canary recall@k on the live path
+    recall_delta: float               # vs the baseline pinned at arm()
+    score_kl: float                   # KL(current window ‖ armed baseline)
+    cosine_shift: float               # mean top-1 score shift vs baseline
+    lineage: LineageReport
+    serving_path: str = ""            # adapter_kind the canaries took
+    queries_window: float = 0.0       # traffic the score window covers
+    registry_revision: int = 0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["lineage"] = self.lineage.to_dict()
+        for key in ("recall", "recall_delta", "score_kl", "cosine_shift"):
+            d[key] = round(d[key], 6)
+        return d
+
+
+class DriftMonitor:
+    """Computes drift signals from a store, its telemetry, and a pinned
+    canary probe set. Host transfers happen HERE (on the monitor cadence),
+    never on the serving path."""
+
+    def __init__(self, store, telemetry: Optional[Telemetry] = None, k: int = 10):
+        self.store = store
+        self.telemetry = telemetry or getattr(store, "telemetry", None)
+        self.k = k
+        self.baseline_recall: Optional[float] = None
+        self.baseline_moments: Optional[dict] = None
+        self._probe_queries: Optional[jax.Array] = None
+        self._oracle_ids: Optional[jax.Array] = None
+        self._probe_space: Optional[str] = None
+
+    # -- arming --------------------------------------------------------------
+    def arm(
+        self,
+        probe_queries: jax.Array,
+        oracle_ids: jax.Array,
+        probe_space: Optional[str] = None,
+    ) -> float:
+        """Pin the canary set and the healthy-state baselines.
+
+        ``oracle_ids`` is the exhaustive-search ground truth of the probe
+        queries (computed by the caller in the TRUE current space — the
+        monitor never sees raw corpora). Returns the baseline recall."""
+        self._probe_queries = probe_queries
+        self._oracle_ids = oracle_ids
+        self._probe_space = probe_space
+        self.baseline_recall = self._canary_recall(probe_queries)[0]
+        if self.telemetry is not None:
+            # drain whatever accumulated before arming, then pin the probe
+            # run's own window as the score-distribution baseline
+            self.baseline_moments = self._drain_window()
+        return self.baseline_recall
+
+    def _canary_recall(self, queries: jax.Array) -> tuple[float, str]:
+        res = self.store.search(queries, k=self.k, space=self._probe_space)
+        return float(recall_at_k(res.ids, self._oracle_ids)), res.adapter_kind
+
+    def _drain_window(self) -> dict:
+        """Aggregate every per-path window into one moment dict."""
+        n = s = ss = 0.0
+        for mom in self.telemetry.window().values():
+            c = mom["count"]
+            n += c
+            s += mom["mean"] * c
+            ss += (mom["var"] + mom["mean"] ** 2) * c
+        if n <= 0:
+            return {"count": 0.0, "mean": 0.0, "var": 0.0}
+        mean = s / n
+        return {"count": n, "mean": mean, "var": max(ss / n - mean * mean, 0.0)}
+
+    # -- cadence -------------------------------------------------------------
+    def collect(self, probe_queries: Optional[jax.Array] = None) -> DriftSignals:
+        """One monitoring tick: re-run the canaries (``probe_queries``
+        overrides the pinned encodings — pass the CURRENT encoder's output
+        when the query encoder itself is what drifts), pull one telemetry
+        window, and read the lineage table."""
+        if self.baseline_recall is None:
+            raise RuntimeError("monitor not armed: call arm() first")
+        q = probe_queries if probe_queries is not None else self._probe_queries
+        recall, path = self._canary_recall(q)
+        window = (
+            self._drain_window() if self.telemetry is not None
+            else {"count": 0.0, "mean": 0.0, "var": 0.0}
+        )
+        base = self.baseline_moments or {"count": 0.0}
+        return DriftSignals(
+            recall=recall,
+            recall_delta=recall - self.baseline_recall,
+            score_kl=gaussian_kl(base, window),
+            cosine_shift=(
+                window["mean"] - base["mean"]
+                if base.get("count", 0) > 0 and window["count"] > 0 else 0.0
+            ),
+            lineage=self.lineage(),
+            serving_path=path,
+            queries_window=window["count"],
+            registry_revision=getattr(self.store.registry, "revision", 0),
+        )
+
+    def lineage(self) -> LineageReport:
+        return self.store.lineage_report()

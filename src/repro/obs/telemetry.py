@@ -1,0 +1,145 @@
+"""Hot-path telemetry: device-side score sketches + python-side counters.
+
+The serving path must stay oblivious to observability: instrumentation may
+not add kernel launches (the instrumented store compiles the SAME ScanPlans
+— launch-trace tested) and may not force a device→host transfer per query
+batch. So the sketch keeps its state AS jax arrays: ``update`` is a few
+jnp adds enqueued behind the search itself, and the moments only cross to
+the host when the monitor calls ``snapshot``/``window`` on its cadence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class ScoreMomentSketch:
+    """Streaming first/second moments of top-1 retrieval scores.
+
+    State is three device scalars (count, Σx, Σx²) — updated with O(1)
+    jnp ops per *batch*, read with exactly one host transfer per
+    ``snapshot``. ``window`` additionally diffs against the previous
+    snapshot so the monitor sees per-cadence distributions, not
+    since-boot averages.
+    """
+
+    def __init__(self):
+        self._n = jnp.zeros((), jnp.float32)
+        self._sum = jnp.zeros((), jnp.float32)
+        self._sumsq = jnp.zeros((), jnp.float32)
+        # host-side copy of the state at the last window() call
+        self._mark = (0.0, 0.0, 0.0)
+
+    def update(self, scores: jax.Array, q_valid: Optional[int] = None) -> None:
+        """Fold a batch's (B, k) score matrix in — device ops only.
+
+        Rows past ``q_valid`` are padding whose scores are undefined
+        (the kernels skip them); they are masked out of the moments.
+        """
+        top1 = scores[:, 0].astype(jnp.float32)
+        if q_valid is not None:
+            valid = jnp.arange(top1.shape[0]) < q_valid
+            top1 = jnp.where(valid, top1, 0.0)
+            n = jnp.minimum(q_valid, top1.shape[0]).astype(jnp.float32)
+        else:
+            n = jnp.float32(top1.shape[0])
+        self._n = self._n + n
+        self._sum = self._sum + jnp.sum(top1)
+        self._sumsq = self._sumsq + jnp.sum(top1 * top1)
+
+    @staticmethod
+    def _moments(n: float, s: float, ss: float) -> dict:
+        if n <= 0:
+            return {"count": 0.0, "mean": 0.0, "var": 0.0}
+        mean = s / n
+        var = max(ss / n - mean * mean, 0.0)
+        return {"count": n, "mean": mean, "var": var}
+
+    def snapshot(self) -> dict:
+        """Since-boot moments — ONE device→host transfer."""
+        n, s, ss = (
+            float(self._n), float(self._sum), float(self._sumsq)
+        )
+        return self._moments(n, s, ss)
+
+    def window(self) -> dict:
+        """Moments of everything folded in since the previous ``window``
+        call (the monitor's per-cadence view), then advance the mark."""
+        n, s, ss = (
+            float(self._n), float(self._sum), float(self._sumsq)
+        )
+        n0, s0, ss0 = self._mark
+        self._mark = (n, s, ss)
+        return self._moments(n - n0, s - s0, ss - ss0)
+
+
+def gaussian_kl(base: dict, cur: dict, eps: float = 1e-6) -> float:
+    """KL(cur ‖ base) under Gaussian fits of two moment dicts.
+
+    The axiom playbook's "retrieval drift KL" alarm: compare the current
+    window's top-1 score distribution against the baseline pinned at arm
+    time. Returns 0.0 when either window is empty (no evidence ≠ drift).
+    """
+    if base.get("count", 0) <= 1 or cur.get("count", 0) <= 1:
+        return 0.0
+    vb = max(base["var"], eps)
+    vc = max(cur["var"], eps)
+    return float(
+        0.5 * (math.log(vb / vc) + (vc + (cur["mean"] - base["mean"]) ** 2) / vb - 1.0)
+    )
+
+
+class Telemetry:
+    """The store/router-side sink: one sketch per serving-path kind plus
+    cheap python counters (queries by path, ScanPlan launches by kernel).
+
+    ``record_search`` is the per-batch hot-path call — counter bumps and a
+    sketch ``update`` (device adds), nothing else. ``record_plan`` is
+    invoked by ``execute_plan`` and counts the launches the plan carries
+    (static strings — no device interaction at all).
+    """
+
+    def __init__(self):
+        self.queries_by_path: dict[str, int] = {}
+        self.batches_by_path: dict[str, int] = {}
+        self.launches_by_kernel: dict[str, int] = {}
+        self.plans_executed = 0
+        self._sketches: dict[str, ScoreMomentSketch] = {}
+
+    # -- hot path ------------------------------------------------------------
+    def record_search(
+        self, path: str, scores: jax.Array, served: int,
+        q_valid: Optional[int] = None,
+    ) -> None:
+        self.queries_by_path[path] = self.queries_by_path.get(path, 0) + served
+        self.batches_by_path[path] = self.batches_by_path.get(path, 0) + 1
+        sketch = self._sketches.get(path)
+        if sketch is None:
+            sketch = self._sketches[path] = ScoreMomentSketch()
+        sketch.update(scores, q_valid)
+
+    def record_plan(self, plan) -> None:
+        self.plans_executed += 1
+        for kernel in plan.kernels():
+            self.launches_by_kernel[kernel] = (
+                self.launches_by_kernel.get(kernel, 0) + 1
+            )
+
+    # -- cadence side --------------------------------------------------------
+    def sketch(self, path: str) -> Optional[ScoreMomentSketch]:
+        return self._sketches.get(path)
+
+    def window(self) -> dict:
+        """Per-path window moments (one host transfer per active path)."""
+        return {path: s.window() for path, s in self._sketches.items()}
+
+    def counters(self) -> dict:
+        return {
+            "queries_by_path": dict(self.queries_by_path),
+            "batches_by_path": dict(self.batches_by_path),
+            "launches_by_kernel": dict(self.launches_by_kernel),
+            "plans_executed": self.plans_executed,
+        }

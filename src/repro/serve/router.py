@@ -44,6 +44,9 @@ class QueryRouter:
         self._adapter = adapter
         self.queries_served = 0
         self.swaps = 0
+        # optional observability sink (repro.obs.Telemetry); a VectorStore
+        # shares its sink with the router via attach_telemetry
+        self.telemetry = None
         # (cache key, compiled ScanPlan): the plan only changes when the
         # adapter slot or the index's shape (type/backend) does — the hot
         # path must not pay a plan compile per query batch
@@ -86,17 +89,22 @@ class QueryRouter:
             )
             self._plan_cache = (key, plan)
         scores, ids = execute_plan(
-            plan, queries, index=self.index, k=k, q_valid=q_valid
+            plan, queries, index=self.index, k=k, q_valid=q_valid,
+            telemetry=self.telemetry,
         )
         # pad rows are not served queries
-        self.queries_served += (
+        served = (
             queries.shape[0] if q_valid is None
             else min(int(q_valid), queries.shape[0])
         )
+        self.queries_served += served
+        kind = adapter.kind if adapter else "none"
+        if self.telemetry is not None:
+            self.telemetry.record_search(kind, scores, served, q_valid)
         return SearchResult(
             scores=scores,
             ids=ids,
-            adapter_kind=adapter.kind if adapter else "none",
+            adapter_kind=kind,
             latency_s=time.perf_counter() - t0,
         )
 

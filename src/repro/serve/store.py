@@ -133,6 +133,13 @@ class UpgradeHandle:
         self._snap_version = store.serving_version
         n = store.index.size
         self._migrated = np.zeros(n, dtype=bool)
+        # lineage snapshot rides the rollback snapshot: rollback must
+        # restore the per-row source-space table bit-identically too
+        self._snap_lineage = store._lineage.copy()
+        # governor pacing: while paused, migrate_batch is a no-op that
+        # PRESERVES last_migrated_ids (refit drivers mid-consume them)
+        self._paused = False
+        self._listeners: list[Callable] = []
         # device-side bitmap (+ IVF (C, cap) packing) cache: the serving
         # path must not pay an O(N) host→device upload (or an O(C·cap)
         # repack) per query batch — only per migrate_batch
@@ -158,7 +165,23 @@ class UpgradeHandle:
     # -- helpers -------------------------------------------------------------
     def _transition(self, stage: UpgradeStage, detail: str = "") -> None:
         self.stage = stage
-        self.events.append(LifecycleEvent(stage.value, time.time(), detail))
+        event = LifecycleEvent(stage.value, time.time(), detail)
+        self.events.append(event)
+        for cb in self._listeners:
+            cb(event)
+
+    def on_transition(self, callback: Callable) -> None:
+        """Subscribe to stage-transition events (monitor/governor wiring):
+        ``callback(LifecycleEvent)`` fires on every transition, pause, and
+        resume — the observability layer's lifecycle feed."""
+        self._listeners.append(callback)
+
+    def _event(self, name: str, detail: str = "") -> None:
+        """A non-stage event on the audited timeline (pause/resume)."""
+        event = LifecycleEvent(name, time.time(), detail)
+        self.events.append(event)
+        for cb in self._listeners:
+            cb(event)
 
     def _require(self, *stages: UpgradeStage) -> None:
         if self.stage not in stages:
@@ -180,6 +203,24 @@ class UpgradeHandle:
     @property
     def migrated_mask(self) -> np.ndarray:
         return self._migrated
+
+    @property
+    def migration_paused(self) -> bool:
+        return self._paused
+
+    def pause_migration(self, reason: str = "") -> None:
+        """Governor hook: stop baking rows until resumed. While paused,
+        ``migrate_batch`` returns without migrating — and without touching
+        ``last_migrated_ids``, so an online-refit driver that still holds
+        the previous batch's ids keeps consuming them safely."""
+        if not self._paused:
+            self._paused = True
+            self._event("migration_paused", reason)
+
+    def resume_migration(self) -> None:
+        if self._paused:
+            self._paused = False
+            self._event("migration_resumed")
 
     def _device_migration(
         self, index: SearchBackend
@@ -366,6 +407,8 @@ class UpgradeHandle:
                 "migration already started with serve_mixed=True; the live "
                 "index holds f_new rows and cannot revert to buffered mode"
             )
+        if self._paused:
+            return self.progress
         todo = np.flatnonzero(~self._migrated)[:batch_size]
         if len(todo):
             rows = np.asarray(self.corpus_new_provider(todo), np.float32)
@@ -381,6 +424,10 @@ class UpgradeHandle:
                 self._index_mixed = True
             self._migrated[todo] = True
             self._mask_cache.clear()
+            if serve_mixed:
+                # the LIVE index's rows changed source space; buffered mode
+                # keeps serving pure-old, so lineage only moves at cutover
+                self.store._set_lineage(todo, self.to_version)
         # published only AFTER the rows actually migrated: a provider that
         # raises mid-batch must not leave drivers (online refit loops)
         # believing these rows hold f_new vectors
@@ -388,6 +435,31 @@ class UpgradeHandle:
         if self.stage != UpgradeStage.MIGRATING:
             self._transition(UpgradeStage.MIGRATING)
         return self.progress
+
+    def refresh_migrated(self) -> int:
+        """Re-embed the already-migrated rows with the CURRENT provider.
+
+        The governor's recovery companion to a refit: when the new-space
+        encoder drifts *mid-migration*, rows baked before the drift hold
+        stale f_new embeddings that no adapter refit can fix (the refit
+        repairs the bridged side only). Re-fetching those rows from
+        ``corpus_new_provider`` — which now embeds with the post-drift
+        encoder — restores them, cf. DeDrift's cheap re-embed pass and the
+        horadus playbook's "re-embed affected vectors in batches". The
+        migration bitmap is untouched (the rows stay migrated); returns
+        the number of rows refreshed."""
+        self._require(
+            UpgradeStage.CANARY, UpgradeStage.BRIDGED, UpgradeStage.MIGRATING
+        )
+        ids = np.flatnonzero(self._migrated)
+        if len(ids) == 0 or self.corpus_new_provider is None:
+            return 0
+        rows = np.asarray(self.corpus_new_provider(ids), np.float32)
+        self._new_rows[ids] = rows
+        if self._index_mixed:
+            self.store.router.replace_rows(jnp.asarray(ids), jnp.asarray(rows))
+        self._event("migrated_rows_refreshed", f"n={len(ids)}")
+        return int(len(ids))
 
     # -- stage 5: cutover / rollback -----------------------------------------
     def cutover(self) -> None:
@@ -415,6 +487,7 @@ class UpgradeHandle:
         self.store.router.index = new_index
         self.store.router.install_adapter(None)
         self.store.serving_version = self.to_version
+        self.store._reset_lineage(self.to_version)
         self.store._active = None
         self._transition(UpgradeStage.COMPLETE, "native new-space serving")
 
@@ -438,6 +511,7 @@ class UpgradeHandle:
         self.store.router.index = self._snap_index
         self.store.router.install_adapter(self._snap_adapter)
         self.store.serving_version = self._snap_version
+        self.store._lineage = self._snap_lineage.copy()
         self.store._active = None
         self._transition(UpgradeStage.ROLLED_BACK, "pre-upgrade snapshot restored")
 
@@ -465,6 +539,15 @@ class VectorStore:
             raise ValueError("router and index arguments disagree")
         self.nprobe = nprobe
         self._active: Optional[UpgradeHandle] = None
+        # per-row source-space lineage (horadus-style audit table): codes
+        # index into _lineage_spaces; -1 = missing lineage (rows mutated
+        # outside the lifecycle API). tools/check_lineage.py gates on the
+        # report this table produces.
+        self._lineage_spaces: list[str] = [version]
+        self._lineage = np.zeros(int(index.size), np.int16)
+        # optional observability sink (repro.obs.Telemetry) — None keeps
+        # the hot path a no-op check
+        self.telemetry = None
         # (space -> (registry revision, composed bridge)) resolution cache
         self._bridges: dict[str, tuple[int, Bridge]] = {}
         # compiled ScanPlan cache — the serving hot paths must not pay a
@@ -480,6 +563,65 @@ class VectorStore:
     @property
     def active_upgrade(self) -> Optional[UpgradeHandle]:
         return self._active
+
+    # -- observability -------------------------------------------------------
+    def attach_telemetry(self, telemetry=None):
+        """Install an observability sink on the store AND its router.
+
+        Instrumentation is launch-neutral (the instrumented store compiles
+        the same ScanPlans — launch-trace tested) and never forces a
+        per-query host transfer: score sketches accumulate on device and
+        cross to the host only when a DriftMonitor aggregates."""
+        if telemetry is None:
+            from repro.obs.telemetry import Telemetry
+
+            telemetry = Telemetry()
+        self.telemetry = telemetry
+        self.router.telemetry = telemetry
+        return telemetry
+
+    def _lineage_code(self, space: str) -> int:
+        try:
+            return self._lineage_spaces.index(space)
+        except ValueError:
+            self._lineage_spaces.append(space)
+            return len(self._lineage_spaces) - 1
+
+    def _set_lineage(self, ids, space: str) -> None:
+        self._lineage[np.asarray(ids)] = self._lineage_code(space)
+
+    def _reset_lineage(self, space: str) -> None:
+        """All rows now share one source space (cutover re-embed)."""
+        self._lineage = np.full(
+            int(self.index.size), self._lineage_code(space), np.int16
+        )
+
+    def mark_lineage_missing(self, ids) -> None:
+        """Rows mutated outside the lifecycle API lose their lineage —
+        the audit counts (and can fail on) them instead of guessing."""
+        self._lineage[np.asarray(ids)] = -1
+
+    def lineage_report(self):
+        """Rows by source space + mixed fraction + missing count — the
+        manifest ``tools/check_lineage.py`` audits."""
+        from repro.obs.monitor import LineageReport
+
+        codes, counts = np.unique(self._lineage, return_counts=True)
+        rows: dict[str, int] = {}
+        missing = 0
+        for code, count in zip(codes.tolist(), counts.tolist()):
+            if code < 0 or code >= len(self._lineage_spaces):
+                missing += count
+            else:
+                rows[self._lineage_spaces[code]] = count
+        h = self._active
+        return LineageReport(
+            rows_by_space=rows,
+            missing=missing,
+            total=int(self._lineage.size),
+            serving_version=self.serving_version,
+            target_space=h.to_version if h is not None else None,
+        )
 
     def _index_kwargs(self) -> dict:
         """Per-index search knobs: the store's nprobe reaches EVERY IVF
@@ -579,6 +721,7 @@ class VectorStore:
                     self._plan(None, "native"), queries, index=self.index,
                     k=k, q_valid=q_valid,
                     nprobe=self._index_kwargs().get("nprobe", 8),
+                    telemetry=self.telemetry,
                 )
                 kind = "none"
         else:
@@ -601,8 +744,17 @@ class VectorStore:
                     self._plan(bridge, "bridged"), queries, index=self.index,
                     k=k, q_valid=q_valid,
                     nprobe=self._index_kwargs().get("nprobe", 8),
+                    telemetry=self.telemetry,
                 )
                 kind = bridge.kind
+        if self.telemetry is not None:
+            # counter bump + device-side sketch adds; the host sees nothing
+            # until the monitor aggregates on its cadence
+            served = (
+                queries.shape[0] if q_valid is None
+                else min(int(q_valid), queries.shape[0])
+            )
+            self.telemetry.record_search(kind, scores, served, q_valid)
         return SearchResult(
             scores=scores,
             ids=ids,
@@ -643,6 +795,7 @@ class VectorStore:
             s, i = execute_plan(
                 self._plan(bridge, "bridged"), queries, index=self.index,
                 k=k, q_valid=q_valid, nprobe=nprobe,
+                telemetry=self.telemetry,
             )
             return s, i, bridge.kind
         if progress == 1.0:
@@ -652,7 +805,7 @@ class VectorStore:
         s, i = execute_plan(
             self._plan(bridge, "mixed"), queries, index=self.index, k=k,
             q_valid=q_valid, migrated=bitmap, mig_cells=mig_cells,
-            nprobe=nprobe,
+            nprobe=nprobe, telemetry=self.telemetry,
         )
         return s, i, f"mixed:{bridge.kind}"
 
@@ -699,6 +852,7 @@ class VectorStore:
             queries, index=self.index, k=k, q_valid=q_valid,
             migrated=bitmap, mig_cells=mig_cells,
             nprobe=self._index_kwargs().get("nprobe", 8),
+            telemetry=self.telemetry,
         )
         return s, i, inverse.kind
 

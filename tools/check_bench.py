@@ -1,0 +1,132 @@
+#!/usr/bin/env python
+"""Bench-regression gate (stdlib-only; CI `bench` + `drift-gate` jobs).
+
+Diffs freshly produced ``experiments/bench/BENCH_*.json`` artifacts against
+the committed tolerance baselines in ``experiments/baselines/``. A baseline
+file mirrors the artifact name and holds a list of checks:
+
+    {"artifact": "BENCH_ivf.json",
+     "checks": [
+       {"field": "parity",   "rule": "equal", "value": "exact (...)"},
+       {"field": "speedup",  "rule": "min",   "value": 1.04},
+       {"field": "timeline.-1.recall_at_10", "rule": "min", "value": 0.9}
+     ]}
+
+Rules: ``equal`` (exact match — parity strings, kernel names, counts; any
+drift here is a correctness break, not noise), ``min``/``max`` (numeric
+bound — tolerance is baked into the committed value, e.g. a speedup floor
+at ~80 % of the measured value encodes the ">20 % latency regression
+fails" policy as a runner-speed-independent within-run ratio), ``ratio``
+(``num``/``den`` fields divided, bounded by ``min``/``max``).
+
+``field`` is a dotted path into the artifact; integer segments index lists
+(negative from the end).
+
+    python tools/check_bench.py BENCH_ivf BENCH_mixed BENCH_engine
+
+Exit status: number of failed checks (0 = green). A named artifact or
+baseline that is missing counts as a failure — the gate must not pass
+vacuously.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def resolve(payload, dotted: str):
+    """Walk `a.b.-1.c` through nested dicts/lists."""
+    node = payload
+    for seg in dotted.split("."):
+        if isinstance(node, list):
+            node = node[int(seg)]
+        elif isinstance(node, dict) and seg in node:
+            node = node[seg]
+        else:
+            raise KeyError(dotted)
+    return node
+
+
+def run_check(payload: dict, check: dict) -> str | None:
+    """Returns a failure message, or None when the check passes."""
+    rule = check["rule"]
+    try:
+        if rule == "ratio":
+            num = float(resolve(payload, check["num"]))
+            den = float(resolve(payload, check["den"]))
+            field = f"{check['num']} / {check['den']}"
+            value = num / den
+        else:
+            field = check["field"]
+            value = resolve(payload, field)
+    except (KeyError, IndexError, TypeError, ValueError, ZeroDivisionError) as e:
+        return f"{check.get('field', check.get('num'))}: unresolvable ({e!r})"
+
+    if rule == "equal":
+        if value != check["value"]:
+            return f"{field}: {value!r} != expected {check['value']!r}"
+    elif rule in ("min", "ratio", "max"):
+        value = float(value)
+        lo, hi = check.get("min"), check.get("max")
+        if rule == "min":
+            lo = check["value"]
+        if rule == "max":
+            hi = check["value"]
+        if lo is not None and value < float(lo):
+            return f"{field}: {value:.4f} < floor {float(lo):.4f}"
+        if hi is not None and value > float(hi):
+            return f"{field}: {value:.4f} > ceiling {float(hi):.4f}"
+    else:
+        return f"{field}: unknown rule {rule!r}"
+    return None
+
+
+def check_artifact(name: str, bench_dir: pathlib.Path,
+                   baseline_dir: pathlib.Path) -> list[str]:
+    base_path = baseline_dir / f"{name}.json"
+    if not base_path.exists():
+        return [f"{name}: no baseline at {base_path}"]
+    baseline = json.loads(base_path.read_text())
+    art_path = bench_dir / baseline.get("artifact", f"{name}.json")
+    if not art_path.exists():
+        return [f"{name}: artifact {art_path} not produced"]
+    payload = json.loads(art_path.read_text())
+    failures = []
+    for check in baseline["checks"]:
+        msg = run_check(payload, check)
+        label = check.get("field") or f"{check.get('num')}/{check.get('den')}"
+        if msg is None:
+            print(f"  ok   {name}: {label}")
+        else:
+            failures.append(f"{name}: {msg}")
+            print(f"  FAIL {name}: {msg}")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="+",
+                    help="artifact stems to check, e.g. BENCH_ivf")
+    ap.add_argument("--bench-dir", default=str(ROOT / "experiments/bench"))
+    ap.add_argument("--baseline-dir",
+                    default=str(ROOT / "experiments/baselines"))
+    args = ap.parse_args(argv)
+
+    failures: list[str] = []
+    for name in args.names:
+        failures += check_artifact(
+            name, pathlib.Path(args.bench_dir), pathlib.Path(args.baseline_dir)
+        )
+    if failures:
+        print(f"check_bench: {len(failures)} check(s) failed")
+    else:
+        print(f"check_bench: all checks green ({len(args.names)} artifacts)")
+    return len(failures)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

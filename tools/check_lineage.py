@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Embedding-lineage audit gate (stdlib-only; CI `drift-gate` job).
+
+Reads a lineage report — either a raw ``LineageReport.to_dict()`` manifest
+or any bench JSON embedding one under a ``"lineage"`` key (e.g.
+``BENCH_governor.json``) — and checks the store's rows all come from ONE
+embedding space, the horadus-style audit: after a cutover there must be no
+rows still embedded with the old model and no rows whose source space is
+unknown.
+
+    python tools/check_lineage.py experiments/bench/BENCH_governor.json \
+        --fail-on-mixed [--expect-space v2] [--key lineage_mid]
+
+Without ``--fail-on-mixed`` the report is printed but mixed state only
+warns (exit 0) — the mid-migration state is legitimate while an upgrade
+is in flight. Exit codes: 0 clean, 1 mixed/missing (with the flag),
+2 malformed input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+REQUIRED = ("rows_by_space", "missing", "total")
+
+
+def load_report(path: str, key: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    # raw manifest, or a bench JSON wrapping one under `key`
+    report = payload if all(k in payload for k in REQUIRED) else payload.get(key)
+    if not isinstance(report, dict) or not all(k in report for k in REQUIRED):
+        raise ValueError(
+            f"{path}: neither a lineage manifest nor a JSON with a "
+            f"{key!r} manifest (need keys {REQUIRED})"
+        )
+    return report
+
+
+def audit(report: dict, expect_space: str | None) -> list[str]:
+    """Returns the list of violations (empty = single-space store)."""
+    problems: list[str] = []
+    spaces = {k: int(v) for k, v in report["rows_by_space"].items() if int(v)}
+    missing = int(report["missing"])
+    if len(spaces) > 1:
+        problems.append(f"rows from {len(spaces)} spaces: {spaces}")
+    if missing > 0:
+        problems.append(f"{missing} rows with unknown lineage")
+    if expect_space is not None and set(spaces) != {expect_space}:
+        problems.append(
+            f"expected every row in {expect_space!r}, got {spaces}"
+        )
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("report", help="lineage manifest or bench JSON path")
+    ap.add_argument("--key", default="lineage",
+                    help="key holding the manifest inside a bench JSON")
+    ap.add_argument("--fail-on-mixed", action="store_true",
+                    help="exit 1 on mixed/missing lineage (the post-cutover "
+                         "CI gate); default only warns")
+    ap.add_argument("--expect-space", default=None,
+                    help="additionally require every row in THIS space")
+    args = ap.parse_args(argv)
+
+    try:
+        report = load_report(args.report, args.key)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"check_lineage: {e}", file=sys.stderr)
+        return 2
+
+    total = report["total"]
+    frac = report.get("mixed_fraction", "n/a")
+    print(f"lineage: {total} rows, by space {report['rows_by_space']}, "
+          f"missing {report['missing']}, mixed_fraction {frac}")
+    problems = audit(report, args.expect_space)
+    if not problems:
+        print("lineage OK: single-space store")
+        return 0
+    for p in problems:
+        print(f"lineage {'FAIL' if args.fail_on_mixed else 'WARN'}: {p}")
+    return 1 if args.fail_on_mixed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
