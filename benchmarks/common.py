@@ -161,6 +161,12 @@ def emit(name: str, us_per_call: float, derived) -> None:
 
 
 def save_json(name: str, payload: dict) -> None:
+    from repro.kernels.common import is_cpu
+
+    # every artifact records HOW its kernels ran: check_bench downgrades
+    # speedup-floor gates to advisories when interpret_mode is true (CPU
+    # interpret-mode ratios are artifacts, cf. BENCH_ivf's 0.402)
+    payload.setdefault("interpret_mode", bool(is_cpu()))
     os.makedirs(BENCH_DIR, exist_ok=True)
     with open(os.path.join(BENCH_DIR, f"{name}.json"), "w") as f:
         json.dump(payload, f, indent=2, default=str)

@@ -581,6 +581,171 @@ def run_ivf(adapter: DriftAdapter | None = None) -> dict:
     return out
 
 
+def bench_quantized_path(
+    k: int = 10,
+    flat_n: int = 4096,
+    ivf_n: int = 2048,
+    d: int = 256,
+    batch: int = 64,
+    nprobe: int = 8,
+    n_cells: int = 32,
+) -> dict:
+    """Int8 first-pass scan + exact fp32 shortlist rescore vs the fp32
+    serving path, flat AND IVF, through ScanPlan → BENCH_quant.json.
+
+    The capacity win is the BYTES-SCANNED accounting (exact, counted from
+    the operand shapes the first-pass launch streams): int8 codes + one f32
+    scale per row vs f32 rows — ~4× at any realistic d. Recall parity
+    (≥ 0.99 R@10, gated by check_bench) is measured against the exhaustive
+    fp32 oracle with the default ``shortlist_k = 4·k``. Latency is timed
+    with the interleaved median-of-pair-ratios methodology, but on CPU the
+    int8 path pays two interpreted launches vs one — the speedup floor is
+    interpret-advisory in the baseline, the TPU projection is where the
+    4× fewer first-pass bytes cash out.
+    """
+    import statistics
+    import time
+
+    from repro.ann import FlatIndex, recall_at_k
+    from repro.kernels.engine import compile_plan, execute_plan
+
+    key = jax.random.PRNGKey(0)
+    corpus = jax.random.normal(key, (flat_n, d))
+    corpus = corpus / jnp.linalg.norm(corpus, axis=1, keepdims=True)
+    q = jax.random.normal(jax.random.PRNGKey(8), (batch, d))
+    q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+    from repro.ann import flat_search_jnp as _oracle
+
+    _, gt = _oracle(corpus, q, k=k)
+
+    out: dict = {"k": k, "batch": batch, "d": d}
+
+    # -- flat: fp32 one-launch fused scan vs int8 quant-scan + rescore -----
+    flat = FlatIndex(corpus=corpus, backend="fused").quantize()
+    plan32 = compile_plan(flat)
+    plan8 = compile_plan(flat, precision="int8")
+    shortlist = plan8.shortlist(k, flat_n)
+
+    def flat_fp32(qx):
+        return execute_plan(plan32, qx, index=flat, k=k)
+
+    def flat_int8(qx):
+        return execute_plan(plan8, qx, index=flat, k=k)
+
+    r32 = float(recall_at_k(flat_fp32(q)[1], gt))
+    r8 = float(recall_at_k(flat_int8(q)[1], gt))
+
+    def _once(fn):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(q))
+        return (time.perf_counter() - t0) * 1e6
+
+    for fn in (flat_fp32, flat_int8):
+        _once(fn)                       # compile outside the timed loop
+    samples: dict = {"fp32": [], "int8": []}
+    ratios = []
+    for _ in range(10):
+        t32 = _once(flat_fp32)
+        t8 = _once(flat_int8)
+        samples["fp32"].append(t32)
+        samples["int8"].append(t8)
+        ratios.append(t32 / t8)
+
+    # first-pass bytes: what the scan launch streams from HBM per batch —
+    # fp32 rows vs int8 codes + one f32 scale per row
+    fp32_bytes = _bytes_f32((flat_n, d))
+    int8_bytes = flat_n * d + _bytes_f32((flat_n,))
+    # rescore DMA: one (cap, d) f32 tile per (query, shortlist slot)
+    cap = flat.rcells.shape[1]
+    rescore_bytes = _bytes_f32((batch, shortlist, cap, d))
+    out["flat"] = {
+        "n": flat_n,
+        "shortlist_k": shortlist,
+        "kernels": list(plan8.kernels()),
+        "launches": plan8.launch_count,
+        "recall_fp32": round(r32, 4),
+        "recall_int8": round(r8, 4),
+        "recall_parity": round(r8 / r32, 4) if r32 else 0.0,
+        "first_pass_bytes_fp32": fp32_bytes,
+        "first_pass_bytes_int8": int8_bytes,
+        "first_pass_bytes_ratio": round(fp32_bytes / int8_bytes, 3),
+        "rescore_bytes_int8": rescore_bytes,
+        "us_per_batch_fp32": round(statistics.median(samples["fp32"]), 1),
+        "us_per_batch_int8": round(statistics.median(samples["int8"]), 1),
+        "speedup": round(statistics.median(ratios), 3),
+    }
+
+    # -- IVF: fp32 probe+rescore vs probe + int8 scan + exact rescore ------
+    ivf = build_ivf(jax.random.PRNGKey(7), corpus[:ivf_n], n_cells=n_cells)
+    ivf = dataclasses.replace(ivf, backend="fused").quantize()
+    _, gt_ivf = _oracle(corpus[:ivf_n], q, k=k)
+    iplan32 = compile_plan(ivf)
+    iplan8 = compile_plan(ivf, precision="int8")
+    ishort = iplan8.shortlist(k, ivf_n)
+
+    def ivf_fp32(qx):
+        return execute_plan(iplan32, qx, index=ivf, k=k, nprobe=nprobe)
+
+    def ivf_int8(qx):
+        return execute_plan(iplan8, qx, index=ivf, k=k, nprobe=nprobe)
+
+    ir32 = float(recall_at_k(ivf_fp32(q)[1], gt_ivf))
+    ir8 = float(recall_at_k(ivf_int8(q)[1], gt_ivf))
+    for fn in (ivf_fp32, ivf_int8):
+        _once(fn)
+    isamples: dict = {"fp32": [], "int8": []}
+    iratios = []
+    for _ in range(10):
+        t32 = _once(ivf_fp32)
+        t8 = _once(ivf_int8)
+        isamples["fp32"].append(t32)
+        isamples["int8"].append(t8)
+        iratios.append(t32 / t8)
+
+    icap = ivf.capacity
+    # first pass streams nprobe (cap, d) cell tiles per query
+    ifp32_bytes = _bytes_f32((batch, nprobe, icap, d))
+    iint8_bytes = batch * nprobe * icap * d + _bytes_f32(
+        (batch, nprobe, icap)
+    )
+    out["ivf"] = {
+        "n": ivf_n,
+        "n_cells": n_cells,
+        "cell_capacity": icap,
+        "nprobe": nprobe,
+        "shortlist_k": ishort,
+        "kernels": list(iplan8.kernels()),
+        "launches": iplan8.launch_count,
+        "recall_fp32": round(ir32, 4),
+        "recall_int8": round(ir8, 4),
+        "recall_parity": round(ir8 / ir32, 4) if ir32 else 0.0,
+        "first_pass_bytes_fp32": ifp32_bytes,
+        "first_pass_bytes_int8": iint8_bytes,
+        "first_pass_bytes_ratio": round(ifp32_bytes / iint8_bytes, 3),
+        "us_per_batch_fp32": round(statistics.median(isamples["fp32"]), 1),
+        "us_per_batch_int8": round(statistics.median(isamples["int8"]), 1),
+        "speedup": round(statistics.median(iratios), 3),
+    }
+    out["caveat"] = TPU_CAVEAT
+    return out
+
+
+def run_quant() -> dict:
+    """Standalone quantized-path section → BENCH_quant.json (the CI bench
+    artifact gating recall parity + first-pass bytes)."""
+    out = bench_quantized_path()
+    for side in ("flat", "ivf"):
+        emit(f"a1.quant_{side}.recall_parity", 0.0,
+             out[side]["recall_parity"])
+        emit(f"a1.quant_{side}.first_pass_bytes_ratio", 0.0,
+             out[side]["first_pass_bytes_ratio"])
+        emit(f"a1.quant_{side}.us_per_batch_int8",
+             out[side]["us_per_batch_int8"], out[side]["speedup"])
+    print(f"# caveat: {TPU_CAVEAT}", flush=True)
+    save_json("BENCH_quant", out)
+    return out
+
+
 def run(scale: Scale) -> dict:
     d = 768
     key = jax.random.PRNGKey(0)
@@ -681,6 +846,11 @@ if __name__ == "__main__":
         help="run just the packed-dual-query vs two-matmul engine section "
         "(the CI bench artifact: BENCH_engine.json)",
     )
+    ap.add_argument(
+        "--quant-only", action="store_true",
+        help="run just the int8-first-pass vs fp32 serving section "
+        "(the CI bench artifact: BENCH_quant.json)",
+    )
     args = ap.parse_args()
     if args.ivf_only:
         run_ivf()
@@ -688,6 +858,8 @@ if __name__ == "__main__":
         run_mixed()
     elif args.engine_only:
         run_engine()
+    elif args.quant_only:
+        run_quant()
     else:
         from benchmarks.common import DEFAULT
 

@@ -77,11 +77,23 @@ def flat_search_jnp(
 
 @dataclasses.dataclass
 class FlatIndex:
-    """Exact inner-product index over ℓ2-normalized embeddings."""
+    """Exact inner-product index over ℓ2-normalized embeddings.
+
+    ``quantize()`` attaches the int8 serving representation: per-row
+    symmetric codes + scales for the quantized first-pass scan, and the
+    corpus viewed as fp32 "virtual cells" (``rcells``/``rcell_ids``) so
+    the exact shortlist rescore reuses the engine's IVF layout.
+    ``replace_rows`` keeps every piece in sync — mid-migration mixed
+    scans stay quantized."""
 
     corpus: jax.Array                     # (N, d) float32, unit rows
     backend: str = "jnp"                  # "jnp" | "pallas" | "fused"
     block_rows: int = 65536
+    codes: jax.Array | None = None        # (N, d) int8 per-row codes
+    code_scales: jax.Array | None = None  # (N,) f32 per-row scales
+    rcells: jax.Array | None = None       # (C, cap, d) f32 virtual cells
+    rcell_ids: jax.Array | None = None    # (C, cap) int32, -1 = pad
+    id_to_cell: jax.Array | None = None   # (N,) int32 — id // cap
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -96,6 +108,34 @@ class FlatIndex:
     @property
     def dim(self) -> int:
         return int(self.corpus.shape[1])
+
+    @property
+    def quantized(self) -> bool:
+        return self.codes is not None
+
+    def quantize(self, cap: int = 128) -> "FlatIndex":
+        """Attach the int8 serving representation (one-time, like a build).
+
+        ``cap`` is the virtual-cell row count for the exact rescore's
+        scalar-prefetch layout (a multiple of 8; candidate cells DMA as
+        ``(cap, d)`` tiles)."""
+        from repro.kernels.engine.core import quantize_rows
+
+        if cap % 8:
+            raise ValueError(f"cap={cap} must be a multiple of 8")
+        n, d = self.corpus.shape
+        codes, scales = quantize_rows(self.corpus)
+        n_cells = -(-n // cap)
+        padded = jnp.pad(self.corpus, ((0, n_cells * cap - n), (0, 0)))
+        ids = jnp.arange(n_cells * cap, dtype=jnp.int32)
+        return dataclasses.replace(
+            self,
+            codes=codes,
+            code_scales=scales,
+            rcells=padded.reshape(n_cells, cap, d),
+            rcell_ids=jnp.where(ids < n, ids, -1).reshape(n_cells, cap),
+            id_to_cell=jnp.arange(n, dtype=jnp.int32) // cap,
+        )
 
     def search(
         self,
@@ -166,6 +206,20 @@ class FlatIndex:
     # Mutation path for the lazy/background re-embedding scenario (§5.6):
     # rows are overwritten in place as items get re-encoded by f_new.
     def replace_rows(self, ids: jax.Array, new_rows: jax.Array) -> "FlatIndex":
-        return dataclasses.replace(
+        out = dataclasses.replace(
             self, corpus=self.corpus.at[ids].set(new_rows)
+        )
+        if self.codes is None:
+            return out
+        from repro.kernels.engine.core import quantize_rows
+
+        ids = jnp.asarray(ids, jnp.int32)
+        rows = jnp.asarray(new_rows, self.corpus.dtype)
+        codes, scales = quantize_rows(rows)
+        cap = self.rcell_ids.shape[1]
+        return dataclasses.replace(
+            out,
+            codes=self.codes.at[ids].set(codes),
+            code_scales=self.code_scales.at[ids].set(scales),
+            rcells=self.rcells.at[ids // cap, ids % cap].set(rows),
         )

@@ -41,6 +41,9 @@ class IVFIndex:
     cell_ids: jax.Array       # (C, cap)     global row ids, -1 = pad
     n_items: int
     backend: str = "jnp"      # "jnp" | "pallas" | "fused"
+    cell_codes: jax.Array | None = None        # (C, cap, d) int8 slot codes
+    cell_code_scales: jax.Array | None = None  # (C, cap) f32 per-slot scales
+    id_to_cell: jax.Array | None = None        # (N,) int32 owning cell
 
     def __post_init__(self):
         from repro.ann.flat import BACKENDS
@@ -66,6 +69,35 @@ class IVFIndex:
     def dim(self) -> int:
         return int(self.centroids.shape[1])
 
+    @property
+    def quantized(self) -> bool:
+        return self.cell_codes is not None
+
+    def quantize(self) -> "IVFIndex":
+        """Attach the int8 serving representation (one-time, like a build).
+
+        Codes/scales mirror the packed (C, cap, d) cell layout slot for
+        slot — pad slots quantize to zero codes, and their id −1 keeps
+        them NEG-masked in-kernel either way. ``id_to_cell`` inverts
+        ``cell_ids`` so the exact rescore can turn a shortlist of global
+        ids into candidate cells via scalar prefetch."""
+        from repro.kernels.engine.core import quantize_rows
+
+        codes, scales = quantize_rows(self.cells)
+        flat = np.asarray(self.cell_ids).reshape(-1)
+        cell_of = np.repeat(
+            np.arange(self.n_cells, dtype=np.int32), self.capacity
+        )
+        valid = flat >= 0
+        table = np.zeros((self.n_items,), np.int32)
+        table[flat[valid]] = cell_of[valid]
+        return dataclasses.replace(
+            self,
+            cell_codes=codes,
+            cell_code_scales=scales,
+            id_to_cell=jnp.asarray(table),
+        )
+
     # Protocol-level mutation path for lazy/background re-embedding (§5.6):
     # rows are overwritten in their packed (cell, slot) positions as items
     # get re-encoded, so mixed-state serving works on IVF too. The row stays
@@ -86,10 +118,23 @@ class IVFIndex:
             missing = ids_np[flat[pos] != ids_np]
             raise KeyError(f"row ids not in index: {missing[:5].tolist()} ...")
         cap = self.capacity
-        new_cells = self.cells.at[pos // cap, pos % cap].set(
-            jnp.asarray(new_rows, self.cells.dtype)
+        rows = jnp.asarray(new_rows, self.cells.dtype)
+        new_cells = self.cells.at[pos // cap, pos % cap].set(rows)
+        out = dataclasses.replace(self, cells=new_cells)
+        if self.cell_codes is None:
+            return out
+        # Keep the int8 codes slot-synced: rows never change cells here
+        # (id_to_cell stays valid), only their payload re-quantizes.
+        from repro.kernels.engine.core import quantize_rows
+
+        codes, scales = quantize_rows(rows)
+        return dataclasses.replace(
+            out,
+            cell_codes=self.cell_codes.at[pos // cap, pos % cap].set(codes),
+            cell_code_scales=self.cell_code_scales.at[
+                pos // cap, pos % cap
+            ].set(scales),
         )
-        return dataclasses.replace(self, cells=new_cells)
 
     def search(
         self,
@@ -193,10 +238,15 @@ class IVFIndex:
 jax.tree_util.register_pytree_node(
     IVFIndex,
     lambda idx: (
-        (idx.centroids, idx.cells, idx.cell_ids),
+        (idx.centroids, idx.cells, idx.cell_ids, idx.cell_codes,
+         idx.cell_code_scales, idx.id_to_cell),
         (idx.n_items, idx.backend),
     ),
-    lambda aux, leaves: IVFIndex(*leaves, n_items=aux[0], backend=aux[1]),
+    lambda aux, leaves: IVFIndex(
+        leaves[0], leaves[1], leaves[2], n_items=aux[0], backend=aux[1],
+        cell_codes=leaves[3], cell_code_scales=leaves[4],
+        id_to_cell=leaves[5],
+    ),
 )
 
 

@@ -5,17 +5,22 @@ packages now re-export, and the ScanPlan compiler the serving layers call
 instead of hand-dispatching among kernel packages."""
 from repro.kernels.engine.core import (
     LAYOUTS,
+    PRECISIONS,
     SELECTS,
     TRANSFORMS,
     kernel_name,
+    quantize_rows,
 )
 from repro.kernels.engine.ops import (
     FUSED_KINDS,
+    exact_rescore,
     fold_fused_params,
     fused_bridged_search,
     ivf_rescore_fused,
     ivf_rescore_mixed_fused,
     mixed_bridged_search,
+    quantized_ivf_scan,
+    quantized_scan,
     topk_scan,
 )
 from repro.kernels.engine.plan import (
@@ -30,6 +35,7 @@ from repro.kernels.engine.plan import (
 __all__ = [
     "FUSED_KINDS",
     "LAYOUTS",
+    "PRECISIONS",
     "SELECTS",
     "TRANSFORMS",
     "LaunchSpec",
@@ -37,6 +43,7 @@ __all__ = [
     "ServingState",
     "build_plan",
     "compile_plan",
+    "exact_rescore",
     "execute_plan",
     "fold_fused_params",
     "fused_bridged_search",
@@ -44,5 +51,8 @@ __all__ = [
     "ivf_rescore_mixed_fused",
     "kernel_name",
     "mixed_bridged_search",
+    "quantize_rows",
+    "quantized_ivf_scan",
+    "quantized_scan",
     "topk_scan",
 ]

@@ -52,6 +52,11 @@ _CompilerParams = getattr(
 TRANSFORMS = ("identity", "linear", "mlp")
 LAYOUTS = ("flat", "ivf")
 SELECTS = ("plain", "bitmap")
+PRECISIONS = ("fp32", "int8")
+
+# smallest representable per-row scale: rows that are exactly zero still
+# quantize (to all-zero codes) instead of dividing by zero
+INT8_EPS = 1e-12
 
 # flat weight-dict field order per query stage (fold_fused_params layout)
 WEIGHT_FIELDS = {
@@ -69,16 +74,51 @@ def kernel_name(
     select: str,
     invert: bool = False,
     packed: bool = False,
+    precision: str = "fp32",
+    exact: bool = False,
 ) -> str:
     """The canonical engine kernel name for a launch's axis coordinates —
     the single naming source shared by the kernel factories, the ScanPlan
-    compiler, and the launch-count tests."""
+    compiler, and the launch-count tests.
+
+    ``precision="int8"`` marks the quantized first-pass scan (``_int8``
+    suffix); ``exact=True`` marks the targeted fp32 shortlist rescore that
+    follows it (``_exact`` suffix) — fp32 by definition, so the two
+    suffixes never combine."""
     parts = ["_scan", transform, layout, select]
     if invert:
         parts.append("inv")
     if packed:
         parts.append("packed")
+    if precision == "int8":
+        parts.append("int8")
+    if exact:
+        parts.append("exact")
     return "_".join(parts)
+
+
+def quantize_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8 encoding: ``scale = max|row| / 127`` (clamped
+    to INT8_EPS so zero rows stay finite), ``codes = round(row / scale)``.
+
+    Returns ``(codes int8 (..., d), scales f32 (...,))`` — the SAME math the
+    kernels apply to the query tile in-kernel (``_quantize_tile``), so
+    corpus and query quantization error obey one bound."""
+    x = jnp.asarray(x, jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), INT8_EPS) / 127.0
+    codes = jnp.clip(jnp.round(x / s[..., None]), -127.0, 127.0)
+    return codes.astype(jnp.int8), s
+
+
+def _quantize_tile(y):
+    """In-kernel per-row symmetric int8 of a (rows, d) fp32 tile. Returns
+    (codes int8 (rows, d), scales f32 (rows, 1)) — mirror of
+    ``quantize_rows`` with the keepdims layout VMEM scratch wants."""
+    s = jnp.maximum(
+        jnp.max(jnp.abs(y), axis=1, keepdims=True), INT8_EPS
+    ) / 127.0
+    codes = jnp.clip(jnp.round(y / s), -127.0, 127.0).astype(jnp.int8)
+    return codes, s
 
 
 def _fold_block(scores, ids, best_s, best_i, k: int):
@@ -166,28 +206,50 @@ def make_flat_kernel(
     block_rows: int,
     n_valid: int,
     q_valid: int,
+    precision: str = "fp32",
 ):
     """Build the flat-layout scan kernel for one axis combination.
 
     ``select == "bitmap"`` implies dual scoring (raw + transformed), which
     requires a non-identity transform; ``packed`` stacks both query forms
     into one scratch so each corpus block is ONE matmul.
+
+    ``precision == "int8"`` swaps the fp32 corpus operand for int8 codes +
+    a streamed per-row scale operand: the query tile is requantized
+    IN-KERNEL after its transform (per row, so the packed [q; g(q)] stack
+    needs no special casing), each block is one int8×int8→int32 MXU matmul
+    rescaled by ``q_scale·c_scale``, and everything downstream (NEG
+    masking, bitmap select, fold) is byte-identical to fp32 — callers pass
+    ``k = shortlist_k`` and rescore the survivors exactly.
     """
     dual = select == "bitmap"
     has_qx = transform != "identity"
+    int8 = precision == "int8"
     n_w = len(WEIGHT_FIELDS[transform])
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}")
     if dual and not has_qx:
         raise ValueError("bitmap select needs a query transform (dual score)")
     if packed and not dual:
         raise ValueError("packed query stage only applies to dual scoring")
     if return_queries and (not has_qx or dual):
         raise ValueError("return_queries needs a plain transformed stage")
+    if int8 and return_queries:
+        raise ValueError("return_queries has no int8 form (rescore "
+                         "re-applies the transform in-kernel)")
+    if int8 and dual and not packed:
+        raise ValueError("int8 dual scoring is always packed (one stacked "
+                         "quantized matmul); pass packed=True")
 
     def kernel(*refs):
         x_ref = refs[0]
         w_refs = refs[1:1 + n_w]
         c_ref = refs[1 + n_w]
         pos = 2 + n_w
+        cs_ref = None
+        if int8:
+            cs_ref = refs[pos]
+            pos += 1
         g_ref = None
         if dual:
             g_ref = refs[pos]
@@ -195,11 +257,13 @@ def make_flat_kernel(
         n_out = 3 if return_queries else 2
         out_refs = refs[pos:pos + n_out]
         scratch = refs[pos + n_out:]
-        if has_qx:
+        qx = qi = qs = None
+        if int8:
+            qi, qs, best_s, best_i = scratch
+        elif has_qx:
             qx, best_s, best_i = scratch
         else:
             best_s, best_i = scratch
-            qx = None
         i = pl.program_id(0)
         j = pl.program_id(1)
         nb = pl.num_programs(1)
@@ -211,8 +275,24 @@ def make_flat_kernel(
         def _tile():
             @pl.when(j == 0)
             def _init():
+                t = None
                 if has_qx:
                     t = _apply_transform(transform, x_ref, w_refs, renormalize)
+                if int8:
+                    if dual:
+                        # [q; g(q)] stacked, then quantized per row — each
+                        # stacked row carries its own scale
+                        y = jnp.concatenate(
+                            [x_ref[...].astype(jnp.float32), t], axis=0
+                        )
+                    elif has_qx:
+                        y = t
+                    else:
+                        y = x_ref[...].astype(jnp.float32)
+                    codes, scales = _quantize_tile(y)
+                    qi[...] = codes
+                    qs[...] = scales
+                elif has_qx:
                     if packed:
                         # [q; g(q)] stacked: one matmul scores both forms
                         qx[...] = jnp.concatenate(
@@ -225,7 +305,17 @@ def make_flat_kernel(
                 if return_queries:
                     out_refs[2][...] = qx[...]
 
-            if dual:
+            if int8:
+                acc = jnp.dot(
+                    qi[...], c_ref[...].T, preferred_element_type=jnp.int32
+                )                                          # (rows, C) int32
+                rescaled = acc.astype(jnp.float32) * qs[...] * cs_ref[...]
+                if dual:
+                    s_native = rescaled[:q_tile]
+                    s_bridged = rescaled[q_tile:]
+                else:
+                    scores = rescaled
+            elif dual:
                 if packed:
                     both = jnp.dot(
                         qx[...], c_ref[...].T,
@@ -242,15 +332,16 @@ def make_flat_kernel(
                         x_ref[...].astype(jnp.float32), c_ref[...].T,
                         preferred_element_type=jnp.float32,
                     )
-                use_native = g_ref[...][0] > 0             # (C,)
-                if invert:
-                    use_native = ~use_native
-                scores = jnp.where(use_native[None, :], s_native, s_bridged)
             else:
                 qq = qx[...] if has_qx else x_ref[...]
                 scores = jnp.dot(
                     qq, c_ref[...].T, preferred_element_type=jnp.float32
                 )                                          # (Qt, C)
+            if dual:
+                use_native = g_ref[...][0] > 0             # (C,)
+                if invert:
+                    use_native = ~use_native
+                scores = jnp.where(use_native[None, :], s_native, s_bridged)
             row_ids = j * block_rows + jax.lax.broadcasted_iota(
                 jnp.int32, scores.shape, 1
             )
@@ -266,7 +357,9 @@ def make_flat_kernel(
                 out_refs[0][...] = best_s[...]
                 out_refs[1][...] = best_i[...]
 
-    kernel.__name__ = kernel_name(transform, "flat", select, invert, packed)
+    kernel.__name__ = kernel_name(
+        transform, "flat", select, invert, packed, precision
+    )
     kernel.__qualname__ = kernel.__name__
     return kernel
 
@@ -276,6 +369,7 @@ def flat_scan_pallas(
     corpus: jax.Array,           # (N, d_old) — padded to block_rows multiple
     fused: dict | None = None,   # stage weights (fold_fused_params layout)
     bitmap: jax.Array | None = None,   # (1, N) int — bitmap select only
+    corpus_scales: jax.Array | None = None,  # (1, N) f32 — int8 only
     *,
     transform: str = "identity",
     select: str = "plain",
@@ -283,6 +377,7 @@ def flat_scan_pallas(
     packed: bool = False,
     renormalize: bool = True,
     return_queries: bool = False,
+    precision: str = "fp32",
     k: int,
     n_valid: int,
     q_valid: int | None = None,
@@ -293,20 +388,26 @@ def flat_scan_pallas(
     """One flat-layout launch: [transform →] score → select → running top-k.
 
     Returns ``(scores (Q, k), ids (Q, k))`` plus the transformed queries
-    ``(Q, d_old)`` when ``return_queries``.
+    ``(Q, d_old)`` when ``return_queries``. With ``precision="int8"`` the
+    ``corpus`` operand is the int8 code matrix and ``corpus_scales`` its
+    per-row scales, streamed block-aligned exactly like the bitmap.
     """
     n, d_old = corpus.shape
     q, d_new = queries.shape
     assert n % block_rows == 0 and q % q_tile == 0
     dual = select == "bitmap"
+    int8 = precision == "int8"
     if dual:
         assert bitmap is not None and bitmap.shape == (1, n)
+    if int8:
+        assert corpus.dtype == jnp.int8
+        assert corpus_scales is not None and corpus_scales.shape == (1, n)
     grid = (q // q_tile, n // block_rows)
     kernel = make_flat_kernel(
         transform=transform, select=select, invert=invert, packed=packed,
         renormalize=renormalize, return_queries=return_queries, k=k,
         block_rows=block_rows, n_valid=n_valid,
-        q_valid=q if q_valid is None else q_valid,
+        q_valid=q if q_valid is None else q_valid, precision=precision,
     )
     w_arrays, w_shapes = (
         weight_operands(transform, fused) if transform != "identity"
@@ -319,6 +420,10 @@ def flat_scan_pallas(
         pl.BlockSpec((block_rows, d_old), lambda i, j: (j, 0)),
     ]
     operands = [queries, *w_arrays, corpus]
+    if int8:
+        # per-row scales stream HBM→VMEM block-aligned with the code rows
+        in_specs.append(pl.BlockSpec((1, block_rows), lambda i, j: (0, j)))
+        operands.append(corpus_scales)
     if dual:
         # the bitmap streams HBM→VMEM block-aligned with the corpus rows
         in_specs.append(pl.BlockSpec((1, block_rows), lambda i, j: (0, j)))
@@ -335,9 +440,12 @@ def flat_scan_pallas(
         out_specs.append(pl.BlockSpec((q_tile, d_old), lambda i, j: (i, 0)))
         out_shape.append(jax.ShapeDtypeStruct((q, d_old), jnp.float32))
     scratch = []
-    if transform != "identity":
-        qx_rows = 2 * q_tile if (dual and packed) else q_tile
-        scratch.append(pltpu.VMEM((qx_rows, d_old), jnp.float32))
+    q_rows = 2 * q_tile if (dual and packed) else q_tile
+    if int8:
+        scratch.append(pltpu.VMEM((q_rows, d_old), jnp.int8))
+        scratch.append(pltpu.VMEM((q_rows, 1), jnp.float32))
+    elif transform != "identity":
+        scratch.append(pltpu.VMEM((q_rows, d_old), jnp.float32))
     scratch += [
         pltpu.VMEM((q_tile, k), jnp.float32),
         pltpu.VMEM((q_tile, k), jnp.int32),
@@ -368,34 +476,78 @@ def make_ivf_kernel(
     k: int,
     nprobe: int,
     q_tile: int,
+    transform: str = "identity",
+    renormalize: bool = True,
+    precision: str = "fp32",
+    targeted: bool = False,
 ):
     """Build the IVF-layout scan kernel for one axis combination.
 
-    The query stage is identity here: the probe launch (a flat-layout scan
-    over the centroid table) already emitted the transformed queries from
-    VMEM, so the rescore consumes one — or, for dual scoring, both — query
-    forms as tile-resident operands.
+    The query stage is no longer identity-only: a ``linear``/``mlp``
+    transform runs ONCE per query tile on the first sequential step into
+    VMEM scratch (same contract as the flat layout), so externally-probed
+    rescores take raw queries + folded weights instead of a host-side
+    apply. With an in-kernel transform, dual scoring derives its second
+    query form from the scratch — no ``q_mapped`` operand.
+
+    ``precision="int8"`` streams int8 cell codes + a slot-aligned
+    ``(C, cap)`` scale plane; the query tile (post-transform) requantizes
+    per row in-kernel and each probed cell pays one int8×int8→int32 matmul.
+
+    ``targeted=True`` is the EXACT SHORTLIST RESCORE: the probe table holds
+    the *cell* of each shortlist candidate (one grid step per candidate)
+    and a second scalar-prefetch table holds the candidate's global id —
+    the step keeps only ``cand == target``, so duplicate cells across a
+    query's shortlist can never double-count and ``-1`` pads fold as
+    no-ops. Always fp32 (that is the point).
     """
+    has_qx = transform != "identity"
+    int8 = precision == "int8"
+    n_w = len(WEIGHT_FIELDS[transform])
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}")
     if select == "bitmap" and not dual:
         raise ValueError("bitmap select needs a second query form (dual)")
+    if targeted and int8:
+        raise ValueError("the targeted rescore is exact — fp32 only")
 
-    def kernel(probe_ref, qv_ref, *refs):
-        del probe_ref   # consumed by the BlockSpec index_map, not the body
-        q_ref = refs[0]
-        pos = 1
+    def kernel(*refs):
+        # scalar-prefetch refs lead: probe table, [target-id table], q_valid
+        pos = 1   # probe_ref consumed by the BlockSpec index_map, not here
+        tgt_ref = None
+        if targeted:
+            tgt_ref = refs[pos]
+            pos += 1
+        qv_ref = refs[pos]
+        pos += 1
+        q_ref = refs[pos]
+        pos += 1
+        w_refs = refs[pos:pos + n_w]
+        pos += n_w
         qm_ref = None
-        if dual:
+        if dual and not has_qx:
             qm_ref = refs[pos]
             pos += 1
         cell_ref = refs[pos]
         cid_ref = refs[pos + 1]
         pos += 2
+        cs_ref = None
+        if int8:
+            cs_ref = refs[pos]
+            pos += 1
         mig_ref = None
         if select == "bitmap":
             mig_ref = refs[pos]
             pos += 1
         out_s_ref, out_i_ref = refs[pos:pos + 2]
-        best_s, best_i = refs[pos + 2:]
+        scratch = refs[pos + 2:]
+        qx = qi = qs = None
+        if int8:
+            qi, qs, best_s, best_i = scratch
+        elif has_qx:
+            qx, best_s, best_i = scratch
+        else:
+            best_s, best_i = scratch
         i = pl.program_id(0)
         j = pl.program_id(1)
         nb = pl.num_programs(1)
@@ -407,30 +559,75 @@ def make_ivf_kernel(
         def _tile():
             @pl.when(j == 0)
             def _init():
+                t = None
+                if has_qx:
+                    t = _apply_transform(transform, q_ref, w_refs,
+                                         renormalize)
+                if int8:
+                    if dual:
+                        other = t if has_qx else qm_ref[...]
+                        y = jnp.concatenate(
+                            [q_ref[...].astype(jnp.float32), other], axis=0
+                        )
+                    elif has_qx:
+                        y = t
+                    else:
+                        y = q_ref[...].astype(jnp.float32)
+                    codes, scales = _quantize_tile(y)
+                    qi[...] = codes
+                    qs[...] = scales
+                elif has_qx:
+                    qx[...] = t
                 best_s[...] = jnp.full_like(best_s[...], NEG)
                 best_i[...] = jnp.full_like(best_i[...], -1)
 
             q_local = j // nprobe          # which tile row owns this step
-            s_native = jnp.dot(
-                q_ref[...], cell_ref[0].T, preferred_element_type=jnp.float32
-            )                                              # (Qt, cap)
+            if int8:
+                acc = jnp.dot(
+                    qi[...], cell_ref[0].T,
+                    preferred_element_type=jnp.int32,
+                )                                          # (rows, cap)
+                rescaled = acc.astype(jnp.float32) * qs[...] * cs_ref[...]
+                if dual:
+                    s_native = rescaled[:q_tile]
+                    s_bridged = rescaled[q_tile:]
+                else:
+                    scores = rescaled
+            else:
+                if dual:
+                    s_native = jnp.dot(
+                        q_ref[...], cell_ref[0].T,
+                        preferred_element_type=jnp.float32,
+                    )                                      # (Qt, cap)
+                    mapped = qx[...] if has_qx else qm_ref[...]
+                    s_bridged = jnp.dot(
+                        mapped, cell_ref[0].T,
+                        preferred_element_type=jnp.float32,
+                    )
+                else:
+                    qq = qx[...] if has_qx else q_ref[...]
+                    scores = jnp.dot(
+                        qq, cell_ref[0].T,
+                        preferred_element_type=jnp.float32,
+                    )
             if dual:
-                s_bridged = jnp.dot(
-                    qm_ref[...], cell_ref[0].T,
-                    preferred_element_type=jnp.float32,
-                )
                 use_native = (
                     jnp.broadcast_to(mig_ref[...], s_native.shape) > 0
                 )
                 if invert:
                     use_native = ~use_native
                 scores = jnp.where(use_native, s_native, s_bridged)
-            else:
-                scores = s_native
             cand = jnp.broadcast_to(cid_ref[...], scores.shape)
             rows = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
             # pads (id -1) and non-owning rows fold as NEG → no-ops
-            scores = jnp.where((cand >= 0) & (rows == q_local), scores, NEG)
+            keep = (cand >= 0) & (rows == q_local)
+            if targeted:
+                # one grid step = one shortlist candidate: everything but
+                # the step's target id folds as NEG, so a cell DMA'd for
+                # several candidates contributes each exactly once
+                target = tgt_ref[i * q_tile + j // nprobe, j % nprobe]
+                keep = keep & (cand == target)
+            scores = jnp.where(keep, scores, NEG)
             new_s, new_i = _fold_block(
                 scores, cand, best_s[...], best_i[...], k
             )
@@ -442,7 +639,9 @@ def make_ivf_kernel(
                 out_s_ref[...] = best_s[...]
                 out_i_ref[...] = best_i[...]
 
-    kernel.__name__ = kernel_name("identity", "ivf", select, invert)
+    kernel.__name__ = kernel_name(
+        transform, "ivf", select, invert, False, precision, exact=targeted
+    )
     kernel.__qualname__ = kernel.__name__
     return kernel
 
@@ -450,14 +649,20 @@ def make_ivf_kernel(
 def ivf_scan_pallas(
     cells: jax.Array,        # (C, cap, d) packed cell vectors, zero pads
     cell_ids: jax.Array,     # (C, cap) int32 global row ids, -1 = pad
-    queries: jax.Array,      # (Q, d) — padded to q_tile multiple upstream
+    queries: jax.Array,      # (Q, d_new) — padded to q_tile multiple
     probe: jax.Array,        # (Q, nprobe) int32 cell ids, in [0, C)
     q_valid: jax.Array,      # (1,) int32 — valid-query count (dynamic)
     q_mapped: jax.Array | None = None,   # (Q, d) second query form (dual)
     mig_cells: jax.Array | None = None,  # (C, cap) bitmap, cid-aligned
+    fused: dict | None = None,           # stage weights (in-kernel xform)
+    cell_scales: jax.Array | None = None,  # (C, cap) f32 — int8 only
+    targets: jax.Array | None = None,    # (Q, S) global ids — exact rescore
     *,
+    transform: str = "identity",
     select: str = "plain",
     invert: bool = False,
+    renormalize: bool = True,
+    precision: str = "fp32",
     k: int,
     q_tile: int = 8,
     interpret: bool = False,
@@ -465,47 +670,98 @@ def ivf_scan_pallas(
     """One IVF-layout launch: stream each query's probed cells, score,
     select, running top-k. The probe table is a scalar-prefetch operand so
     each grid step's BlockSpec index_map DMAs exactly ONE probed cell's
-    (cap, d) tile HBM→VMEM."""
+    (cap, d) tile HBM→VMEM.
+
+    With ``targets`` this is the exact shortlist rescore: ``probe`` holds
+    each candidate's *cell* and ``targets`` its global id — both ride the
+    scalar-prefetch channel (cells address the DMA, ids mask in-body).
+    With ``transform != "identity"`` the query stage runs in-kernel from
+    raw queries + folded weights (``fused``); dual scoring then derives
+    its mapped form from the transform scratch and ``q_mapped`` must be
+    None. ``precision="int8"`` takes int8 ``cells`` codes plus the
+    slot-aligned ``cell_scales`` plane."""
     c, cap, d = cells.shape
     q, nprobe = probe.shape
     assert q % q_tile == 0
-    dual = q_mapped is not None
-    if select == "bitmap":
-        assert dual and mig_cells is not None
+    has_qx = transform != "identity"
+    int8 = precision == "int8"
+    targeted = targets is not None
+    dual = select == "bitmap"
+    if dual:
+        assert mig_cells is not None
+        if has_qx:
+            assert q_mapped is None, "in-kernel transform derives q_mapped"
+        else:
+            assert q_mapped is not None
+    if int8:
+        assert cells.dtype == jnp.int8
+        assert cell_scales is not None and cell_scales.shape == (c, cap)
     grid = (q // q_tile, q_tile * nprobe)
     kernel = make_ivf_kernel(
         select=select, invert=invert, dual=dual, k=k, nprobe=nprobe,
-        q_tile=q_tile,
+        q_tile=q_tile, transform=transform, renormalize=renormalize,
+        precision=precision, targeted=targeted,
     )
 
-    def cell_map(i, j, p, qv):
+    def cell_map(i, j, p, *rest):
         return (p[i * q_tile + j // nprobe, j % nprobe], 0, 0)
 
-    def slot_map(i, j, p, qv):
-        return cell_map(i, j, p, qv)[:2]
+    def slot_map(i, j, p, *rest):
+        return cell_map(i, j, p)[:2]
 
-    query_arrays = (queries,) + ((q_mapped,) if dual else ())
-    extra_cell = (mig_cells,) if select == "bitmap" else ()
+    def q_map(i, j, *rest):
+        return (i, 0)
+
+    def rep_map(i, j, *rest):
+        return (0, 0)
+
+    w_arrays, w_shapes = (
+        weight_operands(transform, fused) if has_qx else ((), ())
+    )
+    query_arrays = (queries,) + (
+        (q_mapped,) if (dual and not has_qx) else ()
+    )
+    cell_arrays = (cells, cell_ids)
+    cell_specs = [
+        pl.BlockSpec((1, cap, d), cell_map),
+        pl.BlockSpec((1, cap), slot_map),
+    ]
+    if int8:
+        cell_arrays += (cell_scales,)
+        cell_specs.append(pl.BlockSpec((1, cap), slot_map))
+    if select == "bitmap":
+        cell_arrays += (mig_cells,)
+        cell_specs.append(pl.BlockSpec((1, cap), slot_map))
+    scalar_operands = (probe,) + ((targets,) if targeted else ()) + (
+        q_valid,
+    )
+    scratch = []
+    q_rows = 2 * q_tile if (dual and int8) else q_tile
+    if int8:
+        scratch.append(pltpu.VMEM((q_rows, d), jnp.int8))
+        scratch.append(pltpu.VMEM((q_rows, 1), jnp.float32))
+    elif has_qx:
+        scratch.append(pltpu.VMEM((q_tile, d), jnp.float32))
+    scratch += [
+        pltpu.VMEM((q_tile, k), jnp.float32),
+        pltpu.VMEM((q_tile, k), jnp.int32),
+    ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=len(scalar_operands),
         grid=grid,
         in_specs=[
             *[
-                pl.BlockSpec((q_tile, d), lambda i, j, p, qv: (i, 0))
-                for _ in query_arrays
+                pl.BlockSpec((q_tile, arr.shape[1]), q_map)
+                for arr in query_arrays
             ],
-            pl.BlockSpec((1, cap, d), cell_map),
-            pl.BlockSpec((1, cap), slot_map),
-            *[pl.BlockSpec((1, cap), slot_map) for _ in extra_cell],
+            *[pl.BlockSpec(s, rep_map) for s in w_shapes],
+            *cell_specs,
         ],
         out_specs=[
-            pl.BlockSpec((q_tile, k), lambda i, j, p, qv: (i, 0)),
-            pl.BlockSpec((q_tile, k), lambda i, j, p, qv: (i, 0)),
+            pl.BlockSpec((q_tile, k), q_map),
+            pl.BlockSpec((q_tile, k), q_map),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((q_tile, k), jnp.float32),
-            pltpu.VMEM((q_tile, k), jnp.int32),
-        ],
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
         kernel,
@@ -518,4 +774,5 @@ def ivf_scan_pallas(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(probe, q_valid, *query_arrays, cells, cell_ids, *extra_cell)
+    )(*scalar_operands, *query_arrays, *w_arrays, cells, cell_ids,
+      *cell_arrays[2:])

@@ -47,6 +47,9 @@ __all__ = [
     "mixed_bridged_search",
     "ivf_rescore_fused",
     "ivf_rescore_mixed_fused",
+    "quantized_scan",
+    "quantized_ivf_scan",
+    "exact_rescore",
 ]
 
 
@@ -283,18 +286,26 @@ def ivf_rescore_fused(
     return out_s[:q], out_i[:q]
 
 
-@partial(jax.jit, static_argnames=("k", "q_tile", "invert", "interpret"))
+@partial(
+    jax.jit,
+    static_argnames=(
+        "k", "q_tile", "invert", "fused_kind", "renormalize", "interpret",
+    ),
+)
 def ivf_rescore_mixed_fused(
     cells: jax.Array,
     cell_ids: jax.Array,
     mig_cells: jax.Array,
     queries: jax.Array,
-    q_mapped: jax.Array,
+    q_mapped: jax.Array | None,
     probe: jax.Array,
     k: int = 10,
     q_valid=None,
     q_tile: int = 8,
     invert: bool = False,
+    fused_kind: str | None = None,
+    fused: dict | None = None,
+    renormalize: bool = True,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Mixed-state rescore in one launch: each probed (cap, d) cell tile is
@@ -306,7 +317,20 @@ def ivf_rescore_mixed_fused(
     in-kernel (the control-arm rescore reuses the forward packing). Same
     padding, probe-clamping, and dynamic ``q_valid`` contract as
     ``ivf_rescore_fused``.
+
+    The mapped query form comes in one of two ways: pre-transformed
+    ``q_mapped`` (the fused probe emitted it), or IN-KERNEL via
+    ``fused_kind``/``fused`` (the transforming IVF stage — raw-probe paths
+    skip the host-side apply; pass ``q_mapped=None``).
     """
+    if fused_kind is not None:
+        _check_kind(fused_kind)
+        if q_mapped is not None:
+            raise ValueError(
+                "pass q_mapped=None with an in-kernel query stage"
+            )
+    elif q_mapped is None:
+        raise ValueError("q_mapped or fused_kind/fused is required")
     if interpret is None:
         interpret = _is_cpu()
     _check_cap(cells)
@@ -320,10 +344,226 @@ def ivf_rescore_mixed_fused(
         _pad_rows(queries, q_tile),
         _pad_rows(probe, q_tile),
         jnp.asarray(qv, jnp.int32).reshape(1),
-        q_mapped=_pad_rows(q_mapped, q_tile),
+        q_mapped=None if q_mapped is None else _pad_rows(q_mapped, q_tile),
         mig_cells=mig_cells.astype(jnp.int32),
+        fused=fused,
+        transform=fused_kind or "identity",
         select="bitmap",
         invert=invert,
+        renormalize=renormalize,
+        k=k,
+        q_tile=q_tile,
+        interpret=interpret,
+    )
+    return out_s[:q], out_i[:q]
+
+
+# ---------------------------------------------------------------------------
+# int8 first pass + exact fp32 rescore entry points
+# ---------------------------------------------------------------------------
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "fused_kind", "k", "renormalize", "q_tile", "block_rows",
+        "q_valid", "invert", "interpret",
+    ),
+)
+def _quantized_scan_jit(
+    fused_kind, fused, queries, codes, code_scales, migrated, k,
+    renormalize, q_tile, block_rows, q_valid, invert, interpret,
+):
+    n = codes.shape[0]
+    q = queries.shape[0]
+    transform = fused_kind or "identity"
+    dual = migrated is not None
+    mig_p = None
+    if dual:
+        mig_p = _pad_rows(
+            migrated.astype(jnp.int32), block_rows
+        ).reshape(1, -1)
+    scales_p = _pad_rows(code_scales.reshape(-1, 1), block_rows)
+    out = flat_scan_pallas(
+        _pad_rows(queries, q_tile), _pad_rows(codes, block_rows), fused,
+        mig_p, scales_p.reshape(1, -1),
+        transform=transform, select="bitmap" if dual else "plain",
+        invert=invert, packed=dual, renormalize=renormalize,
+        precision="int8", k=k, n_valid=n, q_valid=q_valid,
+        q_tile=q_tile, block_rows=block_rows, interpret=interpret,
+    )
+    return tuple(o[:q] for o in out)
+
+
+def quantized_scan(
+    codes: jax.Array,
+    code_scales: jax.Array,
+    queries: jax.Array,
+    k: int = 40,
+    fused_kind: str | None = None,
+    fused: dict | None = None,
+    migrated: jax.Array | None = None,
+    renormalize: bool = True,
+    q_tile: int = 128,
+    block_rows: int = 1024,
+    q_valid: int | None = None,
+    invert: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """The int8 first-pass flat scan: one launch over the code matrix.
+
+    ``codes (N, d) int8`` + ``code_scales (N,) f32`` come from
+    ``quantize_rows`` (``FlatIndex.quantize`` stores them). ``k`` here is
+    the SHORTLIST size (``shortlist_k ≥`` the final k) — the returned ids
+    feed ``exact_rescore``, and the returned scores are approximate.
+    ``fused_kind``/``fused`` run the bridged query stage in-kernel;
+    ``migrated`` switches to the bitmap-selected dual scan (mid-migration
+    mixed state, always packed under int8); ``invert`` flips the selection
+    for the control arm. ``q_valid`` follows the topk_scan contract.
+    """
+    if fused_kind is not None:
+        _check_kind(fused_kind)
+    if migrated is not None and fused_kind is None:
+        raise ValueError("mixed int8 scan needs a fused query stage")
+    if interpret is None:
+        interpret = _is_cpu()
+    q_valid = _quantize_q_valid(queries.shape[0], q_valid, q_tile)
+    return _quantized_scan_jit(
+        fused_kind, fused, queries, codes, code_scales, migrated, k=k,
+        renormalize=renormalize, q_tile=q_tile, block_rows=block_rows,
+        q_valid=q_valid, invert=invert, interpret=interpret,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "fused_kind", "k", "renormalize", "q_tile", "invert", "interpret",
+    ),
+)
+def quantized_ivf_scan(
+    cell_codes: jax.Array,
+    cell_ids: jax.Array,
+    cell_scales: jax.Array,
+    queries: jax.Array,
+    probe: jax.Array,
+    k: int = 40,
+    fused_kind: str | None = None,
+    fused: dict | None = None,
+    mig_cells: jax.Array | None = None,
+    renormalize: bool = True,
+    q_valid=None,
+    q_tile: int = 8,
+    invert: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """The int8 first-pass IVF scan: stream each query's probed cells as
+    int8 codes + slot-aligned scales, requantize the (transformed) query
+    tile in-kernel, fold a ``k = shortlist_k`` candidate list.
+
+    The query stage runs IN-KERNEL (``fused_kind``/``fused``) — the probe
+    launch no longer needs ``return_queries``; ``mig_cells`` switches to
+    the bitmap-selected dual scan with ``invert`` for the control arm.
+    Same probe-clamping and dynamic ``q_valid`` as ``ivf_rescore_fused``.
+    """
+    if fused_kind is not None:
+        _check_kind(fused_kind)
+    if mig_cells is not None and fused_kind is None:
+        raise ValueError("mixed int8 ivf scan needs a fused query stage")
+    if interpret is None:
+        interpret = _is_cpu()
+    _check_cap(cell_codes)
+    c = cell_codes.shape[0]
+    q = queries.shape[0]
+    qv = q if q_valid is None else jnp.minimum(q, q_valid)
+    probe = jnp.clip(probe.astype(jnp.int32), 0, c - 1)
+    out_s, out_i = ivf_scan_pallas(
+        cell_codes,
+        cell_ids,
+        _pad_rows(queries, q_tile),
+        _pad_rows(probe, q_tile),
+        jnp.asarray(qv, jnp.int32).reshape(1),
+        mig_cells=None if mig_cells is None else mig_cells.astype(jnp.int32),
+        fused=fused,
+        cell_scales=cell_scales,
+        transform=fused_kind or "identity",
+        select="plain" if mig_cells is None else "bitmap",
+        invert=invert,
+        renormalize=renormalize,
+        precision="int8",
+        k=k,
+        q_tile=q_tile,
+        interpret=interpret,
+    )
+    return out_s[:q], out_i[:q]
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "fused_kind", "k", "renormalize", "q_tile", "invert", "interpret",
+    ),
+)
+def exact_rescore(
+    cells: jax.Array,
+    cell_ids: jax.Array,
+    id_to_cell: jax.Array,
+    queries: jax.Array,
+    shortlist: jax.Array,
+    k: int = 10,
+    fused_kind: str | None = None,
+    fused: dict | None = None,
+    mig_cells: jax.Array | None = None,
+    renormalize: bool = True,
+    q_valid=None,
+    q_tile: int = 8,
+    invert: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Exact fp32 rescore of a shortlist: the second (and last) launch of
+    every int8 serving path.
+
+    ``cells (C, cap, d) f32`` is the full-precision row storage — the IVF
+    index's own cell layout, or the flat corpus viewed as virtual cells
+    (``FlatIndex.quantize`` builds that view once). ``shortlist (Q, S)``
+    holds global row ids (−1 pads fold as no-ops); ``id_to_cell (N,)``
+    locates each id's cell, and BOTH tables ride the scalar-prefetch
+    channel: the cell table addresses the DMA, the id table masks in-body
+    (``cand == target``), so duplicate cells never double-count.
+
+    With ``fused_kind``/``fused`` the bridged query stage re-applies
+    IN-KERNEL (exact fp32 — no host-side apply); ``mig_cells`` + ``invert``
+    make the rescore mixed-state-exact: migrated rows score against raw q,
+    the rest against g(q), matching the first pass's selection.
+    """
+    if fused_kind is not None:
+        _check_kind(fused_kind)
+    if mig_cells is not None and fused_kind is None:
+        raise ValueError("mixed exact rescore needs a fused query stage")
+    if interpret is None:
+        interpret = _is_cpu()
+    _check_cap(cells)
+    c = cells.shape[0]
+    q = queries.shape[0]
+    qv = q if q_valid is None else jnp.minimum(q, q_valid)
+    shortlist = shortlist.astype(jnp.int32)
+    # -1 pads clamp to cell 0 for the DMA; the target mask kills them
+    cell_tbl = jnp.clip(
+        id_to_cell[jnp.clip(shortlist, 0, id_to_cell.shape[0] - 1)],
+        0, c - 1,
+    )
+    out_s, out_i = ivf_scan_pallas(
+        cells,
+        cell_ids,
+        _pad_rows(queries, q_tile),
+        _pad_rows(cell_tbl, q_tile),
+        jnp.asarray(qv, jnp.int32).reshape(1),
+        mig_cells=None if mig_cells is None else mig_cells.astype(jnp.int32),
+        fused=fused,
+        targets=_pad_rows(shortlist, q_tile),
+        transform=fused_kind or "identity",
+        select="plain" if mig_cells is None else "bitmap",
+        invert=invert,
+        renormalize=renormalize,
         k=k,
         q_tile=q_tile,
         interpret=interpret,

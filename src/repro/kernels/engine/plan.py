@@ -24,7 +24,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.engine.core import kernel_name
+from repro.kernels.engine.core import PRECISIONS, kernel_name
 
 MODES = ("native", "bridged", "mixed")
 INDEX_TYPES = ("flat", "ivf", "protocol")
@@ -32,8 +32,8 @@ INDEX_TYPES = ("flat", "ivf", "protocol")
 
 @dataclasses.dataclass(frozen=True)
 class LaunchSpec:
-    """One engine launch: a coordinate on the (transform × layout × select)
-    axes plus its role in the serving path."""
+    """One engine launch: a coordinate on the (transform × layout × select
+    × precision) axes plus its role in the serving path."""
 
     role: str                 # "scan" | "probe" | "rescore"
     layout: str               # "flat" | "ivf"
@@ -42,6 +42,8 @@ class LaunchSpec:
     invert: bool = False
     packed: bool = False
     return_queries: bool = False
+    precision: str = "fp32"   # "fp32" | "int8" (quantized first pass)
+    exact: bool = False       # targeted fp32 shortlist rescore
 
     @property
     def kernel(self) -> str:
@@ -49,7 +51,7 @@ class LaunchSpec:
         pallas_call-counting tests see)."""
         return kernel_name(
             self.transform, self.layout, self.select, self.invert,
-            self.packed,
+            self.packed, self.precision, self.exact,
         )
 
 
@@ -79,6 +81,8 @@ class ScanPlan:
     probe_space: str = "mapped"        # IVF probe query form
     bridge: object = None              # resolved adapter (None for native)
     prelude: object = None             # adapter applied to queries up front
+    precision: str = "fp32"            # "int8": quant scan → exact rescore
+    shortlist_k: Optional[int] = None  # int8 first-pass width (None → 4·k)
 
     @property
     def launch_count(self) -> int:
@@ -87,6 +91,11 @@ class ScanPlan:
     def kernels(self) -> tuple[str, ...]:
         """The exact pallas kernel names executing this plan traces."""
         return tuple(spec.kernel for spec in self.launches)
+
+    def shortlist(self, k: int, n: int) -> int:
+        """The effective int8 first-pass width: ``max(shortlist_k, k)``
+        (defaulting to ``4·k``), never wider than the corpus."""
+        return min(n, max(self.shortlist_k or 4 * k, k))
 
 
 def _index_type(index) -> str:
@@ -124,6 +133,8 @@ def compile_plan(
     prelude=None,
     index_type: Optional[str] = None,
     backend: Optional[str] = None,
+    precision: str = "fp32",
+    shortlist_k: Optional[int] = None,
 ) -> ScanPlan:
     """Map (index, bridge, mode) onto the engine launches that serve it.
 
@@ -131,6 +142,13 @@ def compile_plan(
     explicitly (the sharded searchers compile per-shard plans without an
     index object). ``prelude`` is an adapter applied to the queries before
     the plan runs (third-space traffic bridging into the serving space).
+
+    ``precision="int8"`` compiles the quantized serving path: the first
+    pass scans int8 codes for a ``shortlist_k``-wide candidate list and an
+    exact fp32 targeted rescore closes the plan (flat = 2 launches, IVF =
+    3: probe → quant scan → rescore). Requires ``backend="fused"`` and a
+    quantized index; mixed int8 additionally needs a foldable bridge (the
+    dual query stage must run in-kernel).
     """
     if mode not in MODES:
         raise ValueError(f"unknown plan mode {mode!r}; expected {MODES}")
@@ -138,11 +156,22 @@ def compile_plan(
         raise ValueError(
             f"probe_space must be 'mapped' or 'raw', got {probe_space!r}"
         )
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected {PRECISIONS}"
+        )
     if mode != "native" and bridge is None:
         raise ValueError(f"mode={mode!r} needs a bridge adapter")
     itype = index_type or _index_type(index)
     be = backend if backend is not None else getattr(index, "backend", "jnp")
     kernels_on = be in ("pallas", "fused")
+    int8 = precision == "int8"
+    if int8 and be != "fused":
+        raise ValueError(
+            f"precision='int8' requires backend='fused', got {be!r}"
+        )
+    if int8 and itype == "protocol":
+        raise ValueError("precision='int8' needs a flat or ivf index")
 
     if itype == "protocol":
         # opaque SearchBackend: the plan delegates through its methods
@@ -165,9 +194,50 @@ def compile_plan(
             "pre-folded (kind, params) bridges require backend='fused' "
             "with a foldable kind; pass the adapter object instead"
         )
+    if int8 and mode == "mixed" and sequential:
+        raise ValueError(
+            "mixed int8 serving needs a foldable bridge (the dual query "
+            "stage must run in-kernel); ≥2-MLP chains serve fp32"
+        )
 
     launches: tuple[LaunchSpec, ...] = ()
-    if itype == "flat":
+    if int8:
+        # scan transform: in-kernel for a foldable bridge, identity for
+        # native queries and prelude-mapped sequential bridges
+        scan_t = "identity"
+        if mode != "native" and not sequential:
+            scan_t = fused_kind
+        if sequential:
+            prelude = bridge
+        if mode == "mixed":
+            sel = "bitmap"
+        else:
+            sel = "plain"
+        rescore = LaunchSpec(
+            "rescore", "ivf", scan_t, select=sel, invert=invert,
+            exact=True,
+        )
+        if itype == "flat":
+            launches = (
+                LaunchSpec(
+                    "scan", "flat", scan_t, select=sel, invert=invert,
+                    packed=(sel == "bitmap"), precision="int8",
+                ),
+                rescore,
+            )
+        else:
+            probe_t = scan_t if (
+                mode != "mixed" or probe_space == "mapped"
+            ) else "identity"
+            launches = (
+                LaunchSpec("probe", "flat", probe_t),
+                LaunchSpec(
+                    "scan", "ivf", scan_t, select=sel, invert=invert,
+                    precision="int8",
+                ),
+                rescore,
+            )
+    elif itype == "flat":
         if mode == "native" or (mode == "bridged" and
                                 (be != "fused" or sequential)):
             # plain scan; a sequential bridge maps the queries up front
@@ -213,12 +283,19 @@ def compile_plan(
                     fused_kind is not None and probe_space == "mapped"
                 )
                 probe_t = fused_kind if fused_probe else "identity"
+                # raw-probe foldable bridges (the control arm) run the
+                # query stage IN the rescore — no host-side apply
+                rescore_t = (
+                    fused_kind
+                    if (fused_kind is not None and not fused_probe)
+                    else "identity"
+                )
                 launches = (
                     LaunchSpec(
                         "probe", "flat", probe_t, return_queries=fused_probe,
                     ),
                     LaunchSpec(
-                        "rescore", "ivf", "identity", select="bitmap",
+                        "rescore", "ivf", rescore_t, select="bitmap",
                         invert=invert,
                     ),
                 )
@@ -228,10 +305,18 @@ def compile_plan(
         fused_kind=fused_kind, sequential=sequential, invert=invert,
         packed=packed if (mode == "mixed" and itype == "flat") else False,
         probe_space=probe_space, bridge=bridge, prelude=prelude,
+        precision=precision, shortlist_k=shortlist_k,
     )
 
 
-def build_plan(registry, index, state: ServingState) -> ScanPlan:
+def build_plan(
+    registry,
+    index,
+    state: ServingState,
+    *,
+    precision: str = "fp32",
+    shortlist_k: Optional[int] = None,
+) -> ScanPlan:
     """The top-level compiler: resolve the bridge through the version
     graph and pick the serving mode from the migration state.
 
@@ -250,27 +335,29 @@ def build_plan(registry, index, state: ServingState) -> ScanPlan:
     """
     qs, sv = state.query_space, state.serving_version
     mixed = state.mixed and state.target_space is not None
+    opts = {"precision": precision, "shortlist_k": shortlist_k}
 
     if qs == sv and not mixed:
-        return compile_plan(index, mode="native")
+        return compile_plan(index, mode="native", **opts)
     if mixed and qs == state.target_space:
         bridge = registry.adapter(qs, sv)
-        return compile_plan(index, bridge, mode="mixed")
+        return compile_plan(index, bridge, mode="mixed", **opts)
     if qs == sv:  # mixed: the control arm, queries in the serving space
         if registry.has_edge(sv, state.target_space):
             inverse = registry.edge(sv, state.target_space)
             return compile_plan(
-                index, inverse, mode="mixed", invert=True, probe_space="raw"
+                index, inverse, mode="mixed", invert=True,
+                probe_space="raw", **opts,
             )
-        return compile_plan(index, mode="native")
+        return compile_plan(index, mode="native", **opts)
     bridge = registry.adapter(qs, sv)
     if mixed and registry.has_edge(sv, state.target_space):
         inverse = registry.edge(sv, state.target_space)
         return compile_plan(
             index, inverse, mode="mixed", invert=True, probe_space="raw",
-            prelude=bridge,
+            prelude=bridge, **opts,
         )
-    return compile_plan(index, bridge, mode="bridged")
+    return compile_plan(index, bridge, mode="bridged", **opts)
 
 
 # ---------------------------------------------------------------------------
@@ -332,10 +419,55 @@ def execute_plan(
     )
 
 
+def _require_quantized(index, attr: str):
+    bundle = getattr(index, attr, None)
+    if bundle is None:
+        raise ValueError(
+            "precision='int8' plan executed against an unquantized index — "
+            "call index.quantize() first (replace_rows keeps codes in sync)"
+        )
+    return bundle
+
+
+def _execute_flat_int8(plan, queries, index, k, q_valid, migrated):
+    from repro.kernels.engine import ops as E
+
+    codes = _require_quantized(index, "codes")
+    s = plan.shortlist(k, index.size)
+    kind, fused = (None, None)
+    if plan.fused_kind is not None and not plan.sequential:
+        kind, fused = _fused_params(plan.bridge)
+    if plan.mode == "mixed":
+        mig = jnp.asarray(migrated, jnp.int32)
+        _, shortlist = E.quantized_scan(
+            codes, index.code_scales, queries, k=s, fused_kind=kind,
+            fused=fused, migrated=mig, q_valid=q_valid, invert=plan.invert,
+        )
+        cap = index.rcell_ids.shape[1]
+        mig_cells = jnp.pad(
+            mig, (0, index.rcell_ids.size - mig.shape[0])
+        ).reshape(-1, cap)
+        return E.exact_rescore(
+            index.rcells, index.rcell_ids, index.id_to_cell, queries,
+            shortlist, k=k, fused_kind=kind, fused=fused,
+            mig_cells=mig_cells, q_valid=q_valid, invert=plan.invert,
+        )
+    _, shortlist = E.quantized_scan(
+        codes, index.code_scales, queries, k=s, fused_kind=kind,
+        fused=fused, q_valid=q_valid,
+    )
+    return E.exact_rescore(
+        index.rcells, index.rcell_ids, index.id_to_cell, queries,
+        shortlist, k=k, fused_kind=kind, fused=fused, q_valid=q_valid,
+    )
+
+
 def _execute_flat(plan, queries, index, k, q_valid, migrated):
     from repro.ann.flat import flat_search_jnp
     from repro.kernels.engine import ops as E
 
+    if plan.precision == "int8":
+        return _execute_flat_int8(plan, queries, index, k, q_valid, migrated)
     corpus = index.corpus
     br = min(index.block_rows, 2048)
     if plan.mode in ("native", "bridged"):
@@ -375,6 +507,51 @@ def _execute_flat(plan, queries, index, k, q_valid, migrated):
     )
 
 
+def _execute_ivf_int8(plan, queries, index, k, q_valid, migrated, mig_cells,
+                      nprobe):
+    from repro.ann.ivf import migration_cells
+    from repro.kernels.engine import ops as E
+
+    _require_quantized(index, "cell_codes")
+    s = plan.shortlist(k, index.size)
+    br = _probe_rows(index.n_cells)
+    kind, fused = (None, None)
+    if plan.fused_kind is not None and not plan.sequential:
+        kind, fused = _fused_params(plan.bridge)
+    # probe (fp32; the centroid table is small). A transforming probe
+    # folds the bridge in-kernel — no return_queries: the quant scan and
+    # the rescore both re-apply the stage from raw q themselves.
+    if plan.launches[0].transform != "identity":
+        _, probe = E.fused_bridged_search(
+            kind, fused, queries, index.centroids, k=nprobe, block_rows=br,
+        )
+    else:
+        _, probe = E.topk_scan(
+            index.centroids, queries, k=nprobe, block_rows=br
+        )
+    if plan.mode == "mixed":
+        if mig_cells is None:
+            mig_cells = migration_cells(index.cell_ids, migrated)
+        _, shortlist = E.quantized_ivf_scan(
+            index.cell_codes, index.cell_ids, index.cell_code_scales,
+            queries, probe, k=s, fused_kind=kind, fused=fused,
+            mig_cells=mig_cells, q_valid=q_valid, invert=plan.invert,
+        )
+        return E.exact_rescore(
+            index.cells, index.cell_ids, index.id_to_cell, queries,
+            shortlist, k=k, fused_kind=kind, fused=fused,
+            mig_cells=mig_cells, q_valid=q_valid, invert=plan.invert,
+        )
+    _, shortlist = E.quantized_ivf_scan(
+        index.cell_codes, index.cell_ids, index.cell_code_scales,
+        queries, probe, k=s, fused_kind=kind, fused=fused, q_valid=q_valid,
+    )
+    return E.exact_rescore(
+        index.cells, index.cell_ids, index.id_to_cell, queries, shortlist,
+        k=k, fused_kind=kind, fused=fused, q_valid=q_valid,
+    )
+
+
 def _execute_ivf(plan, queries, index, k, q_valid, migrated, mig_cells,
                  nprobe):
     from repro.ann.ivf import (
@@ -387,6 +564,10 @@ def _execute_ivf(plan, queries, index, k, q_valid, migrated, mig_cells,
     if nprobe > index.n_cells:
         raise ValueError(
             f"nprobe={nprobe} exceeds n_cells={index.n_cells}"
+        )
+    if plan.precision == "int8":
+        return _execute_ivf_int8(
+            plan, queries, index, k, q_valid, migrated, mig_cells, nprobe
         )
     br = _probe_rows(index.n_cells)
     fused_engine = bool(plan.launches)
@@ -427,10 +608,22 @@ def _execute_ivf(plan, queries, index, k, q_valid, migrated, mig_cells,
                 plan.fused_kind, fused, queries, index.centroids, k=nprobe,
                 block_rows=br, return_queries=True, q_valid=q_valid,
             )
+        elif plan.launches[1].transform != "identity":
+            # the transforming IVF stage: a raw-space probe (the control
+            # arm) keeps a foldable bridge IN-KERNEL — the rescore applies
+            # the query stage itself, no host-side apply
+            kind, fused = _fused_params(plan.bridge)
+            _, probe = E.topk_scan(
+                index.centroids, queries, k=nprobe, block_rows=br
+            )
+            return E.ivf_rescore_mixed_fused(
+                index.cells, index.cell_ids, mig_cells, queries, None,
+                probe, k=k, q_valid=q_valid, invert=plan.invert,
+                fused_kind=kind, fused=fused,
+            )
         else:
-            # raw-space probe (inverse/control arm) or unfoldable chain:
-            # the probe is a plain native launch; the mapped side applies
-            # outside the kernel
+            # unfoldable chain: the probe is a plain native launch; the
+            # mapped side applies outside the kernel
             q_mapped = plan.bridge.apply(queries)
             probe_q = queries if plan.probe_space == "raw" else q_mapped
             _, probe = E.topk_scan(

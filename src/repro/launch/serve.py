@@ -111,6 +111,7 @@ def run_lifecycle(args) -> None:
             "adapter": args.adapter,
             "platform": jax.default_backend(),
         },
+        "interpret_mode": jax.default_backend() == "cpu",
         "caveat": (
             "CPU interpret-mode timings; re-measure on real TPU"
             if jax.default_backend() == "cpu" else ""
@@ -129,7 +130,9 @@ def run_lifecycle(args) -> None:
         )
 
 
-def _run_governor_arm(args, governor_on: bool) -> dict:
+def _run_governor_arm(
+    args, governor_on: bool, per_tick_frac: float | None = None
+) -> dict:
     """One arm of the injected-drift scenario.
 
     World: corpus embedded in v1; the v2 encoder is a drift transform whose
@@ -199,7 +202,12 @@ def _run_governor_arm(args, governor_on: bool) -> dict:
         if governor_on else None
     )
 
-    per_tick = max(1, args.items // 8)
+    # --soak runs the §5.6 lazy re-embed rate (5 %/tick); the default
+    # injected-drift scenario drains faster so 10 ticks reach cutover
+    per_tick = (
+        max(1, int(args.items * per_tick_frac))
+        if per_tick_frac is not None else max(1, args.items // 8)
+    )
     timeline: list[dict] = []
     lineage_mid: dict = {}
     tag = "gov-on " if governor_on else "gov-off"
@@ -234,6 +242,7 @@ def _run_governor_arm(args, governor_on: bool) -> dict:
             "progress": round(handle.progress, 4),
             "paused": handle.migration_paused,
             "actions": actions,
+            "recall": signals["recall"],
             "recall_delta": signals["recall_delta"],
             "score_kl": signals["score_kl"],
             "signals": signals,
@@ -301,6 +310,7 @@ def run_governor(args) -> None:
             "pairs_per_tick": args.pairs_per_tick,
             "platform": jax.default_backend(),
         },
+        "interpret_mode": jax.default_backend() == "cpu",
         "caveat": (
             "CPU interpret-mode timings; re-measure on real TPU"
             if jax.default_backend() == "cpu" else ""
@@ -343,6 +353,71 @@ def run_governor(args) -> None:
     )
 
 
+SOAK_REFRESH_FRAC = 0.05        # §5.6: 5 % of the corpus re-embeds per tick
+
+
+def run_soak(args) -> None:
+    """``--soak``: the §5.6 long-horizon schedule (24 ticks, 5 %/tick lazy
+    background re-embedding) driven end-to-end through ``RefitGovernor``,
+    with drift injected mid-run — the named ROADMAP follow-on from the
+    observability PR. Writes tick-by-tick recall + refit events into the
+    governor bench JSON."""
+    from repro.kernels.common import is_cpu
+    from repro.obs import GovernorConfig
+
+    arm = _run_governor_arm(
+        args, governor_on=True, per_tick_frac=SOAK_REFRESH_FRAC
+    )
+    gcfg = GovernorConfig()
+    refit_events = [
+        e for e in arm["governor_events"] if e.get("action") == "refit"
+    ]
+    payload = {
+        "mode": "soak",
+        "config": {
+            "items": args.items, "queries": args.queries, "dim": args.dim,
+            "backend": args.backend, "index": args.index,
+            "adapter": args.adapter, "ticks": args.ticks,
+            "inject_tick": args.inject_tick,
+            "theta_step": args.theta_step,
+            "pairs_per_tick": args.pairs_per_tick,
+            "refresh_frac_per_tick": SOAK_REFRESH_FRAC,
+            "platform": jax.default_backend(),
+        },
+        "interpret_mode": bool(is_cpu()),
+        "caveat": (
+            "CPU interpret-mode timings; re-measure on real TPU"
+            if jax.default_backend() == "cpu" else ""
+        ),
+        "thresholds": {
+            "recall_delta_min": gcfg.recall_delta_min,
+            "kl_max": gcfg.kl_max,
+            "recall_floor": gcfg.recall_floor,
+            "cooldown_ticks": gcfg.cooldown_ticks,
+        },
+        "soak": arm,
+        "refit_events": refit_events,
+        "lineage": arm["lineage"],
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+    if arm["governor_summary"]["refits_triggered"] < 1:
+        raise SystemExit("soak gate: no auto-refit triggered in 24 ticks")
+    if arm["final_recall_delta"] < gcfg.recall_delta_min:
+        raise SystemExit(
+            f"soak gate: post-recovery Δrecall {arm['final_recall_delta']}"
+            f" < {gcfg.recall_delta_min}"
+        )
+    print(
+        f"soak gate OK: {args.ticks} ticks, "
+        f"{arm['governor_summary']['refits_triggered']} refit(s), "
+        f"recovered Δrecall {arm['final_recall_delta']}"
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--items", type=int, default=50_000)
@@ -362,8 +437,14 @@ def main() -> None:
     ap.add_argument("--governor", action="store_true",
                     help="run the injected-drift auto-refit scenario "
                          "(governor off vs on) and emit BENCH_governor.json")
-    ap.add_argument("--ticks", type=int, default=10,
-                    help="[--governor] monitoring ticks per arm")
+    ap.add_argument("--soak", action="store_true",
+                    help="long-horizon soak: the §5.6 24-tick 5%%/tick "
+                         "re-embed schedule through RefitGovernor, "
+                         "tick-by-tick recall/refit events in the governor "
+                         "bench JSON")
+    ap.add_argument("--ticks", type=int, default=None,
+                    help="[--governor/--soak] monitoring ticks per arm "
+                         "(default: 10 governor, 24 soak)")
     ap.add_argument("--inject-tick", type=int, default=4,
                     help="[--governor] tick at which rotation_theta steps up")
     ap.add_argument("--theta-step", type=float, default=0.15,
@@ -374,9 +455,14 @@ def main() -> None:
                     help="[--governor] fresh ⟨f_new, f_old⟩ pairs per tick")
     ap.add_argument("--out", default="experiments/bench/BENCH_lifecycle.json")
     args = ap.parse_args()
+    if args.ticks is None:
+        args.ticks = 24 if args.soak else 10
 
     if args.lifecycle:
         run_lifecycle(args)
+        return
+    if args.soak:
+        run_soak(args)
         return
     if args.governor:
         run_governor(args)

@@ -530,7 +530,31 @@ class VectorStore:
         registry: Optional[SpaceRegistry] = None,
         router: Optional[QueryRouter] = None,
         nprobe: int = 8,
+        precision: str = "fp32",
+        shortlist_k: Optional[int] = None,
     ):
+        from repro.kernels.engine import PRECISIONS
+
+        if precision not in PRECISIONS:
+            raise ValueError(
+                f"unknown precision {precision!r}; expected {PRECISIONS}"
+            )
+        # "int8": every plan this store compiles takes the quantized
+        # serving path (int8 first pass -> exact fp32 shortlist rescore);
+        # the index is quantized here, and replace_rows/migrate_batch keep
+        # the codes in sync through the upgrade lifecycle.
+        self.precision = precision
+        self.shortlist_k = shortlist_k
+        if precision == "int8":
+            if not hasattr(index, "quantize"):
+                raise ValueError(
+                    f"precision='int8' needs a quantizable index, got "
+                    f"{type(index).__name__}"
+                )
+            if not index.quantized:
+                index = index.quantize()
+                if router is not None:
+                    router.index = index
         self.registry = registry or SpaceRegistry()
         self.registry.add_version(version, int(index.dim))
         self.serving_version = version
@@ -635,9 +659,16 @@ class VectorStore:
         bridge object alive in the cache keeps its id() stable)."""
         from repro.kernels.engine import compile_plan
 
+        if self.precision == "int8" and not getattr(
+            self.index, "quantized", False
+        ):
+            # a lifecycle swap (cutover rebuild, rollback snapshot) may
+            # install an unquantized index: re-quantize before planning
+            self.router.index = self.index.quantize()
         key = (
             mode, invert, probe_space, id(bridge), type(self.index),
             getattr(self.index, "backend", ""),
+            self.precision, self.shortlist_k,
         )
         hit = self._plans.get(key)
         if hit is None:
@@ -645,7 +676,8 @@ class VectorStore:
                 self._plans.clear()
             hit = self._plans[key] = compile_plan(
                 self.index, bridge, mode=mode, invert=invert,
-                probe_space=probe_space,
+                probe_space=probe_space, precision=self.precision,
+                shortlist_k=self.shortlist_k,
             )
         return hit
 

@@ -150,12 +150,14 @@ class TestPlanCompilation:
         assert plan.kernels() == (
             "_scan_linear_flat_plain", "_scan_identity_ivf_bitmap",
         )
+        # the transforming IVF stage: a raw-space probe keeps the foldable
+        # bridge IN the rescore launch (no host-side apply)
         raw = compile_plan(
             _ivf(world, "fused"), world[3], mode="mixed", invert=True,
             probe_space="raw",
         )
         assert raw.kernels() == (
-            "_scan_identity_flat_plain", "_scan_identity_ivf_bitmap_inv",
+            "_scan_identity_flat_plain", "_scan_linear_ivf_bitmap_inv",
         )
 
     def test_mode_validation(self, world):

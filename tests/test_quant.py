@@ -1,0 +1,435 @@
+"""Int8 quantized first pass + exact fp32 rescore — the precision axis.
+
+Three contracts:
+
+* **Error bound.** The per-row symmetric int8 encoding bounds the dot-product
+  error by scale granularity: writing q = q̂ + e_q, c = ĉ + e_c with
+  |e_i| ≤ s/2, the rescaled int8 score q̂·ĉ differs from the fp32 score by
+  at most (s_c/2)·‖q‖₁ + (s_q/2)·‖c‖₁ + d·s_q·s_c (property-tested under
+  hypothesis when available, seeded-deterministically always).
+* **Exactness.** With ``shortlist_k = N`` the exact rescore must reproduce
+  the fp32 serving path BIT-IDENTICALLY (ids equal, scores 1e-5) across the
+  (flat/IVF × native/bridged/mixed × ragged q_valid) matrix — the first
+  pass then only permutes candidates, and the rescore is exact fp32 math.
+* **Launch budget.** Flat int8 = 2 launches, IVF int8 = 3, asserted by
+  kernel NAME through the pallas_call-counting harness.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ann import FlatIndex, build_ivf, flat_search_jnp
+from repro.ann.ivf import ivf_search_jnp
+from repro.core import DriftAdapter, FitConfig
+from repro.kernels.engine import (
+    ScanPlan,
+    compile_plan,
+    execute_plan,
+    quantize_rows,
+)
+from repro.kernels.mixed_scan.ref import mixed_merge_scan
+
+pytestmark = pytest.mark.serving
+
+D = 64
+N = 128
+Q = 16
+K = 10
+NPROBE = 4
+
+
+@pytest.fixture(scope="module")
+def world():
+    key = jax.random.PRNGKey(0)
+    corpus = jax.random.normal(key, (N, D))
+    corpus = corpus / jnp.linalg.norm(corpus, axis=1, keepdims=True)
+    rot = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1), (D, D)))[0]
+    b = corpus @ rot.T
+    queries = jax.random.normal(jax.random.PRNGKey(3), (Q, D))
+    queries = queries / jnp.linalg.norm(queries, axis=1, keepdims=True)
+    op = DriftAdapter.fit(
+        b, corpus, config=FitConfig(kind="op", use_dsm=False),
+    )
+    mig = np.zeros(N, bool)
+    mig[np.random.default_rng(7).permutation(N)[: N // 2]] = True
+    return corpus, b, queries, op, jnp.asarray(mig)
+
+
+_CACHE: dict = {}
+
+
+def _flat(world):
+    if "flat" not in _CACHE:
+        _CACHE["flat"] = FlatIndex(
+            corpus=world[0], backend="fused"
+        ).quantize(cap=32)
+    return _CACHE["flat"]
+
+
+def _ivf(world):
+    if "ivf" not in _CACHE:
+        idx = build_ivf(jax.random.PRNGKey(7), world[0], n_cells=4)
+        _CACHE["ivf"] = dataclasses.replace(idx, backend="fused").quantize()
+    return _CACHE["ivf"]
+
+
+# ---------------------------------------------------------------------------
+# encoding + error bound
+# ---------------------------------------------------------------------------
+
+class TestQuantizeRows:
+    def test_roundtrip_error_within_half_scale(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (32, D))
+        codes, scales = quantize_rows(x)
+        assert codes.dtype == jnp.int8
+        deq = codes.astype(jnp.float32) * scales[:, None]
+        err = np.abs(np.asarray(x) - np.asarray(deq))
+        assert (err <= np.asarray(scales)[:, None] / 2 + 1e-7).all()
+
+    def test_scale_is_max_abs_over_127(self):
+        x = jnp.asarray([[0.0, -2.54, 1.0]])
+        _, scales = quantize_rows(x)
+        np.testing.assert_allclose(np.asarray(scales), [2.54 / 127],
+                                   rtol=1e-6)
+
+    def test_zero_row_does_not_nan(self):
+        codes, scales = quantize_rows(jnp.zeros((2, D)))
+        assert np.asarray(scales).min() > 0
+        assert (np.asarray(codes) == 0).all()
+
+    @staticmethod
+    def _check_dot_bound(q, c):
+        (qi, sq), (ci, sc) = quantize_rows(q), quantize_rows(c)
+        d = q.shape[-1]
+        approx = np.asarray(
+            (qi.astype(jnp.int32)[0] * ci.astype(jnp.int32)[0]).sum()
+            * sq[0] * sc[0]
+        )
+        exact = float(np.asarray(q[0]) @ np.asarray(c[0]))
+        sq, sc = float(sq[0]), float(sc[0])
+        bound = (
+            sc / 2 * np.abs(np.asarray(q[0])).sum()
+            + sq / 2 * np.abs(np.asarray(c[0])).sum()
+            + d * sq * sc
+        )
+        assert abs(exact - approx) <= bound + 1e-6
+
+    def test_dot_error_bounded_by_scale_granularity(self):
+        for seed in range(20):
+            key = jax.random.PRNGKey(seed)
+            kq, kc, ks = jax.random.split(key, 3)
+            # vary magnitude so the scale granularity itself varies
+            mag = float(jax.random.uniform(ks, (), minval=0.01, maxval=50.0))
+            q = jax.random.normal(kq, (1, D)) * mag
+            c = jax.random.normal(kc, (1, D))
+            self._check_dot_bound(q, c)
+
+    def test_dot_error_bound_property(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        dims = st.integers(min_value=2, max_value=96)
+
+        @settings(max_examples=40, deadline=None)
+        @given(data=st.data(), d=dims)
+        def prop(data, d):
+            el = st.floats(
+                min_value=-100.0, max_value=100.0,
+                allow_nan=False, allow_infinity=False, width=32,
+            )
+            q = np.array(
+                data.draw(st.lists(el, min_size=d, max_size=d)), np.float32
+            )[None, :]
+            c = np.array(
+                data.draw(st.lists(el, min_size=d, max_size=d)), np.float32
+            )[None, :]
+            self._check_dot_bound(jnp.asarray(q), jnp.asarray(c))
+
+        prop()
+
+
+# ---------------------------------------------------------------------------
+# plan compilation: the precision axis
+# ---------------------------------------------------------------------------
+
+class TestInt8Plans:
+    def test_flat_two_launches_by_name(self, world):
+        plan = compile_plan(_flat(world), precision="int8")
+        assert plan.kernels() == (
+            "_scan_identity_flat_plain_int8",
+            "_scan_identity_ivf_plain_exact",
+        )
+        bridged = compile_plan(
+            _flat(world), world[3], mode="bridged", precision="int8"
+        )
+        assert bridged.kernels() == (
+            "_scan_linear_flat_plain_int8",
+            "_scan_linear_ivf_plain_exact",
+        )
+        mixed = compile_plan(
+            _flat(world), world[3], mode="mixed", precision="int8"
+        )
+        assert mixed.kernels() == (
+            "_scan_linear_flat_bitmap_packed_int8",
+            "_scan_linear_ivf_bitmap_exact",
+        )
+
+    def test_ivf_three_launches_by_name(self, world):
+        plan = compile_plan(_ivf(world), precision="int8")
+        assert plan.kernels() == (
+            "_scan_identity_flat_plain",
+            "_scan_identity_ivf_plain_int8",
+            "_scan_identity_ivf_plain_exact",
+        )
+        mixed_raw = compile_plan(
+            _ivf(world), world[3], mode="mixed", invert=True,
+            probe_space="raw", precision="int8",
+        )
+        assert mixed_raw.kernels() == (
+            "_scan_identity_flat_plain",
+            "_scan_linear_ivf_bitmap_inv_int8",
+            "_scan_linear_ivf_bitmap_inv_exact",
+        )
+
+    def test_int8_requires_fused_backend(self, world):
+        with pytest.raises(ValueError, match="fused"):
+            compile_plan(FlatIndex(corpus=world[0]), precision="int8")
+
+    def test_int8_mixed_rejects_sequential_chain(self, world):
+        from repro.core import ChainedAdapter
+
+        mlp = DriftAdapter.fit(
+            world[1][:64], world[0][:64],
+            config=FitConfig(kind="mlp", max_epochs=1),
+        )
+        chain = ChainedAdapter(links=[mlp, mlp])
+        with pytest.raises(ValueError, match="foldable"):
+            compile_plan(
+                _flat(world), chain, mode="mixed", precision="int8"
+            )
+
+    def test_int8_plan_against_unquantized_index_raises(self, world):
+        bare = FlatIndex(corpus=world[0], backend="fused")
+        plan = compile_plan(bare, precision="int8")
+        with pytest.raises(ValueError, match="quantize"):
+            execute_plan(plan, world[2], index=bare, k=K)
+
+    def test_shortlist_rule(self):
+        plan = ScanPlan(
+            mode="native", index_type="flat", backend="fused",
+            launches=(), precision="int8",
+        )
+        assert plan.shortlist(10, 10_000) == 40        # default 4·k
+        assert plan.shortlist(10, 25) == 25            # clamped to N
+        narrow = dataclasses.replace(plan, shortlist_k=5)
+        assert narrow.shortlist(10, 10_000) == 10      # never below k
+        wide = dataclasses.replace(plan, shortlist_k=300)
+        assert wide.shortlist(10, 10_000) == 300
+
+
+# ---------------------------------------------------------------------------
+# exactness: shortlist_k = N ⇒ bit-identical to the fp32 serving path
+# ---------------------------------------------------------------------------
+
+class TestRescoreExactness:
+    def _oracle(self, world, index_type, state):
+        corpus, b, queries, op, mig = world
+        qm = op.apply(queries)
+        if index_type == "flat":
+            if state == "native":
+                return flat_search_jnp(corpus, queries, k=K)
+            if state == "bridged":
+                return flat_search_jnp(corpus, qm, k=K)
+            sel = jnp.asarray(mig, bool)
+            if state == "mixed_inv":
+                sel = ~sel
+            return mixed_merge_scan(queries, qm, corpus, sel, k=K)
+        index = _ivf(world)
+        if state == "native":
+            return ivf_search_jnp(index, queries, k=K, nprobe=NPROBE)
+        if state == "bridged":
+            return ivf_search_jnp(index, qm, k=K, nprobe=NPROBE)
+        # mixed: the fp32 fused mixed path IS the serving oracle
+        plan = compile_plan(
+            index, op, mode="mixed", invert=(state == "mixed_inv"),
+            probe_space="raw" if state == "mixed_inv" else "mapped",
+        )
+        return execute_plan(
+            plan, queries, index=index, k=K, migrated=world[4],
+            nprobe=NPROBE,
+        )
+
+    def _check(self, world, index_type, state, q_valid):
+        corpus, b, queries, op, mig = world
+        index = _flat(world) if index_type == "flat" else _ivf(world)
+        plan = compile_plan(
+            index,
+            op if state != "native" else None,
+            mode={"mixed_inv": "mixed"}.get(state, state),
+            invert=(state == "mixed_inv"),
+            probe_space="raw" if state == "mixed_inv" else "mapped",
+            precision="int8",
+            shortlist_k=N,
+        )
+        s, i = execute_plan(
+            plan, queries, index=index, k=K, q_valid=q_valid,
+            migrated=mig, nprobe=NPROBE,
+        )
+        ref_s, ref_i = self._oracle(world, index_type, state)
+        rows = Q if q_valid is None else min(q_valid, Q)
+        np.testing.assert_array_equal(
+            np.asarray(i)[:rows], np.asarray(ref_i)[:rows],
+            err_msg=f"{index_type}/{state}: rescore ids != fp32 oracle",
+        )
+        np.testing.assert_allclose(
+            np.asarray(s)[:rows], np.asarray(ref_s)[:rows], atol=1e-5,
+            err_msg=f"{index_type}/{state}: rescore scores != fp32 oracle",
+        )
+
+    @pytest.mark.parametrize("index_type", ["flat", "ivf"])
+    def test_mixed_exact_smoke(self, world, index_type):
+        """Fast tier: the widest-surface state on both index types."""
+        self._check(world, index_type, "mixed", None)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("q_valid", [None, Q, 9])
+    @pytest.mark.parametrize("state", ["native", "bridged", "mixed",
+                                       "mixed_inv"])
+    @pytest.mark.parametrize("index_type", ["flat", "ivf"])
+    def test_rescore_exact_matrix(self, world, index_type, state, q_valid):
+        self._check(world, index_type, state, q_valid)
+
+    def test_narrow_shortlist_high_recall(self, world):
+        """The default 4·k shortlist: not exact, but ≥0.99 R@10 here."""
+        corpus, _, queries, _, _ = world
+        plan = compile_plan(_flat(world), precision="int8")
+        _, i = execute_plan(plan, queries, index=_flat(world), k=K)
+        _, ref = flat_search_jnp(corpus, queries, k=K)
+        hits = sum(
+            len(set(a.tolist()) & set(b.tolist()))
+            for a, b in zip(np.asarray(i), np.asarray(ref))
+        )
+        assert hits / (Q * K) >= 0.99
+
+
+# ---------------------------------------------------------------------------
+# traced launch budget: flat = 2, IVF = 3, by kernel name
+# ---------------------------------------------------------------------------
+
+class TestInt8LaunchBudget:
+    def _counting(self, monkeypatch):
+        from jax.experimental import pallas as real_pl
+
+        jax.clear_caches()
+        launches = []
+        orig = real_pl.pallas_call
+
+        def counting(kernel, *a, **kw):
+            launches.append(getattr(kernel, "func", kernel).__name__)
+            return orig(kernel, *a, **kw)
+
+        monkeypatch.setattr(real_pl, "pallas_call", counting)
+        return launches
+
+    @pytest.mark.parametrize(
+        "make,mode,budget",
+        [
+            (_flat, "native", 2),
+            pytest.param(_flat, "mixed", 2, marks=pytest.mark.slow),
+            (_ivf, "native", 3),
+            pytest.param(_ivf, "mixed", 3, marks=pytest.mark.slow),
+        ],
+    )
+    def test_traced_launches_match_plan(self, world, monkeypatch, make,
+                                        mode, budget):
+        corpus, b, queries, op, mig = world
+        index = make(world)
+        launches = self._counting(monkeypatch)
+        plan = compile_plan(
+            index, op if mode != "native" else None, mode=mode,
+            precision="int8",
+        )
+        assert plan.launch_count == budget
+        execute_plan(
+            plan, queries, index=index, k=K, migrated=mig, nprobe=NPROBE
+        )
+        assert launches == list(plan.kernels()), (launches, plan.kernels())
+
+
+# ---------------------------------------------------------------------------
+# codes stay in sync through mutation + the store-level knob
+# ---------------------------------------------------------------------------
+
+class TestQuantizedLifecycle:
+    def test_flat_replace_rows_requantizes(self, world):
+        corpus, _, queries, _, _ = world
+        index = _flat(world)
+        ids = jnp.arange(0, 24, dtype=jnp.int32)
+        new_rows = jax.random.normal(jax.random.PRNGKey(9), (24, D))
+        new_rows = new_rows / jnp.linalg.norm(new_rows, axis=1, keepdims=True)
+        out = index.replace_rows(ids, new_rows)
+        codes, scales = quantize_rows(new_rows)
+        np.testing.assert_array_equal(
+            np.asarray(out.codes[:24]), np.asarray(codes)
+        )
+        np.testing.assert_allclose(
+            np.asarray(out.code_scales[:24]), np.asarray(scales), rtol=1e-6
+        )
+        # the rescore's fp32 virtual cells track too: shortlist_k=N stays
+        # bit-identical to a fresh fp32 scan of the MUTATED corpus
+        plan = compile_plan(out, precision="int8", shortlist_k=N)
+        s, i = execute_plan(plan, queries, index=out, k=K)
+        ref_s, ref_i = flat_search_jnp(out.corpus, queries, k=K)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+
+    def test_ivf_replace_rows_requantizes(self, world):
+        index = _ivf(world)
+        ids = jnp.arange(0, 16, dtype=jnp.int32)
+        new_rows = jax.random.normal(jax.random.PRNGKey(9), (16, D))
+        new_rows = new_rows / jnp.linalg.norm(new_rows, axis=1, keepdims=True)
+        out = index.replace_rows(ids, new_rows)
+        # every replaced id's slot holds the requantized code
+        flat_ids = np.asarray(out.cell_ids).reshape(-1)
+        codes, scales = quantize_rows(new_rows)
+        cap = out.capacity
+        for j, rid in enumerate(ids.tolist()):
+            pos = int(np.nonzero(flat_ids == rid)[0][0])
+            np.testing.assert_array_equal(
+                np.asarray(out.cell_codes[pos // cap, pos % cap]),
+                np.asarray(codes[j]),
+            )
+
+    def test_ivf_pytree_roundtrip_keeps_codes(self, world):
+        index = _ivf(world)
+        leaves, treedef = jax.tree_util.tree_flatten(index)
+        back = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert back.quantized
+        np.testing.assert_array_equal(
+            np.asarray(back.cell_codes), np.asarray(index.cell_codes)
+        )
+
+    def test_store_int8_serves_through_quant_plans(self, world):
+        from repro.serve import VectorStore
+
+        corpus, _, queries, _, _ = world
+        store = VectorStore(
+            FlatIndex(corpus=corpus, backend="fused"),
+            precision="int8", shortlist_k=N,
+        )
+        assert store.index.quantized          # quantized at init
+        plan = store._plan(None, "native")
+        assert plan.precision == "int8" and plan.launch_count == 2
+        res = store.search(queries, k=K)
+        _, ref = flat_search_jnp(corpus, queries, k=K)
+        np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref))
+
+    def test_store_rejects_unknown_precision(self, world):
+        from repro.serve import VectorStore
+
+        with pytest.raises(ValueError, match="precision"):
+            VectorStore(FlatIndex(corpus=world[0]), precision="int4")
