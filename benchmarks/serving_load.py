@@ -1,0 +1,262 @@
+"""Open-loop serving-load benchmark for the front door → BENCH_serving.json.
+
+Closed-loop harnesses (submit a batch, wait, repeat) hide queueing: the
+generator slows down with the server, so tail latency under real traffic
+never shows. This benchmark is OPEN-LOOP: request arrival times are a
+pre-drawn Poisson process, each request's enqueue timestamp is its
+SCHEDULED arrival (not the moment the driver got to it), and the offered
+rate never adapts — exactly the "p50/p99 under load, not per-batch
+best-of-N" measurement the ROADMAP calls for.
+
+The world is the hardest serving state the store has: mid-migration (v2
+traffic rides the bitmap-masked mixed scan, v1 control traffic the
+inverse-mixed scan) plus a third registered space v3 (mixed-bridged), two
+tenants, all through one :class:`FrontDoor`. Three phases:
+
+* **parity** (hard gate): every front-door result must be bit-identical to
+  serving that request alone through ``VectorStore.search``, and the mixed
+  3-plan stream must drain in exactly 3 coalesced plan executions
+  (telemetry-counted).
+* **load arms** (goodput hard, latencies interpret-advisory): the Poisson
+  generator at ~0.5× and ~3× of the measured drain capacity; p50/p99
+  wait/total latency, goodput, and coalescing factor vs offered load.
+* **shed** (hard): the overloaded arm with deadlines — deadline-expired
+  requests must be explicitly Rejected (≥1 shed, zero silent drops:
+  offered == completed + rejected).
+
+    PYTHONPATH=src python -m benchmarks.serving_load --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.ann import FlatIndex
+from repro.core import DriftAdapter, FitConfig
+from repro.data import CorpusConfig, MILD_TEXT, make_corpus, make_drift, make_queries
+from repro.serve import FrontDoor, VectorStore
+
+SPACES = ("v2", "v2", "v1", "v3")      # the traffic mix, cycled per request
+TENANTS = ("gold", "free")
+
+
+def build_world(items: int, dim: int, n_queries: int, adapter: str):
+    """Mid-migration VectorStore with three live spaces + per-space queries."""
+    ccfg = CorpusConfig(n_items=items, dim=dim,
+                        n_clusters=max(64, items // 150), seed=0)
+    corpus_old, _ = make_corpus(ccfg)
+    base = dataclasses.replace(MILD_TEXT, d_old=dim, d_new=dim)
+    drift_v2 = make_drift(base)
+    drift_v3 = make_drift(dataclasses.replace(base, rotation_theta=0.3, seed=3))
+    corpus_v2 = drift_v2(corpus_old, 0)
+    q_raw = make_queries(ccfg, n_queries)[0]
+    queries = {
+        "v1": np.asarray(q_raw, np.float32),
+        "v2": np.asarray(drift_v2(q_raw, 1), np.float32),
+        "v3": np.asarray(drift_v3(q_raw, 1), np.float32),
+    }
+
+    store = VectorStore(FlatIndex(corpus=corpus_old, backend="fused"),
+                        version="v1")
+    store.attach_telemetry()
+    handle = store.upgrade(
+        "v2", corpus_new_provider=lambda ids: corpus_v2[jnp.asarray(ids)],
+    )
+    n_pairs = min(5_000, items)
+    handle.fit(corpus_v2[:n_pairs], corpus_old[:n_pairs],
+               config=FitConfig(kind=adapter))
+    handle.deploy()
+    handle.migrate_batch(int(items * 0.4))        # mixed-state serving
+
+    # third space: register v3 -> v1 so mixed-bridged traffic is live too
+    store.registry.add_version("v3", dim)
+    corpus_v3 = drift_v3(corpus_old, 0)
+    store.registry.register_edge("v3", "v1", DriftAdapter.fit(
+        corpus_v3[:n_pairs], corpus_old[:n_pairs],
+        config=FitConfig(kind=adapter),
+    ))
+    return store, queries
+
+
+def request_stream(queries: dict, n: int):
+    """The deterministic mixed stream: (embedding, space, tenant) per rid."""
+    out = []
+    for i in range(n):
+        space = SPACES[i % len(SPACES)]
+        q = queries[space][i % queries[space].shape[0]]
+        out.append((q, space, TENANTS[i % len(TENANTS)]))
+    return out
+
+
+def run_parity(store, queries, n: int, k: int) -> dict:
+    """Hard-gate phase: coalesced == individual, G plans ⇒ G executions."""
+    door = FrontDoor(store, max_depth=4 * n)
+    stream = request_stream(queries, n)
+    requests = [
+        door.submit(q, space=space, k=k, tenant=tenant)
+        for q, space, tenant in stream
+    ]
+    plans_before = store.telemetry.plans_executed
+    summary = door.drain()
+    plan_executions = store.telemetry.plans_executed - plans_before
+
+    matched = 0
+    for r in requests:
+        ref = store.search(jnp.asarray(r.embedding[None]), k=k, space=r.space)
+        if (
+            np.array_equal(r.result.ids, np.asarray(ref.ids[0]))
+            and np.array_equal(r.result.scores, np.asarray(ref.scores[0]))
+        ):
+            matched += 1
+    paths = sorted({r.result.path for r in requests})
+    return {
+        "checked": n,
+        "matched": matched,
+        "rate": matched / n,
+        "bit_identical": matched == n,
+        "paths": paths,
+        "plan_groups": summary["groups"],
+        "dispatches": summary["dispatches"],
+        "plan_executions": plan_executions,
+    }
+
+
+def run_open_loop(
+    store, queries, n: int, rate: float, k: int,
+    deadline_s: float | None = None, seed: int = 0,
+) -> dict:
+    """Drive one open-loop arm at ``rate`` req/s; returns the SLO rollup.
+
+    The driver is single-threaded: each cycle pushes every arrival whose
+    scheduled time has passed (stamping ``t_enqueue`` with the SCHEDULED
+    time, so backlog the driver itself accrued counts against latency),
+    then drains once. Service time never throttles the offered schedule.
+    """
+    door = FrontDoor(store, max_depth=16 * n)
+    stream = request_stream(queries, n)
+    arrivals = np.random.default_rng(seed).exponential(1.0 / rate, n).cumsum()
+    t0 = time.perf_counter()
+    i = 0
+    while i < n or door.depth > 0:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            q, space, tenant = stream[i]
+            door.submit(
+                q, space=space, k=k, tenant=tenant,
+                deadline_s=deadline_s, now=t0 + arrivals[i],
+            )
+            i += 1
+        if door.depth:
+            door.drain()
+        elif i < n:
+            time.sleep(min(max(arrivals[i] - now, 0.0), 0.01))
+    rollup = door.slo_rollup()
+    rollup["offered_rate"] = rate
+    rollup["duration_s"] = time.perf_counter() - t0
+    rollup["coalescing_factor"] = (
+        rollup["completed"] / rollup["dispatches"]
+        if rollup["dispatches"] else 0.0
+    )
+    rollup["rejected_deadline"] = rollup["rejected"].get("deadline", 0)
+    return rollup
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: 2k items, dim 64, short arms")
+    ap.add_argument("--items", type=int, default=None)
+    ap.add_argument("--dim", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests per load arm")
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--adapter", default="op", choices=["op", "la", "mlp"])
+    args = ap.parse_args()
+    items = args.items or (2_000 if args.smoke else 20_000)
+    dim = args.dim or (64 if args.smoke else 256)
+    n_req = args.requests or (160 if args.smoke else 600)
+
+    store, queries = build_world(items, dim, max(n_req, 256), args.adapter)
+
+    # phase 1: parity + coalescing invariants (also warms every plan trace)
+    parity = run_parity(store, queries, n=min(64, n_req), k=args.k)
+    emit("serving_parity", 0.0, parity["rate"])
+    print(f"# parity {parity['matched']}/{parity['checked']} "
+          f"groups={parity['plan_groups']} "
+          f"plan_executions={parity['plan_executions']} "
+          f"paths={parity['paths']}")
+
+    # capacity probe: one full-mix drain, all plans already traced
+    t0 = time.perf_counter()
+    run_parity(store, queries, n=min(64, n_req), k=args.k)
+    probe_dt = time.perf_counter() - t0
+    capacity = min(64, n_req) / probe_dt      # req/s through a loaded drain
+
+    arms = {}
+    for name, mult in (("low", 0.5), ("high", 3.0)):
+        rollup = run_open_loop(
+            store, queries, n=n_req, rate=capacity * mult, k=args.k,
+            seed=11 if name == "low" else 13,
+        )
+        arms[name] = rollup
+        emit(f"serving_load_{name}", rollup["total_p50_ms"] * 1e3,
+             rollup["goodput"])
+        print(f"# {name}: offered={rollup['offered_rate']:.0f}/s "
+              f"p50={rollup['total_p50_ms']:.1f}ms "
+              f"p99={rollup['total_p99_ms']:.1f}ms "
+              f"goodput={rollup['goodput']:.3f} "
+              f"coalescing={rollup['coalescing_factor']:.1f}")
+
+    # shed phase: overload with a deadline each request can miss
+    shed = run_open_loop(
+        store, queries, n=n_req, rate=capacity * 3.0, k=args.k,
+        deadline_s=probe_dt / min(64, n_req), seed=17,
+    )
+    emit("serving_shed", shed["total_p50_ms"] * 1e3, shed["rejected_deadline"])
+    print(f"# shed: rejected_deadline={shed['rejected_deadline']} "
+          f"late={shed['late']} goodput={shed['goodput']:.3f} "
+          f"conservation_ok={shed['conservation_ok']}")
+
+    save_json("BENCH_serving", {
+        "config": {
+            "items": items, "dim": dim, "requests": n_req, "k": args.k,
+            "adapter": args.adapter, "spaces": list(SPACES),
+            "tenants": list(TENANTS),
+            "capacity_probe_rps": capacity,
+            "platform": jax.default_backend(),
+        },
+        "caveat": (
+            "CPU interpret-mode latencies; re-measure on real TPU"
+            if jax.default_backend() == "cpu" else ""
+        ),
+        "parity": parity,
+        "arms": arms,
+        "shed": shed,
+        "telemetry": store.telemetry.counters(),
+    })
+    print("wrote BENCH_serving.json")
+
+    # the benchmark's own hard gates (CI re-asserts via check_bench)
+    if not parity["bit_identical"]:
+        raise SystemExit("serving gate: front-door results not bit-identical")
+    if parity["plan_executions"] != parity["plan_groups"]:
+        raise SystemExit(
+            f"serving gate: {parity['plan_groups']} plan groups took "
+            f"{parity['plan_executions']} plan executions"
+        )
+    if shed["rejected_deadline"] < 1:
+        raise SystemExit("serving gate: overloaded deadline arm shed nothing")
+    for name, rollup in (("low", arms["low"]), ("high", arms["high"]),
+                         ("shed", shed)):
+        if not rollup["conservation_ok"]:
+            raise SystemExit(f"serving gate: {name} arm dropped requests")
+
+
+if __name__ == "__main__":
+    main()

@@ -148,7 +148,9 @@ def _run_governor_arm(
     import dataclasses
 
     from repro.core.online import OnlineAdapterManager, OnlineConfig
-    from repro.obs import DriftMonitor, GovernorConfig, RefitGovernor
+    from repro.obs import (
+        AlertSink, DriftMonitor, GovernorConfig, RefitGovernor,
+    )
 
     ccfg = CorpusConfig(n_items=args.items, dim=args.dim,
                         n_clusters=max(200, args.items // 150), seed=0)
@@ -197,8 +199,20 @@ def _run_governor_arm(
                      seed=1),
         registry=store.registry, src="v2", dst="v1",
     )
+    alert_sink = None
+    if governor_on:
+        # page-style alert feed: one JSON line per alert, written next to
+        # the bench artifact so an operator can tail it while the run goes
+        alert_path = os.path.join(
+            os.path.dirname(os.path.abspath(args.out)),
+            "governor_alerts.jsonl",
+        )
+        os.makedirs(os.path.dirname(alert_path), exist_ok=True)
+        open(alert_path, "w").close()       # one feed per run, not appended
+        alert_sink = AlertSink(alert_path)
     governor = (
-        RefitGovernor(monitor, manager, GovernorConfig())
+        RefitGovernor(monitor, manager, GovernorConfig(),
+                      alert_sink=alert_sink)
         if governor_on else None
     )
 
@@ -282,6 +296,9 @@ def _run_governor_arm(
     arm.update({
         "governor_events": governor.timeline(),
         "governor_summary": governor.summary(),
+        "alerts": alert_sink.to_dicts(),
+        "alerts_by_severity": alert_sink.count_by_severity(),
+        "n_alerts": len(alert_sink.alerts),
         "post_cutover_recall": round(float(recall_at_k(res.ids, oracle)), 4),
         "lineage_mid": lineage_mid,
         "lineage": store.lineage_report().to_dict(),
@@ -351,6 +368,68 @@ def run_governor(args) -> None:
         f"on-arm refits {on['governor_summary']['refits_triggered']}, "
         f"recovered Δrecall {on['final_recall_delta']}"
     )
+
+
+def run_frontdoor(args) -> None:
+    """``--frontdoor``: demo the plan-keyed front door on a mid-migration
+    store. A mixed stream (new-space + control-arm old-space traffic, two
+    tenants) submits through :class:`FrontDoor`; one drain coalesces it
+    into exactly one launch per compiled plan, and the per-request results
+    are asserted bit-identical to individual ``store.search`` calls."""
+    from repro.serve.frontdoor import FrontDoor
+
+    corpus_old, corpus_new, q_new, oracle = _build_world(args)
+    store = VectorStore(_make_index(args, corpus_old), version="v1")
+    store.attach_telemetry()
+    handle = store.upgrade(
+        "v2",
+        corpus_new_provider=lambda ids: corpus_new[jax.numpy.asarray(ids)],
+    )
+    pairs_b, pairs_a, _ = make_pairs(
+        jax.random.PRNGKey(0), corpus_old, corpus_new,
+        min(20_000, args.items)
+    )
+    handle.fit(pairs_b, pairs_a, config=FitConfig(kind=args.adapter))
+    handle.deploy()
+    handle.migrate_batch(int(args.items * 0.4))     # mixed-state serving
+
+    door = FrontDoor(store, max_depth=4 * args.queries)
+    n = min(args.queries, q_new.shape[0])
+    requests = []
+    for i in range(n):
+        requests.append(door.submit(
+            np.asarray(q_new[i]),
+            space="v2" if i % 3 else "v1",     # 2/3 new-space, 1/3 control
+            k=10,
+            tenant="gold" if i % 2 else "free",
+        ))
+    summary = door.drain()
+    rollup = door.slo_rollup()
+
+    # per-request parity vs serving each alone
+    for i, r in enumerate(requests[: min(64, n)]):
+        ref = store.search(
+            jax.numpy.asarray(r.embedding[None]), k=10, space=r.space
+        )
+        if not np.array_equal(r.result.ids, np.asarray(ref.ids[0])):
+            raise SystemExit(f"frontdoor gate: request {i} not bit-identical")
+    v2_ids = np.stack([
+        r.result.ids for r in requests if r.space == "v2"
+    ])
+    v2_oracle = oracle[np.asarray([i for i in range(n) if i % 3])]
+    recall = float(recall_at_k(jax.numpy.asarray(v2_ids), v2_oracle))
+    print(f"[frontdoor] {summary['requests']} requests -> "
+          f"{summary['groups']} plan groups, "
+          f"{summary['dispatches']} launches; "
+          f"goodput={rollup['goodput']:.3f} "
+          f"total_p50={rollup['total_p50_ms']:.2f}ms "
+          f"p99={rollup['total_p99_ms']:.2f}ms  v2 R@10={recall:.3f}")
+    if summary["groups"] != 2:
+        raise SystemExit(
+            f"frontdoor gate: expected 2 plan groups (mixed + "
+            f"inverse-mixed), got {summary['groups']}"
+        )
+    print("frontdoor gate OK: parity bit-identical, one launch per plan")
 
 
 SOAK_REFRESH_FRAC = 0.05        # §5.6: 5 % of the corpus re-embeds per tick
@@ -437,6 +516,11 @@ def main() -> None:
     ap.add_argument("--governor", action="store_true",
                     help="run the injected-drift auto-refit scenario "
                          "(governor off vs on) and emit BENCH_governor.json")
+    ap.add_argument("--frontdoor", action="store_true",
+                    help="demo the plan-keyed async front door on a "
+                         "mid-migration store: mixed-space two-tenant "
+                         "stream, one launch per compiled plan, "
+                         "per-request parity asserted")
     ap.add_argument("--soak", action="store_true",
                     help="long-horizon soak: the §5.6 24-tick 5%%/tick "
                          "re-embed schedule through RefitGovernor, "
@@ -460,6 +544,9 @@ def main() -> None:
 
     if args.lifecycle:
         run_lifecycle(args)
+        return
+    if args.frontdoor:
+        run_frontdoor(args)
         return
     if args.soak:
         run_soak(args)

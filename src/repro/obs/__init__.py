@@ -25,6 +25,8 @@ serving; the lineage audit mirrors horadus's ``embedding-lineage``
 ``--fail-on-mixed`` CI gate (``tools/check_lineage.py``).
 """
 from repro.obs.governor import (
+    Alert,
+    AlertSink,
     GovernorAction,
     GovernorConfig,
     GovernorEvent,
@@ -34,6 +36,8 @@ from repro.obs.monitor import DriftMonitor, DriftSignals, LineageReport
 from repro.obs.telemetry import ScoreMomentSketch, Telemetry, gaussian_kl
 
 __all__ = [
+    "Alert",
+    "AlertSink",
     "DriftMonitor",
     "DriftSignals",
     "LineageReport",

@@ -71,6 +71,53 @@ class GovernorEvent:
         return dataclasses.asdict(self)
 
 
+@dataclasses.dataclass
+class Alert:
+    """One page-style alert event: what breached, how badly, what the
+    governor did about it — the record an on-call pager line is built
+    from. ``severity`` ∈ {info, warn, page}."""
+
+    severity: str
+    signal: str          # breached signal name ("recall_delta" | "score_kl")
+    value: float         # the signal's value at emit time
+    threshold: float     # the threshold it breached (or recovered inside)
+    action: str          # GovernorAction taken
+    tick: int
+    t: float
+    detail: str = ""
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class AlertSink:
+    """Collects :class:`Alert` events in memory and (optionally) appends
+    each as one JSON line to ``path`` — the page-style output surfaced in
+    BENCH_governor.json and tail-able by an operator while a scenario
+    runs."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.alerts: list[Alert] = []
+
+    def emit(self, alert: Alert) -> None:
+        self.alerts.append(alert)
+        if self.path is not None:
+            import json
+
+            with open(self.path, "a") as fh:
+                fh.write(json.dumps(alert.to_dict()) + "\n")
+
+    def to_dicts(self) -> list[dict]:
+        return [a.to_dict() for a in self.alerts]
+
+    def count_by_severity(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for a in self.alerts:
+            out[a.severity] = out.get(a.severity, 0) + 1
+        return out
+
+
 class RefitGovernor:
     """Acts on monitor signals: refit / pause / resume / rollback."""
 
@@ -79,10 +126,12 @@ class RefitGovernor:
         monitor: DriftMonitor,
         manager=None,
         config: Optional[GovernorConfig] = None,
+        alert_sink: Optional[AlertSink] = None,
     ):
         self.monitor = monitor
         self.manager = manager          # OnlineAdapterManager (refit_now)
         self.config = config or GovernorConfig()
+        self.alert_sink = alert_sink
         self.events: list[GovernorEvent] = []
         self.refits_triggered = 0
         self.rollbacks = 0
@@ -97,17 +146,36 @@ class RefitGovernor:
         return self.monitor.store.active_upgrade
 
     def _log(self, action: GovernorAction, signals: DriftSignals,
-             detail: str = "") -> None:
+             detail: str = "", severity: Optional[str] = None) -> None:
         self.events.append(GovernorEvent(
             tick=self._tick, t=time.time(), action=action.value,
             signals=signals.to_dict(), detail=detail,
         ))
+        if severity is not None and self.alert_sink is not None:
+            name, value, threshold = self._breach_signal(signals)
+            self.alert_sink.emit(Alert(
+                severity=severity, signal=name, value=value,
+                threshold=threshold, action=action.value,
+                tick=self._tick, t=time.time(), detail=detail,
+            ))
 
     def _breached(self, s: DriftSignals) -> bool:
         return (
             s.recall_delta < self.config.recall_delta_min
             or s.score_kl > self.config.kl_max
         )
+
+    def _breach_signal(self, s: DriftSignals) -> tuple[str, float, float]:
+        """The signal an alert reports: the breached one (recall outranks
+        KL, the floor outranks the alarm line); on a recovery alert
+        nothing is breached and the KL line is reported as context."""
+        if s.recall_delta <= self.config.recall_floor:
+            return "recall_delta", s.recall_delta, self.config.recall_floor
+        if s.recall_delta < self.config.recall_delta_min:
+            return (
+                "recall_delta", s.recall_delta, self.config.recall_delta_min
+            )
+        return "score_kl", s.score_kl, self.config.kl_max
 
     def _in_cooldown(self) -> bool:
         return (
@@ -143,6 +211,7 @@ class RefitGovernor:
                 GovernorAction.ROLLBACK, signals,
                 f"recall_delta={signals.recall_delta:.4f} <= "
                 f"floor={cfg.recall_floor}",
+                severity="page",
             )
             return actions
 
@@ -158,7 +227,9 @@ class RefitGovernor:
                 )
                 self._paused_by_us = True
                 actions.append(GovernorAction.PAUSE_MIGRATION)
-                self._log(GovernorAction.PAUSE_MIGRATION, signals)
+                self._log(
+                    GovernorAction.PAUSE_MIGRATION, signals, severity="warn"
+                )
             if (
                 self.manager is not None
                 and self._breach_streak >= cfg.confirm_ticks
@@ -181,6 +252,7 @@ class RefitGovernor:
                         f"refit #{self.refits_triggered} "
                         f"(streak={self._breach_streak}, "
                         f"refreshed_rows={refreshed})",
+                        severity="page",
                     )
         else:
             self._breach_streak = 0
@@ -188,7 +260,9 @@ class RefitGovernor:
                 handle.resume_migration()
                 self._paused_by_us = False
                 actions.append(GovernorAction.RESUME_MIGRATION)
-                self._log(GovernorAction.RESUME_MIGRATION, signals)
+                self._log(
+                    GovernorAction.RESUME_MIGRATION, signals, severity="info"
+                )
 
         if not actions:
             self._log(GovernorAction.NONE, signals)

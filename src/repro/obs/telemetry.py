@@ -108,6 +108,15 @@ class Telemetry:
         self.launches_by_kernel: dict[str, int] = {}
         self.plans_executed = 0
         self._sketches: dict[str, ScoreMomentSketch] = {}
+        # front-door admission outcomes ("admitted", "reject:<reason>",
+        # "shed:deadline") — plain counter bumps, no device interaction
+        self.admission: dict[str, int] = {}
+        # last SLO rollup the front door exported (p50/p99, goodput, …)
+        self.frontdoor: dict = {}
+        # int8 shortlist recall-parity accumulators: {width: (matched,
+        # total)} — VectorStore.audit_shortlist mirrors its counts here
+        # so suggest_shortlist_k can read them through the sink
+        self.shortlist_parity: dict[int, tuple[int, int]] = {}
 
     # -- hot path ------------------------------------------------------------
     def record_search(
@@ -128,6 +137,26 @@ class Telemetry:
                 self.launches_by_kernel.get(kernel, 0) + 1
             )
 
+    def record_admission(self, outcome: str) -> None:
+        """Front-door admission outcome counter bump (hot path, host-only)."""
+        self.admission[outcome] = self.admission.get(outcome, 0) + 1
+
+    def record_shortlist_parity(
+        self, width: int, matched: int, total: int
+    ) -> None:
+        m, t = self.shortlist_parity.get(width, (0, 0))
+        self.shortlist_parity[width] = (m + matched, t + total)
+
+    def shortlist_parity_rates(self) -> dict[int, float]:
+        return {
+            w: (m / t if t else 0.0)
+            for w, (m, t) in sorted(self.shortlist_parity.items())
+        }
+
+    def export_frontdoor(self, rollup: dict) -> None:
+        """Publish the front door's latest SLO rollup through the sink."""
+        self.frontdoor = dict(rollup)
+
     # -- cadence side --------------------------------------------------------
     def sketch(self, path: str) -> Optional[ScoreMomentSketch]:
         return self._sketches.get(path)
@@ -142,4 +171,7 @@ class Telemetry:
             "batches_by_path": dict(self.batches_by_path),
             "launches_by_kernel": dict(self.launches_by_kernel),
             "plans_executed": self.plans_executed,
+            "admission": dict(self.admission),
+            "frontdoor": dict(self.frontdoor),
+            "shortlist_parity": self.shortlist_parity_rates(),
         }

@@ -6,8 +6,13 @@ lifecycle (fit → shadow-eval → canary → migrate → cutover / rollback).
 `QueryRouter`, `UpgradeOrchestrator`, `MultiAdapter`-style routing and
 `DualIndexServer` remain importable from their historical homes (the
 orchestrator is now a thin shim over `UpgradeHandle`).
+
+`FrontDoor` (serve/frontdoor/) is the async continuous-batching serving
+layer in front of the store: plan-keyed request coalescing, admission
+control, and per-request SLO accounting.
 """
 from repro.serve.batching import MicroBatcher
+from repro.serve.frontdoor import FrontDoor, Rejected, Served, ServeRequest
 from repro.serve.dual_index import DualIndexServer
 from repro.serve.orchestrator import Phase, TransitionLog, UpgradeOrchestrator
 from repro.serve.router import QueryRouter, SearchResult
@@ -21,7 +26,11 @@ from repro.serve.store import (
 )
 
 __all__ = [
+    "FrontDoor",
     "MicroBatcher",
+    "Rejected",
+    "Served",
+    "ServeRequest",
     "DualIndexServer",
     "Phase",
     "TransitionLog",

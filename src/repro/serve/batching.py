@@ -1,6 +1,13 @@
 """Request micro-batcher: collects single-query requests into padded,
 fixed-shape batches so the serving path never retraces (static shapes on
-TPU). Size buckets are powers of two up to max_batch.
+TPU).
+
+Since the front door landed, this is a thin SYNC shim over its
+coalescing core — :class:`repro.serve.frontdoor.scheduler.Coalescer` does
+the grouping, padding, and scatter here AND in the async plan-keyed
+scheduler; the only thing this class keeps is its historical contract:
+integer request ids, drain-level ``k``, and power-of-two size buckets up
+to ``max_batch``.
 
 Bucket padding is all-zero rows. The pads exist only to keep shapes static
 — their results are never read — so ``drain`` forwards the valid-row count
@@ -11,12 +18,13 @@ engines) still compute pad-row scores; that cost is bounded by the pow2
 bucket (< 2× the valid rows) and the rows are dropped here either way."""
 from __future__ import annotations
 
-import dataclasses
 import inspect
 from typing import Callable
 
-import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.frontdoor.queue import ServeRequest
+from repro.serve.frontdoor.scheduler import Coalescer
 
 
 def _accepts_q_valid(fn: Callable) -> bool:
@@ -30,23 +38,24 @@ def _accepts_q_valid(fn: Callable) -> bool:
     return "q_valid" in params
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    embedding: np.ndarray
-
-
 class MicroBatcher:
     def __init__(self, dim: int, max_batch: int = 256):
         self.dim = dim
         self.max_batch = max_batch
-        self._pending: list[Request] = []
+        self._coalescer = Coalescer(
+            dim, max_batch=max_batch,
+            bucket_fn=lambda n: min(
+                1 << (max(n, 1) - 1).bit_length(),   # next pow2 ≥ n
+                max_batch,
+            ),
+        )
+        self._pending: list[ServeRequest] = []
         self._next_id = 0
 
     def submit(self, embedding: np.ndarray) -> int:
         rid = self._next_id
         self._next_id += 1
-        self._pending.append(Request(rid, np.asarray(embedding, np.float32)))
+        self._pending.append(ServeRequest(rid, embedding, space="", k=0))
         return rid
 
     @property
@@ -62,22 +71,19 @@ class MicroBatcher:
         parameter, so fused launches skip the all-zero pad rows (whose
         output is then undefined; only the n valid rows are read here)."""
         pass_q_valid = _accepts_q_valid(search_fn)
-        out: dict[int, tuple] = {}
-        while self._pending:
-            batch = self._pending[: self.max_batch]
-            self._pending = self._pending[self.max_batch :]
-            n = len(batch)
-            bucket = 1 << (n - 1).bit_length()        # next pow2 ≥ n
-            bucket = min(bucket, self.max_batch)
-            q = np.zeros((bucket, self.dim), np.float32)
-            for i, r in enumerate(batch):
-                q[i] = r.embedding
+
+        def dispatch(key, queries, kk, n):
             if pass_q_valid:
-                scores, ids = search_fn(jnp.asarray(q), k, q_valid=n)
-            else:
-                scores, ids = search_fn(jnp.asarray(q), k)
-            for i, r in enumerate(batch):
-                out[r.rid] = (np.asarray(scores[i]), np.asarray(ids[i]))
+                return search_fn(queries, kk, q_valid=n)
+            return search_fn(queries, kk)
+
+        requests, self._pending = self._pending, []
+        out: dict[int, tuple] = {}
+        for _, chunk, scores, ids in self._coalescer.run(
+            requests, lambda r: "batch", dispatch, k=k
+        ):
+            for i, r in enumerate(chunk):
+                out[r.rid] = (scores[i], ids[i])
         return out
 
     def drain_bridged(self, index, adapter, k: int = 10) -> dict[int, tuple]:

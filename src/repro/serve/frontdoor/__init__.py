@@ -1,0 +1,202 @@
+"""The async continuous-batching front door over :class:`VectorStore`.
+
+``repro.serve.frontdoor`` is the serving layer that turns the kernel work
+into "millions of users": callers submit single queries (embedding, space,
+k, optional deadline, tenant) and get a future; the scheduler coalesces
+everything pending into one padded engine launch per *compiled-plan
+identity* (the store's plan-cache key), so a heterogeneous stream of
+spaces, migration states, and precisions pays G launches for G distinct
+plans per cycle — with results bit-identical to serving each request
+alone.
+
+    store = VectorStore(index, version="v1")
+    door = FrontDoor(store, max_depth=512, tenant_rate=100.0)
+
+    # async callers: one awaitable per query
+    result = await door.search(q_embedding, space="v2", k=10,
+                               deadline_s=0.050, tenant="gold")
+    if result.ok:
+        result.ids, result.total_s       # Served
+    else:
+        result.reason                    # Rejected — never a silent drop
+
+    # sync drivers (benchmarks, tests): submit + drain
+    reqs = [door.submit(q, space=s) for q, s in work]
+    door.drain()                          # one cycle: group, launch, scatter
+    reqs[0].result                        # Served | Rejected
+
+Layering: :mod:`.queue` (requests + futures) → :mod:`.admission` (depth
+bound, tenant token buckets, deadline shedding, SLO accounting) →
+:mod:`.scheduler` (plan-keyed coalescing + the asyncio loop). The
+:class:`FrontDoor` facade wires them to one store and exports SLO rollups
+through the store's ``Telemetry`` sink.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import Optional
+
+from repro.serve.frontdoor.admission import (
+    AdmissionConfig,
+    AdmissionController,
+    Rejected,
+    SLOStats,
+    TokenBucket,
+    percentile,
+)
+from repro.serve.frontdoor.queue import RequestQueue, Served, ServeRequest
+from repro.serve.frontdoor.scheduler import (
+    Coalescer,
+    PlanScheduler,
+    Q_TILE,
+    bucket_rows,
+    pack_queries,
+)
+
+__all__ = [
+    "AdmissionConfig", "AdmissionController", "Coalescer", "FrontDoor",
+    "PlanScheduler", "Q_TILE", "Rejected", "RequestQueue", "SLOStats",
+    "Served", "ServeRequest", "TokenBucket", "bucket_rows", "pack_queries",
+    "percentile",
+]
+
+
+class FrontDoor:
+    """One front door = one store + queue + admission + scheduler.
+
+    ``submit`` is the sync entry (admission verdict applied immediately,
+    admitted requests queue for the next drain); ``search`` is the async
+    entry (auto-starts the scheduler loop on the running event loop and
+    awaits the request's future). ``drain`` runs one scheduling cycle
+    synchronously — the benchmark/test driver's path.
+    """
+
+    def __init__(
+        self,
+        store,
+        max_batch: int = 256,
+        max_depth: int = 1024,
+        tenant_rate: Optional[float] = None,
+        tenant_burst: float = 64.0,
+        q_tile: int = Q_TILE,
+        gather_s: float = 0.0,
+        telemetry=None,
+    ):
+        self.store = store
+        self.telemetry = (
+            telemetry if telemetry is not None else store.telemetry
+        )
+        self.queue = RequestQueue()
+        self.slo = SLOStats()
+        self.admission = AdmissionController(AdmissionConfig(
+            max_depth=max_depth,
+            tenant_rate=tenant_rate,
+            tenant_burst=tenant_burst,
+        ))
+        self.scheduler = PlanScheduler(
+            store, self.queue, slo=self.slo, telemetry=self.telemetry,
+            max_batch=max_batch, q_tile=q_tile,
+        )
+        self.gather_s = gather_s
+        self._next_rid = 0
+        self._task: Optional[asyncio.Task] = None
+
+    @property
+    def depth(self) -> int:
+        return self.queue.depth
+
+    # -- sync entry points ----------------------------------------------------
+    def submit(
+        self,
+        embedding,
+        space: Optional[str] = None,
+        k: int = 10,
+        deadline_s: Optional[float] = None,
+        tenant: str = "default",
+        now: Optional[float] = None,
+    ) -> ServeRequest:
+        """Offer one request. The admission verdict lands immediately: a
+        refused request comes back already resolved with
+        :class:`Rejected`; an admitted one resolves at the next drain.
+
+        ``now`` overrides the enqueue timestamp (open-loop load generators
+        stamp the SCHEDULED arrival time so queueing delay the generator
+        itself accrued still counts against latency)."""
+        t = time.perf_counter() if now is None else now
+        rid = self._next_rid
+        self._next_rid += 1
+        request = ServeRequest(
+            rid,
+            embedding,
+            space if space is not None else self.store.default_space(),
+            k,
+            tenant=tenant,
+            deadline=None if deadline_s is None else t + deadline_s,
+            t_enqueue=t,
+        )
+        self.slo.record_offered(request)
+        verdict = self.admission.admit(request, self.queue.depth, t)
+        if verdict is not None:
+            request.resolve(verdict)
+            self.slo.record_reject(request, verdict.reason)
+            if self.telemetry is not None:
+                self.telemetry.record_admission(f"reject:{verdict.reason}")
+        else:
+            self.queue.push(request)
+            if self.telemetry is not None:
+                self.telemetry.record_admission("admitted")
+        return request
+
+    def drain(self) -> dict:
+        """One synchronous scheduling cycle; returns its summary dict."""
+        return self.scheduler.drain_once()
+
+    # -- async entry points ---------------------------------------------------
+    def start(self) -> asyncio.Task:
+        """Start the continuous-batching loop on the running event loop."""
+        if self._task is None or self._task.done():
+            self._task = asyncio.get_running_loop().create_task(
+                self.scheduler.run(self.gather_s)
+            )
+        return self._task
+
+    async def search(
+        self,
+        embedding,
+        space: Optional[str] = None,
+        k: int = 10,
+        deadline_s: Optional[float] = None,
+        tenant: str = "default",
+    ):
+        """Submit and await: resolves to :class:`Served` or
+        :class:`Rejected`. Concurrent callers awaiting together coalesce
+        into shared launches."""
+        self.start()
+        request = self.submit(
+            embedding, space=space, k=k, deadline_s=deadline_s,
+            tenant=tenant,
+        )
+        return await request.ensure_future()
+
+    async def close(self) -> None:
+        """Stop the scheduler loop (pending requests stay queued)."""
+        self.scheduler.close()
+        if self._task is not None:
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+
+    # -- reporting ------------------------------------------------------------
+    def slo_rollup(self) -> dict:
+        """SLO summary (+ scheduler counters), exported through Telemetry
+        when a sink is attached."""
+        rollup = self.slo.rollup()
+        rollup["drains"] = self.scheduler.drains
+        rollup["dispatches"] = self.scheduler.dispatches
+        if self.telemetry is not None:
+            self.telemetry.export_frontdoor(rollup)
+        return rollup

@@ -1,0 +1,196 @@
+"""Admission control + per-request SLO accounting for the front door.
+
+Three ways a request is refused — always with an explicit
+:class:`Rejected` result on its future, never a silent drop:
+
+* **queue_full** — the pending queue is at ``max_depth``. Backpressure at
+  the door beats an unbounded queue whose tail latency is infinite.
+* **tenant_throttled** — the tenant's token bucket is empty. Buckets
+  refill at ``tenant_rate`` tokens/s up to ``tenant_burst``, so one
+  flooding tenant exhausts its own budget while everyone else's requests
+  keep landing (the fairness-under-saturation contract).
+* **deadline** — the request's deadline passed while it queued (checked
+  again at dispatch time by the scheduler) or had already passed at
+  submit. Shedding dead requests before they reach a kernel launch is
+  what keeps goodput from collapsing under overload.
+
+:class:`SLOStats` is the accounting side: per-request enqueue → dispatch →
+complete timestamps roll up into p50/p99 wait/total latency, per-tenant
+and per-outcome counters, and a goodput figure (completed within deadline /
+offered). ``rollup()`` is what the front door exports through the
+``repro.obs.telemetry.Telemetry`` sink.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.serve.frontdoor.queue import ServeRequest
+
+REJECT_REASONS = ("queue_full", "tenant_throttled", "deadline")
+
+
+@dataclasses.dataclass
+class Rejected:
+    """An explicit admission refusal — the request's resolved result."""
+
+    reason: str                # one of REJECT_REASONS
+    tenant: str = "default"
+    detail: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return False
+
+
+class TokenBucket:
+    """Classic token bucket: ``rate`` tokens/s refill, ``burst`` cap."""
+
+    def __init__(self, rate: float, burst: float, now: float = 0.0):
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self._last = now
+
+    def take(self, now: float, n: float = 1.0) -> bool:
+        dt = max(0.0, now - self._last)
+        self._last = now
+        self.tokens = min(self.burst, self.tokens + dt * self.rate)
+        if self.tokens >= n:
+            self.tokens -= n
+            return True
+        return False
+
+
+@dataclasses.dataclass
+class AdmissionConfig:
+    """Capacity knobs (see docs/upgrade-runbook.md, "Capacity and SLO
+    knobs"). ``tenant_rate=None`` disables per-tenant throttling."""
+
+    max_depth: int = 1024
+    tenant_rate: Optional[float] = None     # tokens/s per tenant
+    tenant_burst: float = 64.0
+
+
+class AdmissionController:
+    """Submit-time gate: depth bound, per-tenant buckets, dead-on-arrival
+    deadlines. Returns a :class:`Rejected` to refuse, None to admit."""
+
+    def __init__(self, config: Optional[AdmissionConfig] = None):
+        self.config = config or AdmissionConfig()
+        self._buckets: dict[str, TokenBucket] = {}
+
+    def admit(
+        self, request: ServeRequest, depth: int, now: float
+    ) -> Optional[Rejected]:
+        cfg = self.config
+        if request.deadline is not None and now > request.deadline:
+            return Rejected(
+                "deadline", request.tenant, "expired before admission"
+            )
+        if depth >= cfg.max_depth:
+            return Rejected(
+                "queue_full", request.tenant, f"depth={depth}"
+            )
+        if cfg.tenant_rate is not None:
+            bucket = self._buckets.get(request.tenant)
+            if bucket is None:
+                bucket = self._buckets[request.tenant] = TokenBucket(
+                    cfg.tenant_rate, cfg.tenant_burst, now
+                )
+            if not bucket.take(now):
+                return Rejected(
+                    "tenant_throttled", request.tenant,
+                    f"rate={cfg.tenant_rate}/s burst={cfg.tenant_burst}",
+                )
+        return None
+
+
+def percentile(samples: list[float], p: float) -> float:
+    """Linear-interpolation percentile (stdlib only; p in [0, 100])."""
+    if not samples:
+        return 0.0
+    xs = sorted(samples)
+    if len(xs) == 1:
+        return xs[0]
+    pos = (p / 100.0) * (len(xs) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = pos - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+class SLOStats:
+    """Per-request SLO accounting: outcome counters + latency reservoirs.
+
+    ``record_complete`` reads the three timestamps stamped on the request
+    (enqueue by submit, dispatch by the scheduler, complete by
+    ``resolve``). A request that finishes past its own deadline counts as
+    served-but-``late`` and is excluded from goodput.
+    """
+
+    def __init__(self, reservoir: int = 100_000):
+        self._cap = reservoir
+        self.offered = 0
+        self.completed = 0
+        self.late = 0
+        self.rejected: dict[str, int] = {}
+        self.by_tenant: dict[str, dict[str, int]] = {}
+        self.wait_s: list[float] = []
+        self.service_s: list[float] = []
+        self.total_s: list[float] = []
+
+    def _tenant(self, tenant: str) -> dict[str, int]:
+        t = self.by_tenant.get(tenant)
+        if t is None:
+            t = self.by_tenant[tenant] = {"offered": 0, "completed": 0,
+                                          "rejected": 0}
+        return t
+
+    def record_offered(self, request: ServeRequest) -> None:
+        self.offered += 1
+        self._tenant(request.tenant)["offered"] += 1
+
+    def record_reject(self, request: ServeRequest, reason: str) -> None:
+        self.rejected[reason] = self.rejected.get(reason, 0) + 1
+        self._tenant(request.tenant)["rejected"] += 1
+
+    def record_complete(self, request: ServeRequest) -> None:
+        self.completed += 1
+        self._tenant(request.tenant)["completed"] += 1
+        t0, td, t1 = (
+            request.t_enqueue, request.t_dispatch, request.t_complete
+        )
+        if request.deadline is not None and t1 > request.deadline:
+            self.late += 1
+        if len(self.total_s) < self._cap:
+            self.wait_s.append((td if td is not None else t1) - t0)
+            self.service_s.append(t1 - (td if td is not None else t1))
+            self.total_s.append(t1 - t0)
+
+    @property
+    def rejected_total(self) -> int:
+        return sum(self.rejected.values())
+
+    @property
+    def conservation_ok(self) -> bool:
+        """Every offered request resolved exactly one way."""
+        return self.completed + self.rejected_total == self.offered
+
+    def rollup(self) -> dict:
+        """The p50/p99 + goodput summary exported through Telemetry."""
+        good = self.completed - self.late
+        return {
+            "offered": self.offered,
+            "completed": self.completed,
+            "late": self.late,
+            "rejected": dict(self.rejected),
+            "rejected_total": self.rejected_total,
+            "conservation_ok": self.conservation_ok,
+            "goodput": (good / self.offered) if self.offered else 0.0,
+            "wait_p50_ms": percentile(self.wait_s, 50) * 1e3,
+            "wait_p99_ms": percentile(self.wait_s, 99) * 1e3,
+            "total_p50_ms": percentile(self.total_s, 50) * 1e3,
+            "total_p99_ms": percentile(self.total_s, 99) * 1e3,
+            "by_tenant": {t: dict(v) for t, v in self.by_tenant.items()},
+        }

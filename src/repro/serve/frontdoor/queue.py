@@ -1,0 +1,137 @@
+"""The front door's request queue: one pending request = one future.
+
+A :class:`ServeRequest` carries everything the scheduler needs to place the
+request in a coalesced engine launch — the query embedding, the embedding
+*space* it lives in, ``k``, an optional absolute deadline, and a tenant tag
+— plus the three SLO timestamps (enqueue → dispatch → complete) the
+admission layer rolls up into p50/p99.
+
+The queue itself is deliberately dumb: a FIFO with an asyncio wake-up
+event. Admission decisions (depth bounds, tenant token buckets, deadline
+shedding) live in :mod:`repro.serve.frontdoor.admission`; grouping and
+dispatch live in :mod:`repro.serve.frontdoor.scheduler`. Every request
+resolves EXPLICITLY — with a :class:`Served` result or an
+``admission.Rejected`` — never by silent drop: a future handed out by
+``submit`` is always completed.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Served:
+    """A completed request: its top-k slice plus the SLO timings."""
+
+    scores: np.ndarray         # (k,)
+    ids: np.ndarray            # (k,)
+    path: str                  # serving path kind (SearchResult.adapter_kind)
+    plan_key: tuple            # the compiled-plan identity it rode
+    wait_s: float              # enqueue -> dispatch
+    service_s: float           # dispatch -> complete
+    total_s: float             # enqueue -> complete
+
+    @property
+    def ok(self) -> bool:
+        return True
+
+
+class ServeRequest:
+    """One in-flight query. ``resolve`` completes it exactly once — with a
+    :class:`Served` payload or an ``admission.Rejected`` — and wakes any
+    awaiting coroutine through the lazily-created asyncio future."""
+
+    __slots__ = (
+        "rid", "embedding", "space", "k", "tenant", "deadline",
+        "t_enqueue", "t_dispatch", "t_complete", "result", "_future",
+    )
+
+    def __init__(
+        self,
+        rid: int,
+        embedding: np.ndarray,
+        space: str,
+        k: int,
+        tenant: str = "default",
+        deadline: Optional[float] = None,
+        t_enqueue: Optional[float] = None,
+    ):
+        self.rid = rid
+        self.embedding = np.asarray(embedding, np.float32).reshape(-1)
+        self.space = space
+        self.k = int(k)
+        self.tenant = tenant
+        self.deadline = deadline            # absolute perf_counter time
+        self.t_enqueue = (
+            time.perf_counter() if t_enqueue is None else t_enqueue
+        )
+        self.t_dispatch: Optional[float] = None
+        self.t_complete: Optional[float] = None
+        self.result = None                  # Served | Rejected once resolved
+        self._future: Optional[asyncio.Future] = None
+
+    # -- future plumbing -----------------------------------------------------
+    def ensure_future(self) -> asyncio.Future:
+        """Bind an asyncio future to this request (requires a running
+        loop). Sync drivers never call this — they read ``.result``."""
+        if self._future is None:
+            self._future = asyncio.get_running_loop().create_future()
+            if self.result is not None:      # rejected at submit time
+                self._future.set_result(self.result)
+        return self._future
+
+    def resolve(self, result) -> None:
+        if self.result is not None:
+            return
+        self.t_complete = time.perf_counter()
+        self.result = result
+        if self._future is not None and not self._future.done():
+            self._future.set_result(result)
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    @property
+    def expired(self) -> bool:
+        return (
+            self.deadline is not None
+            and time.perf_counter() > self.deadline
+        )
+
+
+class RequestQueue:
+    """FIFO of pending :class:`ServeRequest` with an asyncio wake event.
+
+    Depth bounding is the admission controller's job (it reads ``depth``
+    BEFORE pushing); the queue itself never refuses or drops."""
+
+    def __init__(self):
+        self._pending: deque[ServeRequest] = deque()
+        self._event = asyncio.Event()
+
+    @property
+    def depth(self) -> int:
+        return len(self._pending)
+
+    def push(self, request: ServeRequest) -> None:
+        self._pending.append(request)
+        self._event.set()
+
+    def drain_all(self) -> list[ServeRequest]:
+        """Take every pending request (FIFO order) and clear the wake
+        event — the scheduler's per-cycle intake."""
+        out = list(self._pending)
+        self._pending.clear()
+        self._event.clear()
+        return out
+
+    async def wait(self) -> None:
+        """Block until at least one request is pending."""
+        await self._event.wait()

@@ -1,0 +1,225 @@
+"""Plan-keyed continuous batching: heterogeneous requests → shared launches.
+
+The store's plan cache makes compiled-plan identity the natural batch key:
+two requests whose (space, bridge revision, index type, backend, precision,
+migration state, k) coordinates match will execute the SAME ScanPlan, so
+the scheduler stacks their embeddings into one padded query tile and pays
+ONE ``execute_plan`` for the whole group — G distinct plan groups in a
+drain cycle means exactly G plan executions (asserted by the launch-count
+tests), and each request's row of the result is bit-identical to serving
+it alone through ``VectorStore.search``.
+
+Padding reuses the engine's 128-row tile quantization rule
+(``repro.kernels.common.quantize_q_valid``): a group of n requests packs
+into a ceil(n/128)·128-row tile with ``q_valid=n``, so varying group sizes
+collapse onto at most a handful of static shapes and never retrace — the
+kernels skip whole pad tiles and the scatter only reads the n valid rows.
+
+:class:`Coalescer` is the sync core (grouping, packing, scatter) shared
+with ``repro.serve.batching.MicroBatcher``; :class:`PlanScheduler` adds the
+store dispatch, deadline shedding, SLO stamping, and the asyncio loop.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.frontdoor.admission import Rejected, SLOStats
+from repro.serve.frontdoor.queue import RequestQueue, Served, ServeRequest
+
+Q_TILE = 128     # the engine's query-tile height (see quantize_q_valid)
+
+
+def bucket_rows(n: int, q_tile: int = Q_TILE) -> int:
+    """Tile height for a group of ``n`` requests: the engine's quantization
+    rule — next multiple of the 128-row query tile."""
+    return -(-max(n, 1) // q_tile) * q_tile
+
+
+def pack_queries(
+    requests: list[ServeRequest], dim: int, q_tile: int = Q_TILE
+) -> tuple[np.ndarray, int]:
+    """Stack request embeddings into a zero-padded (bucket, dim) tile.
+
+    Pad rows exist only to keep shapes static; the dispatch passes
+    ``q_valid=n`` so fused kernels skip them, and the scatter never reads
+    them (their content is undefined on the fused paths)."""
+    n = len(requests)
+    q = np.zeros((bucket_rows(n, q_tile), dim), np.float32)
+    for i, r in enumerate(requests):
+        q[i] = r.embedding
+    return q, n
+
+
+class Coalescer:
+    """The one coalescing implementation: group → pack → dispatch → scatter.
+
+    ``dispatch(key, queries, k, n)`` runs one padded group and returns
+    ``(scores, ids)`` with at least ``n`` valid leading rows. Groups larger
+    than ``max_batch`` split into consecutive chunks (FIFO preserved), each
+    its own dispatch. ``bucket_fn`` overrides the padding rule (default:
+    the engine's 128-tile quantization; ``MicroBatcher`` passes its pow2
+    rule so jnp engines without q_valid pay < 2× pad waste)."""
+
+    def __init__(self, dim: int, max_batch: int = 256,
+                 q_tile: int = Q_TILE, bucket_fn: Optional[Callable] = None):
+        self.dim = dim
+        self.max_batch = max_batch
+        self.q_tile = q_tile
+        self.bucket_fn = bucket_fn or (lambda n: bucket_rows(n, q_tile))
+
+    def pack(self, chunk: list[ServeRequest]) -> tuple[np.ndarray, int]:
+        """Zero-padded (bucket, dim) tile for one chunk + its valid count."""
+        n = len(chunk)
+        q = np.zeros((max(self.bucket_fn(n), n), self.dim), np.float32)
+        for i, r in enumerate(chunk):
+            q[i] = r.embedding
+        return q, n
+
+    def groups(
+        self, requests: list[ServeRequest], key_fn: Callable
+    ) -> list[tuple, ]:
+        """(key, chunk) pairs: FIFO within a key, chunks ≤ max_batch."""
+        grouped: dict = {}
+        order: list = []
+        for r in requests:
+            key = key_fn(r)
+            if key not in grouped:
+                grouped[key] = []
+                order.append(key)
+            grouped[key].append(r)
+        out = []
+        for key in order:
+            members = grouped[key]
+            for i in range(0, len(members), self.max_batch):
+                out.append((key, members[i:i + self.max_batch]))
+        return out
+
+    def run(
+        self,
+        requests: list[ServeRequest],
+        key_fn: Callable,
+        dispatch: Callable,
+        k: Optional[int] = None,
+    ) -> list[tuple]:
+        """Returns [(key, chunk, scores, ids)] — one entry per dispatch.
+        ``k`` overrides the per-request top-k (MicroBatcher's drain-level
+        k); default is each chunk's own."""
+        results = []
+        for key, chunk in self.groups(requests, key_fn):
+            q, n = self.pack(chunk)
+            scores, ids = dispatch(
+                key, jnp.asarray(q), chunk[0].k if k is None else k, n
+            )
+            results.append((key, chunk, np.asarray(scores), np.asarray(ids)))
+        return results
+
+
+class PlanScheduler:
+    """Continuous-batching scheduler over one :class:`VectorStore`.
+
+    Each ``drain_once`` cycle: take everything pending, shed requests whose
+    deadline already passed (explicit ``Rejected("deadline")``), group the
+    survivors by ``store.plan_key(space, k)``, dispatch one
+    ``store.search`` per group (= one ``execute_plan``), and scatter each
+    row back onto its request's future with full SLO timestamps.
+    """
+
+    def __init__(
+        self,
+        store,
+        queue: RequestQueue,
+        slo: Optional[SLOStats] = None,
+        telemetry=None,
+        max_batch: int = 256,
+        q_tile: int = Q_TILE,
+    ):
+        self.store = store
+        self.queue = queue
+        self.slo = slo or SLOStats()
+        self.telemetry = telemetry
+        self.coalescer = Coalescer(
+            int(store.index.dim), max_batch=max_batch, q_tile=q_tile
+        )
+        self.drains = 0
+        self.dispatches = 0
+        self._closed = False
+
+    # -- one synchronous scheduling cycle ------------------------------------
+    def drain_once(self) -> dict:
+        """Process everything pending; returns the cycle summary."""
+        requests = self.queue.drain_all()
+        if not requests:
+            return {"requests": 0, "groups": 0, "dispatches": 0, "shed": 0}
+        self.drains += 1
+        now = time.perf_counter()
+        live: list[ServeRequest] = []
+        shed = 0
+        for r in requests:
+            if r.deadline is not None and now > r.deadline:
+                r.resolve(Rejected(
+                    "deadline", r.tenant,
+                    f"queued {now - r.t_enqueue:.4f}s past deadline",
+                ))
+                self.slo.record_reject(r, "deadline")
+                if self.telemetry is not None:
+                    self.telemetry.record_admission("shed:deadline")
+                shed += 1
+            else:
+                live.append(r)
+
+        groups = self.coalescer.groups(live, self._plan_key)
+        for key, chunk in groups:
+            q, n = self.coalescer.pack(chunk)
+            t = time.perf_counter()
+            for r in chunk:
+                r.t_dispatch = t
+            res = self.store.search(
+                jnp.asarray(q), k=chunk[0].k, space=key[0], q_valid=n
+            )
+            scores, ids = np.asarray(res.scores), np.asarray(res.ids)
+            path = res.adapter_kind
+            self.dispatches += 1
+            for i, r in enumerate(chunk):
+                r.resolve(Served(
+                    scores=scores[i].copy(),
+                    ids=ids[i].copy(),
+                    path=path,
+                    plan_key=key,
+                    wait_s=r.t_dispatch - r.t_enqueue,
+                    service_s=time.perf_counter() - r.t_dispatch,
+                    total_s=time.perf_counter() - r.t_enqueue,
+                ))
+                self.slo.record_complete(r)
+        return {
+            "requests": len(requests),
+            "groups": len({key for key, _ in groups}),
+            "dispatches": len(groups),
+            "shed": shed,
+        }
+
+    def _plan_key(self, request: ServeRequest) -> tuple:
+        """Compiled-plan identity + the space/k needed to dispatch. The
+        leading element is the (resolved) space — ``store.search`` needs
+        it — and the rest is the store's plan-cache coordinate."""
+        return self.store.plan_key(space=request.space, k=request.k)
+
+    # -- the asyncio loop ----------------------------------------------------
+    async def run(self, gather_s: float = 0.0) -> None:
+        """Continuous batching: wait for work, yield once so concurrent
+        submitters can coalesce into the cycle (optionally ``gather_s``
+        longer), then drain. Cancel the task (or ``close()``) to stop."""
+        while not self._closed:
+            await self.queue.wait()
+            if gather_s > 0:
+                await asyncio.sleep(gather_s)
+            else:
+                await asyncio.sleep(0)
+            self.drain_once()
+
+    def close(self) -> None:
+        self._closed = True

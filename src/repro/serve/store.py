@@ -578,6 +578,9 @@ class VectorStore:
         # plan compile per query batch; keyed on everything a plan depends
         # on (bridge identity, mode/invert/probe_space, index shape)
         self._plans: dict[tuple, object] = {}
+        # int8 shortlist recall-parity accumulators from audit_shortlist:
+        # {width: (matched, total)} — what suggest_shortlist_k reads
+        self._shortlist_parity: dict[int, tuple[int, int]] = {}
 
     # -- introspection -------------------------------------------------------
     @property
@@ -698,6 +701,72 @@ class VectorStore:
         return adapter
 
     # -- serving -------------------------------------------------------------
+    def default_space(self) -> str:
+        """The space a ``space=None`` query is served in: the live upgrade's
+        target once its bridge is deployed, else the serving version."""
+        h = self._active
+        return (
+            h.to_version if (h is not None and h.bridge_live)
+            else self.serving_version
+        )
+
+    def plan_key(self, space: Optional[str] = None, k: int = 10) -> tuple:
+        """Compiled-plan identity for a ``search(…, space=space, k=k)``
+        call, WITHOUT executing it — the front-door scheduler's batch key.
+
+        Mirrors :meth:`search`'s routing exactly: two requests with equal
+        keys are guaranteed to ride the same compiled ScanPlan, so the
+        scheduler may pack them into one padded launch. The key leads with
+        the resolved space (the dispatcher needs it to issue the grouped
+        ``search``), then the route (mode/invert/bridge identity — the
+        migration state is captured by which route is live plus the
+        registry revision), then the plan-cache coordinates (index type,
+        backend, precision, shortlist) and ``k`` (a different top-k width
+        is a different launch shape)."""
+        h = self._active
+        if space is None:
+            space = self.default_space()
+        if h is not None and h.bridge_live and space == h.to_version:
+            progress = h.progress if h._index_mixed else 0.0
+            bridge = self._live_bridge(h)
+            if progress == 0.0:
+                route = ("bridged", False, "mapped", id(bridge))
+            elif progress == 1.0:
+                route = ("native-mixed", False, "raw", id(bridge))
+            else:
+                route = ("mixed", False, "mapped", id(bridge))
+        elif space == self.serving_version:
+            route = None
+            if self._serving_mixed(h):
+                try:
+                    inverse = self.registry.edge(
+                        self.serving_version, h.to_version
+                    )
+                    route = ("mixed", True, "raw", id(inverse))
+                except KeyError:
+                    route = None
+            if route is None:
+                route = ("native", False, "mapped", 0)
+        else:
+            bridge = self.bridge(space)
+            route = ("bridged", False, "mapped", id(bridge))
+            if self._serving_mixed(h):
+                try:
+                    inverse = self.registry.edge(
+                        self.serving_version, h.to_version
+                    )
+                    route = (
+                        "mixed-bridged", True, "raw",
+                        (id(bridge), id(inverse)),
+                    )
+                except KeyError:
+                    pass
+        return (
+            space, *route, self.registry.revision,
+            type(self.index).__name__, getattr(self.index, "backend", ""),
+            self.precision, self.shortlist_k, int(k),
+        )
+
     def search(
         self,
         queries: jax.Array,
@@ -716,10 +785,7 @@ class VectorStore:
         take the inverse-edge mixed scan when the bridge kind permits."""
         h = self._active
         if space is None:
-            space = (
-                h.to_version if (h is not None and h.bridge_live)
-                else self.serving_version
-            )
+            space = self.default_space()
         if h is not None and h.stage == UpgradeStage.CANARY and h.canary:
             # pad rows (q_valid) are not served queries
             served = (
@@ -887,6 +953,77 @@ class VectorStore:
             telemetry=self.telemetry,
         )
         return s, i, inverse.kind
+
+    # -- shortlist autotuning (advisory) --------------------------------------
+    def audit_shortlist(
+        self, queries: jax.Array, k: int = 10, widths=None
+    ) -> dict:
+        """Measure int8 first-pass recall parity across shortlist widths.
+
+        For each candidate width, runs the quantized native scan on
+        ``queries`` and scores its top-k id overlap against the exact
+        reference (the same pipeline at ``shortlist_k = N``, which is
+        bit-identical to the fp32 path). Accumulates ⟨matched, total⟩ into
+        the store's parity counters (mirrored into ``Telemetry`` when
+        attached) and returns {width: parity rate}. Audit launches pass no
+        telemetry sink — they are probes, not served traffic, and must not
+        skew plan-execution counters. No-op ({}) on fp32 stores."""
+        if self.precision != "int8":
+            return {}
+        from repro.kernels.engine import compile_plan, execute_plan
+
+        n = int(self.index.size)
+        if widths is None:
+            widths = sorted({min(n, m * k) for m in (2, 4, 8, 16)})
+        nprobe = self._index_kwargs().get("nprobe", 8)
+
+        def run(width):
+            plan = compile_plan(
+                self.index, None, mode="native", precision="int8",
+                shortlist_k=int(width),
+            )
+            return execute_plan(
+                plan, queries, index=self.index, k=k, nprobe=nprobe
+            )
+
+        exact = np.asarray(run(n)[1])
+        rates: dict[int, float] = {}
+        for width in widths:
+            got = np.asarray(run(width)[1])
+            matched = int(sum(
+                len(np.intersect1d(got[i], exact[i]))
+                for i in range(got.shape[0])
+            ))
+            total = int(got.shape[0] * k)
+            m, t = self._shortlist_parity.get(int(width), (0, 0))
+            self._shortlist_parity[int(width)] = (m + matched, t + total)
+            if self.telemetry is not None:
+                self.telemetry.record_shortlist_parity(
+                    int(width), matched, total
+                )
+            rates[int(width)] = matched / total if total else 0.0
+        return rates
+
+    def suggest_shortlist_k(
+        self, k: int = 10, target: float = 0.999
+    ) -> Optional[int]:
+        """Advisory shortlist suggestion from accumulated parity counters:
+        the smallest audited width whose recall parity meets ``target``.
+        Reads the telemetry counters when a sink is attached (they mirror
+        the store's), else the store-local ones. Returns None with no
+        audit data (or on fp32 stores) — NEVER changes serving behavior;
+        an operator applies it by constructing the store with
+        ``shortlist_k=<suggestion>``."""
+        source = self._shortlist_parity
+        if self.telemetry is not None and getattr(
+            self.telemetry, "shortlist_parity", None
+        ):
+            source = self.telemetry.shortlist_parity
+        for width in sorted(source):
+            matched, total = source[width]
+            if width >= k and total and matched / total >= target:
+                return int(width)
+        return None
 
     # -- lifecycle entry point ----------------------------------------------
     def upgrade(

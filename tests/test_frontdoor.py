@@ -1,0 +1,418 @@
+"""Front-door tests: plan-keyed coalescing parity across the serving
+matrix, launch-count invariants (G groups ⇒ G plan executions), admission
+control (depth / tenant buckets / deadlines), q_valid padding at odd group
+sizes, the asyncio entry point, and the shortlist advisory loop."""
+import asyncio
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ann import FlatIndex
+from repro.core import DriftAdapter, FitConfig
+from repro.data import CorpusConfig, make_corpus, make_drift, make_queries
+from repro.data.drift import MILD_TEXT
+from repro.serve import FrontDoor, MicroBatcher, Rejected, VectorStore
+from repro.serve.frontdoor import Coalescer, bucket_rows
+
+# CI shards the fast tier on this marker (see ci.yml)
+pytestmark = pytest.mark.serving
+
+D = 32
+N = 400
+Q = 40
+OP_CFG = FitConfig(kind="op", use_dsm=False)
+
+
+@pytest.fixture(scope="module")
+def world():
+    """corpus_old + two drifted spaces + per-space queries."""
+    ccfg = CorpusConfig(n_items=N, dim=D, n_clusters=20,
+                        spectrum_beta=1.0, seed=0)
+    corpus_old, _ = make_corpus(ccfg)
+    base = dataclasses.replace(MILD_TEXT, d_old=D, d_new=D)
+    drift_v2 = make_drift(base)
+    drift_v3 = make_drift(dataclasses.replace(base, rotation_theta=0.3,
+                                              seed=3))
+    q_raw, _ = make_queries(ccfg, Q)
+    queries = {
+        "v1": np.asarray(q_raw, np.float32),
+        "v2": np.asarray(drift_v2(q_raw, 1), np.float32),
+        "v3": np.asarray(drift_v3(q_raw, 1), np.float32),
+    }
+    corpora = {
+        "v1": corpus_old,
+        "v2": drift_v2(corpus_old, 0),
+        "v3": drift_v3(corpus_old, 0),
+    }
+    return corpora, queries
+
+
+def _store(world, state="mixed", backend="fused", precision="fp32",
+           third_space=True):
+    """A VectorStore in one serving state: 'native' (no upgrade live),
+    'bridged' (deployed, zero rows migrated), or 'mixed' (40 % migrated,
+    inverse edge live; plus a third space v3 when requested)."""
+    corpora, _ = world
+    store = VectorStore(
+        FlatIndex(corpus=corpora["v1"], backend=backend),
+        version="v1", precision=precision,
+    )
+    store.attach_telemetry()
+    if state == "native":
+        return store
+    corpus_v2 = corpora["v2"]
+    h = store.upgrade(
+        "v2", corpus_new_provider=lambda ids: corpus_v2[jnp.asarray(ids)]
+    )
+    h.fit(corpus_v2, corpora["v1"], config=OP_CFG)
+    h.deploy()
+    if state == "mixed":
+        h.migrate_batch(int(N * 0.4))
+        if third_space:
+            store.registry.add_version("v3", D)
+            store.registry.register_edge("v3", "v1", DriftAdapter.fit(
+                corpora["v3"], corpora["v1"], config=OP_CFG,
+            ))
+    return store
+
+
+def _spaces_for(state, third_space=True):
+    if state == "native":
+        return ("v1",)
+    if state == "bridged":
+        return ("v2", "v1")
+    return ("v2", "v1", "v3") if third_space else ("v2", "v1")
+
+
+def _submit_stream(door, world, spaces, n, k=10, **kw):
+    _, queries = world
+    reqs = []
+    for i in range(n):
+        space = spaces[i % len(spaces)]
+        q = queries[space][i % Q]
+        reqs.append(door.submit(q, space=space, k=k, **kw))
+    return reqs
+
+
+def _assert_parity(store, requests, k=10):
+    """Every coalesced row must be bit-identical to a solo search."""
+    for r in requests:
+        ref = store.search(jnp.asarray(r.embedding[None]), k=k,
+                           space=r.space)
+        np.testing.assert_array_equal(r.result.ids, np.asarray(ref.ids[0]))
+        np.testing.assert_array_equal(
+            r.result.scores, np.asarray(ref.scores[0])
+        )
+
+
+class TestParityMatrix:
+    """Coalesced == solo, bit for bit, across space × migration state ×
+    precision — the front door's core contract."""
+
+    @pytest.mark.parametrize("state", ["native", "bridged", "mixed"])
+    @pytest.mark.parametrize("precision", ["fp32", "int8"])
+    def test_bit_identical_across_matrix(self, world, state, precision):
+        store = _store(world, state=state, precision=precision)
+        door = FrontDoor(store)
+        spaces = _spaces_for(state)
+        reqs = _submit_stream(door, world, spaces, n=18)
+        summary = door.drain()
+        assert summary["groups"] == len(spaces)
+        assert summary["dispatches"] == len(spaces)
+        assert all(r.result.ok for r in reqs)
+        _assert_parity(store, reqs)
+
+    def test_mixed_paths_and_plan_keys(self, world):
+        """The mid-migration mix really exercises three distinct serving
+        routes, and each result reports the plan key it rode."""
+        store = _store(world, state="mixed")
+        door = FrontDoor(store)
+        reqs = _submit_stream(door, world, ("v2", "v1", "v3"), n=12)
+        door.drain()
+        paths = {r.result.path for r in reqs}
+        # the inverse edge is the pseudo-inverse of the deployed op
+        # adapter, which reports the generic "linear" kind
+        assert paths == {
+            "mixed:op", "inverse-mixed:linear", "mixed-bridged:op",
+        }
+        keys = {r.result.plan_key for r in reqs}
+        assert len(keys) == 3
+        for r in reqs:
+            assert r.result.plan_key == store.plan_key(space=r.space, k=10)
+
+
+class TestLaunchCount:
+    """G distinct plan groups in a drain ⇒ exactly G plan executions."""
+
+    def test_four_plan_stream_four_executions(self, world, monkeypatch):
+        """The acceptance scenario: a heterogeneous 4-plan stream (three
+        spaces, two k widths on v2) drains in exactly 4 coalesced plan
+        executions — telemetry-counted AND pallas_call-counted. Distinct
+        k per group forces distinct traces, so the launch counter cannot
+        be flattered by trace-cache hits across groups."""
+        import jax
+        from jax.experimental import pallas as real_pl
+
+        store = _store(world, state="mixed")
+        door = FrontDoor(store)
+        _, queries = world
+        plan_mix = [("v2", 10), ("v2", 7), ("v1", 9), ("v3", 5)]
+        reqs = []
+        for i in range(16):
+            space, k = plan_mix[i % 4]
+            reqs.append(door.submit(queries[space][i % Q], space=space, k=k))
+
+        jax.clear_caches()
+        launches = []
+        orig = real_pl.pallas_call
+
+        def counting(kernel, *a, **kw):
+            launches.append(getattr(kernel, "func", kernel).__name__)
+            return orig(kernel, *a, **kw)
+
+        monkeypatch.setattr(real_pl, "pallas_call", counting)
+        plans_before = store.telemetry.plans_executed
+        summary = door.drain()
+        plan_executions = store.telemetry.plans_executed - plans_before
+
+        assert summary["groups"] == 4
+        assert summary["dispatches"] == 4
+        assert plan_executions == 4
+        # mixed flat is a one-launch kernel, so 4 plans = 4 pallas calls
+        assert len(launches) == 4
+        for r in reqs:
+            assert r.result.ok
+        _assert_parity(store, [r for r in reqs if r.k == 10], k=10)
+
+    def test_same_plan_two_k_values_not_coalesced(self, world):
+        """k is part of the plan key — a different top-k width is a
+        different launch shape and must not share a group."""
+        store = _store(world, state="native")
+        assert store.plan_key(space="v1", k=10) != store.plan_key(
+            space="v1", k=5
+        )
+        door = FrontDoor(store)
+        _, queries = world
+        a = [door.submit(queries["v1"][i], k=10) for i in range(4)]
+        b = [door.submit(queries["v1"][i], k=5) for i in range(4)]
+        summary = door.drain()
+        assert summary["groups"] == 2
+        _assert_parity(store, a, k=10)
+        _assert_parity(store, b, k=5)
+
+
+class TestPadding:
+    """q_valid padding: odd group sizes ride the engine's 128-row tile
+    quantization and stay bit-identical."""
+
+    def test_bucket_rows_rule(self):
+        assert bucket_rows(1) == 128
+        assert bucket_rows(5) == 128
+        assert bucket_rows(128) == 128
+        assert bucket_rows(129) == 256
+
+    @pytest.mark.parametrize("n", [1, 5, 129])
+    def test_odd_group_sizes(self, world, n):
+        store = _store(world, state="mixed", third_space=False)
+        door = FrontDoor(store, max_depth=2 * n)
+        _, queries = world
+        reqs = [
+            door.submit(queries["v2"][i % Q], space="v2") for i in range(n)
+        ]
+        summary = door.drain()
+        assert summary["groups"] == 1
+        assert summary["dispatches"] == 1       # 129 ≤ max_batch=256
+        _assert_parity(store, reqs)
+
+    def test_max_batch_chunking_preserves_fifo(self, world):
+        store = _store(world, state="native")
+        door = FrontDoor(store, max_batch=4)
+        _, queries = world
+        reqs = [door.submit(queries["v1"][i % Q]) for i in range(9)]
+        summary = door.drain()
+        assert summary["groups"] == 1            # one plan...
+        assert summary["dispatches"] == 3        # ...three ≤4-row chunks
+        _assert_parity(store, reqs)
+
+
+class TestAdmission:
+    def test_queue_depth_bound(self, world):
+        store = _store(world, state="native")
+        door = FrontDoor(store, max_depth=4)
+        _, queries = world
+        reqs = [door.submit(queries["v1"][i % Q]) for i in range(6)]
+        refused = [r for r in reqs if r.done and not r.result.ok]
+        assert len(refused) == 2
+        assert all(r.result.reason == "queue_full" for r in refused)
+        door.drain()
+        rollup = door.slo_rollup()
+        assert rollup["offered"] == 6
+        assert rollup["completed"] == 4
+        assert rollup["rejected"] == {"queue_full": 2}
+        assert rollup["conservation_ok"]
+
+    def test_tenant_fairness_under_saturation(self, world):
+        """One flooding tenant exhausts its OWN bucket; the well-behaved
+        tenant's requests keep landing."""
+        store = _store(world, state="native")
+        door = FrontDoor(store, tenant_rate=1000.0, tenant_burst=2.0)
+        _, queries = world
+        t = time.perf_counter()     # freeze the clock: no refill mid-test
+        flood = [
+            door.submit(queries["v1"][i % Q], tenant="flood", now=t)
+            for i in range(10)
+        ]
+        good = [
+            door.submit(queries["v1"][i], tenant="good", now=t)
+            for i in range(2)
+        ]
+        throttled = [r for r in flood if r.done]
+        assert len(throttled) == 8
+        assert all(
+            r.result.reason == "tenant_throttled" for r in throttled
+        )
+        assert not any(r.done for r in good)     # all admitted
+        door.drain()
+        rollup = door.slo_rollup()
+        assert rollup["by_tenant"]["flood"] == {
+            "offered": 10, "completed": 2, "rejected": 8,
+        }
+        assert rollup["by_tenant"]["good"] == {
+            "offered": 2, "completed": 2, "rejected": 0,
+        }
+        assert rollup["conservation_ok"]
+        assert store.telemetry.admission["reject:tenant_throttled"] == 8
+        assert store.telemetry.admission["admitted"] == 4
+
+    def test_deadline_dead_on_arrival(self, world):
+        store = _store(world, state="native")
+        door = FrontDoor(store)
+        _, queries = world
+        r = door.submit(queries["v1"][0], deadline_s=-0.001)
+        assert r.done and not r.result.ok
+        assert r.result.reason == "deadline"
+        assert door.depth == 0
+
+    def test_deadline_shed_at_drain(self, world):
+        """A request whose deadline passes while queued is shed at drain
+        time with an explicit Rejected — never a silent drop."""
+        store = _store(world, state="native")
+        door = FrontDoor(store)
+        _, queries = world
+        # stamp the enqueue 1s in the past: admitted (deadline was ahead
+        # of the stamped clock) but expired by the time the drain runs
+        stale = door.submit(
+            queries["v1"][0], deadline_s=0.005,
+            now=time.perf_counter() - 1.0,
+        )
+        live = door.submit(queries["v1"][1], deadline_s=60.0)
+        assert not stale.done
+        summary = door.drain()
+        assert summary["shed"] == 1
+        assert isinstance(stale.result, Rejected)
+        assert stale.result.reason == "deadline"
+        assert live.result.ok
+        rollup = door.slo_rollup()
+        assert rollup["rejected"] == {"deadline": 1}
+        assert rollup["goodput"] == 0.5
+        assert rollup["conservation_ok"]
+
+
+class TestAsyncFrontDoor:
+    def test_concurrent_awaits_coalesce(self, world):
+        """Concurrent door.search() callers coalesce into one launch and
+        each get their own bit-identical row."""
+        store = _store(world, state="mixed", third_space=False)
+        door = FrontDoor(store)
+        _, queries = world
+
+        async def scenario():
+            results = await asyncio.gather(*[
+                door.search(queries["v2"][i], space="v2", k=10)
+                for i in range(8)
+            ])
+            await door.close()
+            return results
+
+        results = asyncio.run(scenario())
+        assert all(r.ok for r in results)
+        assert door.scheduler.dispatches == 1
+        for i, r in enumerate(results):
+            ref = store.search(
+                jnp.asarray(queries["v2"][i][None]), k=10, space="v2"
+            )
+            np.testing.assert_array_equal(r.ids, np.asarray(ref.ids[0]))
+
+    def test_async_rejection_resolves_future(self, world):
+        store = _store(world, state="native")
+        door = FrontDoor(store, max_depth=1)
+
+        async def scenario():
+            _, queries = world
+            a = door.search(queries["v1"][0])
+            b = door.search(queries["v1"][1])   # over depth -> Rejected
+            ra, rb = await asyncio.gather(a, b)
+            await door.close()
+            return ra, rb
+
+        ra, rb = asyncio.run(scenario())
+        assert ra.ok
+        assert not rb.ok and rb.reason == "queue_full"
+
+
+class TestShortlistAdvisor:
+    """audit_shortlist / suggest_shortlist_k: telemetry-driven, advisory
+    only — never mutates serving behavior."""
+
+    def test_audit_and_suggest_int8(self):
+        # tiny dedicated world: the exact reference runs at shortlist_k=N,
+        # which interpret-mode rescore makes expensive at module scale
+        n, d = 96, 16
+        ccfg = CorpusConfig(n_items=n, dim=d, n_clusters=12,
+                            spectrum_beta=1.0, seed=0)
+        corpus, _ = make_corpus(ccfg)
+        q, _ = make_queries(ccfg, 8)
+        store = VectorStore(
+            FlatIndex(corpus=corpus, backend="fused"),
+            version="v1", precision="int8",
+        )
+        store.attach_telemetry()
+        before = store.telemetry.plans_executed
+        rates = store.audit_shortlist(jnp.asarray(q), k=10, widths=[20, n])
+        # audit probes are not served traffic: counters must not move
+        assert store.telemetry.plans_executed == before
+        assert rates[n] == 1.0       # full-width shortlist == exact
+        assert store.telemetry.shortlist_parity_rates()[n] == 1.0
+        suggestion = store.suggest_shortlist_k(k=10, target=1.0)
+        assert suggestion in rates and rates[suggestion] == 1.0
+        assert suggestion == min(
+            w for w, rate in rates.items() if rate == 1.0
+        )
+        assert store.shortlist_k is None      # advisory: nothing applied
+
+    def test_fp32_store_is_noop(self, world):
+        corpora, queries = world
+        store = VectorStore(FlatIndex(corpus=corpora["v1"]), version="v1")
+        assert store.audit_shortlist(jnp.asarray(queries["v1"])) == {}
+        assert store.suggest_shortlist_k() is None
+
+
+class TestMicroBatcherShim:
+    def test_rides_shared_coalescer(self, world):
+        """MicroBatcher is a shim over the front door's Coalescer with its
+        historical pow2 padding rule — same results, one implementation."""
+        corpora, queries = world
+        mb = MicroBatcher(dim=D, max_batch=32)
+        assert isinstance(mb._coalescer, Coalescer)
+        assert mb._coalescer.bucket_fn(5) == 8       # pow2, not 128-tile
+        for i in range(7):
+            mb.submit(queries["v1"][i])
+        index = FlatIndex(corpus=corpora["v1"])
+        out = mb.drain(lambda q, k: index.search(q, k=k), k=10)
+        ref_s, ref_i = index.search(jnp.asarray(queries["v1"][:7]), k=10)
+        for rid in range(7):
+            np.testing.assert_array_equal(out[rid][1], np.asarray(ref_i[rid]))
+            np.testing.assert_array_equal(out[rid][0], np.asarray(ref_s[rid]))

@@ -246,6 +246,39 @@ class TestGovernor:
         assert actions.count("resume_migration") == 1
         assert gov.summary()["rollbacks"] == 0
 
+    def test_alert_feed_severities_and_jsonl(self, world, tmp_path):
+        """Every acted-on breach emits a page-style alert: pause is a
+        warn, refit a page, recovery an info — mirrored to the JSONL feed
+        line for line, each naming the breached signal + threshold."""
+        from repro.obs import AlertSink
+
+        store, h, gov = _governed(world, cooldown_ticks=3,
+                                  rollback_on_floor=False)
+        path = tmp_path / "alerts.jsonl"
+        gov.alert_sink = AlertSink(str(path))
+        garbage = _garbage_queries()
+        for _ in range(3):                      # sustained breach
+            gov.step(probe_queries=garbage)
+        gov.step()                              # healthy canaries: recovery
+        sink = gov.alert_sink
+        by_action = {a.action: a.severity for a in sink.alerts}
+        assert by_action["pause_migration"] == "warn"
+        assert by_action["refit"] == "page"
+        assert by_action["resume_migration"] == "info"
+        counts = sink.count_by_severity()
+        assert counts["page"] >= 1 and counts["warn"] == 1
+        for a in sink.alerts:
+            assert a.signal in ("recall_delta", "score_kl")
+            assert a.threshold != 0.0
+        # silent ticks page nobody: alerts only on acted-on transitions
+        n = len(sink.alerts)
+        gov.step()                              # healthy, nothing to do
+        assert len(sink.alerts) == n
+        lines = [
+            json.loads(line) for line in path.read_text().splitlines()
+        ]
+        assert lines == sink.to_dicts()
+
     def test_pause_resume_preserves_last_migrated_ids(self, world):
         store, h, _ = _governed(world, manager=False)
         h.migrate_batch(100)
