@@ -1,0 +1,300 @@
+"""Mixed read/write open-loop workload for the mutable index → BENCH_stream.json.
+
+The streaming counterpart of ``serving_load``: one Poisson arrival process
+carries BOTH reads and writes (every 4th event is an insert/delete/upsert,
+cycled) into one :class:`FrontDoor`, so mutations ride the scheduler's
+write lane and serialize against each drain's reads without ever blocking
+read coalescing. A Python-side value model (id → the exact row the store
+must serve) mirrors every applied write; the phases gate on it:
+
+* **mixed load** (hard): zero silent drops (offered == completed +
+  rejected), every write ticket applied without error, and write
+  throughput recorded; latencies are interpret-advisory.
+* **post-load parity** (hard): after the stream drains, a probe batch must
+  be BIT-IDENTICAL to the brute-force fp32 re-scan of the model — wrong
+  values, slots, or liveness bits all diverge here.
+* **mid-stream compaction** (hard): a ``compact()`` queued on the write
+  lane must renumber ids, reject the reads queued behind it explicitly as
+  ``stale_revision`` (never serve renumbered ids silently), and the
+  re-scan after the id remap must hold recall parity ≥ 0.99 vs the model
+  (measured bit-exact).
+* **occupancy/tombstone stats**: ``write_stats`` before/after compaction
+  — the telemetry gauge the auto-compaction trigger reads.
+
+    PYTHONPATH=src python -m benchmarks.streaming_writes --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.ann import FlatIndex, recall_at_k
+from repro.kernels.mixed_scan.ref import masked_topk_scan
+from repro.serve import FrontDoor, VectorStore
+
+WRITE_EVERY = 4                      # every 4th event mutates
+WRITE_KINDS = ("insert", "delete", "upsert")
+
+
+def _unit(x):
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def build_world(items: int, dim: int, n_queries: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    corpus = _unit(rng.standard_normal((items, dim)).astype(np.float32))
+    queries = _unit(rng.standard_normal((n_queries, dim)).astype(np.float32))
+    store = VectorStore(
+        FlatIndex(corpus=jnp.asarray(corpus), backend="fused"),
+        version="v1",
+    )
+    store.attach_telemetry()
+    model = {i: corpus[i] for i in range(items)}
+    return rng, store, model, queries
+
+
+def oracle_search(model: dict, size: int, dim: int, queries, k: int):
+    """Brute-force fp32 re-scan of the value model (the jnp reference the
+    kernels are bit-tested against in tests/test_streaming.py)."""
+    buf = np.zeros((size, dim), np.float32)
+    keep = np.zeros(size, bool)
+    for i, r in model.items():
+        buf[i], keep[i] = r, True
+    return masked_topk_scan(
+        jnp.asarray(queries), jnp.asarray(buf), jnp.asarray(keep), k
+    )
+
+
+def apply_write_result(model: dict, kind: str, ticket, payload) -> None:
+    """Mirror one applied write ticket into the value model."""
+    if ticket.error is not None:
+        raise SystemExit(f"stream gate: {kind} write failed: {ticket.error}")
+    if kind == "insert":
+        for j, r in zip(np.asarray(ticket.result).tolist(), payload):
+            model[int(j)] = r
+    elif kind == "delete":
+        for j in payload:
+            model.pop(int(j), None)
+    else:
+        ids, rows = payload
+        for j, r in zip(ids, rows):
+            model[int(j)] = r
+
+
+def run_mixed_open_loop(
+    door, store, model, queries, n_events: int, rate: float, k: int,
+    rng, dim: int,
+) -> dict:
+    """One open-loop arm: Poisson arrivals, every WRITE_EVERY-th event a
+    mutation on the write lane, the rest coalesced reads."""
+    arrivals = rng.exponential(1.0 / rate, n_events).cumsum()
+    pending_writes: list[tuple[str, object, object]] = []
+    write_count = {kind: 0 for kind in WRITE_KINDS}
+    t0 = time.perf_counter()
+    i = 0
+    while i < n_events or door.depth > 0 or pending_writes:
+        now = time.perf_counter() - t0
+        while i < n_events and arrivals[i] <= now:
+            if i % WRITE_EVERY == 0:
+                kind = WRITE_KINDS[(i // WRITE_EVERY) % len(WRITE_KINDS)]
+                live = sorted(model)
+                if kind == "insert" or len(live) < 2 * k:
+                    rows = _unit(
+                        rng.standard_normal((2, dim)).astype(np.float32)
+                    )
+                    pending_writes.append(
+                        ("insert", door.insert(rows), rows)
+                    )
+                    write_count["insert"] += 1
+                elif kind == "delete":
+                    ids = rng.choice(live, size=2, replace=False).tolist()
+                    pending_writes.append(("delete", door.delete(ids), ids))
+                    write_count["delete"] += 1
+                else:
+                    ids = rng.choice(live, size=2, replace=False).tolist()
+                    rows = _unit(
+                        rng.standard_normal((2, dim)).astype(np.float32)
+                    )
+                    pending_writes.append(
+                        ("upsert", door.upsert(ids, rows), (ids, rows))
+                    )
+                    write_count["upsert"] += 1
+            else:
+                q = queries[i % queries.shape[0]]
+                door.submit(q, k=k, now=t0 + arrivals[i])
+            i += 1
+        if door.depth or pending_writes:
+            door.drain()
+            # every queued write ran at the head of that drain
+            for kind, ticket, payload in pending_writes:
+                apply_write_result(model, kind, ticket, payload)
+            pending_writes.clear()
+        elif i < n_events:
+            time.sleep(min(max(arrivals[i] - now, 0.0), 0.01))
+    duration = time.perf_counter() - t0
+    rollup = door.slo_rollup()
+    writes_total = sum(write_count.values())
+    rollup.update({
+        "duration_s": duration,
+        "writes": write_count,
+        "writes_total": writes_total,
+        "write_throughput_rps": writes_total / duration,
+        "offered_rate": rate,
+    })
+    return rollup
+
+
+def run_parity_probe(store, model, queries, k: int) -> dict:
+    """Hard gate: served results == the model's brute-force re-scan."""
+    s_ref, i_ref = oracle_search(
+        model, int(store.index.size), int(store.index.dim), queries, k
+    )
+    res = store.search(jnp.asarray(queries), k=k)
+    ids_ok = bool(np.array_equal(np.asarray(res.ids), np.asarray(i_ref)))
+    scores_ok = bool(np.allclose(
+        np.asarray(res.scores), np.asarray(s_ref), atol=1e-5
+    ))
+    return {
+        "checked": int(queries.shape[0]),
+        "bit_identical": ids_ok and scores_ok,
+        "recall_vs_model": float(recall_at_k(res.ids, i_ref)),
+    }
+
+
+def run_compaction_phase(door, store, model, queries, k: int) -> dict:
+    """Queue compact() on the write lane with reads behind it: the stale
+    reads must be rejected explicitly, ids renumber, parity must hold."""
+    # guarantee real tombstones going in (the mixed stream's inserts may
+    # have refilled every slot its deletes freed)
+    doomed = sorted(model)[: max(2, len(model) // 10)]
+    drop = door.delete(doomed)
+    door.drain()
+    apply_write_result(model, "delete", drop, doomed)
+
+    stats_before = store.write_stats()
+    ticket = door.compact()
+    stale_reads = [door.submit(q, k=k) for q in queries[:8]]
+    summary = door.drain()
+    if ticket.error is not None:
+        raise SystemExit(f"stream gate: compact failed: {ticket.error}")
+    kept = np.asarray(ticket.result)
+    remap = {int(o): n for n, o in enumerate(kept)}
+    renumbered = {remap[i]: r for i, r in model.items()}
+    model.clear()
+    model.update(renumbered)
+    stale_rejected = sum(
+        1 for r in stale_reads
+        if not r.result.ok and r.result.reason == "stale_revision"
+    )
+    # the rejected reads resubmit cleanly against the new revision
+    retry = [door.submit(q, k=k) for q in queries[:8]]
+    door.drain()
+    parity = run_parity_probe(store, model, queries, k)
+    return {
+        "tombstone_ratio_before": stats_before["tombstone_ratio"],
+        "capacity_before": stats_before["capacity"],
+        "capacity_after": store.write_stats()["capacity"],
+        "index_revision": store.index_revision,
+        "stale_rejected": stale_rejected,
+        "drain_stale": summary["stale"],
+        "retries_ok": all(r.result.ok for r in retry),
+        "recall_parity": parity["recall_vs_model"],
+        "bit_identical": parity["bit_identical"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: 2k items, dim 64, short stream")
+    ap.add_argument("--items", type=int, default=None)
+    ap.add_argument("--dim", type=int, default=None)
+    ap.add_argument("--events", type=int, default=None,
+                    help="arrivals in the mixed read/write stream")
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+    items = args.items or (2_000 if args.smoke else 20_000)
+    dim = args.dim or (64 if args.smoke else 256)
+    n_events = args.events or (240 if args.smoke else 800)
+
+    rng, store, model, queries = build_world(items, dim, n_queries=32)
+    door = FrontDoor(store, max_depth=16 * n_events)
+
+    # capacity probe (also warms the serving plan trace)
+    t0 = time.perf_counter()
+    store.search(jnp.asarray(queries), k=args.k)
+    capacity = max(32.0, 32.0 / (time.perf_counter() - t0))
+
+    load = run_mixed_open_loop(
+        door, store, model, queries, n_events=n_events,
+        rate=capacity, k=args.k, rng=rng, dim=dim,
+    )
+    emit("stream_mixed_load", load["total_p50_ms"] * 1e3,
+         load["write_throughput_rps"])
+    print(f"# load: writes={load['writes_total']} "
+          f"({load['write_throughput_rps']:.0f}/s) "
+          f"reads_completed={load['completed']} "
+          f"p50={load['total_p50_ms']:.1f}ms "
+          f"conservation_ok={load['conservation_ok']}")
+
+    parity = run_parity_probe(store, model, queries, args.k)
+    emit("stream_parity", 0.0, parity["recall_vs_model"])
+    print(f"# parity: bit_identical={parity['bit_identical']} "
+          f"recall={parity['recall_vs_model']:.3f}")
+
+    compaction = run_compaction_phase(door, store, model, queries, args.k)
+    emit("stream_compaction", 0.0, compaction["recall_parity"])
+    print(f"# compaction: ratio_before="
+          f"{compaction['tombstone_ratio_before']:.3f} "
+          f"stale_rejected={compaction['stale_rejected']} "
+          f"recall_parity={compaction['recall_parity']:.3f}")
+
+    save_json("BENCH_stream", {
+        "config": {
+            "items": items, "dim": dim, "events": n_events, "k": args.k,
+            "write_every": WRITE_EVERY,
+            "capacity_probe_rps": capacity,
+            "platform": jax.default_backend(),
+        },
+        "caveat": (
+            "CPU interpret-mode latencies; re-measure on real TPU"
+            if jax.default_backend() == "cpu" else ""
+        ),
+        "load": load,
+        "parity": parity,
+        "compaction": compaction,
+        "write_stats": store.write_stats(),
+        "telemetry": store.telemetry.counters(),
+    })
+    print("wrote BENCH_stream.json")
+
+    # the benchmark's own hard gates (CI re-asserts via check_bench)
+    if not load["conservation_ok"]:
+        raise SystemExit("stream gate: mixed arm dropped requests silently")
+    if load["writes_total"] < 1 or load["write_throughput_rps"] <= 0:
+        raise SystemExit("stream gate: no writes applied")
+    if not parity["bit_identical"]:
+        raise SystemExit(
+            "stream gate: post-load serving diverged from the value model"
+        )
+    if compaction["stale_rejected"] < 1:
+        raise SystemExit(
+            "stream gate: reads queued behind compact() were not "
+            "rejected as stale_revision"
+        )
+    if compaction["recall_parity"] < 0.99:
+        raise SystemExit(
+            f"stream gate: post-compaction recall parity "
+            f"{compaction['recall_parity']:.3f} < 0.99"
+        )
+    if not compaction["retries_ok"]:
+        raise SystemExit("stream gate: post-compaction resubmits failed")
+
+
+if __name__ == "__main__":
+    main()

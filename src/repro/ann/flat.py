@@ -24,18 +24,41 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 BACKENDS = ("jnp", "pallas", "fused")
+
+# capacity growth: at least 1.5×, rounded up to the 128-lane tile so the
+# engine's block geometry (and the int8 32-row min tile) always divides
+_GROW_TILE = 128
+
+
+def _grown_capacity(n: int, need: int) -> int:
+    target = max(n + need, int(n * 1.5))
+    return -(-target // _GROW_TILE) * _GROW_TILE
 
 
 @partial(jax.jit, static_argnames=("k", "block_rows"))
 def flat_search_jnp(
-    corpus: jax.Array, queries: jax.Array, k: int, block_rows: int = 65536
+    corpus: jax.Array,
+    queries: jax.Array,
+    k: int,
+    block_rows: int = 65536,
+    alive: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Exact top-k inner-product search. corpus (N,d), queries (Q,d).
 
     Returns (scores (Q,k), ids (Q,k)) sorted by descending score.
+    ``alive`` (a (N,) tombstone mask from a mutable index) excludes dead
+    and free slots — those rows NEG-mask *before* the per-block top-k and
+    emit -1 ids, exactly matching the ``_ts`` kernel variants.
     """
+    if alive is not None:
+        from repro.kernels.mixed_scan.ref import masked_topk_scan
+
+        return masked_topk_scan(
+            queries, corpus, alive.astype(bool), k, block_rows
+        )
     n, d = corpus.shape
     q = queries.shape[0]
     block_rows = min(block_rows, n)
@@ -84,7 +107,17 @@ class FlatIndex:
     corpus viewed as fp32 "virtual cells" (``rcells``/``rcell_ids``) so
     the exact shortlist rescore reuses the engine's IVF layout.
     ``replace_rows`` keeps every piece in sync — mid-migration mixed
-    scans stay quantized."""
+    scans stay quantized.
+
+    **Mutability.** ``insert_rows`` / ``delete_rows`` / ``upsert_rows``
+    make the index writable: a row's id IS its slot, slots of deleted rows
+    are reused by later inserts, and capacity over-allocates (1.5×,
+    128-row tiles) so appends are amortized O(1). The first mutation
+    attaches the ``alive`` tombstone plane; while it is present every
+    compiled plan serves the ``_ts`` kernel variants (dead/free slots
+    NEG-masked in the select stage — same launch count). ``compact()``
+    densifies ids, drops the plane, and reverts the plans to the original
+    kernel names."""
 
     corpus: jax.Array                     # (N, d) float32, unit rows
     backend: str = "jnp"                  # "jnp" | "pallas" | "fused"
@@ -94,6 +127,8 @@ class FlatIndex:
     rcells: jax.Array | None = None       # (C, cap, d) f32 virtual cells
     rcell_ids: jax.Array | None = None    # (C, cap) int32, -1 = pad
     id_to_cell: jax.Array | None = None   # (N,) int32 — id // cap
+    alive: jax.Array | None = None        # (N,) int32 tombstones; None =
+                                          # immutable (all rows live)
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -113,6 +148,17 @@ class FlatIndex:
     def quantized(self) -> bool:
         return self.codes is not None
 
+    @property
+    def live_count(self) -> int:
+        """Rows that are actually searchable (size minus tombstones)."""
+        if self.alive is None:
+            return self.size
+        return int(jnp.sum(self.alive > 0))
+
+    @property
+    def has_tombstones(self) -> bool:
+        return self.alive is not None
+
     def quantize(self, cap: int = 128) -> "FlatIndex":
         """Attach the int8 serving representation (one-time, like a build).
 
@@ -128,12 +174,17 @@ class FlatIndex:
         n_cells = -(-n // cap)
         padded = jnp.pad(self.corpus, ((0, n_cells * cap - n), (0, 0)))
         ids = jnp.arange(n_cells * cap, dtype=jnp.int32)
+        valid = ids < n
+        if self.alive is not None:
+            # dead slots blank to -1 in the rescore layout too, matching
+            # the first pass's alive-plane mask
+            valid = valid & (self.alive[jnp.clip(ids, 0, n - 1)] > 0)
         return dataclasses.replace(
             self,
             codes=codes,
             code_scales=scales,
             rcells=padded.reshape(n_cells, cap, d),
-            rcell_ids=jnp.where(ids < n, ids, -1).reshape(n_cells, cap),
+            rcell_ids=jnp.where(valid, ids, -1).reshape(n_cells, cap),
             id_to_cell=jnp.arange(n, dtype=jnp.int32) // cap,
         )
 
@@ -223,3 +274,163 @@ class FlatIndex:
             code_scales=self.code_scales.at[ids].set(scales),
             rcells=self.rcells.at[ids // cap, ids % cap].set(rows),
         )
+
+    # ---- streaming mutation surface (insert / delete / upsert / compact)
+
+    def _alive_np(self) -> np.ndarray:
+        if self.alive is None:
+            return np.ones((self.size,), bool)
+        return np.asarray(self.alive) > 0
+
+    def _with_alive(self) -> "FlatIndex":
+        """Attach the tombstone plane (flips the plans onto ``_ts``)."""
+        if self.alive is not None:
+            return self
+        return dataclasses.replace(
+            self, alive=jnp.ones((self.size,), jnp.int32)
+        )
+
+    def _grow(self, new_cap: int) -> "FlatIndex":
+        """Over-allocate to ``new_cap`` slots; the grown tail is free
+        (alive = 0), so the tombstone plane masks it until inserts land."""
+        idx = self._with_alive()
+        n, d = idx.corpus.shape
+        pad = new_cap - n
+        if pad <= 0:
+            return idx
+        out = dataclasses.replace(
+            idx,
+            corpus=jnp.concatenate(
+                [idx.corpus, jnp.zeros((pad, d), idx.corpus.dtype)]
+            ),
+            alive=jnp.concatenate(
+                [idx.alive.astype(jnp.int32), jnp.zeros((pad,), jnp.int32)]
+            ),
+        )
+        if idx.codes is None:
+            return out
+        cap = idx.rcell_ids.shape[1]
+        n_cells = -(-new_cap // cap)
+        rflat = idx.rcells.reshape(-1, d)
+        iflat = idx.rcell_ids.reshape(-1)
+        extra = n_cells * cap - rflat.shape[0]
+        return dataclasses.replace(
+            out,
+            codes=jnp.concatenate(
+                [idx.codes, jnp.zeros((pad, d), idx.codes.dtype)]
+            ),
+            code_scales=jnp.concatenate(
+                [idx.code_scales, jnp.ones((pad,), idx.code_scales.dtype)]
+            ),
+            rcells=jnp.concatenate(
+                [rflat, jnp.zeros((extra, d), rflat.dtype)]
+            ).reshape(n_cells, cap, d),
+            rcell_ids=jnp.concatenate(
+                [iflat, jnp.full((extra,), -1, jnp.int32)]
+            ).reshape(n_cells, cap),
+            id_to_cell=jnp.arange(new_cap, dtype=jnp.int32) // cap,
+        )
+
+    def _write_slots(self, ids, rows: jax.Array) -> "FlatIndex":
+        """Land payload rows at slots ``ids`` and mark them live, keeping
+        the int8 codes and the rescore's virtual-cell view slot-synced."""
+        jids = jnp.asarray(np.asarray(ids, np.int32))
+        idx = self._with_alive()
+        out = dataclasses.replace(
+            idx,
+            corpus=idx.corpus.at[jids].set(rows),
+            alive=idx.alive.at[jids].set(1),
+        )
+        if idx.codes is None:
+            return out
+        from repro.kernels.engine.core import quantize_rows
+
+        codes, scales = quantize_rows(rows)
+        cap = idx.rcell_ids.shape[1]
+        return dataclasses.replace(
+            out,
+            codes=idx.codes.at[jids].set(codes),
+            code_scales=idx.code_scales.at[jids].set(scales),
+            rcells=idx.rcells.at[jids // cap, jids % cap].set(rows),
+            rcell_ids=idx.rcell_ids.at[jids // cap, jids % cap].set(jids),
+        )
+
+    def insert_rows(
+        self, rows: jax.Array
+    ) -> tuple["FlatIndex", np.ndarray]:
+        """Insert new rows; returns ``(index, assigned_ids)``.
+
+        Free slots (deleted rows, over-allocated tail) are reused
+        lowest-id first; when none remain the corpus grows 1.5× in
+        128-row tiles. Ids are slot positions and stay stable until
+        ``compact()``."""
+        rows = jnp.atleast_2d(jnp.asarray(rows, self.corpus.dtype))
+        if rows.shape[1] != self.dim:
+            raise ValueError(
+                f"insert rows have dim {rows.shape[1]}, index dim {self.dim}"
+            )
+        m = rows.shape[0]
+        idx = self._with_alive()
+        free = np.flatnonzero(~idx._alive_np())
+        if free.size < m:
+            idx = idx._grow(_grown_capacity(idx.size, m - free.size))
+            free = np.flatnonzero(~idx._alive_np())
+        ids = free[:m].astype(np.int32)
+        return idx._write_slots(ids, rows), ids
+
+    def delete_rows(self, ids) -> "FlatIndex":
+        """Tombstone rows by id. Slots free for reuse immediately; the
+        payload stays (NEG-masked in-kernel) until ``compact()``. Raises
+        ``KeyError`` for ids that are out of range or already dead."""
+        ids_np = np.atleast_1d(np.asarray(ids, np.int64))
+        alive_np = self._alive_np()
+        ok = (ids_np >= 0) & (ids_np < self.size)
+        ok &= alive_np[np.clip(ids_np, 0, self.size - 1)]
+        if not ok.all():
+            missing = ids_np[~ok]
+            raise KeyError(f"row ids not in index: {missing[:5].tolist()} ...")
+        idx = self._with_alive()
+        jids = jnp.asarray(ids_np.astype(np.int32))
+        out = dataclasses.replace(idx, alive=idx.alive.at[jids].set(0))
+        if idx.rcell_ids is None:
+            return out
+        cap = idx.rcell_ids.shape[1]
+        return dataclasses.replace(
+            out,
+            rcell_ids=idx.rcell_ids.at[jids // cap, jids % cap].set(-1),
+        )
+
+    def upsert_rows(self, ids, rows: jax.Array) -> "FlatIndex":
+        """Insert-or-replace at explicit ids: live ids are overwritten in
+        place, dead/free ids revive, ids beyond capacity grow the corpus
+        to cover them."""
+        ids_np = np.atleast_1d(np.asarray(ids, np.int64))
+        if (ids_np < 0).any():
+            raise KeyError(f"negative row ids: {ids_np[ids_np < 0].tolist()}")
+        rows = jnp.atleast_2d(jnp.asarray(rows, self.corpus.dtype))
+        if rows.shape[0] != ids_np.size:
+            raise ValueError("upsert ids/rows length mismatch")
+        idx = self._with_alive()
+        top = int(ids_np.max()) + 1 if ids_np.size else 0
+        if top > idx.size:
+            idx = idx._grow(_grown_capacity(idx.size, top - idx.size))
+        return idx._write_slots(ids_np.astype(np.int32), rows)
+
+    def compact(self) -> tuple["FlatIndex", np.ndarray]:
+        """Drop tombstoned slots and renumber ids densely (old id →
+        position in the returned ``kept_ids``). The alive plane goes away,
+        so compiled plans revert to the non-``_ts`` kernel names; a
+        quantized index re-quantizes the compacted corpus."""
+        if self.alive is None:
+            return self, np.arange(self.size, dtype=np.int32)
+        keep = np.flatnonzero(self._alive_np()).astype(np.int32)
+        if keep.size == 0:
+            raise ValueError("compact would leave an empty index")
+        out = FlatIndex(
+            corpus=self.corpus[jnp.asarray(keep)],
+            backend=self.backend,
+            block_rows=self.block_rows,
+        )
+        if self.quantized:
+            out = out.quantize(cap=self.rcell_ids.shape[1])
+        return out, keep

@@ -136,6 +136,330 @@ class IVFIndex:
             ].set(scales),
         )
 
+    # ---- streaming mutation surface (insert / delete / upsert / compact)
+    #
+    # The engine needs NO tombstone variant for IVF: a freed slot sets its
+    # ``cell_ids`` entry to -1 and the rescore's existing pad mask
+    # (``cand >= 0``) folds it as a no-op — deletes are one scatter. The
+    # per-cell occupancy table (``cell_counts``) is what inserts append
+    # against: free slots in the nearest cell first, spill over the
+    # preference ranks, and a fresh overflow cell when everything is full.
+
+    @property
+    def cell_counts(self) -> np.ndarray:
+        """Per-cell live occupancy — the capacity table inserts append
+        against and the compaction trigger watches."""
+        return (np.asarray(self.cell_ids) >= 0).sum(axis=1).astype(np.int32)
+
+    @property
+    def live_count(self) -> int:
+        return int((np.asarray(self.cell_ids) >= 0).sum())
+
+    @property
+    def has_tombstones(self) -> bool:
+        return self.live_count < self.n_items
+
+    def _free_ids(self) -> np.ndarray:
+        """Ids in [0, n_items) not packed in any cell (deleted → reusable)."""
+        used = np.asarray(self.cell_ids).reshape(-1)
+        mask = np.ones((self.n_items,), bool)
+        mask[used[used >= 0]] = False
+        return np.flatnonzero(mask)
+
+    def _locate(self, ids_np: np.ndarray) -> np.ndarray:
+        """Flat (cell·cap + slot) position of each LIVE id; KeyError on
+        ids that are absent (deleted, never inserted, out of range)."""
+        flat = np.asarray(self.cell_ids).reshape(-1)
+        order = np.argsort(flat, kind="stable")
+        locs = np.minimum(
+            np.searchsorted(flat, ids_np, sorter=order), flat.size - 1
+        )
+        pos = order[locs]
+        if not np.array_equal(flat[pos], ids_np):
+            missing = ids_np[flat[pos] != ids_np]
+            raise KeyError(f"row ids not in index: {missing[:5].tolist()} ...")
+        return pos
+
+    def _scatter(
+        self, pos: np.ndarray, ids_np: np.ndarray, rows: jax.Array
+    ) -> "IVFIndex":
+        """Land payload rows (and their int8 codes) at packed positions
+        ``pos``, claiming those slots for ``ids_np``."""
+        cap = self.capacity
+        pos = jnp.asarray(pos.astype(np.int32))
+        jids = jnp.asarray(ids_np.astype(np.int32))
+        rows = jnp.asarray(rows, self.cells.dtype)
+        out = dataclasses.replace(
+            self,
+            cells=self.cells.at[pos // cap, pos % cap].set(rows),
+            cell_ids=self.cell_ids.at[pos // cap, pos % cap].set(jids),
+        )
+        if self.cell_codes is None:
+            return out
+        from repro.kernels.engine.core import quantize_rows
+
+        codes, scales = quantize_rows(rows)
+        i2c = self.id_to_cell
+        if int(jids.max()) >= i2c.shape[0]:
+            i2c = jnp.concatenate([
+                i2c,
+                jnp.zeros((int(jids.max()) + 1 - i2c.shape[0],), jnp.int32),
+            ])
+        return dataclasses.replace(
+            out,
+            cell_codes=self.cell_codes.at[pos // cap, pos % cap].set(codes),
+            cell_code_scales=self.cell_code_scales.at[
+                pos // cap, pos % cap
+            ].set(scales),
+            id_to_cell=i2c.at[jids].set((pos // cap).astype(jnp.int32)),
+        )
+
+    def _append_cell(self, centroid: np.ndarray) -> "IVFIndex":
+        """Grow by one (empty) overflow cell — the spill target when every
+        preferred cell is at capacity."""
+        d, cap = self.dim, self.capacity
+        out = dataclasses.replace(
+            self,
+            centroids=jnp.concatenate([
+                self.centroids,
+                jnp.asarray(centroid, self.centroids.dtype).reshape(1, d),
+            ]),
+            cells=jnp.concatenate([
+                self.cells, jnp.zeros((1, cap, d), self.cells.dtype)
+            ]),
+            cell_ids=jnp.concatenate([
+                self.cell_ids, jnp.full((1, cap), -1, jnp.int32)
+            ]),
+        )
+        if self.cell_codes is None:
+            return out
+        return dataclasses.replace(
+            out,
+            cell_codes=jnp.concatenate([
+                self.cell_codes,
+                jnp.zeros((1, cap, d), self.cell_codes.dtype),
+            ]),
+            cell_code_scales=jnp.concatenate([
+                self.cell_code_scales,
+                jnp.ones((1, cap), self.cell_code_scales.dtype),
+            ]),
+        )
+
+    def _insert_at(self, ids_np: np.ndarray, rows: jax.Array) -> "IVFIndex":
+        """Place rows with pre-assigned ids: nearest non-full cell over
+        the preference ranks, else a fresh overflow cell."""
+        rows_np = np.asarray(rows, np.float32)
+        idx = self
+        cap = self.capacity
+        counts = self.cell_counts.astype(np.int64)
+        free_slots = np.asarray(self.cell_ids) < 0       # (C, cap)
+        pref = np.argsort(-(rows_np @ np.asarray(self.centroids).T), axis=1)
+        pos = np.empty((ids_np.size,), np.int64)
+        overflow: list[int] = []
+        for r in range(ids_np.size):
+            for c in pref[r]:
+                if counts[c] < cap:
+                    slot = int(np.flatnonzero(free_slots[c])[0])
+                    free_slots[c, slot] = False
+                    counts[c] += 1
+                    pos[r] = c * cap + slot
+                    break
+            else:
+                overflow.append(r)
+        if overflow:
+            # spill: one overflow cell per cap rows, centered on its spill
+            for start in range(0, len(overflow), cap):
+                batch = overflow[start:start + cap]
+                mean = rows_np[batch].mean(axis=0)
+                mean /= max(float(np.linalg.norm(mean)), 1e-12)
+                c = idx.n_cells
+                idx = idx._append_cell(mean)
+                for s, r in enumerate(batch):
+                    pos[r] = c * cap + s
+        n_items = max(idx.n_items, int(ids_np.max()) + 1)
+        idx = dataclasses.replace(idx, n_items=n_items)
+        return idx._scatter(pos, ids_np, rows)
+
+    def insert_rows(self, rows: jax.Array) -> tuple["IVFIndex", np.ndarray]:
+        """Insert new rows; returns ``(index, assigned_ids)``. Ids of
+        deleted rows are reused lowest first, then the id space extends."""
+        rows = jnp.atleast_2d(jnp.asarray(rows, self.cells.dtype))
+        if rows.shape[1] != self.dim:
+            raise ValueError(
+                f"insert rows have dim {rows.shape[1]}, index dim {self.dim}"
+            )
+        m = rows.shape[0]
+        free = self._free_ids()
+        fresh = max(0, m - free.size)
+        ids = np.concatenate([
+            free[:m], np.arange(self.n_items, self.n_items + fresh)
+        ]).astype(np.int32)
+        return self._insert_at(ids.astype(np.int64), rows), ids
+
+    def delete_rows(self, ids) -> "IVFIndex":
+        """Free the slots of live rows (``cell_ids`` → -1; the engine's
+        pad mask does the rest). Raises ``KeyError`` on absent ids."""
+        ids_np = np.atleast_1d(np.asarray(ids, np.int64))
+        pos = self._locate(ids_np)
+        cap = self.capacity
+        jpos = jnp.asarray(pos.astype(np.int32))
+        return dataclasses.replace(
+            self,
+            cell_ids=self.cell_ids.at[jpos // cap, jpos % cap].set(-1),
+        )
+
+    def upsert_rows(self, ids, rows: jax.Array) -> "IVFIndex":
+        """Insert-or-replace at explicit ids: live ids re-pay their slot
+        in place (``replace_rows``), absent ids insert fresh."""
+        ids_np = np.atleast_1d(np.asarray(ids, np.int64))
+        if (ids_np < 0).any():
+            raise KeyError(f"negative row ids: {ids_np[ids_np < 0].tolist()}")
+        rows = jnp.atleast_2d(jnp.asarray(rows, self.cells.dtype))
+        if rows.shape[0] != ids_np.size:
+            raise ValueError("upsert ids/rows length mismatch")
+        flat = np.asarray(self.cell_ids).reshape(-1)
+        live = np.isin(ids_np, flat[flat >= 0])
+        idx = self
+        if live.any():
+            idx = idx.replace_rows(ids_np[live], rows[jnp.asarray(
+                np.flatnonzero(live)
+            )])
+        if (~live).any():
+            idx = idx._insert_at(
+                ids_np[~live], rows[jnp.asarray(np.flatnonzero(~live))]
+            )
+        return idx
+
+    def recenter(self) -> "IVFIndex":
+        """DeDrift-style centroid re-centering: each centroid moves to the
+        ℓ2-normalized mean of its LIVE members (empty cells keep theirs).
+        O(C·cap·d), no re-pack, no rebuild — counters content drift from
+        streaming writes so probes stay sharp."""
+        mask = self.cell_ids >= 0
+        cnt = mask.sum(axis=1)
+        sums = jnp.where(mask[..., None], self.cells, 0.0).sum(axis=1)
+        mean = sums / jnp.maximum(cnt, 1)[:, None]
+        norm = jnp.linalg.norm(mean, axis=1, keepdims=True)
+        moved = mean / jnp.maximum(norm, 1e-12)
+        keep = (cnt > 0)[:, None] & (norm > 1e-12)
+        return dataclasses.replace(
+            self, centroids=jnp.where(keep, moved, self.centroids)
+        )
+
+    def split_cell(self, cell: int, iters: int = 8) -> "IVFIndex":
+        """Split an over-full cell 2-means-style: one half stays, the
+        other moves to a freshly appended cell; both centroids re-center.
+        Deterministic seeding (first member + its farthest member)."""
+        if not 0 <= cell < self.n_cells:
+            raise ValueError(f"cell {cell} out of range [0, {self.n_cells})")
+        ids_row = np.asarray(self.cell_ids[cell])
+        members = np.flatnonzero(ids_row >= 0)
+        if members.size < 2:
+            raise ValueError(f"cell {cell} has <2 live rows; nothing to split")
+        rows = np.asarray(self.cells[cell])[members]
+
+        def _unit_mean(x: np.ndarray) -> np.ndarray:
+            m = x.mean(axis=0)
+            return m / max(float(np.linalg.norm(m)), 1e-12)
+
+        c0 = rows[0]
+        c1 = rows[int(np.argmin(rows @ c0))]   # farthest from the seed
+        side = (rows @ c1) > (rows @ c0)
+        for _ in range(iters):
+            if not side.any() or side.all():
+                break
+            c0, c1 = _unit_mean(rows[~side]), _unit_mean(rows[side])
+            nxt = (rows @ c1) > (rows @ c0)
+            if np.array_equal(nxt, side):
+                break
+            side = nxt
+        if not side.any() or side.all():
+            side = np.zeros(members.size, bool)
+            side[members.size // 2:] = True   # degenerate: split by half
+        cap = self.capacity
+        new_c = self.n_cells
+        idx = self._append_cell(_unit_mean(rows[side]))
+        # vacate the moving slots, then scatter the movers into the new cell
+        vacate = jnp.asarray(members[side].astype(np.int32))
+        idx = dataclasses.replace(
+            idx, cell_ids=idx.cell_ids.at[cell, vacate].set(-1),
+        )
+        moved_ids = ids_row[members[side]].astype(np.int64)
+        pos = new_c * cap + np.arange(moved_ids.size)
+        idx = idx._scatter(pos, moved_ids, jnp.asarray(rows[side]))
+        return dataclasses.replace(
+            idx,
+            centroids=idx.centroids.at[cell].set(
+                jnp.asarray(_unit_mean(rows[~side]), idx.centroids.dtype)
+            ),
+        )
+
+    def merge_cells(self, a: int, b: int) -> "IVFIndex":
+        """Fold cell ``b``'s live rows into cell ``a`` (which re-centers);
+        ``b`` stays allocated but empty (all slots -1 — pure pad until
+        ``compact()`` rebuilds). ValueError if the merge overflows."""
+        if a == b:
+            raise ValueError("merge_cells needs two distinct cells")
+        for c in (a, b):
+            if not 0 <= c < self.n_cells:
+                raise ValueError(f"cell {c} out of range [0, {self.n_cells})")
+        ids_a = np.asarray(self.cell_ids[a])
+        ids_b = np.asarray(self.cell_ids[b])
+        movers = np.flatnonzero(ids_b >= 0)
+        free_a = np.flatnonzero(ids_a < 0)
+        if movers.size > free_a.size:
+            raise ValueError(
+                f"merge overflow: cell {a} has {free_a.size} free slots, "
+                f"cell {b} holds {movers.size} live rows"
+            )
+        cap = self.capacity
+        rows_b = jnp.asarray(np.asarray(self.cells[b])[movers])
+        idx = dataclasses.replace(
+            self,
+            cell_ids=self.cell_ids.at[b].set(
+                jnp.full((cap,), -1, jnp.int32)
+            ),
+        )
+        pos = a * cap + free_a[:movers.size]
+        idx = idx._scatter(pos, ids_b[movers].astype(np.int64), rows_b)
+        mask = np.asarray(idx.cell_ids[a]) >= 0
+        if mask.any():
+            mean = np.asarray(idx.cells[a])[mask].mean(axis=0)
+            mean /= max(float(np.linalg.norm(mean)), 1e-12)
+            idx = dataclasses.replace(
+                idx,
+                centroids=idx.centroids.at[a].set(
+                    jnp.asarray(mean, idx.centroids.dtype)
+                ),
+            )
+        return idx
+
+    def compact(
+        self, key: jax.Array | None = None
+    ) -> tuple["IVFIndex", np.ndarray]:
+        """Rebuild on the live rows only: fresh k-means geometry, densely
+        renumbered ids (old id → position in the returned ``kept_ids``),
+        requantized codes. The background-compaction counterpart of the
+        cutover re-pack."""
+        flat_ids = np.asarray(self.cell_ids).reshape(-1)
+        live_pos = np.flatnonzero(flat_ids >= 0)
+        if live_pos.size == 0:
+            raise ValueError("compact would leave an empty index")
+        order = np.argsort(flat_ids[live_pos], kind="stable")
+        live_pos = live_pos[order]
+        kept_ids = flat_ids[live_pos].astype(np.int32)
+        cap, d = self.capacity, self.dim
+        rows = self.cells.reshape(-1, d)[jnp.asarray(live_pos)]
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        out = build_ivf(
+            key, rows, n_cells=min(self.n_cells, live_pos.size),
+        )
+        out = dataclasses.replace(out, backend=self.backend)
+        if self.quantized:
+            out = out.quantize()
+        return out, kept_ids
+
     def search(
         self,
         queries: jax.Array,

@@ -25,6 +25,12 @@ collapsed into, built along three orthogonal axes:
   picks per row which of the native/bridged scores enters the fold), with
   ``invert=True`` flipping the selection — the inverse/control-arm scan is
   the same launch with the SAME forward bitmap, bit-flipped in-kernel.
+  Orthogonally, ``tombstone=True`` (the ``_ts`` name suffix) streams an
+  ALIVE plane block-aligned with the corpus rows and NEG-masks dead/free
+  slots inside the same select stage — mutable flat indexes serve deletes
+  with ZERO extra launches. The IVF layout needs no tombstone variant at
+  all: freeing a slot sets its ``cell_ids`` entry to ``-1``, which the
+  existing pad mask (``cand >= 0``) already folds as a no-op.
 
 Shared invariants live here exactly once: the argmax-free ``_fold_block``
 running top-k, NEG masking (pad corpus rows, pad cell slots ``id == -1``,
@@ -76,6 +82,7 @@ def kernel_name(
     packed: bool = False,
     precision: str = "fp32",
     exact: bool = False,
+    tombstone: bool = False,
 ) -> str:
     """The canonical engine kernel name for a launch's axis coordinates —
     the single naming source shared by the kernel factories, the ScanPlan
@@ -84,12 +91,16 @@ def kernel_name(
     ``precision="int8"`` marks the quantized first-pass scan (``_int8``
     suffix); ``exact=True`` marks the targeted fp32 shortlist rescore that
     follows it (``_exact`` suffix) — fp32 by definition, so the two
-    suffixes never combine."""
+    suffixes never combine. ``tombstone=True`` (``_ts``) marks the flat
+    scan variant that streams an alive plane and NEG-masks dead/free slots
+    in the select stage — same launch count, one extra streamed operand."""
     parts = ["_scan", transform, layout, select]
     if invert:
         parts.append("inv")
     if packed:
         parts.append("packed")
+    if tombstone:
+        parts.append("ts")
     if precision == "int8":
         parts.append("int8")
     if exact:
@@ -207,6 +218,7 @@ def make_flat_kernel(
     n_valid: int,
     q_valid: int,
     precision: str = "fp32",
+    tombstone: bool = False,
 ):
     """Build the flat-layout scan kernel for one axis combination.
 
@@ -221,6 +233,11 @@ def make_flat_kernel(
     rescaled by ``q_scale·c_scale``, and everything downstream (NEG
     masking, bitmap select, fold) is byte-identical to fp32 — callers pass
     ``k = shortlist_k`` and rescore the survivors exactly.
+
+    ``tombstone=True`` adds the streamed alive plane (``(1, block_rows)``
+    int, block-aligned exactly like the bitmap/scales) and folds it into
+    the existing NEG mask — deleted and never-allocated slots of a mutable
+    corpus become no-op candidates inside the SAME launch.
     """
     dual = select == "bitmap"
     has_qx = transform != "identity"
@@ -249,6 +266,10 @@ def make_flat_kernel(
         cs_ref = None
         if int8:
             cs_ref = refs[pos]
+            pos += 1
+        alive_ref = None
+        if tombstone:
+            alive_ref = refs[pos]
             pos += 1
         g_ref = None
         if dual:
@@ -345,7 +366,12 @@ def make_flat_kernel(
             row_ids = j * block_rows + jax.lax.broadcasted_iota(
                 jnp.int32, scores.shape, 1
             )
-            scores = jnp.where(row_ids < n_valid, scores, NEG)
+            keep = row_ids < n_valid
+            if tombstone:
+                # dead/free slots fold as NEG no-ops — select-stage work,
+                # not an extra launch
+                keep = keep & (alive_ref[...][0] > 0)[None, :]
+            scores = jnp.where(keep, scores, NEG)
             new_s, new_i = _fold_block(
                 scores, row_ids, best_s[...], best_i[...], k
             )
@@ -358,7 +384,8 @@ def make_flat_kernel(
                 out_refs[1][...] = best_i[...]
 
     kernel.__name__ = kernel_name(
-        transform, "flat", select, invert, packed, precision
+        transform, "flat", select, invert, packed, precision,
+        tombstone=tombstone,
     )
     kernel.__qualname__ = kernel.__name__
     return kernel
@@ -370,6 +397,7 @@ def flat_scan_pallas(
     fused: dict | None = None,   # stage weights (fold_fused_params layout)
     bitmap: jax.Array | None = None,   # (1, N) int — bitmap select only
     corpus_scales: jax.Array | None = None,  # (1, N) f32 — int8 only
+    alive: jax.Array | None = None,    # (1, N) int — tombstone select only
     *,
     transform: str = "identity",
     select: str = "plain",
@@ -390,24 +418,30 @@ def flat_scan_pallas(
     Returns ``(scores (Q, k), ids (Q, k))`` plus the transformed queries
     ``(Q, d_old)`` when ``return_queries``. With ``precision="int8"`` the
     ``corpus`` operand is the int8 code matrix and ``corpus_scales`` its
-    per-row scales, streamed block-aligned exactly like the bitmap.
+    per-row scales, streamed block-aligned exactly like the bitmap. An
+    ``alive`` plane selects the ``_ts`` tombstone variant: dead/free slots
+    of a mutable corpus NEG-mask in the same launch.
     """
     n, d_old = corpus.shape
     q, d_new = queries.shape
     assert n % block_rows == 0 and q % q_tile == 0
     dual = select == "bitmap"
     int8 = precision == "int8"
+    tombstone = alive is not None
     if dual:
         assert bitmap is not None and bitmap.shape == (1, n)
     if int8:
         assert corpus.dtype == jnp.int8
         assert corpus_scales is not None and corpus_scales.shape == (1, n)
+    if tombstone:
+        assert alive.shape == (1, n)
     grid = (q // q_tile, n // block_rows)
     kernel = make_flat_kernel(
         transform=transform, select=select, invert=invert, packed=packed,
         renormalize=renormalize, return_queries=return_queries, k=k,
         block_rows=block_rows, n_valid=n_valid,
         q_valid=q if q_valid is None else q_valid, precision=precision,
+        tombstone=tombstone,
     )
     w_arrays, w_shapes = (
         weight_operands(transform, fused) if transform != "identity"
@@ -424,6 +458,10 @@ def flat_scan_pallas(
         # per-row scales stream HBM→VMEM block-aligned with the code rows
         in_specs.append(pl.BlockSpec((1, block_rows), lambda i, j: (0, j)))
         operands.append(corpus_scales)
+    if tombstone:
+        # the alive plane streams block-aligned exactly like the bitmap
+        in_specs.append(pl.BlockSpec((1, block_rows), lambda i, j: (0, j)))
+        operands.append(alive)
     if dual:
         # the bitmap streams HBM→VMEM block-aligned with the corpus rows
         in_specs.append(pl.BlockSpec((1, block_rows), lambda i, j: (0, j)))

@@ -62,17 +62,26 @@ def _check_kind(fused_kind: str) -> None:
 # flat layout entry points
 # ---------------------------------------------------------------------------
 
+def _alive_plane(alive, block_rows):
+    """(N,) alive mask → the (1, N_padded) int32 plane the ``_ts`` kernels
+    stream (pad slots are 0 = dead, though n_valid masks them anyway)."""
+    if alive is None:
+        return None
+    return _pad_rows(alive.astype(jnp.int32), block_rows).reshape(1, -1)
+
+
 @partial(
     jax.jit,
     static_argnames=("k", "q_tile", "block_rows", "q_valid", "interpret"),
 )
 def _topk_scan_jit(
-    corpus, queries, k, q_tile, block_rows, q_valid, interpret
+    corpus, queries, alive, k, q_tile, block_rows, q_valid, interpret
 ):
     n = corpus.shape[0]
     q = queries.shape[0]
     out_s, out_i = flat_scan_pallas(
         _pad_rows(queries, q_tile), _pad_rows(corpus, block_rows),
+        alive=_alive_plane(alive, block_rows),
         transform="identity", select="plain",
         k=k, n_valid=n, q_valid=q_valid,
         q_tile=q_tile, block_rows=block_rows, interpret=interpret,
@@ -87,6 +96,7 @@ def topk_scan(
     q_tile: int = 128,
     block_rows: int = 1024,
     q_valid: int | None = None,
+    alive: jax.Array | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Native corpus scan: identity query stage, flat layout, plain select.
@@ -95,12 +105,13 @@ def topk_scan(
     tiles entirely past it skip all compute and those output rows are
     undefined (the batcher never reads them). The count is quantized to
     tile granularity BEFORE the jit boundary, so varying per-bucket counts
-    do not retrace."""
+    do not retrace. ``alive`` (a (N,) mask) selects the ``_ts`` tombstone
+    variant: dead/free slots NEG-mask inside the same launch."""
     if interpret is None:
         interpret = _is_cpu()
     q_valid = _quantize_q_valid(queries.shape[0], q_valid, q_tile)
     return _topk_scan_jit(
-        corpus, queries, k=k, q_tile=q_tile, block_rows=block_rows,
+        corpus, queries, alive, k=k, q_tile=q_tile, block_rows=block_rows,
         q_valid=q_valid, interpret=interpret,
     )
 
@@ -113,13 +124,14 @@ def topk_scan(
     ),
 )
 def _fused_bridged_search_jit(
-    fused_kind, fused, queries, corpus, k, renormalize, q_tile, block_rows,
-    q_valid, return_queries, interpret,
+    fused_kind, fused, queries, corpus, alive, k, renormalize, q_tile,
+    block_rows, q_valid, return_queries, interpret,
 ):
     n = corpus.shape[0]
     q = queries.shape[0]
     out = flat_scan_pallas(
         _pad_rows(queries, q_tile), _pad_rows(corpus, block_rows), fused,
+        alive=_alive_plane(alive, block_rows),
         transform=fused_kind, select="plain", renormalize=renormalize,
         return_queries=return_queries, k=k, n_valid=n, q_valid=q_valid,
         q_tile=q_tile, block_rows=block_rows, interpret=interpret,
@@ -138,6 +150,7 @@ def fused_bridged_search(
     block_rows: int = 1024,
     q_valid: int | None = None,
     return_queries: bool = False,
+    alive: jax.Array | None = None,
     interpret: bool | None = None,
 ):
     """One launch: adapter transform + corpus scan + running top-k.
@@ -153,7 +166,8 @@ def fused_bridged_search(
         interpret = _is_cpu()
     q_valid = _quantize_q_valid(queries.shape[0], q_valid, q_tile)
     return _fused_bridged_search_jit(
-        fused_kind, fused, queries, corpus, k=k, renormalize=renormalize,
+        fused_kind, fused, queries, corpus, alive, k=k,
+        renormalize=renormalize,
         q_tile=q_tile, block_rows=block_rows, q_valid=q_valid,
         return_queries=return_queries, interpret=interpret,
     )
@@ -167,8 +181,8 @@ def fused_bridged_search(
     ),
 )
 def _mixed_bridged_search_jit(
-    fused_kind, fused, queries, corpus, migrated, k, renormalize, q_tile,
-    block_rows, q_valid, invert, packed, interpret,
+    fused_kind, fused, queries, corpus, migrated, alive, k, renormalize,
+    q_tile, block_rows, q_valid, invert, packed, interpret,
 ):
     n = corpus.shape[0]
     q = queries.shape[0]
@@ -176,7 +190,8 @@ def _mixed_bridged_search_jit(
     mig_p = _pad_rows(migrated.astype(jnp.int32), block_rows).reshape(1, -1)
     out = flat_scan_pallas(
         _pad_rows(queries, q_tile), _pad_rows(corpus, block_rows), fused,
-        mig_p, transform=fused_kind, select="bitmap", invert=invert,
+        mig_p, alive=_alive_plane(alive, block_rows),
+        transform=fused_kind, select="bitmap", invert=invert,
         packed=packed, renormalize=renormalize, k=k, n_valid=n,
         q_valid=q_valid, q_tile=q_tile, block_rows=block_rows,
         interpret=interpret,
@@ -197,6 +212,7 @@ def mixed_bridged_search(
     q_valid: int | None = None,
     invert: bool = False,
     packed: bool = True,
+    alive: jax.Array | None = None,
     interpret: bool | None = None,
 ):
     """One launch: adapter transform + bitmap-selected dual scan + top-k.
@@ -225,7 +241,7 @@ def mixed_bridged_search(
         interpret = _is_cpu()
     q_valid = _quantize_q_valid(queries.shape[0], q_valid, q_tile)
     return _mixed_bridged_search_jit(
-        fused_kind, fused, queries, corpus, migrated, k=k,
+        fused_kind, fused, queries, corpus, migrated, alive, k=k,
         renormalize=renormalize, q_tile=q_tile, block_rows=block_rows,
         q_valid=q_valid, invert=invert, packed=packed, interpret=interpret,
     )
@@ -370,7 +386,7 @@ def ivf_rescore_mixed_fused(
     ),
 )
 def _quantized_scan_jit(
-    fused_kind, fused, queries, codes, code_scales, migrated, k,
+    fused_kind, fused, queries, codes, code_scales, migrated, alive, k,
     renormalize, q_tile, block_rows, q_valid, invert, interpret,
 ):
     n = codes.shape[0]
@@ -386,6 +402,7 @@ def _quantized_scan_jit(
     out = flat_scan_pallas(
         _pad_rows(queries, q_tile), _pad_rows(codes, block_rows), fused,
         mig_p, scales_p.reshape(1, -1),
+        alive=_alive_plane(alive, block_rows),
         transform=transform, select="bitmap" if dual else "plain",
         invert=invert, packed=dual, renormalize=renormalize,
         precision="int8", k=k, n_valid=n, q_valid=q_valid,
@@ -407,6 +424,7 @@ def quantized_scan(
     block_rows: int = 1024,
     q_valid: int | None = None,
     invert: bool = False,
+    alive: jax.Array | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """The int8 first-pass flat scan: one launch over the code matrix.
@@ -428,7 +446,8 @@ def quantized_scan(
         interpret = _is_cpu()
     q_valid = _quantize_q_valid(queries.shape[0], q_valid, q_tile)
     return _quantized_scan_jit(
-        fused_kind, fused, queries, codes, code_scales, migrated, k=k,
+        fused_kind, fused, queries, codes, code_scales, migrated, alive,
+        k=k,
         renormalize=renormalize, q_tile=q_tile, block_rows=block_rows,
         q_valid=q_valid, invert=invert, interpret=interpret,
     )

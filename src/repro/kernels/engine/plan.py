@@ -44,6 +44,7 @@ class LaunchSpec:
     return_queries: bool = False
     precision: str = "fp32"   # "fp32" | "int8" (quantized first pass)
     exact: bool = False       # targeted fp32 shortlist rescore
+    tombstone: bool = False   # flat corpus scan streams an alive plane
 
     @property
     def kernel(self) -> str:
@@ -51,7 +52,7 @@ class LaunchSpec:
         pallas_call-counting tests see)."""
         return kernel_name(
             self.transform, self.layout, self.select, self.invert,
-            self.packed, self.precision, self.exact,
+            self.packed, self.precision, self.exact, self.tombstone,
         )
 
 
@@ -165,6 +166,12 @@ def compile_plan(
     itype = index_type or _index_type(index)
     be = backend if backend is not None else getattr(index, "backend", "jnp")
     kernels_on = be in ("pallas", "fused")
+    # a mutated flat index (alive plane present) serves the _ts scan
+    # variants: same launch COUNT, dead slots NEG-masked in the select
+    # stage. IVF needs no variant — freed slots carry cell_ids == -1 and
+    # the existing pad mask folds them. compact() drops the plane, so a
+    # compacted index deterministically reverts to the original names.
+    ts = itype == "flat" and getattr(index, "alive", None) is not None
     int8 = precision == "int8"
     if int8 and be != "fused":
         raise ValueError(
@@ -222,6 +229,7 @@ def compile_plan(
                 LaunchSpec(
                     "scan", "flat", scan_t, select=sel, invert=invert,
                     packed=(sel == "bitmap"), precision="int8",
+                    tombstone=ts,
                 ),
                 rescore,
             )
@@ -242,16 +250,20 @@ def compile_plan(
                                 (be != "fused" or sequential)):
             # plain scan; a sequential bridge maps the queries up front
             if kernels_on:
-                launches = (LaunchSpec("scan", "flat", "identity"),)
+                launches = (
+                    LaunchSpec("scan", "flat", "identity", tombstone=ts),
+                )
             if mode == "bridged":
                 prelude = bridge
         elif mode == "bridged":
-            launches = (LaunchSpec("scan", "flat", fused_kind),)
+            launches = (
+                LaunchSpec("scan", "flat", fused_kind, tombstone=ts),
+            )
         elif mode == "mixed":
             if be == "fused" and not sequential:
                 launches = (LaunchSpec(
                     "scan", "flat", fused_kind, select="bitmap",
-                    invert=invert, packed=packed,
+                    invert=invert, packed=packed, tombstone=ts,
                 ),)
             # else: the exact jnp two-scan merge — zero engine launches
     else:  # ivf
@@ -434,6 +446,7 @@ def _execute_flat_int8(plan, queries, index, k, q_valid, migrated):
 
     codes = _require_quantized(index, "codes")
     s = plan.shortlist(k, index.size)
+    alive = getattr(index, "alive", None)
     kind, fused = (None, None)
     if plan.fused_kind is not None and not plan.sequential:
         kind, fused = _fused_params(plan.bridge)
@@ -442,6 +455,7 @@ def _execute_flat_int8(plan, queries, index, k, q_valid, migrated):
         _, shortlist = E.quantized_scan(
             codes, index.code_scales, queries, k=s, fused_kind=kind,
             fused=fused, migrated=mig, q_valid=q_valid, invert=plan.invert,
+            alive=alive,
         )
         cap = index.rcell_ids.shape[1]
         mig_cells = jnp.pad(
@@ -454,7 +468,7 @@ def _execute_flat_int8(plan, queries, index, k, q_valid, migrated):
         )
     _, shortlist = E.quantized_scan(
         codes, index.code_scales, queries, k=s, fused_kind=kind,
-        fused=fused, q_valid=q_valid,
+        fused=fused, q_valid=q_valid, alive=alive,
     )
     return E.exact_rescore(
         index.rcells, index.rcell_ids, index.id_to_cell, queries,
@@ -469,6 +483,7 @@ def _execute_flat(plan, queries, index, k, q_valid, migrated):
     if plan.precision == "int8":
         return _execute_flat_int8(plan, queries, index, k, q_valid, migrated)
     corpus = index.corpus
+    alive = getattr(index, "alive", None)
     br = min(index.block_rows, 2048)
     if plan.mode in ("native", "bridged"):
         # the launch specs ARE the dispatch: an in-kernel transform means
@@ -478,14 +493,15 @@ def _execute_flat(plan, queries, index, k, q_valid, migrated):
             _, fused = _fused_params(plan.bridge)
             return E.fused_bridged_search(
                 plan.fused_kind, fused, queries, corpus, k=k,
-                block_rows=br, q_valid=q_valid,
+                block_rows=br, q_valid=q_valid, alive=alive,
             )
         if plan.launches:
             return E.topk_scan(
-                corpus, queries, k=k, block_rows=br, q_valid=q_valid
+                corpus, queries, k=k, block_rows=br, q_valid=q_valid,
+                alive=alive,
             )
         return flat_search_jnp(
-            corpus, queries, k=k, block_rows=index.block_rows
+            corpus, queries, k=k, block_rows=index.block_rows, alive=alive
         )
     # mixed
     if plan.launches:
@@ -493,7 +509,7 @@ def _execute_flat(plan, queries, index, k, q_valid, migrated):
         return E.mixed_bridged_search(
             plan.fused_kind, fused, queries, corpus, migrated, k=k,
             block_rows=br, q_valid=q_valid, invert=plan.invert,
-            packed=plan.packed,
+            packed=plan.packed, alive=alive,
         )
     # the exact jnp two-scan merge, each side masked to its OWN rows
     from repro.kernels.mixed_scan.ref import mixed_merge_scan
@@ -503,7 +519,7 @@ def _execute_flat(plan, queries, index, k, q_valid, migrated):
         mig = ~mig
     return mixed_merge_scan(
         queries, plan.bridge.apply(queries), corpus, mig, k=k,
-        block_rows=index.block_rows,
+        block_rows=index.block_rows, alive=alive,
     )
 
 

@@ -84,6 +84,7 @@ def mixed_merge_scan(
     migrated: jax.Array,
     k: int = 10,
     block_rows: int = 65536,
+    alive: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Exact two-scan mixed-state merge over a pre-mapped query pair.
 
@@ -91,11 +92,16 @@ def mixed_merge_scan(
     against the migrated rows; the two (disjoint-candidate) top lists merge
     on score. This IS the jnp serving path for mixed-state stores on the
     "jnp"/"pallas" backends, and the parity oracle the one-pass kernel is
-    gated against.
+    gated against. ``alive`` (a (N,) tombstone mask from a mutable index)
+    ANDs into BOTH sides — a dead row is a candidate on neither.
     """
     mig = jnp.asarray(migrated, bool)
-    s_b, i_b = masked_topk_scan(q_mapped, corpus, ~mig, k, block_rows)
-    s_n, i_n = masked_topk_scan(q_raw, corpus, mig, k, block_rows)
+    keep_b, keep_n = ~mig, mig
+    if alive is not None:
+        keep_b = keep_b & alive.astype(bool)
+        keep_n = keep_n & alive.astype(bool)
+    s_b, i_b = masked_topk_scan(q_mapped, corpus, keep_b, k, block_rows)
+    s_n, i_n = masked_topk_scan(q_raw, corpus, keep_n, k, block_rows)
     s = jnp.concatenate([s_b, s_n], axis=1)
     i = jnp.concatenate([i_b, i_n], axis=1)
     top_s, pos = jax.lax.top_k(s, k)

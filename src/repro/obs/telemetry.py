@@ -117,6 +117,11 @@ class Telemetry:
         # total)} — VectorStore.audit_shortlist mirrors its counts here
         # so suggest_shortlist_k can read them through the sink
         self.shortlist_parity: dict[int, tuple[int, int]] = {}
+        # streaming-write counters ({kind: rows}) + the store's latest
+        # occupancy/tombstone gauge (write_stats()) — what a compaction
+        # trigger and the tombstone-ratio alert read
+        self.writes: dict[str, int] = {}
+        self.index_stats: dict = {}
 
     # -- hot path ------------------------------------------------------------
     def record_search(
@@ -140,6 +145,16 @@ class Telemetry:
     def record_admission(self, outcome: str) -> None:
         """Front-door admission outcome counter bump (hot path, host-only)."""
         self.admission[outcome] = self.admission.get(outcome, 0) + 1
+
+    def record_write(self, kind: str, n: int) -> None:
+        """Streaming mutation counter bump (insert/delete/upsert rows,
+        compact passes) — host-only, no device interaction."""
+        self.writes[kind] = self.writes.get(kind, 0) + int(n)
+
+    def record_index_stats(self, stats: dict) -> None:
+        """Latest occupancy/tombstone gauge from VectorStore.write_stats;
+        overwritten per write — a gauge, not an accumulator."""
+        self.index_stats = dict(stats)
 
     def record_shortlist_parity(
         self, width: int, matched: int, total: int
@@ -174,4 +189,6 @@ class Telemetry:
             "admission": dict(self.admission),
             "frontdoor": dict(self.frontdoor),
             "shortlist_parity": self.shortlist_parity_rates(),
+            "writes": dict(self.writes),
+            "index_stats": dict(self.index_stats),
         }

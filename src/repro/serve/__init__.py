@@ -11,7 +11,7 @@ orchestrator is now a thin shim over `UpgradeHandle`).
 layer in front of the store: plan-keyed request coalescing, admission
 control, and per-request SLO accounting.
 """
-from repro.serve.batching import MicroBatcher
+from repro.serve.batching import MicroBatcher, StaleRevisionError
 from repro.serve.frontdoor import FrontDoor, Rejected, Served, ServeRequest
 from repro.serve.dual_index import DualIndexServer
 from repro.serve.orchestrator import Phase, TransitionLog, UpgradeOrchestrator
@@ -28,6 +28,7 @@ from repro.serve.store import (
 __all__ = [
     "FrontDoor",
     "MicroBatcher",
+    "StaleRevisionError",
     "Rejected",
     "Served",
     "ServeRequest",

@@ -19,12 +19,29 @@ bucket (< 2× the valid rows) and the rows are dropped here either way."""
 from __future__ import annotations
 
 import inspect
-from typing import Callable
+from typing import Callable, Optional
 
 import numpy as np
 
 from repro.serve.frontdoor.queue import ServeRequest
 from repro.serve.frontdoor.scheduler import Coalescer
+
+
+class StaleRevisionError(RuntimeError):
+    """Pending requests were submitted against an index revision that a
+    concurrent ``compact()``/split invalidated: their result ids would be
+    silently renumbered. Raised by :meth:`MicroBatcher.drain` BEFORE any
+    dispatch — the pending set is left intact so the caller can
+    ``drop_stale()`` (or resubmit) and drain again."""
+
+    def __init__(self, rids: list, submitted: int, current: int):
+        self.rids = rids
+        super().__init__(
+            f"{len(rids)} pending request(s) (rids {rids[:5]}…) were "
+            f"submitted against index revision {submitted}, but the index "
+            f"is now at revision {current}: row ids were renumbered by a "
+            "compaction; drop_stale() or resubmit before draining"
+        )
 
 
 def _accepts_q_valid(fn: Callable) -> bool:
@@ -39,9 +56,16 @@ def _accepts_q_valid(fn: Callable) -> bool:
 
 
 class MicroBatcher:
-    def __init__(self, dim: int, max_batch: int = 256):
+    def __init__(self, dim: int, max_batch: int = 256,
+                 revision_of: Optional[Callable[[], int]] = None):
         self.dim = dim
         self.max_batch = max_batch
+        # mutable-index wiring (e.g. ``lambda: store.index_revision``):
+        # submit stamps each request with the current revision and drain
+        # REFUSES — StaleRevisionError, never silently-renumbered ids —
+        # when a compaction bumped it in between. None (the default, every
+        # immutable-index caller) keeps the historical contract.
+        self.revision_of = revision_of
         self._coalescer = Coalescer(
             dim, max_batch=max_batch,
             bucket_fn=lambda n: min(
@@ -55,12 +79,38 @@ class MicroBatcher:
     def submit(self, embedding: np.ndarray) -> int:
         rid = self._next_id
         self._next_id += 1
-        self._pending.append(ServeRequest(rid, embedding, space="", k=0))
+        self._pending.append(ServeRequest(
+            rid, embedding, space="", k=0,
+            revision=None if self.revision_of is None else self.revision_of(),
+        ))
         return rid
 
     @property
     def pending(self) -> int:
         return len(self._pending)
+
+    def _check_revision(self) -> None:
+        if self.revision_of is None:
+            return
+        current = self.revision_of()
+        stale = [r for r in self._pending
+                 if r.revision is not None and r.revision != current]
+        if stale:
+            raise StaleRevisionError(
+                [r.rid for r in stale], stale[0].revision, current
+            )
+
+    def drop_stale(self) -> list[int]:
+        """Remove (and return the rids of) pending requests whose stamped
+        revision no longer matches — the recovery step after
+        :class:`StaleRevisionError`."""
+        if self.revision_of is None:
+            return []
+        current = self.revision_of()
+        stale = [r.rid for r in self._pending
+                 if r.revision is not None and r.revision != current]
+        self._pending = [r for r in self._pending if r.rid not in set(stale)]
+        return stale
 
     def drain(self, search_fn: Callable, k: int = 10) -> dict[int, tuple]:
         """Flush pending requests through search_fn in padded power-of-two
@@ -69,7 +119,12 @@ class MicroBatcher:
         search_fn is called as ``search_fn(queries, k)`` — or
         ``search_fn(queries, k, q_valid=n)`` when it takes a ``q_valid``
         parameter, so fused launches skip the all-zero pad rows (whose
-        output is then undefined; only the n valid rows are read here)."""
+        output is then undefined; only the n valid rows are read here).
+
+        With ``revision_of`` wired, raises :class:`StaleRevisionError`
+        (before dispatching anything, pending set intact) if a compaction
+        renumbered row ids since any pending request was submitted."""
+        self._check_revision()
         pass_q_valid = _accepts_q_valid(search_fn)
 
         def dispatch(key, queries, kk, n):

@@ -50,6 +50,7 @@ from repro.serve.frontdoor.scheduler import (
     Coalescer,
     PlanScheduler,
     Q_TILE,
+    WriteTicket,
     bucket_rows,
     pack_queries,
 )
@@ -57,8 +58,8 @@ from repro.serve.frontdoor.scheduler import (
 __all__ = [
     "AdmissionConfig", "AdmissionController", "Coalescer", "FrontDoor",
     "PlanScheduler", "Q_TILE", "Rejected", "RequestQueue", "SLOStats",
-    "Served", "ServeRequest", "TokenBucket", "bucket_rows", "pack_queries",
-    "percentile",
+    "Served", "ServeRequest", "TokenBucket", "WriteTicket", "bucket_rows",
+    "pack_queries", "percentile",
 ]
 
 
@@ -134,6 +135,10 @@ class FrontDoor:
             tenant=tenant,
             deadline=None if deadline_s is None else t + deadline_s,
             t_enqueue=t,
+            # ids in the result refer to THIS index generation; if a
+            # compact() lands before the drain, the scheduler rejects the
+            # request explicitly instead of serving renumbered ids
+            revision=getattr(self.store, "index_revision", None),
         )
         self.slo.record_offered(request)
         verdict = self.admission.admit(request, self.queue.depth, t)
@@ -151,6 +156,33 @@ class FrontDoor:
     def drain(self) -> dict:
         """One synchronous scheduling cycle; returns its summary dict."""
         return self.scheduler.drain_once()
+
+    # -- the write lane --------------------------------------------------------
+    def write(self, fn):
+        """Queue an arbitrary store mutation (zero-argument thunk) on the
+        scheduler's write lane; returns its :class:`WriteTicket`. Writes
+        apply FIFO at the head of the next drain — serialized against each
+        other and that cycle's reads, without blocking read coalescing."""
+        return self.scheduler.submit_write(fn)
+
+    def insert(self, rows, space: Optional[str] = None):
+        """Queue ``store.insert`` on the write lane (ticket.result holds
+        the assigned ids after the next drain)."""
+        return self.write(lambda: self.store.insert(rows, space=space))
+
+    def delete(self, ids):
+        """Queue ``store.delete`` on the write lane."""
+        return self.write(lambda: self.store.delete(ids))
+
+    def upsert(self, ids, rows, space: Optional[str] = None):
+        """Queue ``store.upsert`` on the write lane."""
+        return self.write(lambda: self.store.upsert(ids, rows, space=space))
+
+    def compact(self):
+        """Queue ``store.compact`` on the write lane. Reads already queued
+        BEHIND it that were stamped with the pre-compaction revision are
+        rejected as ``stale_revision`` in the same drain."""
+        return self.write(self.store.compact)
 
     # -- async entry points ---------------------------------------------------
     def start(self) -> asyncio.Task:

@@ -48,7 +48,7 @@ class ServeRequest:
     awaiting coroutine through the lazily-created asyncio future."""
 
     __slots__ = (
-        "rid", "embedding", "space", "k", "tenant", "deadline",
+        "rid", "embedding", "space", "k", "tenant", "deadline", "revision",
         "t_enqueue", "t_dispatch", "t_complete", "result", "_future",
     )
 
@@ -61,6 +61,7 @@ class ServeRequest:
         tenant: str = "default",
         deadline: Optional[float] = None,
         t_enqueue: Optional[float] = None,
+        revision: Optional[int] = None,
     ):
         self.rid = rid
         self.embedding = np.asarray(embedding, np.float32).reshape(-1)
@@ -68,6 +69,9 @@ class ServeRequest:
         self.k = int(k)
         self.tenant = tenant
         self.deadline = deadline            # absolute perf_counter time
+        # index revision the caller's row ids refer to (stamped at submit);
+        # a drain whose store has compacted past it rejects explicitly
+        self.revision = revision
         self.t_enqueue = (
             time.perf_counter() if t_enqueue is None else t_enqueue
         )

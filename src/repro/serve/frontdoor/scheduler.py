@@ -119,14 +119,42 @@ class Coalescer:
         return results
 
 
+class WriteTicket:
+    """One queued mutation in the scheduler's write lane. ``run`` executes
+    the thunk exactly once; callers read ``result`` (or re-raise ``error``)
+    after the drain that consumed it."""
+
+    __slots__ = ("fn", "result", "error", "done")
+
+    def __init__(self, fn: Callable):
+        self.fn = fn
+        self.result = None
+        self.error: Optional[BaseException] = None
+        self.done = False
+
+    def run(self) -> None:
+        if self.done:
+            return
+        try:
+            self.result = self.fn()
+        except Exception as exc:      # surfaced on the ticket, never lost
+            self.error = exc
+        self.done = True
+
+
 class PlanScheduler:
     """Continuous-batching scheduler over one :class:`VectorStore`.
 
-    Each ``drain_once`` cycle: take everything pending, shed requests whose
-    deadline already passed (explicit ``Rejected("deadline")``), group the
-    survivors by ``store.plan_key(space, k)``, dispatch one
-    ``store.search`` per group (= one ``execute_plan``), and scatter each
-    row back onto its request's future with full SLO timestamps.
+    Each ``drain_once`` cycle: run the write lane (queued mutations, FIFO —
+    serialized against each other and against this cycle's reads, without
+    ever blocking read coalescing), take everything pending, shed requests
+    whose deadline already passed (explicit ``Rejected("deadline")``) and
+    requests stamped with an index revision a compaction invalidated
+    (explicit ``Rejected("stale_revision")`` — their row ids no longer mean
+    what the caller thinks), group the survivors by
+    ``store.plan_key(space, k)``, dispatch one ``store.search`` per group
+    (= one ``execute_plan``), and scatter each row back onto its request's
+    future with full SLO timestamps.
     """
 
     def __init__(
@@ -147,18 +175,38 @@ class PlanScheduler:
         )
         self.drains = 0
         self.dispatches = 0
+        self.writes_applied = 0
+        self._writes: list[WriteTicket] = []
         self._closed = False
+
+    # -- the write lane -------------------------------------------------------
+    def submit_write(self, fn: Callable) -> WriteTicket:
+        """Queue a mutation (a zero-argument thunk, e.g.
+        ``lambda: store.insert(rows)``) for the head of the next drain
+        cycle. Writes run FIFO before that cycle's reads — every read in a
+        drain sees every write submitted before it — and an exception is
+        captured on the returned ticket, not raised into the loop."""
+        ticket = WriteTicket(fn)
+        self._writes.append(ticket)
+        return ticket
 
     # -- one synchronous scheduling cycle ------------------------------------
     def drain_once(self) -> dict:
         """Process everything pending; returns the cycle summary."""
+        writes, self._writes = self._writes, []
+        for ticket in writes:
+            ticket.run()
+        self.writes_applied += len(writes)
         requests = self.queue.drain_all()
         if not requests:
-            return {"requests": 0, "groups": 0, "dispatches": 0, "shed": 0}
+            return {"requests": 0, "groups": 0, "dispatches": 0, "shed": 0,
+                    "writes": len(writes), "stale": 0}
         self.drains += 1
         now = time.perf_counter()
+        revision = getattr(self.store, "index_revision", None)
         live: list[ServeRequest] = []
         shed = 0
+        stale = 0
         for r in requests:
             if r.deadline is not None and now > r.deadline:
                 r.resolve(Rejected(
@@ -169,6 +217,22 @@ class PlanScheduler:
                 if self.telemetry is not None:
                     self.telemetry.record_admission("shed:deadline")
                 shed += 1
+            elif (
+                r.revision is not None and revision is not None
+                and r.revision != revision
+            ):
+                # a compact() renumbered row ids between submit and drain:
+                # serving would be silently wrong ids, so refuse loudly
+                r.resolve(Rejected(
+                    "stale_revision", r.tenant,
+                    f"submitted against index revision {r.revision}, now "
+                    f"{revision}: row ids were renumbered by compaction; "
+                    "re-resolve ids and resubmit",
+                ))
+                self.slo.record_reject(r, "stale_revision")
+                if self.telemetry is not None:
+                    self.telemetry.record_admission("shed:stale_revision")
+                stale += 1
             else:
                 live.append(r)
 
@@ -200,6 +264,8 @@ class PlanScheduler:
             "groups": len({key for key, _ in groups}),
             "dispatches": len(groups),
             "shed": shed,
+            "writes": len(writes),
+            "stale": stale,
         }
 
     def _plan_key(self, request: ServeRequest) -> tuple:

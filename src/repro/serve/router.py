@@ -79,8 +79,11 @@ class QueryRouter:
 
         t0 = time.perf_counter()
         adapter = self._adapter      # read once — atomicity
+        # has_tombstones: a mutated flat index compiles the _ts scan
+        # variants; compaction drops them — either flip invalidates here
         key = (id(adapter), type(self.index),
-               getattr(self.index, "backend", ""))
+               getattr(self.index, "backend", ""),
+               getattr(self.index, "has_tombstones", False))
         cached_key, plan = self._plan_cache
         if cached_key != key:
             plan = compile_plan(

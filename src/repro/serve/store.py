@@ -131,8 +131,10 @@ class UpgradeHandle:
         self._snap_index = store.index
         self._snap_adapter = store.router.adapter
         self._snap_version = store.serving_version
-        n = store.index.size
-        self._migrated = np.zeros(n, dtype=bool)
+        # slots already dead at open (tombstones, grown slack) are born
+        # migrated: the provider has no row for them, and delete()/
+        # _sync_write_state keep the invariant for later mutations
+        self._migrated = ~store._live_mask()
         # lineage snapshot rides the rollback snapshot: rollback must
         # restore the per-row source-space table bit-identically too
         self._snap_lineage = store._lineage.copy()
@@ -451,7 +453,9 @@ class UpgradeHandle:
         self._require(
             UpgradeStage.CANARY, UpgradeStage.BRIDGED, UpgradeStage.MIGRATING
         )
-        ids = np.flatnonzero(self._migrated)
+        # tombstoned rows stay migrated-bit-set but are NOT re-fetched:
+        # the provider has no row for a deleted id
+        ids = np.flatnonzero(self._migrated & self.store._live_mask())
         if len(ids) == 0 or self.corpus_new_provider is None:
             return 0
         rows = np.asarray(self.corpus_new_provider(ids), np.float32)
@@ -482,7 +486,15 @@ class UpgradeHandle:
                 jax.random.PRNGKey(0), corpus_new, n_cells=old.n_cells
             )
             new_index = dataclasses.replace(new_index, backend=old.backend)
+            if getattr(old, "has_tombstones", False):
+                # the re-pack rebuilt EVERY slot, resurrecting tombstoned
+                # rows (their buffer entries are zeros); re-delete them
+                dead = old._free_ids()
+                if dead.size:
+                    new_index = new_index.delete_rows(dead)
         else:
+            # dataclasses.replace keeps the alive plane: flat tombstones
+            # survive cutover as-is
             new_index = dataclasses.replace(old, corpus=corpus_new)
         self.store.router.index = new_index
         self.store.router.install_adapter(None)
@@ -581,6 +593,15 @@ class VectorStore:
         # int8 shortlist recall-parity accumulators from audit_shortlist:
         # {width: (matched, total)} — what suggest_shortlist_k reads
         self._shortlist_parity: dict[int, tuple[int, int]] = {}
+        # structural index generation: bumped ONLY by operations that
+        # renumber row ids (compact's tombstone squeeze). Plain inserts,
+        # deletes, and upserts keep every surviving id stable, so readers
+        # holding ids across them stay valid; a front door stamps requests
+        # with this revision and rejects (explicitly, never silently
+        # misserves) any that a concurrent compact invalidated.
+        self.index_revision = 0
+        self.write_counts = {"insert": 0, "delete": 0, "upsert": 0,
+                             "compact": 0}
 
     # -- introspection -------------------------------------------------------
     @property
@@ -628,12 +649,30 @@ class VectorStore:
         the audit counts (and can fail on) them instead of guessing."""
         self._lineage[np.asarray(ids)] = -1
 
+    def _live_mask(self) -> np.ndarray:
+        """Host bool mask of live rows (size = index capacity). All-true on
+        an index without tombstones; flat reads the alive plane, IVF
+        derives liveness from the packed cell-id table."""
+        n = int(self.index.size)
+        alive = getattr(self.index, "alive", None)
+        if alive is not None:
+            return np.asarray(alive).astype(bool)
+        if isinstance(self.index, IVFIndex):
+            mask = np.zeros(n, bool)
+            ids = np.asarray(self.index.cell_ids).ravel()
+            mask[ids[ids >= 0]] = True
+            return mask
+        return np.ones(n, bool)
+
     def lineage_report(self):
         """Rows by source space + mixed fraction + missing count — the
-        manifest ``tools/check_lineage.py`` audits."""
+        manifest ``tools/check_lineage.py`` audits. Tombstoned slots are
+        not rows; they are excluded before counting."""
         from repro.obs.monitor import LineageReport
 
-        codes, counts = np.unique(self._lineage, return_counts=True)
+        codes, counts = np.unique(
+            self._lineage[self._live_mask()], return_counts=True
+        )
         rows: dict[str, int] = {}
         missing = 0
         for code, count in zip(codes.tolist(), counts.tolist()):
@@ -645,7 +684,7 @@ class VectorStore:
         return LineageReport(
             rows_by_space=rows,
             missing=missing,
-            total=int(self._lineage.size),
+            total=int(missing + sum(rows.values())),
             serving_version=self.serving_version,
             target_space=h.to_version if h is not None else None,
         )
@@ -672,6 +711,11 @@ class VectorStore:
             mode, invert, probe_space, id(bridge), type(self.index),
             getattr(self.index, "backend", ""),
             self.precision, self.shortlist_k,
+            # a flat index that picks up tombstones compiles the _ts scan
+            # variants (same launch count, dead rows masked in-kernel);
+            # compacting drops them again — both transitions need a fresh
+            # plan so the launch names stay truthful
+            getattr(self.index, "has_tombstones", False),
         )
         hit = self._plans.get(key)
         if hit is None:
@@ -764,7 +808,9 @@ class VectorStore:
         return (
             space, *route, self.registry.revision,
             type(self.index).__name__, getattr(self.index, "backend", ""),
-            self.precision, self.shortlist_k, int(k),
+            self.precision, self.shortlist_k,
+            getattr(self.index, "has_tombstones", False),
+            self.index_revision, int(k),
         )
 
     def search(
@@ -953,6 +999,212 @@ class VectorStore:
             telemetry=self.telemetry,
         )
         return s, i, inverse.kind
+
+    # -- writes (streaming mutations under a live lifecycle) ------------------
+    def _require_writable(self) -> None:
+        if not hasattr(self.index, "insert_rows"):
+            raise NotImplementedError(
+                f"{type(self.index).__name__} is immutable: it implements "
+                "no insert_rows/delete_rows mutation hooks"
+            )
+
+    def _write_space(self, space: Optional[str]) -> str:
+        """Resolve + validate the embedding space of incoming rows. Writes
+        are legal in the serving space always, and in the live upgrade's
+        target space once its bridge is deployed (the writer's encoder has
+        switched); anything else would store rows no serving path can
+        score exactly."""
+        h = self._active
+        if space is None:
+            space = self.default_space()
+        allowed = {self.serving_version}
+        if h is not None and h.bridge_live:
+            allowed.add(h.to_version)
+        if space not in allowed:
+            raise ValueError(
+                f"rows embedded in {space!r} cannot be written: writable "
+                f"spaces are {sorted(allowed)}"
+            )
+        return space
+
+    def _sync_write_state(self) -> None:
+        """Grow the per-row host tables to a grown index capacity. New pad
+        slots carry no lineage (-1, masked dead anyway) and count as
+        migrated (nothing old-space to re-embed) until a write claims
+        them."""
+        n = int(self.index.size)
+        if n > self._lineage.size:
+            self._lineage = np.concatenate(
+                [self._lineage, np.full(n - self._lineage.size, -1, np.int16)]
+            )
+        h = self._active
+        if h is not None and n > h._migrated.size:
+            grow = n - h._migrated.size
+            h._migrated = np.concatenate([h._migrated, np.ones(grow, bool)])
+            if h._new_rows is not None:
+                h._new_rows = np.concatenate(
+                    [h._new_rows,
+                     np.zeros((grow, h._new_rows.shape[1]), np.float32)]
+                )
+
+    def _record_write(self, kind: str, n: int) -> None:
+        self.write_counts[kind] += int(n)
+        if self.telemetry is not None:
+            self.telemetry.record_write(kind, int(n))
+            self.telemetry.record_index_stats(self.write_stats())
+
+    def _note_write(self, ids: np.ndarray, rows: np.ndarray,
+                    space: str) -> None:
+        """Post-write bookkeeping shared by insert/upsert: lineage, and —
+        while an upgrade is live — the migration bitmap. A row written in
+        the TARGET space is born migrated (its f_new vector is already in
+        the index; its migration bit is set and the cutover buffer learns
+        it); a row written in the serving space joins the un-migrated set
+        and will be re-embedded by migrate_batch like any other."""
+        self._sync_write_state()
+        self._set_lineage(ids, space)
+        h = self._active
+        if h is None:
+            return
+        if space == h.to_version:
+            if h._new_rows is None:
+                h._new_rows = np.zeros(
+                    (h._migrated.size, rows.shape[1]), np.float32
+                )
+            h._new_rows[ids] = rows
+            h._migrated[ids] = True
+            # the live index now holds f_new rows: serving is mixed-state
+            h._index_mixed = True
+        else:
+            h._migrated[ids] = False
+            if h._new_rows is not None:
+                h._new_rows[ids] = 0.0
+        h._mask_cache.clear()
+
+    def insert(self, rows, space: Optional[str] = None) -> np.ndarray:
+        """Insert rows embedded in ``space``; returns their assigned ids.
+
+        Ids are stable until the next :meth:`compact`. Legal mid-migration:
+        a row inserted in the upgrade's target space sets its migration bit
+        (it needs no re-embedding), a serving-space row joins the
+        migrate_batch backlog. On int8 stores the index keeps the codes in
+        sync in the same mutation."""
+        self._require_writable()
+        space = self._write_space(space)
+        rows = np.atleast_2d(np.asarray(rows, np.float32))
+        new_index, ids = self.index.insert_rows(jnp.asarray(rows))
+        self.router.index = new_index
+        self._note_write(ids, rows, space)
+        self._record_write("insert", len(ids))
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by id; returns the count. The slots are masked
+        out of every serving path in-kernel (no extra launches) and their
+        storage is reclaimed by :meth:`compact`. Mid-migration, a deleted
+        row's migration bit is set (nothing left to re-embed) and its
+        lineage is cleared."""
+        self._require_writable()
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        self.router.index = self.index.delete_rows(ids)
+        self._lineage[ids] = -1
+        h = self._active
+        if h is not None:
+            h._migrated[ids] = True
+            if h._new_rows is not None:
+                h._new_rows[ids] = 0.0
+            h._mask_cache.clear()
+        self._record_write("delete", len(ids))
+        return int(len(ids))
+
+    def upsert(self, ids, rows, space: Optional[str] = None) -> np.ndarray:
+        """Write rows at caller-chosen ids: live ids are replaced in place,
+        dead or never-seen ids are (re)inserted at that id (the index grows
+        to cover them). Same mid-migration semantics as :meth:`insert`."""
+        self._require_writable()
+        space = self._write_space(space)
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        rows = np.atleast_2d(np.asarray(rows, np.float32))
+        self.router.index = self.index.upsert_rows(
+            jnp.asarray(ids), jnp.asarray(rows)
+        )
+        self._note_write(ids, rows, space)
+        self._record_write("upsert", len(ids))
+        return ids
+
+    def compact(self, key: Optional[jax.Array] = None) -> np.ndarray:
+        """Reclaim tombstoned slots; returns ``kept_ids`` (old id at each
+        new position — the caller's id remap). Renumbers surviving rows
+        densely, so this is the ONE write that bumps ``index_revision``;
+        plans recompile (flat reverts from the _ts scan variants to the
+        original launch names) and every per-row table — lineage, and the
+        live upgrade's migration bitmap + cutover buffer — is remapped
+        through ``kept_ids``. No-op (identity remap) without tombstones."""
+        self._require_writable()
+        idx = self.index
+        if not getattr(idx, "has_tombstones", False):
+            return np.arange(int(idx.size), dtype=np.int64)
+        if isinstance(idx, IVFIndex):
+            new_index, kept = idx.compact(key)
+        else:
+            new_index, kept = idx.compact()
+        kept = np.asarray(kept)
+        self.router.index = new_index
+        self._lineage = self._lineage[kept]
+        h = self._active
+        if h is not None:
+            h._migrated = h._migrated[kept]
+            if h._new_rows is not None:
+                h._new_rows = h._new_rows[kept]
+            h._mask_cache.clear()
+        self._plans.clear()
+        self.router._plan_cache = (None, None)
+        self.index_revision += 1
+        self._record_write("compact", 1)
+        return kept
+
+    def write_stats(self) -> dict:
+        """Occupancy + tombstone accounting — the compaction trigger's
+        input and the telemetry gauge surfaced in ``counters()``."""
+        idx = self.index
+        n = int(idx.size)
+        live = int(getattr(idx, "live_count", n))
+        stats = {
+            "capacity": n,
+            "live": live,
+            "tombstones": n - live,
+            "tombstone_ratio": (n - live) / n if n else 0.0,
+            "index_revision": self.index_revision,
+            "writes": dict(self.write_counts),
+        }
+        if isinstance(idx, IVFIndex):
+            counts = idx.cell_counts
+            cap = int(idx.cells.shape[1])
+            stats["cells"] = {
+                "n_cells": int(idx.n_cells),
+                "slot_capacity": cap,
+                "occupancy_mean": float(counts.mean()) / cap if cap else 0.0,
+                "occupancy_max": float(counts.max()) / cap if cap else 0.0,
+                "full_cells": int((counts >= cap).sum()),
+            }
+        return stats
+
+    def maybe_compact(
+        self,
+        max_tombstone_ratio: float = 0.3,
+        key: Optional[jax.Array] = None,
+    ) -> Optional[np.ndarray]:
+        """Compaction trigger: compact when the tombstone ratio crosses the
+        threshold, returning the id remap (None when below it). Drive it
+        from a background loop off :meth:`write_stats` — per-cell occupancy
+        there tells an IVF operator when overflow cells are accumulating
+        even below the tombstone threshold."""
+        stats = self.write_stats()
+        if stats["tombstones"] and (
+            stats["tombstone_ratio"] >= max_tombstone_ratio
+        ):
+            return self.compact(key=key)
+        return None
 
     # -- shortlist autotuning (advisory) --------------------------------------
     def audit_shortlist(

@@ -1,4 +1,27 @@
+"""Shared fixtures/factories for the test suite.
+
+Two things live here:
+
+* **World/store factories.** The serving-layer test files used to carry
+  near-identical corpus/index/store builders; they are hoisted here so one
+  implementation feeds test_quant, test_frontdoor, test_store_lifecycle,
+  and test_streaming. Plain functions (importable as ``from conftest
+  import …``), not fixtures — the call sites keep their own module-scoped
+  caching and parameters.
+
+* **Failing-seed reproducibility.** Every failure report carries the
+  numpy seed in effect (``REPRO_TEST_SEED``, default 0) and a one-line
+  rerun command; on GitHub runners the same line lands in the job summary
+  so a red shard shows its repro without opening logs. Hypothesis tests
+  additionally print their ``@reproduce_failure`` blob (print_blob is on).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
 import jax
+import jax.numpy as jnp
 import pytest
 
 # Tests run on the default single CPU device. The 512-device environment is
@@ -6,7 +29,130 @@ import pytest
 # and benches must see 1 device).
 jax.config.update("jax_enable_x64", False)
 
+try:     # print_blob => failures print their @reproduce_failure line
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("repro", print_blob=True)
+    _hyp_settings.load_profile("repro")
+except ImportError:          # hypothesis is optional (importorskip'd)
+    pass
+
+
+def test_seed() -> int:
+    """The run's numpy seed: REPRO_TEST_SEED env (default 0). Seeded
+    tests (the streaming long-run) derive their rngs from this so the
+    failure hook's rerun line reproduces them exactly."""
+    return int(os.environ.get("REPRO_TEST_SEED", "0"))
+
+
+@pytest.fixture(scope="session")
+def np_seed() -> int:
+    return test_seed()
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_makereport(item, call):
+    out = yield
+    rep = out.get_result()
+    if rep.when == "call" and rep.failed:
+        cmd = (
+            f"REPRO_TEST_SEED={test_seed()} PYTHONPATH=src "
+            f"python -m pytest '{item.nodeid}' -q"
+        )
+        rep.sections.append(
+            ("failing-seed rerun",
+             f"numpy seed: {test_seed()}\nrerun: {cmd}")
+        )
+        summary = os.environ.get("GITHUB_STEP_SUMMARY")
+        if summary:
+            try:
+                with open(summary, "a") as f:
+                    f.write(f"- `{item.nodeid}` failed — rerun: `{cmd}`\n")
+            except OSError:
+                pass
+
 
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# shared world / index / store factories
+# ---------------------------------------------------------------------------
+
+def op_fit_config():
+    """The suite's standard cheap deterministic adapter fit."""
+    from repro.core import FitConfig
+
+    return FitConfig(kind="op", use_dsm=False)
+
+
+def make_drift_world(n_items, dim, n_queries, n_clusters, seed=0,
+                     spaces=None):
+    """Corpora + queries per embedding space.
+
+    Returns ``(corpora, queries)`` dicts keyed by space name: "v1" is the
+    undrifted base; each entry of ``spaces`` ({name: MILD_TEXT field
+    overrides}, default ``{"v2": {}}``) adds a drifted space with its
+    re-embedded corpus and queries."""
+    from repro.data import CorpusConfig, make_corpus, make_drift, make_queries
+    from repro.data.drift import MILD_TEXT
+
+    ccfg = CorpusConfig(n_items=n_items, dim=dim, n_clusters=n_clusters,
+                        spectrum_beta=1.0, seed=seed)
+    corpus_old, _ = make_corpus(ccfg)
+    q_raw, _ = make_queries(ccfg, n_queries)
+    base = dataclasses.replace(MILD_TEXT, d_old=dim, d_new=dim)
+    corpora = {"v1": corpus_old}
+    queries = {"v1": q_raw}
+    for name, overrides in (spaces or {"v2": {}}).items():
+        drift = make_drift(dataclasses.replace(base, **overrides))
+        corpora[name] = drift(corpus_old, 0)
+        queries[name] = drift(q_raw, 1)
+    return corpora, queries
+
+
+def build_index(corpus, kind="flat", backend=None, n_cells=16, key=2,
+                quantize=False, cap=None):
+    """One index builder for every test file: flat or IVF, optional
+    backend override (None keeps each type's default), optional int8
+    quantization (``cap`` = flat virtual-cell capacity)."""
+    from repro.ann import FlatIndex, build_ivf
+
+    if kind == "ivf":
+        index = build_ivf(jax.random.PRNGKey(key), corpus, n_cells=n_cells)
+        if backend is not None and backend != index.backend:
+            index = dataclasses.replace(index, backend=backend)
+    elif backend is None:
+        index = FlatIndex(corpus=corpus)
+    else:
+        index = FlatIndex(corpus=corpus, backend=backend)
+    if quantize:
+        return index.quantize(cap=cap) if cap is not None else index.quantize()
+    return index
+
+
+def make_store(corpus, kind="flat", backend=None, version="v1",
+               n_cells=16, key=2, **store_kw):
+    """VectorStore over a fresh index built by :func:`build_index`;
+    ``store_kw`` passes through (precision, shortlist_k, nprobe, …)."""
+    from repro.serve import VectorStore
+
+    return VectorStore(
+        build_index(corpus, kind=kind, backend=backend, n_cells=n_cells,
+                    key=key),
+        version=version, **store_kw,
+    )
+
+
+def open_upgrade(store, corpus_old, corpus_new, to="v2", fit=True,
+                 config=None):
+    """Open (and by default fit, with the op config) an upgrade whose
+    provider serves rows of ``corpus_new``."""
+    h = store.upgrade(
+        to, corpus_new_provider=lambda ids: corpus_new[jnp.asarray(ids)]
+    )
+    if fit:
+        h.fit(corpus_new, corpus_old, config=config or op_fit_config())
+    return h

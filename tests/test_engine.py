@@ -321,6 +321,120 @@ class TestLaunchInvariants:
         assert launches == list(plan.kernels()), (launches, plan.kernels())
 
 
+class TestMutationLaunchMatrix:
+    """Tombstone masking must be FREE. With deleted rows present, every
+    flat serving path re-compiles to its ``_ts`` scan variant at the SAME
+    launch count (the alive plane rides the existing launch as one extra
+    operand); IVF plans keep their exact kernel names (freed slots become
+    ``cell_ids == -1`` and fold into the pad mask already in the select
+    stage), a capacity spill changes nothing, and compaction reverts every
+    name to the immutable-index matrix above."""
+
+    _counting = TestLaunchInvariants._counting
+
+    # (mode, invert, clean flat kernel names, tombstoned flat kernel names)
+    FLAT_ROWS = [
+        ("native", False,
+         ("_scan_identity_flat_plain",),
+         ("_scan_identity_flat_plain_ts",)),
+        ("bridged", False,
+         ("_scan_linear_flat_plain",),
+         ("_scan_linear_flat_plain_ts",)),
+        ("mixed", False,
+         ("_scan_linear_flat_bitmap_packed",),
+         ("_scan_linear_flat_bitmap_packed_ts",)),
+        ("mixed", True,
+         ("_scan_linear_flat_bitmap_inv_packed",),
+         ("_scan_linear_flat_bitmap_inv_packed_ts",)),
+    ]
+
+    @pytest.mark.parametrize(
+        "mode,invert,clean,ts",
+        [
+            pytest.param(*FLAT_ROWS[0], marks=pytest.mark.slow),
+            pytest.param(*FLAT_ROWS[1], marks=pytest.mark.slow),
+            FLAT_ROWS[2],
+            pytest.param(*FLAT_ROWS[3], marks=pytest.mark.slow),
+        ],
+    )
+    def test_flat_tombstones_rename_not_relaunch(self, world, monkeypatch,
+                                                 mode, invert, clean, ts):
+        corpus, b, queries, op, _, mig = world
+        bridge = None if mode == "native" else op
+        kw = dict(mode=mode, invert=invert,
+                  probe_space="raw" if invert else "mapped")
+        base = compile_plan(_flat(world, "fused"), bridge, **kw)
+        assert base.kernels() == clean
+        index = _flat(world, "fused").delete_rows(np.arange(0, 50))
+        launches = self._counting(monkeypatch)
+        plan = compile_plan(index, bridge, **kw)
+        assert plan.kernels() == ts
+        assert plan.launch_count == base.launch_count   # zero extra
+        execute_plan(plan, queries, index=index, k=7, migrated=mig)
+        assert launches == list(plan.kernels()), (launches, plan.kernels())
+        # compaction drops the alive plane: names revert exactly
+        compacted, _ = index.compact()
+        assert not compacted.has_tombstones
+        assert compile_plan(
+            compacted, bridge, **kw
+        ).kernels() == clean
+
+    @pytest.mark.parametrize(
+        "mode,invert",
+        [
+            ("native", False),
+            pytest.param("bridged", False, marks=pytest.mark.slow),
+            pytest.param("mixed", False, marks=pytest.mark.slow),
+            pytest.param("mixed", True, marks=pytest.mark.slow),
+        ],
+    )
+    def test_ivf_mutations_never_change_names(self, world, monkeypatch,
+                                              mode, invert):
+        corpus, b, queries, op, _, mig = world
+        bridge = None if mode == "native" else op
+        kw = dict(mode=mode, invert=invert,
+                  probe_space="raw" if invert else "mapped")
+        base = compile_plan(_ivf(world, "fused"), bridge, **kw)
+        index = _ivf(world, "fused").delete_rows(np.arange(0, 50))
+        # force a capacity spill on top of the tombstones
+        cap = index.capacity
+        spill = jax.random.normal(
+            jax.random.PRNGKey(11), (cap + 1, D)
+        )
+        spill = spill / jnp.linalg.norm(spill, axis=1, keepdims=True)
+        index, _ = index.insert_rows(spill)
+        launches = self._counting(monkeypatch)
+        plan = compile_plan(index, bridge, **kw)
+        assert plan.kernels() == base.kernels()       # names NEVER change
+        assert plan.launch_count == base.launch_count
+        execute_plan(
+            plan, queries, index=index, k=7, migrated=mig, nprobe=4
+        )
+        assert launches == list(plan.kernels()), (launches, plan.kernels())
+
+    def test_int8_tombstone_names(self, world, monkeypatch):
+        """The quantized serving paths: the flat first pass gains ``_ts``
+        (rescore unchanged — shortlist holes are -1 no-ops), IVF keeps all
+        three names; both at their immutable launch budgets."""
+        qflat = FlatIndex(corpus=world[0], backend="fused").quantize(cap=64)
+        qflat = qflat.delete_rows(np.arange(0, 30))
+        plan = compile_plan(qflat, precision="int8", shortlist_k=64)
+        assert plan.kernels() == (
+            "_scan_identity_flat_plain_ts_int8",
+            "_scan_identity_ivf_plain_exact",
+        )
+        assert plan.launch_count == 2
+        qivf = _ivf(world, "fused").quantize()
+        base = compile_plan(qivf, precision="int8", shortlist_k=64)
+        dead = qivf.delete_rows(np.arange(0, 30))
+        plan2 = compile_plan(dead, precision="int8", shortlist_k=64)
+        assert plan2.kernels() == base.kernels()
+        assert plan2.launch_count == 3
+        launches = self._counting(monkeypatch)
+        execute_plan(plan2, world[2], index=dead, k=7, nprobe=4)
+        assert launches == list(plan2.kernels())
+
+
 class TestParityMatrix:
     """Old-vs-engine: every fused serving path must reproduce the exact
     jnp production math, bit-identical ids and 1e-5 scores, across the

@@ -3,18 +3,15 @@ matrix, launch-count invariants (G groups ⇒ G plan executions), admission
 control (depth / tenant buckets / deadlines), q_valid padding at odd group
 sizes, the asyncio entry point, and the shortlist advisory loop."""
 import asyncio
-import dataclasses
 import time
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.ann import FlatIndex
-from repro.core import DriftAdapter, FitConfig
-from repro.data import CorpusConfig, make_corpus, make_drift, make_queries
-from repro.data.drift import MILD_TEXT
-from repro.serve import FrontDoor, MicroBatcher, Rejected, VectorStore
+from conftest import make_drift_world, make_store, op_fit_config, open_upgrade
+from repro.core import DriftAdapter
+from repro.serve import FrontDoor, MicroBatcher, Rejected
 from repro.serve.frontdoor import Coalescer, bucket_rows
 
 # CI shards the fast tier on this marker (see ci.yml)
@@ -23,31 +20,18 @@ pytestmark = pytest.mark.serving
 D = 32
 N = 400
 Q = 40
-OP_CFG = FitConfig(kind="op", use_dsm=False)
+OP_CFG = op_fit_config()
 
 
 @pytest.fixture(scope="module")
 def world():
     """corpus_old + two drifted spaces + per-space queries."""
-    ccfg = CorpusConfig(n_items=N, dim=D, n_clusters=20,
-                        spectrum_beta=1.0, seed=0)
-    corpus_old, _ = make_corpus(ccfg)
-    base = dataclasses.replace(MILD_TEXT, d_old=D, d_new=D)
-    drift_v2 = make_drift(base)
-    drift_v3 = make_drift(dataclasses.replace(base, rotation_theta=0.3,
-                                              seed=3))
-    q_raw, _ = make_queries(ccfg, Q)
-    queries = {
-        "v1": np.asarray(q_raw, np.float32),
-        "v2": np.asarray(drift_v2(q_raw, 1), np.float32),
-        "v3": np.asarray(drift_v3(q_raw, 1), np.float32),
-    }
-    corpora = {
-        "v1": corpus_old,
-        "v2": drift_v2(corpus_old, 0),
-        "v3": drift_v3(corpus_old, 0),
-    }
-    return corpora, queries
+    corpora, queries = make_drift_world(
+        N, D, Q, n_clusters=20,
+        spaces={"v2": {}, "v3": {"rotation_theta": 0.3, "seed": 3}},
+    )
+    return corpora, {s: np.asarray(q, np.float32)
+                     for s, q in queries.items()}
 
 
 def _store(world, state="mixed", backend="fused", precision="fp32",
@@ -56,18 +40,11 @@ def _store(world, state="mixed", backend="fused", precision="fp32",
     'bridged' (deployed, zero rows migrated), or 'mixed' (40 % migrated,
     inverse edge live; plus a third space v3 when requested)."""
     corpora, _ = world
-    store = VectorStore(
-        FlatIndex(corpus=corpora["v1"], backend=backend),
-        version="v1", precision=precision,
-    )
+    store = make_store(corpora["v1"], backend=backend, precision=precision)
     store.attach_telemetry()
     if state == "native":
         return store
-    corpus_v2 = corpora["v2"]
-    h = store.upgrade(
-        "v2", corpus_new_provider=lambda ids: corpus_v2[jnp.asarray(ids)]
-    )
-    h.fit(corpus_v2, corpora["v1"], config=OP_CFG)
+    h = open_upgrade(store, corpora["v1"], corpora["v2"])
     h.deploy()
     if state == "mixed":
         h.migrate_batch(int(N * 0.4))
@@ -371,14 +348,13 @@ class TestShortlistAdvisor:
         # tiny dedicated world: the exact reference runs at shortlist_k=N,
         # which interpret-mode rescore makes expensive at module scale
         n, d = 96, 16
+        from repro.data import CorpusConfig, make_corpus, make_queries
+
         ccfg = CorpusConfig(n_items=n, dim=d, n_clusters=12,
                             spectrum_beta=1.0, seed=0)
         corpus, _ = make_corpus(ccfg)
         q, _ = make_queries(ccfg, 8)
-        store = VectorStore(
-            FlatIndex(corpus=corpus, backend="fused"),
-            version="v1", precision="int8",
-        )
+        store = make_store(corpus, backend="fused", precision="int8")
         store.attach_telemetry()
         before = store.telemetry.plans_executed
         rates = store.audit_shortlist(jnp.asarray(q), k=10, widths=[20, n])
@@ -395,7 +371,7 @@ class TestShortlistAdvisor:
 
     def test_fp32_store_is_noop(self, world):
         corpora, queries = world
-        store = VectorStore(FlatIndex(corpus=corpora["v1"]), version="v1")
+        store = make_store(corpora["v1"])
         assert store.audit_shortlist(jnp.asarray(queries["v1"])) == {}
         assert store.suggest_shortlist_k() is None
 
@@ -410,7 +386,9 @@ class TestMicroBatcherShim:
         assert mb._coalescer.bucket_fn(5) == 8       # pow2, not 128-tile
         for i in range(7):
             mb.submit(queries["v1"][i])
-        index = FlatIndex(corpus=corpora["v1"])
+        from conftest import build_index
+
+        index = build_index(corpora["v1"])
         out = mb.drain(lambda q, k: index.search(q, k=k), k=10)
         ref_s, ref_i = index.search(jnp.asarray(queries["v1"][:7]), k=10)
         for rid in range(7):

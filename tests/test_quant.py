@@ -23,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.ann import FlatIndex, build_ivf, flat_search_jnp
+from conftest import build_index
+from repro.ann import FlatIndex, flat_search_jnp
 from repro.ann.ivf import ivf_search_jnp
 from repro.core import DriftAdapter, FitConfig
 from repro.kernels.engine import (
@@ -34,7 +35,9 @@ from repro.kernels.engine import (
 )
 from repro.kernels.mixed_scan.ref import mixed_merge_scan
 
-pytestmark = pytest.mark.serving
+# deliberately NOT serving-marked: the int8 matrix is kernel-layer work
+# and rides fast-tier shard 1 to balance the shards now that
+# test_streaming.py (serving-marked) joined shard 2
 
 D = 64
 N = 128
@@ -65,16 +68,18 @@ _CACHE: dict = {}
 
 def _flat(world):
     if "flat" not in _CACHE:
-        _CACHE["flat"] = FlatIndex(
-            corpus=world[0], backend="fused"
-        ).quantize(cap=32)
+        _CACHE["flat"] = build_index(
+            world[0], backend="fused", quantize=True, cap=32
+        )
     return _CACHE["flat"]
 
 
 def _ivf(world):
     if "ivf" not in _CACHE:
-        idx = build_ivf(jax.random.PRNGKey(7), world[0], n_cells=4)
-        _CACHE["ivf"] = dataclasses.replace(idx, backend="fused").quantize()
+        _CACHE["ivf"] = build_index(
+            world[0], kind="ivf", backend="fused", n_cells=4, key=7,
+            quantize=True,
+        )
     return _CACHE["ivf"]
 
 
@@ -414,12 +419,11 @@ class TestQuantizedLifecycle:
         )
 
     def test_store_int8_serves_through_quant_plans(self, world):
-        from repro.serve import VectorStore
+        from conftest import make_store
 
         corpus, _, queries, _, _ = world
-        store = VectorStore(
-            FlatIndex(corpus=corpus, backend="fused"),
-            precision="int8", shortlist_k=N,
+        store = make_store(
+            corpus, backend="fused", precision="int8", shortlist_k=N
         )
         assert store.index.quantized          # quantized at init
         plan = store._plan(None, "native")
@@ -429,7 +433,7 @@ class TestQuantizedLifecycle:
         np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref))
 
     def test_store_rejects_unknown_precision(self, world):
-        from repro.serve import VectorStore
+        from conftest import make_store
 
         with pytest.raises(ValueError, match="precision"):
-            VectorStore(FlatIndex(corpus=world[0]), precision="int4")
+            make_store(world[0], precision="int4")

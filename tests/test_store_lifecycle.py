@@ -8,9 +8,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.ann import FlatIndex, build_ivf, flat_search_jnp, recall_at_k
+from conftest import build_index, make_store, op_fit_config, open_upgrade
+from repro.ann import FlatIndex, flat_search_jnp, recall_at_k
 from repro.core import FitConfig
-from repro.data import CorpusConfig, make_corpus, make_drift, make_queries
+from repro.data import make_drift
 from repro.data.drift import MILD_TEXT
 from repro.serve import (
     DualIndexServer,
@@ -24,41 +25,27 @@ pytestmark = pytest.mark.serving
 
 D = 64
 N = 2000
-OP_CFG = FitConfig(kind="op", use_dsm=False)
+OP_CFG = op_fit_config()
 
 
 @pytest.fixture(scope="module")
 def world():
-    dcfg = dataclasses.replace(MILD_TEXT, d_old=D, d_new=D)
-    ccfg = CorpusConfig(n_items=N, dim=D, n_clusters=60,
-                        spectrum_beta=1.0, seed=0)
-    corpus_old, _ = make_corpus(ccfg)
-    drift = make_drift(dcfg)
-    corpus_new = drift(corpus_old, 0)
-    q_old, _ = make_queries(ccfg, 80)
-    q_new = drift(q_old, 1)
+    from conftest import make_drift_world
+
+    corpora, queries = make_drift_world(N, D, 80, n_clusters=60)
+    corpus_old, corpus_new = corpora["v1"], corpora["v2"]
+    q_old, q_new = queries["v1"], queries["v2"]
     _, gt = flat_search_jnp(corpus_new, q_new, k=10)
     return corpus_old, corpus_new, q_old, q_new, gt
 
 
 def _store(world, kind="flat", backend="jnp"):
-    corpus_old = world[0]
-    if kind == "ivf":
-        index = build_ivf(jax.random.PRNGKey(2), corpus_old, n_cells=32)
-        index = dataclasses.replace(index, backend=backend)
-    else:
-        index = FlatIndex(corpus=corpus_old, backend=backend)
-    return VectorStore(index, version="v1")
+    return make_store(world[0], kind=kind, backend=backend, n_cells=32,
+                      key=2)
 
 
 def _open(store, world, fit=True):
-    corpus_old, corpus_new = world[0], world[1]
-    h = store.upgrade(
-        "v2", corpus_new_provider=lambda ids: corpus_new[jnp.asarray(ids)]
-    )
-    if fit:
-        h.fit(corpus_new[:2000], corpus_old[:2000], config=OP_CFG)
-    return h
+    return open_upgrade(store, world[0], world[1], fit=fit)
 
 
 class TestStageMachine:
@@ -218,7 +205,7 @@ class TestMigrationServing:
 
     def test_ivf_replace_rows_via_router(self, world):
         corpus_old, corpus_new, _, _, _ = world
-        index = build_ivf(jax.random.PRNGKey(2), corpus_old, n_cells=32)
+        index = build_index(corpus_old, kind="ivf", n_cells=32)
         router = QueryRouter(index)
         ids = jnp.arange(50)
         router.replace_rows(ids, corpus_new[:50])
@@ -367,8 +354,6 @@ class TestMixedStateServing:
         map as if it were f_old)."""
         corpus_old, _, _, _, _ = world
         from repro.core import DriftAdapter
-        from repro.data import make_drift
-        from repro.data.drift import MILD_TEXT
 
         dcfg = dataclasses.replace(MILD_TEXT, d_old=D, d_new=D, seed=321)
         drift0 = make_drift(dcfg)
@@ -540,7 +525,7 @@ class TestCutoverAndRollback:
         assert store.active_upgrade is h2
 
     def test_ivf_replace_rows_unknown_id_is_keyerror(self, world):
-        index = build_ivf(jax.random.PRNGKey(2), world[0], n_cells=32)
+        index = build_index(world[0], kind="ivf", n_cells=32)
         with pytest.raises(KeyError):
             index.replace_rows(jnp.asarray([N + 50]), world[1][:1])
         with pytest.raises(KeyError):                # mixed known/unknown

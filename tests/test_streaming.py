@@ -1,0 +1,613 @@
+"""Oracle-backed mutation stress harness for the streaming mutable index.
+
+Every write path — insert (free-slot reuse + capacity grow/spill), delete
+(in-kernel tombstone masking), upsert, migrate_batch, compact — is driven
+against a Python-side value model (id → the exact fp32 row the store should
+be serving) and EVERY search is checked bit-identically against the
+brute-force jnp reference scans (``masked_topk_scan`` for native serving,
+``mixed_merge_scan`` mid-migration): ids ``array_equal``, scores 1e-5.
+IVF runs with ``nprobe`` ≥ every cell and int8 with ``shortlist_k`` =
+index size, so the references are exact for them too.
+
+Three tiers:
+
+* fast scripted interleavings (flat/IVF × fp32, mixed-state flat) and the
+  front-door write-lane / stale-revision contracts — the CI fast shard;
+* a hypothesis *stateful* machine (random rule interleavings, shrinkable)
+  on the flat fp32 store;
+* slow-marked ≥200-step seeded long-runs across index type × precision
+  that walk the FULL lifecycle (native writes → mid-migration writes with
+  interleaved migrate_batch → cutover → compact), seeded from
+  ``REPRO_TEST_SEED`` so the conftest failure hook's rerun line reproduces
+  any failure exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_store, op_fit_config
+from repro.kernels.mixed_scan.ref import masked_topk_scan, mixed_merge_scan
+from repro.serve import FrontDoor, MicroBatcher, StaleRevisionError
+
+# CI shards the fast tier on this marker (see ci.yml)
+pytestmark = pytest.mark.serving
+
+D = 32
+K = 5
+Q = 6
+
+
+def _unit(x):
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def _world(seed, n=96):
+    rng = np.random.default_rng(seed)
+    corpus = _unit(rng.standard_normal((n, D)).astype(np.float32))
+    queries = _unit(rng.standard_normal((Q, D)).astype(np.float32))
+    return rng, corpus, jnp.asarray(queries)
+
+
+class Model:
+    """The oracle's state: id → (space, row) for every row the store must
+    serve, mirroring each mutation the driver issues. ``check`` rebuilds a
+    dense buffer from it and re-scans with the jnp reference — if a write
+    landed a wrong value, in a wrong slot, or with a wrong liveness or
+    migration bit, the scan diverges and the comparison fails."""
+
+    def __init__(self, corpus, space="v1"):
+        self.rows = {i: (space, np.asarray(corpus[i]))
+                     for i in range(len(corpus))}
+
+    def insert(self, ids, rows, space):
+        for j, r in zip(np.asarray(ids).tolist(), np.asarray(rows)):
+            self.rows[int(j)] = (space, r)
+
+    upsert = insert
+
+    def delete(self, ids):
+        for j in np.asarray(ids).tolist():
+            self.rows.pop(int(j), None)
+
+    def migrate(self, ids, embed_new):
+        for j in np.asarray(ids).tolist():
+            self.rows[int(j)] = ("v2", embed_new(int(j)))
+
+    def compact(self, kept_ids):
+        remap = {int(o): n for n, o in enumerate(np.asarray(kept_ids))}
+        self.rows = {remap[i]: v for i, v in self.rows.items()}
+
+    def live_ids(self):
+        return sorted(self.rows)
+
+    def _dense(self, size):
+        buf = np.zeros((size, D), np.float32)
+        keep = np.zeros(size, bool)
+        mig = np.zeros(size, bool)
+        for i, (space, r) in self.rows.items():
+            buf[i], keep[i], mig[i] = r, True, space == "v2"
+        return jnp.asarray(buf), jnp.asarray(keep), jnp.asarray(mig)
+
+    def check(self, store, queries, k=K, tag="", bridge=None):
+        """Bit-parity of ``store.search`` against the brute-force re-scan
+        of the model. ``bridge`` (the store's v2 bridge) switches to the
+        mid-migration two-scan reference for new-space queries."""
+        if store.precision == "int8":
+            # exact-rescore exactness needs the shortlist to cover
+            # every row (see test_quant's exactness contract)
+            store.shortlist_k = int(store.index.size)
+        buf, keep, mig = self._dense(int(store.index.size))
+        if bridge is None:
+            s, i = masked_topk_scan(queries, buf, keep, k)
+            res = store.search(queries, k=k)
+        else:
+            s, i = mixed_merge_scan(
+                queries, bridge.apply(queries), buf, mig, k=k, alive=keep
+            )
+            res = store.search(queries, k=k, space="v2")
+        np.testing.assert_array_equal(
+            np.asarray(res.ids), np.asarray(i), err_msg=tag
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.scores), np.asarray(s), atol=1e-5, err_msg=tag
+        )
+
+
+def _step(store, model, rng, space="v1", allow_grow=True):
+    """One random mutation, mirrored into the model. Returns its kind."""
+    live = model.live_ids()
+    ops = ["insert", "delete", "upsert"]
+    op = ops[int(rng.integers(len(ops)))]
+    if op == "delete" and len(live) > Q:
+        ids = rng.choice(live, size=int(rng.integers(1, 4)), replace=False)
+        store.delete(ids)
+        model.delete(ids)
+    elif op == "upsert" and live:
+        n = int(rng.integers(1, 4))
+        ids = list(rng.choice(live, size=min(n, len(live)), replace=False))
+        if allow_grow and rng.integers(4) == 0:
+            ids[0] = int(store.index.size) + int(rng.integers(8))
+        rows = _unit(rng.standard_normal((len(ids), D)).astype(np.float32))
+        store.upsert(ids, rows, space=space)
+        model.upsert(ids, rows, space)
+    else:
+        n = int(rng.integers(1, 4))
+        if not allow_grow:
+            n = min(n, int(store.index.size) - len(live))
+            if n <= 0:
+                return "noop"
+        rows = _unit(rng.standard_normal((n, D)).astype(np.float32))
+        ids = store.insert(rows, space=space)
+        model.insert(ids, rows, space)
+    return op
+
+
+# ---------------------------------------------------------------------------
+# fast scripted interleavings
+# ---------------------------------------------------------------------------
+
+class TestScriptedStress:
+    @pytest.mark.parametrize("kind", ["flat", "ivf"])
+    def test_interleaved_writes_match_oracle(self, kind):
+        rng, corpus, queries = _world(0)
+        store = make_store(jnp.asarray(corpus), kind=kind, backend="fused",
+                           n_cells=4, nprobe=64)
+        model = Model(corpus)
+        model.check(store, queries, tag="baseline")
+        for step in range(24):
+            _step(store, model, rng)
+            if step % 4 == 3:
+                model.check(store, queries, tag=f"step {step}")
+        live_before = len(model.rows)
+        kept = store.compact(jax.random.PRNGKey(1))
+        assert len(np.asarray(kept)) == live_before
+        model.compact(kept)       # KeyErrors if any live id went missing
+        assert store.index_revision == 1
+        model.check(store, queries, tag="post-compact")
+        assert int(store.index.live_count) == len(model.rows)
+
+    def test_ivf_spill_keeps_parity(self):
+        """Inserting far past the cells' slot capacity forces overflow
+        cells; results stay exact and the occupancy gauge sees the spill."""
+        rng, corpus, queries = _world(1)
+        store = make_store(jnp.asarray(corpus), kind="ivf", n_cells=4,
+                           nprobe=128)
+        model = Model(corpus)
+        stats = store.write_stats()["cells"]
+        cells_before = stats["n_cells"]
+        # enough rows to exhaust every cell's free slots and force a spill
+        slack = cells_before * stats["slot_capacity"] - len(model.rows)
+        rows = _unit(
+            rng.standard_normal((slack + 10, D)).astype(np.float32)
+        )
+        ids = store.insert(rows)
+        model.insert(ids, rows, "v1")
+        assert store.write_stats()["cells"]["n_cells"] > cells_before
+        model.check(store, queries, tag="post-spill")
+
+    def test_int8_writes_stay_bit_exact(self):
+        rng, corpus, queries = _world(2)
+        store = make_store(jnp.asarray(corpus), backend="fused",
+                           precision="int8")
+        model = Model(corpus)
+        store.delete([1, 2, 3])
+        model.delete([1, 2, 3])
+        rows = _unit(rng.standard_normal((5, D)).astype(np.float32))
+        ids = store.insert(rows)
+        model.insert(ids, rows, "v1")
+        model.check(store, queries, tag="int8 writes")
+
+    def test_maybe_compact_trigger(self):
+        rng, corpus, queries = _world(3)
+        store = make_store(jnp.asarray(corpus), backend="fused")
+        model = Model(corpus)
+        assert store.maybe_compact(max_tombstone_ratio=0.3) is None
+        dead = list(range(40))
+        store.delete(dead)
+        model.delete(dead)
+        assert store.write_stats()["tombstone_ratio"] >= 0.3
+        kept = store.maybe_compact(max_tombstone_ratio=0.3)
+        assert kept is not None and store.index_revision == 1
+        model.compact(kept)
+        model.check(store, queries, tag="auto-compacted")
+
+    def test_write_telemetry_counters(self):
+        rng, corpus, _ = _world(4)
+        store = make_store(jnp.asarray(corpus), backend="fused")
+        store.attach_telemetry()
+        # delete first so the inserts land in freed slots (no capacity
+        # grow: grown slack would count toward the tombstone gauge)
+        store.delete([0, 1, 2])
+        store.insert(_unit(rng.standard_normal((2, D)).astype(np.float32)))
+        counters = store.telemetry.counters()
+        assert counters["writes"] == {"delete": 3, "insert": 2}
+        stats = counters["index_stats"]
+        assert stats["capacity"] == len(corpus)
+        assert stats["live"] == len(corpus) - 1
+        assert stats["tombstones"] == 1
+
+
+class TestMixedStateStress:
+    """Writes while an upgrade is mid-migration: new-space inserts set the
+    migration bit, old-space rows flow through the provider, and every
+    v2-space search matches the two-scan reference with liveness folded."""
+
+    def _open_mixed(self, seed):
+        rng, corpus, queries = _world(seed, n=96)
+        store = make_store(jnp.asarray(corpus), backend="fused")
+        model = Model(corpus)
+        W = np.linalg.qr(rng.standard_normal((D, D)).astype(np.float32))[0]
+        new_vals: dict[int, np.ndarray] = {}
+
+        def embed_new(i):
+            if i not in new_vals:
+                new_vals[i] = _unit(
+                    np.asarray(model.rows[i][1], np.float32) @ W
+                ).astype(np.float32)
+            return new_vals[i]
+
+        h = store.upgrade(
+            "v2",
+            corpus_new_provider=lambda ids: jnp.asarray(
+                np.stack([embed_new(int(i)) for i in np.asarray(ids)])
+            ),
+        )
+        pairs_new = jnp.asarray(np.stack([embed_new(i) for i in range(96)]))
+        h.fit(pairs_new, jnp.asarray(corpus), config=op_fit_config())
+        h.deploy()
+        q_new = jnp.asarray(np.asarray(queries) @ W)
+        return rng, store, model, h, embed_new, q_new
+
+    def _migrate_some(self, h, model, embed_new, n):
+        before = np.asarray(h._migrated).copy()
+        h.migrate_batch(n)
+        moved = np.flatnonzero(np.asarray(h._migrated) & ~before)
+        model.migrate([i for i in moved if i in model.rows], embed_new)
+
+    def test_mid_migration_writes_match_two_scan_oracle(self):
+        rng, store, model, h, embed_new, q_new = self._open_mixed(5)
+        self._migrate_some(h, model, embed_new, 40)
+        bridge = store.bridge("v2")
+        model.check(store, q_new, tag="mid-migration baseline",
+                    bridge=bridge)
+        for step in range(12):
+            space = ("v1", "v2")[step % 2]
+            _step(store, model, rng, space=space)
+            if step % 3 == 2:
+                self._migrate_some(h, model, embed_new, 8)
+                model.check(store, q_new, tag=f"mixed step {step}",
+                            bridge=store.bridge("v2"))
+
+    def test_new_space_insert_sets_migration_bit(self):
+        rng, store, model, h, embed_new, q_new = self._open_mixed(6)
+        self._migrate_some(h, model, embed_new, 30)
+        rows = _unit(rng.standard_normal((2, D)).astype(np.float32))
+        new_ids = store.insert(rows, space="v2")
+        assert np.all(np.asarray(h._migrated)[np.asarray(new_ids)])
+        old_ids = store.insert(
+            _unit(rng.standard_normal((1, D)).astype(np.float32)),
+            space="v1",
+        )
+        assert not np.any(np.asarray(h._migrated)[np.asarray(old_ids)])
+
+    def test_pre_upgrade_tombstones_are_born_migrated(self):
+        # rows already dead when the upgrade opens must never reach the
+        # provider (it has no row for them) and must not stall progress
+        rng, corpus, queries = _world(11, n=96)
+        store = make_store(jnp.asarray(corpus), backend="fused")
+        model = Model(corpus)
+        store.delete([0, 7, 63])
+        model.delete([0, 7, 63])
+        W = np.linalg.qr(rng.standard_normal((D, D)).astype(np.float32))[0]
+
+        def provider(ids):
+            asked = np.asarray(ids)
+            assert not np.isin(asked, [0, 7, 63]).any(), \
+                f"provider asked for dead rows: {asked}"
+            return jnp.asarray(_unit(
+                np.stack([np.asarray(model.rows[int(i)][1]) for i in asked])
+                @ W
+            ))
+
+        h = store.upgrade("v2", corpus_new_provider=provider)
+        assert np.asarray(h._migrated)[[0, 7, 63]].all()
+        live = model.live_ids()
+        old = np.stack([model.rows[i][1] for i in live])
+        new = _unit(old @ W).astype(np.float32)
+        h.fit(jnp.asarray(new), jnp.asarray(old), config=op_fit_config())
+        h.deploy()
+        while h.progress < 1.0:
+            h.migrate_batch(40)
+        model.migrate(live, lambda i: new[live.index(i)])
+        h.cutover()
+        q_new = jnp.asarray(np.asarray(queries) @ W)
+        model.check(store, q_new, tag="cutover after pre-upgrade deletes")
+        assert int(store.index.live_count) == len(model.rows)
+
+    def test_cutover_preserves_tombstones_then_compact(self):
+        rng, store, model, h, embed_new, q_new = self._open_mixed(7)
+        self._migrate_some(h, model, embed_new, 40)
+        store.delete([10, 50])
+        model.delete([10, 50])
+        while h.progress < 1.0:
+            self._migrate_some(h, model, embed_new, 64)
+        h.cutover()
+        assert int(store.index.live_count) == len(model.rows)
+        model.check(store, q_new, tag="post-cutover")   # v2 native now
+        kept = store.compact()
+        model.compact(kept)
+        assert int(store.index.size) == len(model.rows)
+        model.check(store, q_new, tag="post-cutover compact")
+
+
+# ---------------------------------------------------------------------------
+# front door + micro-batcher (write lane, stale-revision refusal)
+# ---------------------------------------------------------------------------
+
+class TestFrontDoorWrites:
+    def test_write_lane_applies_before_reads(self):
+        rng, corpus, queries = _world(8)
+        store = make_store(jnp.asarray(corpus), backend="fused")
+        door = FrontDoor(store)
+        ticket = door.delete([9])
+        r = door.submit(corpus[10])
+        summary = door.drain()
+        assert ticket.done and ticket.error is None and ticket.result == 1
+        assert summary["writes"] == 1 and r.result.ok
+        # the read landed AFTER the delete: id 9 cannot appear
+        assert 9 not in r.result.ids.tolist()
+
+    def test_write_errors_land_on_ticket_not_loop(self):
+        _, corpus, _ = _world(9)
+        store = make_store(jnp.asarray(corpus), backend="fused")
+        door = FrontDoor(store)
+
+        def boom():
+            raise RuntimeError("write exploded")
+
+        bad = door.write(boom)
+        ok = door.insert(_unit(np.ones((1, D), np.float32)))
+        summary = door.drain()
+        assert bad.done and isinstance(bad.error, RuntimeError)
+        assert ok.done and ok.error is None
+        assert summary["writes"] == 2
+
+    def test_compact_rejects_queued_stale_reads(self):
+        _, corpus, queries = _world(10)
+        store = make_store(jnp.asarray(corpus), backend="fused")
+        store.delete([3])
+        door = FrontDoor(store)
+        ticket = door.compact()
+        stale = door.submit(corpus[10])     # stamped pre-compact revision
+        summary = door.drain()
+        assert ticket.done and ticket.error is None
+        assert not stale.result.ok
+        assert stale.result.reason == "stale_revision"
+        assert summary["stale"] == 1
+        fresh = door.submit(corpus[10])
+        door.drain()
+        assert fresh.result.ok
+
+    def test_non_renumbering_writes_do_not_reject(self):
+        _, corpus, _ = _world(11)
+        store = make_store(jnp.asarray(corpus), backend="fused")
+        door = FrontDoor(store)
+        door.delete([5])                     # no renumbering
+        r = door.submit(corpus[10])
+        door.drain()
+        assert r.result.ok
+
+    def test_microbatcher_raises_stale_then_recovers(self):
+        _, corpus, _ = _world(12)
+        store = make_store(jnp.asarray(corpus), backend="fused")
+        store.delete([4])
+        mb = MicroBatcher(D, revision_of=lambda: store.index_revision)
+        mb.submit(corpus[0])
+        mb.submit(corpus[1])
+        store.compact()
+        with pytest.raises(StaleRevisionError) as err:
+            mb.drain(lambda q, k: store.index.search(q, k=k), k=K)
+        assert err.value.rids == [0, 1]
+        assert mb.pending == 2               # nothing dispatched or lost
+        assert mb.drop_stale() == [0, 1]
+        assert mb.pending == 0
+        mb.submit(corpus[2])
+        out = mb.drain(lambda q, k: store.index.search(q, k=k), k=K)
+        assert set(out) == {2}
+
+
+# ---------------------------------------------------------------------------
+# hypothesis stateful machine (randomized, shrinkable interleavings)
+# ---------------------------------------------------------------------------
+
+try:      # optional, like test_quant's property tier — CI installs it
+    from hypothesis import settings, strategies as st
+    from hypothesis.stateful import (
+        RuleBasedStateMachine,
+        invariant,
+        precondition,
+        rule,
+    )
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    class FlatMutationMachine(RuleBasedStateMachine):
+        """Model-based stress: hypothesis interleaves the rules below in
+        random orders and shrinks any failing sequence to a minimal repro;
+        the invariant re-checks search parity against the model after
+        EVERY rule."""
+
+        def __init__(self):
+            super().__init__()
+            self._rng, corpus, self.queries = _world(13, n=48)
+            self.store = make_store(jnp.asarray(corpus), backend="fused")
+            self.model = Model(corpus)
+
+        def _fresh_rows(self, n):
+            return _unit(
+                self._rng.standard_normal((n, D)).astype(np.float32)
+            )
+
+        @rule(n=st.integers(1, 3))
+        def insert(self, n):
+            rows = self._fresh_rows(n)
+            ids = self.store.insert(rows)
+            self.model.insert(ids, rows, "v1")
+
+        @precondition(lambda self: len(self.model.rows) > Q)
+        @rule(data=st.data())
+        def delete(self, data):
+            live = self.model.live_ids()
+            ids = data.draw(
+                st.lists(st.sampled_from(live), min_size=1, max_size=3,
+                         unique=True)
+            )
+            self.store.delete(ids)
+            self.model.delete(ids)
+
+        @precondition(lambda self: self.model.rows)
+        @rule(data=st.data(), fresh=st.booleans())
+        def upsert(self, data, fresh):
+            live = self.model.live_ids()
+            ids = data.draw(
+                st.lists(st.sampled_from(live), min_size=1, max_size=2,
+                         unique=True)
+            )
+            if fresh:  # extend the id space past the capacity edge
+                ids = ids[:1] + [int(self.store.index.size)]
+            rows = self._fresh_rows(len(ids))
+            self.store.upsert(ids, rows)
+            self.model.upsert(ids, rows, "v1")
+
+        @precondition(
+            lambda self: self.store.write_stats()["tombstones"] > 0
+        )
+        @rule()
+        def compact(self):
+            kept = self.store.compact()
+            self.model.compact(kept)
+
+        @invariant()
+        def search_matches_model(self):
+            self.model.check(self.store, self.queries, tag="machine")
+
+    FlatMutationMachine.TestCase.settings = settings(
+        max_examples=8, stateful_step_count=10, deadline=None,
+        database=None, print_blob=True,
+    )
+    TestFlatMutationMachine = FlatMutationMachine.TestCase
+
+
+# ---------------------------------------------------------------------------
+# slow seeded long-runs: ≥200 interleaved steps across the full lifecycle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestLongRunStress:
+    """The acceptance-gate runs: ≥200 randomized interleaved steps per
+    (index type × precision), bit-identical to the reference on every
+    check, walking native writes → mid-migration writes → cutover →
+    compact. Seeded from REPRO_TEST_SEED (the conftest failure hook prints
+    the rerun line)."""
+
+    @pytest.mark.parametrize("kind,precision", [
+        ("flat", "fp32"),
+        ("ivf", "fp32"),
+        ("flat", "int8"),
+        ("ivf", "int8"),
+    ])
+    def test_lifecycle_long_run(self, kind, precision, np_seed):
+        n0 = 96
+        rng, corpus, queries = _world(np_seed + 17, n=n0)
+        # int8 pays an XLA compile per (shape, shortlist) pair in
+        # interpret mode — keep the id space fixed there (writes reuse
+        # freed slots; no grows) so each phase compiles once
+        allow_grow = precision == "fp32"
+        store = make_store(jnp.asarray(corpus), kind=kind, backend="fused",
+                           n_cells=4, nprobe=512, precision=precision)
+        model = Model(corpus)
+        steps = 0
+        check_every = 5 if precision == "fp32" else 25
+
+        def maybe_check(tag, bridge=None, q=queries):
+            if steps % check_every == 0:
+                model.check(store, q, tag=f"{tag} step {steps}",
+                            bridge=bridge)
+
+        # phase 1: native writes
+        for _ in range(80):
+            if allow_grow or rng.integers(3) > 0:
+                _step(store, model, rng, allow_grow=allow_grow)
+            else:       # keep delete pressure up when grows are off
+                live = model.live_ids()
+                if len(live) > Q:
+                    ids = rng.choice(live, size=2, replace=False)
+                    store.delete(ids)
+                    model.delete(ids)
+            steps += 1
+            maybe_check("native")
+        model.check(store, queries, tag="end of native phase")
+
+        # phase 2: open an upgrade; writes + migration interleave
+        W = np.linalg.qr(rng.standard_normal((D, D)).astype(np.float32))[0]
+        new_vals: dict[int, np.ndarray] = {}
+
+        def embed_new(i):
+            if i not in new_vals:
+                new_vals[i] = _unit(
+                    np.asarray(model.rows[i][1], np.float32) @ W
+                ).astype(np.float32)
+            return new_vals[i]
+
+        h = store.upgrade(
+            "v2",
+            corpus_new_provider=lambda ids: jnp.asarray(
+                np.stack([embed_new(int(i)) for i in np.asarray(ids)])
+            ),
+        )
+        live = model.live_ids()
+        pairs_old = jnp.asarray(np.stack(
+            [model.rows[i][1] for i in live]
+        ))
+        pairs_new = jnp.asarray(np.stack([embed_new(i) for i in live]))
+        h.fit(pairs_new, pairs_old, config=op_fit_config())
+        h.deploy()
+        q_new = jnp.asarray(np.asarray(queries) @ W)
+
+        def migrate_some(n):
+            before = np.asarray(h._migrated).copy()
+            h.migrate_batch(n)
+            moved = np.flatnonzero(np.asarray(h._migrated) & ~before)
+            model.migrate([i for i in moved if i in model.rows], embed_new)
+
+        migrate_some(20)
+        for i in range(70):
+            space = ("v1", "v2")[int(rng.integers(2))]
+            _step(store, model, rng, space=space, allow_grow=allow_grow)
+            if rng.integers(4) == 0:
+                migrate_some(int(rng.integers(4, 12)))
+            steps += 1
+            maybe_check("mixed", bridge=store.bridge("v2"), q=q_new)
+        model.check(store, q_new, tag="end of mixed phase",
+                    bridge=store.bridge("v2"))
+
+        # phase 3: finish migration, cut over, keep writing, compact
+        while h.progress < 1.0:
+            migrate_some(256)
+        h.cutover()
+        model.check(store, q_new, tag="post-cutover")
+        for _ in range(50):
+            _step(store, model, rng, space="v2", allow_grow=allow_grow)
+            steps += 1
+            maybe_check("post-cutover", q=q_new)
+        if store.write_stats()["tombstones"] > 0:
+            kept = store.compact(jax.random.PRNGKey(np_seed))
+            model.compact(kept)
+        assert steps >= 200
+        model.check(store, q_new, tag="final")
+        assert int(store.index.live_count) == len(model.rows)
