@@ -746,6 +746,201 @@ def run_quant() -> dict:
     return out
 
 
+def bench_binary_path(
+    k: int = 10,
+    flat_n: int = 4096,
+    ivf_n: int = 2048,
+    d: int = 256,
+    batch: int = 64,
+    nprobe: int = 8,
+    n_cells: int = 32,
+    group: int = 16,
+    noise: float = 0.5,
+) -> dict:
+    """Bit-packed sign-bit first-pass scan + exact fp32 shortlist rescore
+    vs the fp32 serving path, flat AND IVF, through ScanPlan →
+    BENCH_binary.json.
+
+    The capacity win is BYTES-SCANNED: one uint32 word per 32 dims vs f32
+    rows — 32× at d=256 (8× smaller than the int8 codes+scales plane).
+    Recall parity is measured on a near-duplicate grouped corpus: every
+    ``group`` rows share a unit centroid plus a norm-``noise`` perturbation,
+    and queries perturb a centroid the same way. That is the regime 1-bit
+    signatures are built for (dedup/retrieval over drifting re-embeddings
+    of the same items, the paper's setting); on an isotropic gaussian
+    corpus all dots are ~0 and sign agreement carries no signal, so no
+    shortlist multiple recovers fp32's arbitrary ordering. Parity
+    (≥ 0.99 R@10, hard-gated by check_bench) uses the default
+    ``shortlist_k = 4·k``; latency keeps the interleaved
+    median-of-pair-ratios methodology with the speedup interpret-advisory
+    (the TPU projection is where 32× fewer first-pass bytes cash out).
+    """
+    import statistics
+    import time
+
+    from repro.ann import FlatIndex, recall_at_k
+    from repro.kernels.engine import compile_plan, execute_plan
+    from repro.kernels.engine.core import bin_words
+
+    def _unit(x):
+        return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+    n_groups = flat_n // group
+    cent = _unit(jax.random.normal(jax.random.PRNGKey(0), (n_groups, d)))
+    corpus = _unit(
+        jnp.repeat(cent, group, axis=0)
+        + noise * _unit(jax.random.normal(jax.random.PRNGKey(1),
+                                          (flat_n, d)))
+    )
+    # draw query groups from the ivf_n prefix so every query's group
+    # exists in BOTH corpora (the IVF arm indexes corpus[:ivf_n])
+    gq = jax.random.choice(jax.random.PRNGKey(2), ivf_n // group, (batch,),
+                           replace=False)
+    q = _unit(cent[gq] + noise * _unit(
+        jax.random.normal(jax.random.PRNGKey(3), (batch, d))))
+    from repro.ann import flat_search_jnp as _oracle
+
+    _, gt = _oracle(corpus, q, k=k)
+
+    out: dict = {"k": k, "batch": batch, "d": d, "group": group,
+                 "noise": noise}
+
+    # -- flat: fp32 one-launch fused scan vs binary scan + rescore ---------
+    flat = FlatIndex(corpus=corpus, backend="fused").binarize()
+    plan32 = compile_plan(flat)
+    planb = compile_plan(flat, precision="binary")
+    shortlist = planb.shortlist(k, flat_n)
+
+    def flat_fp32(qx):
+        return execute_plan(plan32, qx, index=flat, k=k)
+
+    def flat_bin(qx):
+        return execute_plan(planb, qx, index=flat, k=k)
+
+    r32 = float(recall_at_k(flat_fp32(q)[1], gt))
+    rb = float(recall_at_k(flat_bin(q)[1], gt))
+
+    def _once(fn):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(q))
+        return (time.perf_counter() - t0) * 1e6
+
+    for fn in (flat_fp32, flat_bin):
+        _once(fn)                       # compile outside the timed loop
+    samples: dict = {"fp32": [], "binary": []}
+    ratios = []
+    for _ in range(10):
+        t32 = _once(flat_fp32)
+        tb = _once(flat_bin)
+        samples["fp32"].append(t32)
+        samples["binary"].append(tb)
+        ratios.append(t32 / tb)
+
+    # first-pass bytes: fp32 rows vs packed sign words (vs int8 for the
+    # intermediate-tier ratio — codes + one f32 scale per row)
+    w = bin_words(d)
+    fp32_bytes = _bytes_f32((flat_n, d))
+    int8_bytes = flat_n * d + _bytes_f32((flat_n,))
+    bin_bytes = 4 * flat_n * w
+    cap = flat.rcells.shape[1]
+    rescore_bytes = _bytes_f32((batch, shortlist, cap, d))
+    out["flat"] = {
+        "n": flat_n,
+        "shortlist_k": shortlist,
+        "kernels": list(planb.kernels()),
+        "launches": planb.launch_count,
+        "recall_fp32": round(r32, 4),
+        "recall_binary": round(rb, 4),
+        "recall_parity": round(rb / r32, 4) if r32 else 0.0,
+        "first_pass_bytes_fp32": fp32_bytes,
+        "first_pass_bytes_int8": int8_bytes,
+        "first_pass_bytes_binary": bin_bytes,
+        "first_pass_bytes_ratio": round(fp32_bytes / bin_bytes, 3),
+        "first_pass_bytes_ratio_vs_int8": round(int8_bytes / bin_bytes, 3),
+        "rescore_bytes_binary": rescore_bytes,
+        "us_per_batch_fp32": round(statistics.median(samples["fp32"]), 1),
+        "us_per_batch_binary": round(
+            statistics.median(samples["binary"]), 1),
+        "speedup": round(statistics.median(ratios), 3),
+    }
+
+    # -- IVF: fp32 probe+scan vs probe + binary scan + exact rescore -------
+    ivf = build_ivf(jax.random.PRNGKey(7), corpus[:ivf_n], n_cells=n_cells)
+    ivf = dataclasses.replace(ivf, backend="fused").binarize()
+    _, gt_ivf = _oracle(corpus[:ivf_n], q, k=k)
+    iplan32 = compile_plan(ivf)
+    iplanb = compile_plan(ivf, precision="binary")
+    ishort = iplanb.shortlist(k, ivf_n)
+
+    def ivf_fp32(qx):
+        return execute_plan(iplan32, qx, index=ivf, k=k, nprobe=nprobe)
+
+    def ivf_bin(qx):
+        return execute_plan(iplanb, qx, index=ivf, k=k, nprobe=nprobe)
+
+    ir32 = float(recall_at_k(ivf_fp32(q)[1], gt_ivf))
+    irb = float(recall_at_k(ivf_bin(q)[1], gt_ivf))
+    for fn in (ivf_fp32, ivf_bin):
+        _once(fn)
+    isamples: dict = {"fp32": [], "binary": []}
+    iratios = []
+    for _ in range(10):
+        t32 = _once(ivf_fp32)
+        tb = _once(ivf_bin)
+        isamples["fp32"].append(t32)
+        isamples["binary"].append(tb)
+        iratios.append(t32 / tb)
+
+    icap = ivf.capacity
+    # first pass streams nprobe cell tiles per query: (cap, d) f32 vs
+    # (cap, w) packed uint32 (vs int8 codes + per-slot scales)
+    ifp32_bytes = _bytes_f32((batch, nprobe, icap, d))
+    iint8_bytes = batch * nprobe * icap * d + _bytes_f32(
+        (batch, nprobe, icap)
+    )
+    ibin_bytes = 4 * batch * nprobe * icap * w
+    out["ivf"] = {
+        "n": ivf_n,
+        "n_cells": n_cells,
+        "cell_capacity": icap,
+        "nprobe": nprobe,
+        "shortlist_k": ishort,
+        "kernels": list(iplanb.kernels()),
+        "launches": iplanb.launch_count,
+        "recall_fp32": round(ir32, 4),
+        "recall_binary": round(irb, 4),
+        "recall_parity": round(irb / ir32, 4) if ir32 else 0.0,
+        "first_pass_bytes_fp32": ifp32_bytes,
+        "first_pass_bytes_int8": iint8_bytes,
+        "first_pass_bytes_binary": ibin_bytes,
+        "first_pass_bytes_ratio": round(ifp32_bytes / ibin_bytes, 3),
+        "first_pass_bytes_ratio_vs_int8": round(
+            iint8_bytes / ibin_bytes, 3),
+        "us_per_batch_fp32": round(statistics.median(isamples["fp32"]), 1),
+        "us_per_batch_binary": round(
+            statistics.median(isamples["binary"]), 1),
+        "speedup": round(statistics.median(iratios), 3),
+    }
+    out["caveat"] = TPU_CAVEAT
+    return out
+
+
+def run_binary() -> dict:
+    """Standalone binary-path section → BENCH_binary.json (the CI bench
+    artifact gating recall parity + packed first-pass bytes)."""
+    out = bench_binary_path()
+    for side in ("flat", "ivf"):
+        emit(f"a1.binary_{side}.recall_parity", 0.0,
+             out[side]["recall_parity"])
+        emit(f"a1.binary_{side}.first_pass_bytes_ratio", 0.0,
+             out[side]["first_pass_bytes_ratio"])
+        emit(f"a1.binary_{side}.us_per_batch_binary",
+             out[side]["us_per_batch_binary"], out[side]["speedup"])
+    print(f"# caveat: {TPU_CAVEAT}", flush=True)
+    save_json("BENCH_binary", out)
+    return out
+
+
 def run(scale: Scale) -> dict:
     d = 768
     key = jax.random.PRNGKey(0)
@@ -851,6 +1046,11 @@ if __name__ == "__main__":
         help="run just the int8-first-pass vs fp32 serving section "
         "(the CI bench artifact: BENCH_quant.json)",
     )
+    ap.add_argument(
+        "--binary-only", action="store_true",
+        help="run just the bit-packed-binary vs fp32 serving section "
+        "(the CI bench artifact: BENCH_binary.json)",
+    )
     args = ap.parse_args()
     if args.ivf_only:
         run_ivf()
@@ -860,6 +1060,8 @@ if __name__ == "__main__":
         run_engine()
     elif args.quant_only:
         run_quant()
+    elif args.binary_only:
+        run_binary()
     else:
         from benchmarks.common import DEFAULT
 

@@ -13,6 +13,13 @@ must serve) mirrors every applied write; the phases gate on it:
 * **post-load parity** (hard): after the stream drains, a probe batch must
   be BIT-IDENTICAL to the brute-force fp32 re-scan of the model — wrong
   values, slots, or liveness bits all diverge here.
+* **binary shadow parity** (hard): every applied write is mirrored into a
+  second ``precision="binary"`` store, so each mutation re-encodes the
+  packed sign-bit plane under load; after the stream drains, EVERY live
+  row's packed code must equal ``binarize_rows`` of the value model's row
+  (codes can never go stale), and self-retrieval probes — recently
+  mutated rows served back through the 2-launch binary scan + exact
+  rescore — must return themselves at rank 1 with score ≈ 1.
 * **mid-stream compaction** (hard): a ``compact()`` queued on the write
   lane must renumber ids, reject the reads queued behind it explicitly as
   ``stale_revision`` (never serve renumbered ids silently), and the
@@ -54,8 +61,15 @@ def build_world(items: int, dim: int, n_queries: int, seed: int = 0):
         version="v1",
     )
     store.attach_telemetry()
+    # binary shadow: same rows served through the packed sign-bit tier at
+    # the default 4·k shortlist (the gate is code-plane sync + exact
+    # self-retrieval, both shortlist-independent)
+    shadow = VectorStore(
+        FlatIndex(corpus=jnp.asarray(corpus), backend="fused"),
+        version="v1", precision="binary",
+    )
     model = {i: corpus[i] for i in range(items)}
-    return rng, store, model, queries
+    return rng, store, shadow, model, queries
 
 
 def oracle_search(model: dict, size: int, dim: int, queries, k: int):
@@ -70,25 +84,36 @@ def oracle_search(model: dict, size: int, dim: int, queries, k: int):
     )
 
 
-def apply_write_result(model: dict, kind: str, ticket, payload) -> None:
-    """Mirror one applied write ticket into the value model."""
+def apply_write_result(model: dict, kind: str, ticket, payload,
+                       shadow=None) -> None:
+    """Mirror one applied write ticket into the value model (and, when
+    given, the binary shadow store — upserting at the ticket's assigned
+    ids keeps both stores' id spaces aligned while re-encoding the
+    shadow's packed sign-bit plane on every write)."""
     if ticket.error is not None:
         raise SystemExit(f"stream gate: {kind} write failed: {ticket.error}")
     if kind == "insert":
-        for j, r in zip(np.asarray(ticket.result).tolist(), payload):
+        ids = np.asarray(ticket.result).tolist()
+        for j, r in zip(ids, payload):
             model[int(j)] = r
+        if shadow is not None:
+            shadow.upsert(ids, jnp.asarray(np.stack(payload)))
     elif kind == "delete":
         for j in payload:
             model.pop(int(j), None)
+        if shadow is not None:
+            shadow.delete(payload)
     else:
         ids, rows = payload
         for j, r in zip(ids, rows):
             model[int(j)] = r
+        if shadow is not None:
+            shadow.upsert(ids, jnp.asarray(np.stack(rows)))
 
 
 def run_mixed_open_loop(
     door, store, model, queries, n_events: int, rate: float, k: int,
-    rng, dim: int,
+    rng, dim: int, shadow=None,
 ) -> dict:
     """One open-loop arm: Poisson arrivals, every WRITE_EVERY-th event a
     mutation on the write lane, the rest coalesced reads."""
@@ -132,7 +157,8 @@ def run_mixed_open_loop(
             door.drain()
             # every queued write ran at the head of that drain
             for kind, ticket, payload in pending_writes:
-                apply_write_result(model, kind, ticket, payload)
+                apply_write_result(model, kind, ticket, payload,
+                                   shadow=shadow)
             pending_writes.clear()
         elif i < n_events:
             time.sleep(min(max(arrivals[i] - now, 0.0), 0.01))
@@ -163,6 +189,47 @@ def run_parity_probe(store, model, queries, k: int) -> dict:
         "checked": int(queries.shape[0]),
         "bit_identical": ids_ok and scores_ok,
         "recall_vs_model": float(recall_at_k(res.ids, i_ref)),
+    }
+
+
+def run_binary_parity(shadow, model, k: int, probes: int = 8) -> dict:
+    """Hard gates on the mutated binary shadow:
+
+    1. **Code-plane sync** — every live row's packed word row equals
+       ``binarize_rows`` of the value model's row (a write that skipped
+       the re-encode diverges here; pure host math, zero launches).
+    2. **Exact self-retrieval** — the highest-id live rows (the stream's
+       freshest inserts/upserts) served back as queries through the
+       binary scan + exact rescore return THEMSELVES at rank 1 with
+       score ≈ 1 (unit rows: self-dot = 1, self-hamming = 0, so rank 1
+       is exact at any shortlist width).
+    """
+    from repro.kernels.engine.ops import binarize_rows
+
+    live = sorted(model)
+    rows = np.stack([model[i] for i in live])
+    want = np.asarray(binarize_rows(jnp.asarray(rows)))
+    got = np.asarray(shadow.index.bin_codes)[np.asarray(live)]
+    codes_ok = bool(np.array_equal(want, got))
+
+    probe_ids = live[-probes:]
+    res = shadow.search(
+        jnp.asarray(np.stack([model[i] for i in probe_ids])), k=k
+    )
+    top_ids = np.asarray(res.ids)[:, 0]
+    top_scores = np.asarray(res.scores)[:, 0]
+    self_ok = bool(
+        np.array_equal(top_ids, np.asarray(probe_ids))
+        and np.allclose(top_scores, 1.0, atol=1e-5)
+    )
+    return {
+        "live_rows_checked": len(live),
+        "self_probes": len(probe_ids),
+        "precision": shadow.precision,
+        "binarized": bool(getattr(shadow.index, "binarized", False)),
+        "codes_in_sync": codes_ok,
+        "self_retrieval_exact": self_ok,
+        "bit_identical": codes_ok and self_ok,
     }
 
 
@@ -222,7 +289,9 @@ def main() -> None:
     dim = args.dim or (64 if args.smoke else 256)
     n_events = args.events or (240 if args.smoke else 800)
 
-    rng, store, model, queries = build_world(items, dim, n_queries=32)
+    rng, store, shadow, model, queries = build_world(
+        items, dim, n_queries=32
+    )
     door = FrontDoor(store, max_depth=16 * n_events)
 
     # capacity probe (also warms the serving plan trace)
@@ -232,7 +301,7 @@ def main() -> None:
 
     load = run_mixed_open_loop(
         door, store, model, queries, n_events=n_events,
-        rate=capacity, k=args.k, rng=rng, dim=dim,
+        rate=capacity, k=args.k, rng=rng, dim=dim, shadow=shadow,
     )
     emit("stream_mixed_load", load["total_p50_ms"] * 1e3,
          load["write_throughput_rps"])
@@ -247,6 +316,15 @@ def main() -> None:
     print(f"# parity: bit_identical={parity['bit_identical']} "
           f"recall={parity['recall_vs_model']:.3f}")
 
+    binary = run_binary_parity(shadow, model, args.k)
+    emit("stream_binary_parity", 0.0,
+         float(binary["bit_identical"]))
+    print(f"# binary shadow: codes_in_sync={binary['codes_in_sync']} "
+          f"self_retrieval_exact={binary['self_retrieval_exact']} "
+          f"({binary['live_rows_checked']} rows)")
+
+    # compaction renumbers the main store's ids only — the shadow's gate
+    # is complete, so it stops mirroring here
     compaction = run_compaction_phase(door, store, model, queries, args.k)
     emit("stream_compaction", 0.0, compaction["recall_parity"])
     print(f"# compaction: ratio_before="
@@ -267,6 +345,7 @@ def main() -> None:
         ),
         "load": load,
         "parity": parity,
+        "binary_parity": binary,
         "compaction": compaction,
         "write_stats": store.write_stats(),
         "telemetry": store.telemetry.counters(),
@@ -281,6 +360,11 @@ def main() -> None:
     if not parity["bit_identical"]:
         raise SystemExit(
             "stream gate: post-load serving diverged from the value model"
+        )
+    if not binary["bit_identical"]:
+        raise SystemExit(
+            "stream gate: binary shadow diverged from the value model "
+            "after mutations re-encoded its packed sign-bit plane"
         )
     if compaction["stale_rejected"] < 1:
         raise SystemExit(

@@ -106,8 +106,10 @@ class FlatIndex:
     symmetric codes + scales for the quantized first-pass scan, and the
     corpus viewed as fp32 "virtual cells" (``rcells``/``rcell_ids``) so
     the exact shortlist rescore reuses the engine's IVF layout.
-    ``replace_rows`` keeps every piece in sync — mid-migration mixed
-    scans stay quantized.
+    ``binarize()`` attaches the bit-packed sign codes for the binary
+    first-pass scan the same way (both tiers share one virtual-cell
+    rescore view). ``replace_rows`` keeps every piece in sync —
+    mid-migration mixed scans stay quantized.
 
     **Mutability.** ``insert_rows`` / ``delete_rows`` / ``upsert_rows``
     make the index writable: a row's id IS its slot, slots of deleted rows
@@ -129,6 +131,7 @@ class FlatIndex:
     id_to_cell: jax.Array | None = None   # (N,) int32 — id // cap
     alive: jax.Array | None = None        # (N,) int32 tombstones; None =
                                           # immutable (all rows live)
+    bin_codes: jax.Array | None = None    # (N, w) uint32 packed sign bits
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -149,6 +152,10 @@ class FlatIndex:
         return self.codes is not None
 
     @property
+    def binarized(self) -> bool:
+        return self.bin_codes is not None
+
+    @property
     def live_count(self) -> int:
         """Rows that are actually searchable (size minus tombstones)."""
         if self.alive is None:
@@ -159,18 +166,14 @@ class FlatIndex:
     def has_tombstones(self) -> bool:
         return self.alive is not None
 
-    def quantize(self, cap: int = 128) -> "FlatIndex":
-        """Attach the int8 serving representation (one-time, like a build).
-
-        ``cap`` is the virtual-cell row count for the exact rescore's
-        scalar-prefetch layout (a multiple of 8; candidate cells DMA as
-        ``(cap, d)`` tiles)."""
-        from repro.kernels.engine.core import quantize_rows
-
+    def _rescore_view(self, cap: int) -> dict:
+        """The corpus as fp32 virtual cells for the exact shortlist
+        rescore's scalar-prefetch layout — shared by ``quantize`` and
+        ``binarize`` (whichever runs first builds it; both tiers rescore
+        through ONE view)."""
         if cap % 8:
             raise ValueError(f"cap={cap} must be a multiple of 8")
         n, d = self.corpus.shape
-        codes, scales = quantize_rows(self.corpus)
         n_cells = -(-n // cap)
         padded = jnp.pad(self.corpus, ((0, n_cells * cap - n), (0, 0)))
         ids = jnp.arange(n_cells * cap, dtype=jnp.int32)
@@ -179,13 +182,38 @@ class FlatIndex:
             # dead slots blank to -1 in the rescore layout too, matching
             # the first pass's alive-plane mask
             valid = valid & (self.alive[jnp.clip(ids, 0, n - 1)] > 0)
+        return dict(
+            rcells=padded.reshape(n_cells, cap, d),
+            rcell_ids=jnp.where(valid, ids, -1).reshape(n_cells, cap),
+            id_to_cell=jnp.arange(n, dtype=jnp.int32) // cap,
+        )
+
+    def quantize(self, cap: int = 128) -> "FlatIndex":
+        """Attach the int8 serving representation (one-time, like a build).
+
+        ``cap`` is the virtual-cell row count for the exact rescore's
+        scalar-prefetch layout (a multiple of 8; candidate cells DMA as
+        ``(cap, d)`` tiles)."""
+        from repro.kernels.engine.core import quantize_rows
+
+        codes, scales = quantize_rows(self.corpus)
         return dataclasses.replace(
             self,
             codes=codes,
             code_scales=scales,
-            rcells=padded.reshape(n_cells, cap, d),
-            rcell_ids=jnp.where(valid, ids, -1).reshape(n_cells, cap),
-            id_to_cell=jnp.arange(n, dtype=jnp.int32) // cap,
+            **self._rescore_view(cap),
+        )
+
+    def binarize(self, cap: int = 128) -> "FlatIndex":
+        """Attach the binary serving representation: per-row bit-packed
+        sign codes (``(N, w)`` uint32, 32 dims per word) for the binary
+        first-pass scan, plus the SAME virtual-cell rescore view
+        ``quantize`` builds (reused as-is when already present)."""
+        from repro.kernels.engine.ops import binarize_rows
+
+        view = {} if self.rcells is not None else self._rescore_view(cap)
+        return dataclasses.replace(
+            self, bin_codes=binarize_rows(self.corpus), **view
         )
 
     def search(
@@ -260,20 +288,27 @@ class FlatIndex:
         out = dataclasses.replace(
             self, corpus=self.corpus.at[ids].set(new_rows)
         )
-        if self.codes is None:
-            return out
-        from repro.kernels.engine.core import quantize_rows
-
         ids = jnp.asarray(ids, jnp.int32)
         rows = jnp.asarray(new_rows, self.corpus.dtype)
-        codes, scales = quantize_rows(rows)
-        cap = self.rcell_ids.shape[1]
-        return dataclasses.replace(
-            out,
-            codes=self.codes.at[ids].set(codes),
-            code_scales=self.code_scales.at[ids].set(scales),
-            rcells=self.rcells.at[ids // cap, ids % cap].set(rows),
-        )
+        updates = {}
+        if self.codes is not None:
+            from repro.kernels.engine.core import quantize_rows
+
+            codes, scales = quantize_rows(rows)
+            updates["codes"] = self.codes.at[ids].set(codes)
+            updates["code_scales"] = self.code_scales.at[ids].set(scales)
+        if self.bin_codes is not None:
+            from repro.kernels.engine.ops import binarize_rows
+
+            updates["bin_codes"] = self.bin_codes.at[ids].set(
+                binarize_rows(rows)
+            )
+        if self.rcells is not None:
+            cap = self.rcell_ids.shape[1]
+            updates["rcells"] = self.rcells.at[ids // cap, ids % cap].set(
+                rows
+            )
+        return dataclasses.replace(out, **updates) if updates else out
 
     # ---- streaming mutation surface (insert / delete / upsert / compact)
 
@@ -307,29 +342,37 @@ class FlatIndex:
                 [idx.alive.astype(jnp.int32), jnp.zeros((pad,), jnp.int32)]
             ),
         )
-        if idx.codes is None:
-            return out
-        cap = idx.rcell_ids.shape[1]
-        n_cells = -(-new_cap // cap)
-        rflat = idx.rcells.reshape(-1, d)
-        iflat = idx.rcell_ids.reshape(-1)
-        extra = n_cells * cap - rflat.shape[0]
-        return dataclasses.replace(
-            out,
-            codes=jnp.concatenate(
+        updates = {}
+        if idx.codes is not None:
+            updates["codes"] = jnp.concatenate(
                 [idx.codes, jnp.zeros((pad, d), idx.codes.dtype)]
-            ),
-            code_scales=jnp.concatenate(
+            )
+            updates["code_scales"] = jnp.concatenate(
                 [idx.code_scales, jnp.ones((pad,), idx.code_scales.dtype)]
-            ),
-            rcells=jnp.concatenate(
+            )
+        if idx.bin_codes is not None:
+            # free slots pack as all-zero words (nothing scans them: the
+            # alive plane masks until an insert lands + re-encodes)
+            w = idx.bin_codes.shape[1]
+            updates["bin_codes"] = jnp.concatenate(
+                [idx.bin_codes, jnp.zeros((pad, w), jnp.uint32)]
+            )
+        if idx.rcells is not None:
+            cap = idx.rcell_ids.shape[1]
+            n_cells = -(-new_cap // cap)
+            rflat = idx.rcells.reshape(-1, d)
+            iflat = idx.rcell_ids.reshape(-1)
+            extra = n_cells * cap - rflat.shape[0]
+            updates["rcells"] = jnp.concatenate(
                 [rflat, jnp.zeros((extra, d), rflat.dtype)]
-            ).reshape(n_cells, cap, d),
-            rcell_ids=jnp.concatenate(
+            ).reshape(n_cells, cap, d)
+            updates["rcell_ids"] = jnp.concatenate(
                 [iflat, jnp.full((extra,), -1, jnp.int32)]
-            ).reshape(n_cells, cap),
-            id_to_cell=jnp.arange(new_cap, dtype=jnp.int32) // cap,
-        )
+            ).reshape(n_cells, cap)
+            updates["id_to_cell"] = (
+                jnp.arange(new_cap, dtype=jnp.int32) // cap
+            )
+        return dataclasses.replace(out, **updates) if updates else out
 
     def _write_slots(self, ids, rows: jax.Array) -> "FlatIndex":
         """Land payload rows at slots ``ids`` and mark them live, keeping
@@ -341,19 +384,28 @@ class FlatIndex:
             corpus=idx.corpus.at[jids].set(rows),
             alive=idx.alive.at[jids].set(1),
         )
-        if idx.codes is None:
-            return out
-        from repro.kernels.engine.core import quantize_rows
+        updates = {}
+        if idx.codes is not None:
+            from repro.kernels.engine.core import quantize_rows
 
-        codes, scales = quantize_rows(rows)
-        cap = idx.rcell_ids.shape[1]
-        return dataclasses.replace(
-            out,
-            codes=idx.codes.at[jids].set(codes),
-            code_scales=idx.code_scales.at[jids].set(scales),
-            rcells=idx.rcells.at[jids // cap, jids % cap].set(rows),
-            rcell_ids=idx.rcell_ids.at[jids // cap, jids % cap].set(jids),
-        )
+            codes, scales = quantize_rows(rows)
+            updates["codes"] = idx.codes.at[jids].set(codes)
+            updates["code_scales"] = idx.code_scales.at[jids].set(scales)
+        if idx.bin_codes is not None:
+            from repro.kernels.engine.ops import binarize_rows
+
+            updates["bin_codes"] = idx.bin_codes.at[jids].set(
+                binarize_rows(rows)
+            )
+        if idx.rcells is not None:
+            cap = idx.rcell_ids.shape[1]
+            updates["rcells"] = idx.rcells.at[jids // cap, jids % cap].set(
+                rows
+            )
+            updates["rcell_ids"] = idx.rcell_ids.at[
+                jids // cap, jids % cap
+            ].set(jids)
+        return dataclasses.replace(out, **updates) if updates else out
 
     def insert_rows(
         self, rows: jax.Array
@@ -420,7 +472,8 @@ class FlatIndex:
         """Drop tombstoned slots and renumber ids densely (old id →
         position in the returned ``kept_ids``). The alive plane goes away,
         so compiled plans revert to the non-``_ts`` kernel names; a
-        quantized index re-quantizes the compacted corpus."""
+        quantized index re-quantizes (and a binarized one re-binarizes)
+        the compacted corpus."""
         if self.alive is None:
             return self, np.arange(self.size, dtype=np.int32)
         keep = np.flatnonzero(self._alive_np()).astype(np.int32)
@@ -433,4 +486,6 @@ class FlatIndex:
         )
         if self.quantized:
             out = out.quantize(cap=self.rcell_ids.shape[1])
+        if self.binarized:
+            out = out.binarize(cap=self.rcell_ids.shape[1])
         return out, keep

@@ -44,6 +44,7 @@ class IVFIndex:
     cell_codes: jax.Array | None = None        # (C, cap, d) int8 slot codes
     cell_code_scales: jax.Array | None = None  # (C, cap) f32 per-slot scales
     id_to_cell: jax.Array | None = None        # (N,) int32 owning cell
+    cell_bin_codes: jax.Array | None = None    # (C, cap, w) u32 sign bits
 
     def __post_init__(self):
         from repro.ann.flat import BACKENDS
@@ -73,17 +74,14 @@ class IVFIndex:
     def quantized(self) -> bool:
         return self.cell_codes is not None
 
-    def quantize(self) -> "IVFIndex":
-        """Attach the int8 serving representation (one-time, like a build).
+    @property
+    def binarized(self) -> bool:
+        return self.cell_bin_codes is not None
 
-        Codes/scales mirror the packed (C, cap, d) cell layout slot for
-        slot — pad slots quantize to zero codes, and their id −1 keeps
-        them NEG-masked in-kernel either way. ``id_to_cell`` inverts
-        ``cell_ids`` so the exact rescore can turn a shortlist of global
-        ids into candidate cells via scalar prefetch."""
-        from repro.kernels.engine.core import quantize_rows
-
-        codes, scales = quantize_rows(self.cells)
+    def _id_table(self) -> jax.Array:
+        """Invert ``cell_ids`` → (N,) owning-cell table so the exact
+        rescore can turn a shortlist of global ids into candidate cells
+        via scalar prefetch."""
         flat = np.asarray(self.cell_ids).reshape(-1)
         cell_of = np.repeat(
             np.arange(self.n_cells, dtype=np.int32), self.capacity
@@ -91,11 +89,41 @@ class IVFIndex:
         valid = flat >= 0
         table = np.zeros((self.n_items,), np.int32)
         table[flat[valid]] = cell_of[valid]
+        return jnp.asarray(table)
+
+    def quantize(self) -> "IVFIndex":
+        """Attach the int8 serving representation (one-time, like a build).
+
+        Codes/scales mirror the packed (C, cap, d) cell layout slot for
+        slot — pad slots quantize to zero codes, and their id −1 keeps
+        them NEG-masked in-kernel either way."""
+        from repro.kernels.engine.core import quantize_rows
+
+        codes, scales = quantize_rows(self.cells)
         return dataclasses.replace(
             self,
             cell_codes=codes,
             cell_code_scales=scales,
-            id_to_cell=jnp.asarray(table),
+            id_to_cell=self._id_table(),
+        )
+
+    def binarize(self) -> "IVFIndex":
+        """Attach the bit-packed sign-bit serving representation.
+
+        ``cell_bin_codes`` mirrors the packed (C, cap, d) cell layout slot
+        for slot at one bit per dim (32 dims per uint32 word) — pad slots
+        pack to zero words, and their id −1 keeps them NEG-masked
+        in-kernel either way. Shares ``id_to_cell`` with the int8 plane
+        (built here if absent) so the exact rescore path is identical."""
+        from repro.kernels.engine.ops import binarize_rows
+
+        i2c = self.id_to_cell
+        if i2c is None:
+            i2c = self._id_table()
+        return dataclasses.replace(
+            self,
+            cell_bin_codes=binarize_rows(self.cells),
+            id_to_cell=i2c,
         )
 
     # Protocol-level mutation path for lazy/background re-embedding (§5.6):
@@ -119,22 +147,28 @@ class IVFIndex:
             raise KeyError(f"row ids not in index: {missing[:5].tolist()} ...")
         cap = self.capacity
         rows = jnp.asarray(new_rows, self.cells.dtype)
-        new_cells = self.cells.at[pos // cap, pos % cap].set(rows)
-        out = dataclasses.replace(self, cells=new_cells)
-        if self.cell_codes is None:
-            return out
-        # Keep the int8 codes slot-synced: rows never change cells here
-        # (id_to_cell stays valid), only their payload re-quantizes.
-        from repro.kernels.engine.core import quantize_rows
+        updates: dict = {
+            "cells": self.cells.at[pos // cap, pos % cap].set(rows)
+        }
+        # Keep the encoded planes slot-synced: rows never change cells here
+        # (id_to_cell stays valid), only their payload re-encodes.
+        if self.cell_codes is not None:
+            from repro.kernels.engine.core import quantize_rows
 
-        codes, scales = quantize_rows(rows)
-        return dataclasses.replace(
-            out,
-            cell_codes=self.cell_codes.at[pos // cap, pos % cap].set(codes),
-            cell_code_scales=self.cell_code_scales.at[
+            codes, scales = quantize_rows(rows)
+            updates["cell_codes"] = self.cell_codes.at[
                 pos // cap, pos % cap
-            ].set(scales),
-        )
+            ].set(codes)
+            updates["cell_code_scales"] = self.cell_code_scales.at[
+                pos // cap, pos % cap
+            ].set(scales)
+        if self.cell_bin_codes is not None:
+            from repro.kernels.engine.ops import binarize_rows
+
+            updates["cell_bin_codes"] = self.cell_bin_codes.at[
+                pos // cap, pos % cap
+            ].set(binarize_rows(rows))
+        return dataclasses.replace(self, **updates)
 
     # ---- streaming mutation surface (insert / delete / upsert / compact)
     #
@@ -183,67 +217,77 @@ class IVFIndex:
     def _scatter(
         self, pos: np.ndarray, ids_np: np.ndarray, rows: jax.Array
     ) -> "IVFIndex":
-        """Land payload rows (and their int8 codes) at packed positions
-        ``pos``, claiming those slots for ``ids_np``."""
+        """Land payload rows (and their encoded-plane codes) at packed
+        positions ``pos``, claiming those slots for ``ids_np``."""
         cap = self.capacity
         pos = jnp.asarray(pos.astype(np.int32))
         jids = jnp.asarray(ids_np.astype(np.int32))
         rows = jnp.asarray(rows, self.cells.dtype)
-        out = dataclasses.replace(
-            self,
-            cells=self.cells.at[pos // cap, pos % cap].set(rows),
-            cell_ids=self.cell_ids.at[pos // cap, pos % cap].set(jids),
-        )
-        if self.cell_codes is None:
-            return out
-        from repro.kernels.engine.core import quantize_rows
+        updates: dict = {
+            "cells": self.cells.at[pos // cap, pos % cap].set(rows),
+            "cell_ids": self.cell_ids.at[pos // cap, pos % cap].set(jids),
+        }
+        if self.cell_codes is not None:
+            from repro.kernels.engine.core import quantize_rows
 
-        codes, scales = quantize_rows(rows)
-        i2c = self.id_to_cell
-        if int(jids.max()) >= i2c.shape[0]:
-            i2c = jnp.concatenate([
-                i2c,
-                jnp.zeros((int(jids.max()) + 1 - i2c.shape[0],), jnp.int32),
-            ])
-        return dataclasses.replace(
-            out,
-            cell_codes=self.cell_codes.at[pos // cap, pos % cap].set(codes),
-            cell_code_scales=self.cell_code_scales.at[
+            codes, scales = quantize_rows(rows)
+            updates["cell_codes"] = self.cell_codes.at[
                 pos // cap, pos % cap
-            ].set(scales),
-            id_to_cell=i2c.at[jids].set((pos // cap).astype(jnp.int32)),
-        )
+            ].set(codes)
+            updates["cell_code_scales"] = self.cell_code_scales.at[
+                pos // cap, pos % cap
+            ].set(scales)
+        if self.cell_bin_codes is not None:
+            from repro.kernels.engine.ops import binarize_rows
+
+            updates["cell_bin_codes"] = self.cell_bin_codes.at[
+                pos // cap, pos % cap
+            ].set(binarize_rows(rows))
+        if self.id_to_cell is not None:
+            i2c = self.id_to_cell
+            if int(jids.max()) >= i2c.shape[0]:
+                i2c = jnp.concatenate([
+                    i2c,
+                    jnp.zeros(
+                        (int(jids.max()) + 1 - i2c.shape[0],), jnp.int32
+                    ),
+                ])
+            updates["id_to_cell"] = i2c.at[jids].set(
+                (pos // cap).astype(jnp.int32)
+            )
+        return dataclasses.replace(self, **updates)
 
     def _append_cell(self, centroid: np.ndarray) -> "IVFIndex":
         """Grow by one (empty) overflow cell — the spill target when every
         preferred cell is at capacity."""
         d, cap = self.dim, self.capacity
-        out = dataclasses.replace(
-            self,
-            centroids=jnp.concatenate([
+        updates: dict = {
+            "centroids": jnp.concatenate([
                 self.centroids,
                 jnp.asarray(centroid, self.centroids.dtype).reshape(1, d),
             ]),
-            cells=jnp.concatenate([
+            "cells": jnp.concatenate([
                 self.cells, jnp.zeros((1, cap, d), self.cells.dtype)
             ]),
-            cell_ids=jnp.concatenate([
+            "cell_ids": jnp.concatenate([
                 self.cell_ids, jnp.full((1, cap), -1, jnp.int32)
             ]),
-        )
-        if self.cell_codes is None:
-            return out
-        return dataclasses.replace(
-            out,
-            cell_codes=jnp.concatenate([
+        }
+        if self.cell_codes is not None:
+            updates["cell_codes"] = jnp.concatenate([
                 self.cell_codes,
                 jnp.zeros((1, cap, d), self.cell_codes.dtype),
-            ]),
-            cell_code_scales=jnp.concatenate([
+            ])
+            updates["cell_code_scales"] = jnp.concatenate([
                 self.cell_code_scales,
                 jnp.ones((1, cap), self.cell_code_scales.dtype),
-            ]),
-        )
+            ])
+        if self.cell_bin_codes is not None:
+            w = self.cell_bin_codes.shape[2]
+            updates["cell_bin_codes"] = jnp.concatenate([
+                self.cell_bin_codes, jnp.zeros((1, cap, w), jnp.uint32)
+            ])
+        return dataclasses.replace(self, **updates)
 
     def _insert_at(self, ids_np: np.ndarray, rows: jax.Array) -> "IVFIndex":
         """Place rows with pre-assigned ids: nearest non-full cell over
@@ -439,8 +483,8 @@ class IVFIndex:
     ) -> tuple["IVFIndex", np.ndarray]:
         """Rebuild on the live rows only: fresh k-means geometry, densely
         renumbered ids (old id → position in the returned ``kept_ids``),
-        requantized codes. The background-compaction counterpart of the
-        cutover re-pack."""
+        re-encoded int8/binary planes. The background-compaction
+        counterpart of the cutover re-pack."""
         flat_ids = np.asarray(self.cell_ids).reshape(-1)
         live_pos = np.flatnonzero(flat_ids >= 0)
         if live_pos.size == 0:
@@ -458,6 +502,8 @@ class IVFIndex:
         out = dataclasses.replace(out, backend=self.backend)
         if self.quantized:
             out = out.quantize()
+        if self.binarized:
+            out = out.binarize()
         return out, kept_ids
 
     def search(
@@ -563,13 +609,13 @@ jax.tree_util.register_pytree_node(
     IVFIndex,
     lambda idx: (
         (idx.centroids, idx.cells, idx.cell_ids, idx.cell_codes,
-         idx.cell_code_scales, idx.id_to_cell),
+         idx.cell_code_scales, idx.id_to_cell, idx.cell_bin_codes),
         (idx.n_items, idx.backend),
     ),
     lambda aux, leaves: IVFIndex(
         leaves[0], leaves[1], leaves[2], n_items=aux[0], backend=aux[1],
         cell_codes=leaves[3], cell_code_scales=leaves[4],
-        id_to_cell=leaves[5],
+        id_to_cell=leaves[5], cell_bin_codes=leaves[6],
     ),
 )
 

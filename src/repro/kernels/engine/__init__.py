@@ -13,6 +13,9 @@ from repro.kernels.engine.core import (
 )
 from repro.kernels.engine.ops import (
     FUSED_KINDS,
+    binarize_rows,
+    binary_ivf_scan,
+    binary_scan,
     exact_rescore,
     fold_fused_params,
     fused_bridged_search,
@@ -41,6 +44,9 @@ __all__ = [
     "LaunchSpec",
     "ScanPlan",
     "ServingState",
+    "binarize_rows",
+    "binary_ivf_scan",
+    "binary_scan",
     "build_plan",
     "compile_plan",
     "exact_rescore",

@@ -58,7 +58,7 @@ _CompilerParams = getattr(
 TRANSFORMS = ("identity", "linear", "mlp")
 LAYOUTS = ("flat", "ivf")
 SELECTS = ("plain", "bitmap")
-PRECISIONS = ("fp32", "int8")
+PRECISIONS = ("fp32", "int8", "binary")
 
 # smallest representable per-row scale: rows that are exactly zero still
 # quantize (to all-zero codes) instead of dividing by zero
@@ -89,11 +89,13 @@ def kernel_name(
     compiler, and the launch-count tests.
 
     ``precision="int8"`` marks the quantized first-pass scan (``_int8``
-    suffix); ``exact=True`` marks the targeted fp32 shortlist rescore that
-    follows it (``_exact`` suffix) — fp32 by definition, so the two
-    suffixes never combine. ``tombstone=True`` (``_ts``) marks the flat
-    scan variant that streams an alive plane and NEG-masks dead/free slots
-    in the select stage — same launch count, one extra streamed operand."""
+    suffix) and ``precision="binary"`` the bit-packed sign-code first pass
+    (``_bin`` suffix); ``exact=True`` marks the targeted fp32 shortlist
+    rescore that follows either (``_exact`` suffix) — fp32 by definition,
+    so the precision and exact suffixes never combine. ``tombstone=True``
+    (``_ts``) marks the flat scan variant that streams an alive plane and
+    NEG-masks dead/free slots in the select stage — same launch count, one
+    extra streamed operand."""
     parts = ["_scan", transform, layout, select]
     if invert:
         parts.append("inv")
@@ -103,6 +105,8 @@ def kernel_name(
         parts.append("ts")
     if precision == "int8":
         parts.append("int8")
+    elif precision == "binary":
+        parts.append("bin")
     if exact:
         parts.append("exact")
     return "_".join(parts)
@@ -130,6 +134,49 @@ def _quantize_tile(y):
     ) / 127.0
     codes = jnp.clip(jnp.round(y / s), -127.0, 127.0).astype(jnp.int8)
     return codes, s
+
+
+def bin_words(d: int) -> int:
+    """Packed word count of a d-dim sign code: 32 dims per uint32 word,
+    last word zero-padded (pad bits match on both sides, so they never
+    contribute to a hamming distance)."""
+    return -(-d // 32)
+
+
+def _pack_sign_tile(y):
+    """In-kernel sign-bit pack of a (rows, d) fp32 tile into (rows, w)
+    uint32 words, 32 dims per word (bit b of word j = dim 32·j + b, set
+    iff the coordinate is > 0). Pad bits of a partial last word pack as 0.
+    Static-sliced and unrolled over words — the same math `binarize_rows`
+    applies to corpus rows host-side, so query and corpus codes live in
+    one encoding."""
+    d = y.shape[1]
+    weights = jnp.left_shift(
+        jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32)
+    )
+    words = []
+    for j in range(bin_words(d)):
+        blk = y[:, j * 32:min((j + 1) * 32, d)]
+        bits = (blk > 0).astype(jnp.uint32)
+        words.append(
+            jnp.sum(bits * weights[: blk.shape[1]][None, :], axis=1,
+                    dtype=jnp.uint32)
+        )
+    return jnp.stack(words, axis=1)
+
+
+def _hamming_scores(q_words, c_words):
+    """Sign-dot ranking scores of packed queries vs packed candidates:
+    ``-popcount(xor)`` summed over words, as float32. For sign vectors
+    ``dot(q, c) = d - 2·hamming(q, c)``, so ranking by negative hamming IS
+    exact sign-dot ranking (the affine d offset never reorders). Unrolled
+    over the word axis so peak VMEM stays one (rows, C) plane."""
+    acc = jnp.zeros((q_words.shape[0], c_words.shape[0]), jnp.int32)
+    for j in range(q_words.shape[1]):
+        acc = acc + jax.lax.population_count(
+            jnp.bitwise_xor(q_words[:, j][:, None], c_words[:, j][None, :])
+        ).astype(jnp.int32)
+    return -acc.astype(jnp.float32)
 
 
 def _fold_block(scores, ids, best_s, best_i, k: int):
@@ -234,6 +281,16 @@ def make_flat_kernel(
     masking, bitmap select, fold) is byte-identical to fp32 — callers pass
     ``k = shortlist_k`` and rescore the survivors exactly.
 
+    ``precision == "binary"`` swaps the corpus operand for bit-packed sign
+    codes (``(block_rows, w)`` uint32, 32 dims per word): the query tile is
+    sign-packed IN-KERNEL after its transform (per row, so the packed
+    [q; g(q)] stack needs no special casing), each block is scored by
+    XOR + ``jax.lax.population_count`` summed over words on the VPU
+    (``-hamming`` ranks identically to sign-dot since dot = d − 2·hamming),
+    and everything downstream (NEG masking, bitmap select, fold) is
+    byte-identical to fp32 — callers pass ``k = shortlist_k`` and rescore
+    the survivors exactly. No scale plane: sign codes need none.
+
     ``tombstone=True`` adds the streamed alive plane (``(1, block_rows)``
     int, block-aligned exactly like the bitmap/scales) and folds it into
     the existing NEG mask — deleted and never-allocated slots of a mutable
@@ -242,6 +299,7 @@ def make_flat_kernel(
     dual = select == "bitmap"
     has_qx = transform != "identity"
     int8 = precision == "int8"
+    binary = precision == "binary"
     n_w = len(WEIGHT_FIELDS[transform])
     if precision not in PRECISIONS:
         raise ValueError(f"unknown precision {precision!r}")
@@ -251,12 +309,12 @@ def make_flat_kernel(
         raise ValueError("packed query stage only applies to dual scoring")
     if return_queries and (not has_qx or dual):
         raise ValueError("return_queries needs a plain transformed stage")
-    if int8 and return_queries:
-        raise ValueError("return_queries has no int8 form (rescore "
+    if (int8 or binary) and return_queries:
+        raise ValueError("return_queries has no quantized form (rescore "
                          "re-applies the transform in-kernel)")
-    if int8 and dual and not packed:
-        raise ValueError("int8 dual scoring is always packed (one stacked "
-                         "quantized matmul); pass packed=True")
+    if (int8 or binary) and dual and not packed:
+        raise ValueError(f"{precision} dual scoring is always packed (one "
+                         "stacked quantized pass); pass packed=True")
 
     def kernel(*refs):
         x_ref = refs[0]
@@ -278,9 +336,11 @@ def make_flat_kernel(
         n_out = 3 if return_queries else 2
         out_refs = refs[pos:pos + n_out]
         scratch = refs[pos + n_out:]
-        qx = qi = qs = None
+        qx = qi = qs = qb = None
         if int8:
             qi, qs, best_s, best_i = scratch
+        elif binary:
+            qb, best_s, best_i = scratch
         elif has_qx:
             qx, best_s, best_i = scratch
         else:
@@ -299,10 +359,10 @@ def make_flat_kernel(
                 t = None
                 if has_qx:
                     t = _apply_transform(transform, x_ref, w_refs, renormalize)
-                if int8:
+                if int8 or binary:
                     if dual:
-                        # [q; g(q)] stacked, then quantized per row — each
-                        # stacked row carries its own scale
+                        # [q; g(q)] stacked, then encoded per row — each
+                        # stacked row carries its own encoding
                         y = jnp.concatenate(
                             [x_ref[...].astype(jnp.float32), t], axis=0
                         )
@@ -310,9 +370,12 @@ def make_flat_kernel(
                         y = t
                     else:
                         y = x_ref[...].astype(jnp.float32)
-                    codes, scales = _quantize_tile(y)
-                    qi[...] = codes
-                    qs[...] = scales
+                    if binary:
+                        qb[...] = _pack_sign_tile(y)
+                    else:
+                        codes, scales = _quantize_tile(y)
+                        qi[...] = codes
+                        qs[...] = scales
                 elif has_qx:
                     if packed:
                         # [q; g(q)] stacked: one matmul scores both forms
@@ -336,6 +399,13 @@ def make_flat_kernel(
                     s_bridged = rescaled[q_tile:]
                 else:
                     scores = rescaled
+            elif binary:
+                ham = _hamming_scores(qb[...], c_ref[...])  # (rows, C) f32
+                if dual:
+                    s_native = ham[:q_tile]
+                    s_bridged = ham[q_tile:]
+                else:
+                    scores = ham
             elif dual:
                 if packed:
                     both = jnp.dot(
@@ -418,7 +488,9 @@ def flat_scan_pallas(
     Returns ``(scores (Q, k), ids (Q, k))`` plus the transformed queries
     ``(Q, d_old)`` when ``return_queries``. With ``precision="int8"`` the
     ``corpus`` operand is the int8 code matrix and ``corpus_scales`` its
-    per-row scales, streamed block-aligned exactly like the bitmap. An
+    per-row scales, streamed block-aligned exactly like the bitmap. With
+    ``precision="binary"`` the ``corpus`` operand is the bit-packed sign
+    code matrix (``(N, w)`` uint32) and no scale plane exists. An
     ``alive`` plane selects the ``_ts`` tombstone variant: dead/free slots
     of a mutable corpus NEG-mask in the same launch.
     """
@@ -427,12 +499,17 @@ def flat_scan_pallas(
     assert n % block_rows == 0 and q % q_tile == 0
     dual = select == "bitmap"
     int8 = precision == "int8"
+    binary = precision == "binary"
     tombstone = alive is not None
     if dual:
         assert bitmap is not None and bitmap.shape == (1, n)
     if int8:
         assert corpus.dtype == jnp.int8
         assert corpus_scales is not None and corpus_scales.shape == (1, n)
+    if binary:
+        # d_old is the packed WORD count here, not a feature dim
+        assert corpus.dtype == jnp.uint32
+        assert corpus_scales is None, "sign codes carry no scale plane"
     if tombstone:
         assert alive.shape == (1, n)
     grid = (q // q_tile, n // block_rows)
@@ -482,6 +559,9 @@ def flat_scan_pallas(
     if int8:
         scratch.append(pltpu.VMEM((q_rows, d_old), jnp.int8))
         scratch.append(pltpu.VMEM((q_rows, 1), jnp.float32))
+    elif binary:
+        # packed query words: d_old IS the word width for sign codes
+        scratch.append(pltpu.VMEM((q_rows, d_old), jnp.uint32))
     elif transform != "identity":
         scratch.append(pltpu.VMEM((q_rows, d_old), jnp.float32))
     scratch += [
@@ -531,6 +611,9 @@ def make_ivf_kernel(
     ``precision="int8"`` streams int8 cell codes + a slot-aligned
     ``(C, cap)`` scale plane; the query tile (post-transform) requantizes
     per row in-kernel and each probed cell pays one int8×int8→int32 matmul.
+    ``precision="binary"`` streams bit-packed sign-code cells
+    (``(C, cap, w)`` uint32, no scale plane); the query tile sign-packs
+    in-kernel and each probed cell scores by XOR + popcount on the VPU.
 
     ``targeted=True`` is the EXACT SHORTLIST RESCORE: the probe table holds
     the *cell* of each shortlist candidate (one grid step per candidate)
@@ -541,12 +624,13 @@ def make_ivf_kernel(
     """
     has_qx = transform != "identity"
     int8 = precision == "int8"
+    binary = precision == "binary"
     n_w = len(WEIGHT_FIELDS[transform])
     if precision not in PRECISIONS:
         raise ValueError(f"unknown precision {precision!r}")
     if select == "bitmap" and not dual:
         raise ValueError("bitmap select needs a second query form (dual)")
-    if targeted and int8:
+    if targeted and (int8 or binary):
         raise ValueError("the targeted rescore is exact — fp32 only")
 
     def kernel(*refs):
@@ -579,9 +663,11 @@ def make_ivf_kernel(
             pos += 1
         out_s_ref, out_i_ref = refs[pos:pos + 2]
         scratch = refs[pos + 2:]
-        qx = qi = qs = None
+        qx = qi = qs = qb = None
         if int8:
             qi, qs, best_s, best_i = scratch
+        elif binary:
+            qb, best_s, best_i = scratch
         elif has_qx:
             qx, best_s, best_i = scratch
         else:
@@ -601,7 +687,7 @@ def make_ivf_kernel(
                 if has_qx:
                     t = _apply_transform(transform, q_ref, w_refs,
                                          renormalize)
-                if int8:
+                if int8 or binary:
                     if dual:
                         other = t if has_qx else qm_ref[...]
                         y = jnp.concatenate(
@@ -611,9 +697,12 @@ def make_ivf_kernel(
                         y = t
                     else:
                         y = q_ref[...].astype(jnp.float32)
-                    codes, scales = _quantize_tile(y)
-                    qi[...] = codes
-                    qs[...] = scales
+                    if binary:
+                        qb[...] = _pack_sign_tile(y)
+                    else:
+                        codes, scales = _quantize_tile(y)
+                        qi[...] = codes
+                        qs[...] = scales
                 elif has_qx:
                     qx[...] = t
                 best_s[...] = jnp.full_like(best_s[...], NEG)
@@ -631,6 +720,13 @@ def make_ivf_kernel(
                     s_bridged = rescaled[q_tile:]
                 else:
                     scores = rescaled
+            elif binary:
+                ham = _hamming_scores(qb[...], cell_ref[0])  # (rows, cap)
+                if dual:
+                    s_native = ham[:q_tile]
+                    s_bridged = ham[q_tile:]
+                else:
+                    scores = ham
             else:
                 if dual:
                     s_native = jnp.dot(
@@ -717,12 +813,14 @@ def ivf_scan_pallas(
     raw queries + folded weights (``fused``); dual scoring then derives
     its mapped form from the transform scratch and ``q_mapped`` must be
     None. ``precision="int8"`` takes int8 ``cells`` codes plus the
-    slot-aligned ``cell_scales`` plane."""
+    slot-aligned ``cell_scales`` plane; ``precision="binary"`` takes
+    bit-packed sign-code ``cells`` (``(C, cap, w)`` uint32, no scales)."""
     c, cap, d = cells.shape
     q, nprobe = probe.shape
     assert q % q_tile == 0
     has_qx = transform != "identity"
     int8 = precision == "int8"
+    binary = precision == "binary"
     targeted = targets is not None
     dual = select == "bitmap"
     if dual:
@@ -734,6 +832,10 @@ def ivf_scan_pallas(
     if int8:
         assert cells.dtype == jnp.int8
         assert cell_scales is not None and cell_scales.shape == (c, cap)
+    if binary:
+        # d is the packed WORD count here, not a feature dim
+        assert cells.dtype == jnp.uint32
+        assert cell_scales is None, "sign codes carry no scale plane"
     grid = (q // q_tile, q_tile * nprobe)
     kernel = make_ivf_kernel(
         select=select, invert=invert, dual=dual, k=k, nprobe=nprobe,
@@ -774,10 +876,13 @@ def ivf_scan_pallas(
         q_valid,
     )
     scratch = []
-    q_rows = 2 * q_tile if (dual and int8) else q_tile
+    q_rows = 2 * q_tile if (dual and (int8 or binary)) else q_tile
     if int8:
         scratch.append(pltpu.VMEM((q_rows, d), jnp.int8))
         scratch.append(pltpu.VMEM((q_rows, 1), jnp.float32))
+    elif binary:
+        # packed query words: d IS the word width for sign codes
+        scratch.append(pltpu.VMEM((q_rows, d), jnp.uint32))
     elif has_qx:
         scratch.append(pltpu.VMEM((q_tile, d), jnp.float32))
     scratch += [

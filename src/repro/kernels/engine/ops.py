@@ -35,7 +35,11 @@ from repro.kernels.common import (
     pad_rows as _pad_rows,
     quantize_q_valid as _quantize_q_valid,
 )
-from repro.kernels.engine.core import flat_scan_pallas, ivf_scan_pallas
+from repro.kernels.engine.core import (
+    bin_words,
+    flat_scan_pallas,
+    ivf_scan_pallas,
+)
 
 FUSED_KINDS = ("linear", "mlp")
 
@@ -49,6 +53,9 @@ __all__ = [
     "ivf_rescore_mixed_fused",
     "quantized_scan",
     "quantized_ivf_scan",
+    "binarize_rows",
+    "binary_scan",
+    "binary_ivf_scan",
     "exact_rescore",
 ]
 
@@ -509,6 +516,168 @@ def quantized_ivf_scan(
         invert=invert,
         renormalize=renormalize,
         precision="int8",
+        k=k,
+        q_tile=q_tile,
+        interpret=interpret,
+    )
+    return out_s[:q], out_i[:q]
+
+
+# ---------------------------------------------------------------------------
+# binary (sign-bit) first pass entry points — same shape as int8, no scales
+# ---------------------------------------------------------------------------
+
+def binarize_rows(x: jax.Array) -> jax.Array:
+    """Bit-pack the sign codes of fp32 rows: bit b of word j of a row is
+    set iff coordinate ``32·j + b`` is > 0, 32 dims per ``uint32`` word
+    (``w = ceil(d / 32)`` words per row, partial last word zero-padded).
+
+    Returns ``codes uint32 (..., w)`` — the SAME encoding the binary
+    kernels apply to the query tile in-kernel (``_pack_sign_tile``), so
+    corpus and query sign codes always agree bit for bit. For sign vectors
+    ``dot(q, c) = d − 2·hamming(codes_q, codes_c)``: XOR + popcount over
+    the packed words is exact sign-dot ranking."""
+    x = jnp.asarray(x, jnp.float32)
+    d = x.shape[-1]
+    w = bin_words(d)
+    bits = (x > 0).astype(jnp.uint32)
+    pad = w * 32 - d
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    bits = bits.reshape(*x.shape[:-1], w, 32)
+    weights = jnp.left_shift(jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "fused_kind", "k", "renormalize", "q_tile", "block_rows",
+        "q_valid", "invert", "interpret",
+    ),
+)
+def _binary_scan_jit(
+    fused_kind, fused, queries, bin_codes, migrated, alive, k,
+    renormalize, q_tile, block_rows, q_valid, invert, interpret,
+):
+    n = bin_codes.shape[0]
+    q = queries.shape[0]
+    transform = fused_kind or "identity"
+    dual = migrated is not None
+    mig_p = None
+    if dual:
+        mig_p = _pad_rows(
+            migrated.astype(jnp.int32), block_rows
+        ).reshape(1, -1)
+    out = flat_scan_pallas(
+        _pad_rows(queries, q_tile), _pad_rows(bin_codes, block_rows), fused,
+        mig_p,
+        alive=_alive_plane(alive, block_rows),
+        transform=transform, select="bitmap" if dual else "plain",
+        invert=invert, packed=dual, renormalize=renormalize,
+        precision="binary", k=k, n_valid=n, q_valid=q_valid,
+        q_tile=q_tile, block_rows=block_rows, interpret=interpret,
+    )
+    return tuple(o[:q] for o in out)
+
+
+def binary_scan(
+    bin_codes: jax.Array,
+    queries: jax.Array,
+    k: int = 40,
+    fused_kind: str | None = None,
+    fused: dict | None = None,
+    migrated: jax.Array | None = None,
+    renormalize: bool = True,
+    q_tile: int = 128,
+    block_rows: int = 1024,
+    q_valid: int | None = None,
+    invert: bool = False,
+    alive: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """The binary first-pass flat scan: one launch over the packed sign
+    codes (XOR + popcount on the VPU — no matmul, no scale plane).
+
+    ``bin_codes (N, w) uint32`` come from ``binarize_rows``
+    (``FlatIndex.binarize`` stores them). ``k`` here is the SHORTLIST size
+    (``shortlist_k ≥`` the final k) — the returned ids feed
+    ``exact_rescore``, and the returned scores are ``-hamming`` (exact
+    sign-dot RANKS, approximate values, never served). ``fused_kind`` /
+    ``fused`` run the bridged query stage in-kernel before sign-packing;
+    ``migrated`` switches to the bitmap-selected dual scan (mid-migration
+    mixed state, always packed under binary); ``invert`` flips the
+    selection for the control arm. ``q_valid`` follows the topk_scan
+    contract.
+    """
+    if fused_kind is not None:
+        _check_kind(fused_kind)
+    if migrated is not None and fused_kind is None:
+        raise ValueError("mixed binary scan needs a fused query stage")
+    if interpret is None:
+        interpret = _is_cpu()
+    q_valid = _quantize_q_valid(queries.shape[0], q_valid, q_tile)
+    return _binary_scan_jit(
+        fused_kind, fused, queries, bin_codes, migrated, alive, k=k,
+        renormalize=renormalize, q_tile=q_tile, block_rows=block_rows,
+        q_valid=q_valid, invert=invert, interpret=interpret,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "fused_kind", "k", "renormalize", "q_tile", "invert", "interpret",
+    ),
+)
+def binary_ivf_scan(
+    cell_bin_codes: jax.Array,
+    cell_ids: jax.Array,
+    queries: jax.Array,
+    probe: jax.Array,
+    k: int = 40,
+    fused_kind: str | None = None,
+    fused: dict | None = None,
+    mig_cells: jax.Array | None = None,
+    renormalize: bool = True,
+    q_valid=None,
+    q_tile: int = 8,
+    invert: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """The binary first-pass IVF scan: stream each query's probed cells as
+    packed sign codes, sign-pack the (transformed) query tile in-kernel,
+    fold a ``k = shortlist_k`` candidate list by XOR + popcount.
+
+    The query stage runs IN-KERNEL (``fused_kind``/``fused``) exactly like
+    the int8 tier; ``mig_cells`` switches to the bitmap-selected dual scan
+    with ``invert`` for the control arm. Same probe-clamping and dynamic
+    ``q_valid`` as ``ivf_rescore_fused``.
+    """
+    if fused_kind is not None:
+        _check_kind(fused_kind)
+    if mig_cells is not None and fused_kind is None:
+        raise ValueError("mixed binary ivf scan needs a fused query stage")
+    if interpret is None:
+        interpret = _is_cpu()
+    _check_cap(cell_bin_codes)
+    c = cell_bin_codes.shape[0]
+    q = queries.shape[0]
+    qv = q if q_valid is None else jnp.minimum(q, q_valid)
+    probe = jnp.clip(probe.astype(jnp.int32), 0, c - 1)
+    out_s, out_i = ivf_scan_pallas(
+        cell_bin_codes,
+        cell_ids,
+        _pad_rows(queries, q_tile),
+        _pad_rows(probe, q_tile),
+        jnp.asarray(qv, jnp.int32).reshape(1),
+        mig_cells=None if mig_cells is None else mig_cells.astype(jnp.int32),
+        fused=fused,
+        transform=fused_kind or "identity",
+        select="plain" if mig_cells is None else "bitmap",
+        invert=invert,
+        renormalize=renormalize,
+        precision="binary",
         k=k,
         q_tile=q_tile,
         interpret=interpret,

@@ -42,7 +42,7 @@ class LaunchSpec:
     invert: bool = False
     packed: bool = False
     return_queries: bool = False
-    precision: str = "fp32"   # "fp32" | "int8" (quantized first pass)
+    precision: str = "fp32"   # "fp32" | "int8" | "binary" (first pass)
     exact: bool = False       # targeted fp32 shortlist rescore
     tombstone: bool = False   # flat corpus scan streams an alive plane
 
@@ -82,8 +82,9 @@ class ScanPlan:
     probe_space: str = "mapped"        # IVF probe query form
     bridge: object = None              # resolved adapter (None for native)
     prelude: object = None             # adapter applied to queries up front
-    precision: str = "fp32"            # "int8": quant scan → exact rescore
-    shortlist_k: Optional[int] = None  # int8 first-pass width (None → 4·k)
+    precision: str = "fp32"            # "int8"/"binary": quantized scan →
+                                       # exact rescore
+    shortlist_k: Optional[int] = None  # first-pass width (None → 4·k)
 
     @property
     def launch_count(self) -> int:
@@ -94,8 +95,8 @@ class ScanPlan:
         return tuple(spec.kernel for spec in self.launches)
 
     def shortlist(self, k: int, n: int) -> int:
-        """The effective int8 first-pass width: ``max(shortlist_k, k)``
-        (defaulting to ``4·k``), never wider than the corpus."""
+        """The effective quantized first-pass width: ``max(shortlist_k,
+        k)`` (defaulting to ``4·k``), never wider than the corpus."""
         return min(n, max(self.shortlist_k or 4 * k, k))
 
 
@@ -147,9 +148,11 @@ def compile_plan(
     ``precision="int8"`` compiles the quantized serving path: the first
     pass scans int8 codes for a ``shortlist_k``-wide candidate list and an
     exact fp32 targeted rescore closes the plan (flat = 2 launches, IVF =
-    3: probe → quant scan → rescore). Requires ``backend="fused"`` and a
-    quantized index; mixed int8 additionally needs a foldable bridge (the
-    dual query stage must run in-kernel).
+    3: probe → quant scan → rescore). ``precision="binary"`` compiles the
+    SAME plan shape over bit-packed sign codes (``_bin`` first pass, same
+    ``_exact`` rescore, same launch budgets). Either requires
+    ``backend="fused"`` and an encoded index; the mixed state additionally
+    needs a foldable bridge (the dual query stage must run in-kernel).
     """
     if mode not in MODES:
         raise ValueError(f"unknown plan mode {mode!r}; expected {MODES}")
@@ -172,13 +175,15 @@ def compile_plan(
     # the existing pad mask folds them. compact() drops the plane, so a
     # compacted index deterministically reverts to the original names.
     ts = itype == "flat" and getattr(index, "alive", None) is not None
-    int8 = precision == "int8"
-    if int8 and be != "fused":
+    quant = precision != "fp32"
+    if quant and be != "fused":
         raise ValueError(
-            f"precision='int8' requires backend='fused', got {be!r}"
+            f"precision={precision!r} requires backend='fused', got {be!r}"
         )
-    if int8 and itype == "protocol":
-        raise ValueError("precision='int8' needs a flat or ivf index")
+    if quant and itype == "protocol":
+        raise ValueError(
+            f"precision={precision!r} needs a flat or ivf index"
+        )
 
     if itype == "protocol":
         # opaque SearchBackend: the plan delegates through its methods
@@ -201,14 +206,14 @@ def compile_plan(
             "pre-folded (kind, params) bridges require backend='fused' "
             "with a foldable kind; pass the adapter object instead"
         )
-    if int8 and mode == "mixed" and sequential:
+    if quant and mode == "mixed" and sequential:
         raise ValueError(
-            "mixed int8 serving needs a foldable bridge (the dual query "
-            "stage must run in-kernel); ≥2-MLP chains serve fp32"
+            f"mixed {precision} serving needs a foldable bridge (the dual "
+            "query stage must run in-kernel); ≥2-MLP chains serve fp32"
         )
 
     launches: tuple[LaunchSpec, ...] = ()
-    if int8:
+    if quant:
         # scan transform: in-kernel for a foldable bridge, identity for
         # native queries and prelude-mapped sequential bridges
         scan_t = "identity"
@@ -228,7 +233,7 @@ def compile_plan(
             launches = (
                 LaunchSpec(
                     "scan", "flat", scan_t, select=sel, invert=invert,
-                    packed=(sel == "bitmap"), precision="int8",
+                    packed=(sel == "bitmap"), precision=precision,
                     tombstone=ts,
                 ),
                 rescore,
@@ -241,7 +246,7 @@ def compile_plan(
                 LaunchSpec("probe", "flat", probe_t),
                 LaunchSpec(
                     "scan", "ivf", scan_t, select=sel, invert=invert,
-                    precision="int8",
+                    precision=precision,
                 ),
                 rescore,
             )
@@ -389,6 +394,37 @@ def _fused_params(bridge) -> tuple[str, dict]:
     return bridge.as_fused_params()
 
 
+def first_pass_bytes(plan: ScanPlan, index, q: int, nprobe: int):
+    """Bytes the plan's first-pass corpus scan streams for a ``q``-query
+    batch — static shape arithmetic only (no device sync, no extra
+    launches), which is what the telemetry counters record. Flat layouts
+    stream the whole resident corpus plane once per batch (codes + scale
+    plane under int8, packed sign words under binary); IVF layouts stream
+    ``q·nprobe`` probed ``(cap, ·)`` tiles. Returns None when the plan has
+    no engine first pass (pure-jnp paths, protocol indexes)."""
+    if index is None or plan.index_type == "protocol" or not plan.launches:
+        return None
+    p = plan.precision
+    if plan.index_type == "flat":
+        n, d = index.corpus.shape
+        if p == "int8":
+            return n * d + 4 * n
+        if p == "binary":
+            if index.bin_codes is None:
+                return None
+            return 4 * n * index.bin_codes.shape[1]
+        return 4 * n * d
+    cap, d = index.cells.shape[1], index.cells.shape[2]
+    tiles = q * nprobe
+    if p == "int8":
+        return tiles * (cap * d + 4 * cap)
+    if p == "binary":
+        if index.cell_bin_codes is None:
+            return None
+        return tiles * 4 * cap * index.cell_bin_codes.shape[2]
+    return tiles * 4 * cap * d
+
+
 def execute_plan(
     plan: ScanPlan,
     queries: jax.Array,
@@ -408,9 +444,16 @@ def execute_plan(
     ``telemetry`` is an optional duck-typed observability sink (see
     ``repro.obs.telemetry.Telemetry``): its ``record_plan(plan)`` is called
     once per execution — pure python counter bumps over the plan's static
-    launch specs, so instrumentation cannot perturb what traces."""
+    launch specs, so instrumentation cannot perturb what traces. Sinks
+    exposing ``record_first_pass`` additionally get the batch's first-pass
+    byte volume (shape arithmetic only, same launch-neutrality)."""
     if telemetry is not None:
         telemetry.record_plan(plan)
+        rec_bytes = getattr(telemetry, "record_first_pass", None)
+        if rec_bytes is not None:
+            nb = first_pass_bytes(plan, index, queries.shape[0], nprobe)
+            if nb is not None:
+                rec_bytes(plan.precision, nb)
     if plan.prelude is not None and plan.index_type != "protocol":
         queries = plan.prelude.apply(queries)
     if plan.index_type == "protocol":
@@ -431,20 +474,29 @@ def execute_plan(
     )
 
 
-def _require_quantized(index, attr: str):
+def _require_quantized(index, attr: str, precision: str = "int8"):
     bundle = getattr(index, attr, None)
     if bundle is None:
+        verb = "binarize" if precision == "binary" else "quantize"
         raise ValueError(
-            "precision='int8' plan executed against an unquantized index — "
-            "call index.quantize() first (replace_rows keeps codes in sync)"
+            f"precision={precision!r} plan executed against an unencoded "
+            f"index — call index.{verb}() first (replace_rows keeps codes "
+            "in sync)"
         )
     return bundle
 
 
-def _execute_flat_int8(plan, queries, index, k, q_valid, migrated):
+def _execute_flat_quant(plan, queries, index, k, q_valid, migrated):
+    from functools import partial
+
     from repro.kernels.engine import ops as E
 
-    codes = _require_quantized(index, "codes")
+    if plan.precision == "binary":
+        codes = _require_quantized(index, "bin_codes", "binary")
+        first_pass = partial(E.binary_scan, codes)
+    else:
+        codes = _require_quantized(index, "codes")
+        first_pass = partial(E.quantized_scan, codes, index.code_scales)
     s = plan.shortlist(k, index.size)
     alive = getattr(index, "alive", None)
     kind, fused = (None, None)
@@ -452,10 +504,9 @@ def _execute_flat_int8(plan, queries, index, k, q_valid, migrated):
         kind, fused = _fused_params(plan.bridge)
     if plan.mode == "mixed":
         mig = jnp.asarray(migrated, jnp.int32)
-        _, shortlist = E.quantized_scan(
-            codes, index.code_scales, queries, k=s, fused_kind=kind,
-            fused=fused, migrated=mig, q_valid=q_valid, invert=plan.invert,
-            alive=alive,
+        _, shortlist = first_pass(
+            queries, k=s, fused_kind=kind, fused=fused, migrated=mig,
+            q_valid=q_valid, invert=plan.invert, alive=alive,
         )
         cap = index.rcell_ids.shape[1]
         mig_cells = jnp.pad(
@@ -466,9 +517,9 @@ def _execute_flat_int8(plan, queries, index, k, q_valid, migrated):
             shortlist, k=k, fused_kind=kind, fused=fused,
             mig_cells=mig_cells, q_valid=q_valid, invert=plan.invert,
         )
-    _, shortlist = E.quantized_scan(
-        codes, index.code_scales, queries, k=s, fused_kind=kind,
-        fused=fused, q_valid=q_valid, alive=alive,
+    _, shortlist = first_pass(
+        queries, k=s, fused_kind=kind, fused=fused, q_valid=q_valid,
+        alive=alive,
     )
     return E.exact_rescore(
         index.rcells, index.rcell_ids, index.id_to_cell, queries,
@@ -480,8 +531,10 @@ def _execute_flat(plan, queries, index, k, q_valid, migrated):
     from repro.ann.flat import flat_search_jnp
     from repro.kernels.engine import ops as E
 
-    if plan.precision == "int8":
-        return _execute_flat_int8(plan, queries, index, k, q_valid, migrated)
+    if plan.precision != "fp32":
+        return _execute_flat_quant(
+            plan, queries, index, k, q_valid, migrated
+        )
     corpus = index.corpus
     alive = getattr(index, "alive", None)
     br = min(index.block_rows, 2048)
@@ -523,12 +576,22 @@ def _execute_flat(plan, queries, index, k, q_valid, migrated):
     )
 
 
-def _execute_ivf_int8(plan, queries, index, k, q_valid, migrated, mig_cells,
-                      nprobe):
+def _execute_ivf_quant(plan, queries, index, k, q_valid, migrated,
+                       mig_cells, nprobe):
+    from functools import partial
+
     from repro.ann.ivf import migration_cells
     from repro.kernels.engine import ops as E
 
-    _require_quantized(index, "cell_codes")
+    if plan.precision == "binary":
+        codes = _require_quantized(index, "cell_bin_codes", "binary")
+        first_pass = partial(E.binary_ivf_scan, codes, index.cell_ids)
+    else:
+        codes = _require_quantized(index, "cell_codes")
+        first_pass = partial(
+            E.quantized_ivf_scan, codes, index.cell_ids,
+            index.cell_code_scales,
+        )
     s = plan.shortlist(k, index.size)
     br = _probe_rows(index.n_cells)
     kind, fused = (None, None)
@@ -548,8 +611,7 @@ def _execute_ivf_int8(plan, queries, index, k, q_valid, migrated, mig_cells,
     if plan.mode == "mixed":
         if mig_cells is None:
             mig_cells = migration_cells(index.cell_ids, migrated)
-        _, shortlist = E.quantized_ivf_scan(
-            index.cell_codes, index.cell_ids, index.cell_code_scales,
+        _, shortlist = first_pass(
             queries, probe, k=s, fused_kind=kind, fused=fused,
             mig_cells=mig_cells, q_valid=q_valid, invert=plan.invert,
         )
@@ -558,8 +620,7 @@ def _execute_ivf_int8(plan, queries, index, k, q_valid, migrated, mig_cells,
             shortlist, k=k, fused_kind=kind, fused=fused,
             mig_cells=mig_cells, q_valid=q_valid, invert=plan.invert,
         )
-    _, shortlist = E.quantized_ivf_scan(
-        index.cell_codes, index.cell_ids, index.cell_code_scales,
+    _, shortlist = first_pass(
         queries, probe, k=s, fused_kind=kind, fused=fused, q_valid=q_valid,
     )
     return E.exact_rescore(
@@ -581,8 +642,8 @@ def _execute_ivf(plan, queries, index, k, q_valid, migrated, mig_cells,
         raise ValueError(
             f"nprobe={nprobe} exceeds n_cells={index.n_cells}"
         )
-    if plan.precision == "int8":
-        return _execute_ivf_int8(
+    if plan.precision != "fp32":
+        return _execute_ivf_quant(
             plan, queries, index, k, q_valid, migrated, mig_cells, nprobe
         )
     br = _probe_rows(index.n_cells)

@@ -122,6 +122,10 @@ class Telemetry:
         # trigger and the tombstone-ratio alert read
         self.writes: dict[str, int] = {}
         self.index_stats: dict = {}
+        # first-pass corpus bytes streamed, keyed by precision tier
+        # ("fp32"/"int8"/"binary") — host-side shape arithmetic recorded
+        # by execute_plan, the memory half of the precision-ladder story
+        self.first_pass_bytes: dict[str, int] = {}
 
     # -- hot path ------------------------------------------------------------
     def record_search(
@@ -141,6 +145,13 @@ class Telemetry:
             self.launches_by_kernel[kernel] = (
                 self.launches_by_kernel.get(kernel, 0) + 1
             )
+
+    def record_first_pass(self, precision: str, nbytes: int) -> None:
+        """First-pass bytes accumulator (host-only shape arithmetic from
+        execute_plan — launch-neutral, never touches the device)."""
+        self.first_pass_bytes[precision] = (
+            self.first_pass_bytes.get(precision, 0) + int(nbytes)
+        )
 
     def record_admission(self, outcome: str) -> None:
         """Front-door admission outcome counter bump (hot path, host-only)."""
@@ -191,4 +202,5 @@ class Telemetry:
             "shortlist_parity": self.shortlist_parity_rates(),
             "writes": dict(self.writes),
             "index_stats": dict(self.index_stats),
+            "first_pass_bytes": dict(self.first_pass_bytes),
         }

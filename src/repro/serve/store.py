@@ -544,6 +544,8 @@ class VectorStore:
         nprobe: int = 8,
         precision: str = "fp32",
         shortlist_k: Optional[int] = None,
+        autotune_shortlist: bool = False,
+        autotune_cadence: int = 512,
     ):
         from repro.kernels.engine import PRECISIONS
 
@@ -551,10 +553,11 @@ class VectorStore:
             raise ValueError(
                 f"unknown precision {precision!r}; expected {PRECISIONS}"
             )
-        # "int8": every plan this store compiles takes the quantized
-        # serving path (int8 first pass -> exact fp32 shortlist rescore);
-        # the index is quantized here, and replace_rows/migrate_batch keep
-        # the codes in sync through the upgrade lifecycle.
+        # "int8"/"binary": every plan this store compiles takes the
+        # quantized serving path (int8 or bit-packed sign first pass ->
+        # exact fp32 shortlist rescore); the index is encoded here, and
+        # replace_rows/migrate_batch keep the codes in sync through the
+        # upgrade lifecycle.
         self.precision = precision
         self.shortlist_k = shortlist_k
         if precision == "int8":
@@ -567,6 +570,28 @@ class VectorStore:
                 index = index.quantize()
                 if router is not None:
                     router.index = index
+        elif precision == "binary":
+            if not hasattr(index, "binarize"):
+                raise ValueError(
+                    f"precision='binary' needs a binarizable index, got "
+                    f"{type(index).__name__}"
+                )
+            if not index.binarized:
+                index = index.binarize()
+                if router is not None:
+                    router.index = index
+        if autotune_shortlist and precision == "fp32":
+            raise ValueError(
+                "autotune_shortlist tunes the quantized first-pass "
+                "shortlist; it needs precision='int8' or 'binary'"
+            )
+        # opt-in closed loop: every ``autotune_cadence`` served queries,
+        # audit shortlist parity on the current batch and apply
+        # suggest_shortlist_k with two-window hysteresis (see search())
+        self.autotune_shortlist = autotune_shortlist
+        self.autotune_cadence = int(autotune_cadence)
+        self._autotune_seen = 0
+        self._autotune_last: Optional[int] = None
         self.registry = registry or SpaceRegistry()
         self.registry.add_version(version, int(index.dim))
         self.serving_version = version
@@ -707,6 +732,10 @@ class VectorStore:
             # a lifecycle swap (cutover rebuild, rollback snapshot) may
             # install an unquantized index: re-quantize before planning
             self.router.index = self.index.quantize()
+        elif self.precision == "binary" and not getattr(
+            self.index, "binarized", False
+        ):
+            self.router.index = self.index.binarize()
         key = (
             mode, invert, probe_space, id(bridge), type(self.index),
             getattr(self.index, "backend", ""),
@@ -891,14 +920,19 @@ class VectorStore:
                     telemetry=self.telemetry,
                 )
                 kind = bridge.kind
+        served = (
+            queries.shape[0] if q_valid is None
+            else min(int(q_valid), queries.shape[0])
+        )
         if self.telemetry is not None:
             # counter bump + device-side sketch adds; the host sees nothing
             # until the monitor aggregates on its cadence
-            served = (
-                queries.shape[0] if q_valid is None
-                else min(int(q_valid), queries.shape[0])
-            )
             self.telemetry.record_search(kind, scores, served, q_valid)
+        if self.autotune_shortlist:
+            self._autotune_seen += served
+            if self._autotune_seen >= self.autotune_cadence:
+                self._autotune_seen = 0
+                self._autotune_tick(queries, k, q_valid)
         return SearchResult(
             scores=scores,
             ids=ids,
@@ -1206,21 +1240,22 @@ class VectorStore:
             return self.compact(key=key)
         return None
 
-    # -- shortlist autotuning (advisory) --------------------------------------
+    # -- shortlist autotuning (advisory + opt-in closed loop) -----------------
     def audit_shortlist(
         self, queries: jax.Array, k: int = 10, widths=None
     ) -> dict:
-        """Measure int8 first-pass recall parity across shortlist widths.
+        """Measure quantized first-pass recall parity across shortlist
+        widths (int8 and binary tiers alike).
 
-        For each candidate width, runs the quantized native scan on
-        ``queries`` and scores its top-k id overlap against the exact
+        For each candidate width, runs the store's quantized native scan
+        on ``queries`` and scores its top-k id overlap against the exact
         reference (the same pipeline at ``shortlist_k = N``, which is
         bit-identical to the fp32 path). Accumulates ⟨matched, total⟩ into
         the store's parity counters (mirrored into ``Telemetry`` when
         attached) and returns {width: parity rate}. Audit launches pass no
         telemetry sink — they are probes, not served traffic, and must not
         skew plan-execution counters. No-op ({}) on fp32 stores."""
-        if self.precision != "int8":
+        if self.precision not in ("int8", "binary"):
             return {}
         from repro.kernels.engine import compile_plan, execute_plan
 
@@ -1231,7 +1266,7 @@ class VectorStore:
 
         def run(width):
             plan = compile_plan(
-                self.index, None, mode="native", precision="int8",
+                self.index, None, mode="native", precision=self.precision,
                 shortlist_k=int(width),
             )
             return execute_plan(
@@ -1276,6 +1311,90 @@ class VectorStore:
             if width >= k and total and matched / total >= target:
                 return int(width)
         return None
+
+    def _autotune_tick(self, queries: jax.Array, k: int, q_valid) -> None:
+        """One closed-loop autotune step (``autotune_shortlist=True``):
+        audit parity on the batch that crossed the cadence boundary, then
+        apply :meth:`suggest_shortlist_k` with two-window hysteresis — a
+        suggestion only lands when two consecutive windows agree on it, so
+        one unlucky batch can't thrash the plan cache. Applying sets
+        ``shortlist_k`` and invalidates compiled plans (the width is baked
+        into every quantized launch)."""
+        if q_valid is not None:
+            queries = queries[: min(int(q_valid), queries.shape[0])]
+        if queries.shape[0] == 0:
+            return
+        self.audit_shortlist(queries, k=k)
+        sug = self.suggest_shortlist_k(k=k)
+        prev, self._autotune_last = self._autotune_last, sug
+        if sug is None or sug != prev:
+            return                      # hysteresis: need two windows
+        current = self.shortlist_k
+        if current is None:
+            current = min(int(self.index.size), max(4 * k, k))
+        if sug == current:
+            return
+        self.shortlist_k = sug
+        self._plans.clear()
+        self.router._plan_cache = (None, None)
+        if self.telemetry is not None:
+            self.telemetry.record_index_stats(self.write_stats())
+
+    # -- IVF cell maintenance (rebalance) -------------------------------------
+    def maybe_rebalance(self, skew_threshold: float = 4.0) -> dict:
+        """Occupancy-driven IVF cell maintenance: split cells whose live
+        count exceeds ``skew_threshold ×`` the mean, fold cells below
+        ``mean / skew_threshold`` pairwise into each other, then re-center
+        every centroid on its live members (:meth:`IVFIndex.recenter`).
+        Driven by the same per-cell occupancy :meth:`write_stats` reports.
+
+        Ids never renumber (split/merge move rows between packed slots but
+        keep their global ids), so ``index_revision`` is untouched —
+        readers holding ids stay valid; compiled plans are dropped because
+        the centroid table changed shape. Returns a report dict; a no-op
+        ({} actions) on non-IVF indexes or balanced cells."""
+        report: dict = {"split": [], "merged": [], "recentered": False}
+        idx = self.index
+        if not isinstance(idx, IVFIndex):
+            return report
+        counts = idx.cell_counts.astype(np.float64)
+        live_cells = counts[counts > 0]
+        if live_cells.size == 0:
+            return report
+        mean = float(live_cells.mean())
+        cap = idx.capacity
+        heavy = np.flatnonzero(
+            (counts >= skew_threshold * mean) & (counts >= 2)
+        )
+        light = np.flatnonzero(
+            (counts > 0) & (counts <= mean / skew_threshold)
+        )
+        light = [c for c in light.tolist() if c not in set(heavy.tolist())]
+        for c in heavy.tolist():
+            idx = idx.split_cell(int(c))
+            report["split"].append(int(c))
+        # fold underfull cells pairwise, smallest movers first, when the
+        # receiving cell has the free slots
+        light.sort(key=lambda c: counts[c])
+        while len(light) >= 2:
+            b = light.pop(0)              # smallest → the one that moves
+            a = light.pop()               # largest light cell receives
+            free_a = cap - int(counts[a])
+            if int(counts[b]) > free_a:
+                continue
+            idx = idx.merge_cells(int(a), int(b))
+            counts[a] += counts[b]
+            counts[b] = 0
+            report["merged"].append((int(a), int(b)))
+        if report["split"] or report["merged"]:
+            idx = idx.recenter()
+            report["recentered"] = True
+            self.router.index = idx
+            self._plans.clear()
+            self.router._plan_cache = (None, None)
+            if self.telemetry is not None:
+                self.telemetry.record_index_stats(self.write_stats())
+        return report
 
     # -- lifecycle entry point ----------------------------------------------
     def upgrade(

@@ -114,10 +114,11 @@ def make_drift_world(n_items, dim, n_queries, n_clusters, seed=0,
 
 
 def build_index(corpus, kind="flat", backend=None, n_cells=16, key=2,
-                quantize=False, cap=None):
+                quantize=False, binarize=False, cap=None):
     """One index builder for every test file: flat or IVF, optional
     backend override (None keeps each type's default), optional int8
-    quantization (``cap`` = flat virtual-cell capacity)."""
+    quantization / sign-bit binarization (``cap`` = flat virtual-cell
+    capacity, shared by both encodings' exact-rescore view)."""
     from repro.ann import FlatIndex, build_ivf
 
     if kind == "ivf":
@@ -129,7 +130,11 @@ def build_index(corpus, kind="flat", backend=None, n_cells=16, key=2,
     else:
         index = FlatIndex(corpus=corpus, backend=backend)
     if quantize:
-        return index.quantize(cap=cap) if cap is not None else index.quantize()
+        index = index.quantize(cap=cap) if cap is not None else index.quantize()
+    if binarize:
+        index = index.binarize(cap=cap) if (
+            cap is not None and kind != "ivf"
+        ) else index.binarize()
     return index
 
 

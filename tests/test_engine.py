@@ -434,6 +434,28 @@ class TestMutationLaunchMatrix:
         execute_plan(plan2, world[2], index=dead, k=7, nprobe=4)
         assert launches == list(plan2.kernels())
 
+    def test_binary_tombstone_names(self, world, monkeypatch):
+        """Same contract, binary tier: the flat Hamming first pass gains
+        ``_ts`` (suffix order follows kernel_name: ts before the precision
+        tag), IVF keeps all three names; budgets immutable at 2 / 3."""
+        bflat = FlatIndex(corpus=world[0], backend="fused").binarize(cap=64)
+        bflat = bflat.delete_rows(np.arange(0, 30))
+        plan = compile_plan(bflat, precision="binary", shortlist_k=64)
+        assert plan.kernels() == (
+            "_scan_identity_flat_plain_ts_bin",
+            "_scan_identity_ivf_plain_exact",
+        )
+        assert plan.launch_count == 2
+        bivf = _ivf(world, "fused").binarize()
+        base = compile_plan(bivf, precision="binary", shortlist_k=64)
+        dead = bivf.delete_rows(np.arange(0, 30))
+        plan2 = compile_plan(dead, precision="binary", shortlist_k=64)
+        assert plan2.kernels() == base.kernels()
+        assert plan2.launch_count == 3
+        launches = self._counting(monkeypatch)
+        execute_plan(plan2, world[2], index=dead, k=7, nprobe=4)
+        assert launches == list(plan2.kernels())
+
 
 class TestParityMatrix:
     """Old-vs-engine: every fused serving path must reproduce the exact

@@ -1,18 +1,23 @@
-"""Int8 quantized first pass + exact fp32 rescore — the precision axis.
+"""Quantized first passes + exact fp32 rescore — the precision axis.
 
-Three contracts:
+Contracts, per quantized tier (int8 AND bit-packed binary):
 
-* **Error bound.** The per-row symmetric int8 encoding bounds the dot-product
-  error by scale granularity: writing q = q̂ + e_q, c = ĉ + e_c with
-  |e_i| ≤ s/2, the rescaled int8 score q̂·ĉ differs from the fp32 score by
-  at most (s_c/2)·‖q‖₁ + (s_q/2)·‖c‖₁ + d·s_q·s_c (property-tested under
+* **Error bound (int8).** The per-row symmetric int8 encoding bounds the
+  dot-product error by scale granularity: writing q = q̂ + e_q, c = ĉ + e_c
+  with |e_i| ≤ s/2, the rescaled int8 score q̂·ĉ differs from the fp32 score
+  by at most (s_c/2)·‖q‖₁ + (s_q/2)·‖c‖₁ + d·s_q·s_c (property-tested under
   hypothesis when available, seeded-deterministically always).
+* **Sign-dot identity (binary).** For sign vectors, dot(q, c) = d − 2·hamming
+  — so ranking by −popcount(xor) over the packed words IS exact sign-dot
+  ranking (property-tested under hypothesis when available, plus a
+  pack/unpack roundtrip).
 * **Exactness.** With ``shortlist_k = N`` the exact rescore must reproduce
   the fp32 serving path BIT-IDENTICALLY (ids equal, scores 1e-5) across the
   (flat/IVF × native/bridged/mixed × ragged q_valid) matrix — the first
   pass then only permutes candidates, and the rescore is exact fp32 math.
-* **Launch budget.** Flat int8 = 2 launches, IVF int8 = 3, asserted by
-  kernel NAME through the pallas_call-counting harness.
+  Asserted for both quantized tiers.
+* **Launch budget.** Flat = 2 launches, IVF = 3, for int8 and binary alike,
+  asserted by kernel NAME through the pallas_call-counting harness.
 """
 from __future__ import annotations
 
@@ -29,10 +34,12 @@ from repro.ann.ivf import ivf_search_jnp
 from repro.core import DriftAdapter, FitConfig
 from repro.kernels.engine import (
     ScanPlan,
+    binarize_rows,
     compile_plan,
     execute_plan,
     quantize_rows,
 )
+from repro.kernels.engine.core import bin_words
 from repro.kernels.mixed_scan.ref import mixed_merge_scan
 
 # deliberately NOT serving-marked: the int8 matrix is kernel-layer work
@@ -81,6 +88,23 @@ def _ivf(world):
             quantize=True,
         )
     return _CACHE["ivf"]
+
+
+def _flat_bin(world):
+    if "flat_bin" not in _CACHE:
+        _CACHE["flat_bin"] = build_index(
+            world[0], backend="fused", binarize=True, cap=32
+        )
+    return _CACHE["flat_bin"]
+
+
+def _ivf_bin(world):
+    if "ivf_bin" not in _CACHE:
+        _CACHE["ivf_bin"] = build_index(
+            world[0], kind="ivf", backend="fused", n_cells=4, key=7,
+            binarize=True,
+        )
+    return _CACHE["ivf_bin"]
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +178,96 @@ class TestQuantizeRows:
                 data.draw(st.lists(el, min_size=d, max_size=d)), np.float32
             )[None, :]
             self._check_dot_bound(jnp.asarray(q), jnp.asarray(c))
+
+        prop()
+
+
+def _unpack_bits(words: np.ndarray, d: int) -> np.ndarray:
+    """Host-side unpack of (…, w) uint32 words → (…, d) {0,1} bits, bit b
+    of word j = dim 32·j+b (the kernel's packing layout)."""
+    w = words.shape[-1]
+    bits = (
+        words[..., :, None] >> np.arange(32, dtype=np.uint32)[None, :]
+    ) & 1
+    return bits.reshape(*words.shape[:-1], w * 32)[..., :d].astype(np.int64)
+
+
+class TestBinarizeRows:
+    def test_pack_layout_and_dtype(self):
+        # dim 0 → bit 0 of word 0; dim 33 → bit 1 of word 1
+        x = np.zeros((1, 64), np.float32)
+        x[0, 0] = 1.0
+        x[0, 33] = 1.0
+        words = np.asarray(binarize_rows(jnp.asarray(x)))
+        assert words.dtype == np.uint32 and words.shape == (1, 2)
+        assert words[0, 0] == 1 and words[0, 1] == 2
+
+    @pytest.mark.parametrize("d", [32, 64, 40, 7])
+    def test_pack_unpack_roundtrip(self, d):
+        x = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(d), (16, d)), np.float32
+        )
+        words = np.asarray(binarize_rows(jnp.asarray(x)))
+        assert words.shape == (16, bin_words(d))
+        np.testing.assert_array_equal(
+            _unpack_bits(words, d), (x > 0).astype(np.int64)
+        )
+        # pad bits beyond d pack to zero: xor of two rows never sees them
+        if d % 32:
+            tail = _unpack_bits(words, bin_words(d) * 32)[:, d:]
+            assert (tail == 0).all()
+
+    def test_dot_is_d_minus_two_hamming(self):
+        d = 96
+        for seed in range(10):
+            kq, kc = jax.random.split(jax.random.PRNGKey(seed))
+            q = np.asarray(jax.random.normal(kq, (1, d)), np.float32)
+            c = np.asarray(jax.random.normal(kc, (1, d)), np.float32)
+            sq = np.where(q > 0, 1, -1)
+            sc = np.where(c > 0, 1, -1)
+            wq = np.asarray(binarize_rows(jnp.asarray(q)))
+            wc = np.asarray(binarize_rows(jnp.asarray(c)))
+            ham = int(
+                np.unpackbits(
+                    (wq ^ wc).view(np.uint8), bitorder="little"
+                ).astype(np.int64).sum()
+            )
+            assert int((sq * sc).sum()) == d - 2 * ham
+
+    def test_dot_identity_property(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        dims = st.integers(min_value=2, max_value=96)
+
+        @settings(max_examples=40, deadline=None)
+        @given(data=st.data(), d=dims)
+        def prop(data, d):
+            el = st.floats(
+                min_value=-100.0, max_value=100.0,
+                allow_nan=False, allow_infinity=False, width=32,
+            )
+            q = np.array(
+                data.draw(st.lists(el, min_size=d, max_size=d)), np.float32
+            )[None, :]
+            c = np.array(
+                data.draw(st.lists(el, min_size=d, max_size=d)), np.float32
+            )[None, :]
+            wq = np.asarray(binarize_rows(jnp.asarray(q)))
+            wc = np.asarray(binarize_rows(jnp.asarray(c)))
+            # roundtrip: the packed words decode back to the sign bits
+            np.testing.assert_array_equal(
+                _unpack_bits(wq, d), (q > 0).astype(np.int64)
+            )
+            ham = int(
+                np.unpackbits(
+                    (wq ^ wc).view(np.uint8), bitorder="little"
+                ).astype(np.int64).sum()
+            )
+            sdot = int(
+                (np.where(q > 0, 1, -1) * np.where(c > 0, 1, -1)).sum()
+            )
+            assert sdot == d - 2 * ham
 
         prop()
 
@@ -237,11 +351,81 @@ class TestInt8Plans:
         assert wide.shortlist(10, 10_000) == 300
 
 
+class TestBinaryPlans:
+    def test_flat_two_launches_by_name(self, world):
+        plan = compile_plan(_flat_bin(world), precision="binary")
+        assert plan.kernels() == (
+            "_scan_identity_flat_plain_bin",
+            "_scan_identity_ivf_plain_exact",
+        )
+        bridged = compile_plan(
+            _flat_bin(world), world[3], mode="bridged", precision="binary"
+        )
+        assert bridged.kernels() == (
+            "_scan_linear_flat_plain_bin",
+            "_scan_linear_ivf_plain_exact",
+        )
+        mixed = compile_plan(
+            _flat_bin(world), world[3], mode="mixed", precision="binary"
+        )
+        assert mixed.kernels() == (
+            "_scan_linear_flat_bitmap_packed_bin",
+            "_scan_linear_ivf_bitmap_exact",
+        )
+
+    def test_ivf_three_launches_by_name(self, world):
+        plan = compile_plan(_ivf_bin(world), precision="binary")
+        assert plan.kernels() == (
+            "_scan_identity_flat_plain",
+            "_scan_identity_ivf_plain_bin",
+            "_scan_identity_ivf_plain_exact",
+        )
+        mixed_raw = compile_plan(
+            _ivf_bin(world), world[3], mode="mixed", invert=True,
+            probe_space="raw", precision="binary",
+        )
+        assert mixed_raw.kernels() == (
+            "_scan_identity_flat_plain",
+            "_scan_linear_ivf_bitmap_inv_bin",
+            "_scan_linear_ivf_bitmap_inv_exact",
+        )
+
+    def test_binary_requires_fused_backend(self, world):
+        with pytest.raises(ValueError, match="fused"):
+            compile_plan(FlatIndex(corpus=world[0]), precision="binary")
+
+    def test_binary_mixed_rejects_sequential_chain(self, world):
+        from repro.core import ChainedAdapter
+
+        mlp = DriftAdapter.fit(
+            world[1][:64], world[0][:64],
+            config=FitConfig(kind="mlp", max_epochs=1),
+        )
+        chain = ChainedAdapter(links=[mlp, mlp])
+        with pytest.raises(ValueError, match="foldable"):
+            compile_plan(
+                _flat_bin(world), chain, mode="mixed", precision="binary"
+            )
+
+    def test_binary_plan_against_unbinarized_index_raises(self, world):
+        bare = FlatIndex(corpus=world[0], backend="fused")
+        plan = compile_plan(bare, precision="binary")
+        with pytest.raises(ValueError, match="binarize"):
+            execute_plan(plan, world[2], index=bare, k=K)
+
+
 # ---------------------------------------------------------------------------
 # exactness: shortlist_k = N ⇒ bit-identical to the fp32 serving path
 # ---------------------------------------------------------------------------
 
 class TestRescoreExactness:
+    precision = "int8"
+
+    def _index(self, world, index_type):
+        if self.precision == "binary":
+            return _flat_bin(world) if index_type == "flat" else _ivf_bin(world)
+        return _flat(world) if index_type == "flat" else _ivf(world)
+
     def _oracle(self, world, index_type, state):
         corpus, b, queries, op, mig = world
         qm = op.apply(queries)
@@ -254,7 +438,7 @@ class TestRescoreExactness:
             if state == "mixed_inv":
                 sel = ~sel
             return mixed_merge_scan(queries, qm, corpus, sel, k=K)
-        index = _ivf(world)
+        index = self._index(world, "ivf")
         if state == "native":
             return ivf_search_jnp(index, queries, k=K, nprobe=NPROBE)
         if state == "bridged":
@@ -271,14 +455,14 @@ class TestRescoreExactness:
 
     def _check(self, world, index_type, state, q_valid):
         corpus, b, queries, op, mig = world
-        index = _flat(world) if index_type == "flat" else _ivf(world)
+        index = self._index(world, index_type)
         plan = compile_plan(
             index,
             op if state != "native" else None,
             mode={"mixed_inv": "mixed"}.get(state, state),
             invert=(state == "mixed_inv"),
             probe_space="raw" if state == "mixed_inv" else "mapped",
-            precision="int8",
+            precision=self.precision,
             shortlist_k=N,
         )
         s, i = execute_plan(
@@ -314,6 +498,41 @@ class TestRescoreExactness:
         corpus, _, queries, _, _ = world
         plan = compile_plan(_flat(world), precision="int8")
         _, i = execute_plan(plan, queries, index=_flat(world), k=K)
+        _, ref = flat_search_jnp(corpus, queries, k=K)
+        hits = sum(
+            len(set(a.tolist()) & set(b.tolist()))
+            for a, b in zip(np.asarray(i), np.asarray(ref))
+        )
+        assert hits / (Q * K) >= 0.99
+
+
+class TestBinaryRescoreExactness(TestRescoreExactness):
+    """The SAME shortlist_k = N exactness matrix, binary first pass: the
+    Hamming scan only permutes candidates, the rescore is exact fp32."""
+
+    precision = "binary"
+
+    def test_narrow_shortlist_high_recall(self):
+        """Sign bits rank by sign AGREEMENT, so the default 4·k shortlist
+        holds recall in the regime the tier targets — near-duplicate
+        groups (drifting re-embeddings of the same items) — not on an
+        isotropic corpus where all dots ≈ 0. Same construction and gate
+        as the BENCH_binary artifact, at test shapes."""
+        group = 16
+        cent = jax.random.normal(jax.random.PRNGKey(11), (N // group, D))
+        cent = cent / jnp.linalg.norm(cent, axis=1, keepdims=True)
+        jitter = jax.random.normal(jax.random.PRNGKey(12), (N, D))
+        jitter = jitter / jnp.linalg.norm(jitter, axis=1, keepdims=True)
+        corpus = jnp.repeat(cent, group, axis=0) + 0.5 * jitter
+        corpus = corpus / jnp.linalg.norm(corpus, axis=1, keepdims=True)
+        qj = jax.random.normal(jax.random.PRNGKey(13), (Q, D))
+        qj = qj / jnp.linalg.norm(qj, axis=1, keepdims=True)
+        queries = cent[jnp.arange(Q) % (N // group)] + 0.5 * qj
+        queries = queries / jnp.linalg.norm(queries, axis=1, keepdims=True)
+        index = build_index(corpus, backend="fused", binarize=True, cap=32)
+        plan = compile_plan(index, precision="binary")
+        assert plan.shortlist(K, N) == 4 * K
+        _, i = execute_plan(plan, queries, index=index, k=K)
         _, ref = flat_search_jnp(corpus, queries, k=K)
         hits = sum(
             len(set(a.tolist()) & set(b.tolist()))
@@ -358,6 +577,35 @@ class TestInt8LaunchBudget:
         plan = compile_plan(
             index, op if mode != "native" else None, mode=mode,
             precision="int8",
+        )
+        assert plan.launch_count == budget
+        execute_plan(
+            plan, queries, index=index, k=K, migrated=mig, nprobe=NPROBE
+        )
+        assert launches == list(plan.kernels()), (launches, plan.kernels())
+
+
+class TestBinaryLaunchBudget(TestInt8LaunchBudget):
+    """Flat binary = 2 launches, IVF binary = 3 (fp32 centroid probe +
+    _bin cell scan + _exact rescore), traced by kernel name."""
+
+    @pytest.mark.parametrize(
+        "make,mode,budget",
+        [
+            (_flat_bin, "native", 2),
+            pytest.param(_flat_bin, "mixed", 2, marks=pytest.mark.slow),
+            (_ivf_bin, "native", 3),
+            pytest.param(_ivf_bin, "mixed", 3, marks=pytest.mark.slow),
+        ],
+    )
+    def test_traced_launches_match_plan(self, world, monkeypatch, make,
+                                        mode, budget):
+        corpus, b, queries, op, mig = world
+        index = make(world)
+        launches = self._counting(monkeypatch)
+        plan = compile_plan(
+            index, op if mode != "native" else None, mode=mode,
+            precision="binary",
         )
         assert plan.launch_count == budget
         execute_plan(
@@ -437,3 +685,177 @@ class TestQuantizedLifecycle:
 
         with pytest.raises(ValueError, match="precision"):
             make_store(world[0], precision="int4")
+
+
+class TestBinaryLifecycle:
+    def test_flat_replace_rows_rebinarizes(self, world):
+        corpus, _, queries, _, _ = world
+        index = _flat_bin(world)
+        ids = jnp.arange(0, 24, dtype=jnp.int32)
+        new_rows = jax.random.normal(jax.random.PRNGKey(9), (24, D))
+        new_rows = new_rows / jnp.linalg.norm(new_rows, axis=1, keepdims=True)
+        out = index.replace_rows(ids, new_rows)
+        np.testing.assert_array_equal(
+            np.asarray(out.bin_codes[:24]),
+            np.asarray(binarize_rows(new_rows)),
+        )
+        # the rescore's fp32 virtual cells track too: shortlist_k=N stays
+        # bit-identical to a fresh fp32 scan of the MUTATED corpus
+        plan = compile_plan(out, precision="binary", shortlist_k=N)
+        s, i = execute_plan(plan, queries, index=out, k=K)
+        ref_s, ref_i = flat_search_jnp(out.corpus, queries, k=K)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+
+    def test_ivf_replace_rows_rebinarizes(self, world):
+        index = _ivf_bin(world)
+        ids = jnp.arange(0, 16, dtype=jnp.int32)
+        new_rows = jax.random.normal(jax.random.PRNGKey(9), (16, D))
+        new_rows = new_rows / jnp.linalg.norm(new_rows, axis=1, keepdims=True)
+        out = index.replace_rows(ids, new_rows)
+        flat_ids = np.asarray(out.cell_ids).reshape(-1)
+        words = np.asarray(binarize_rows(new_rows))
+        cap = out.capacity
+        for j, rid in enumerate(ids.tolist()):
+            pos = int(np.nonzero(flat_ids == rid)[0][0])
+            np.testing.assert_array_equal(
+                np.asarray(out.cell_bin_codes[pos // cap, pos % cap]),
+                words[j],
+            )
+
+    def test_compact_rebinarizes_both_index_types(self, world):
+        # state-only (no launches): compact() must rebuild the packed
+        # plane over the surviving rows on flat AND ivf
+        flat = _flat_bin(world).delete_rows(np.arange(0, 16))
+        out, kept = flat.compact()
+        assert out.binarized and out.alive is None
+        np.testing.assert_array_equal(
+            np.asarray(out.bin_codes),
+            np.asarray(binarize_rows(out.corpus)),
+        )
+        assert kept.shape[0] == N - 16
+        ivf = _ivf_bin(world).delete_rows(np.arange(0, 16))
+        iout, ikept = ivf.compact()
+        assert iout.binarized
+        np.testing.assert_array_equal(
+            np.asarray(iout.cell_bin_codes),
+            np.asarray(binarize_rows(iout.cells)),
+        )
+        assert ikept.shape[0] == N - 16
+
+    def test_ivf_pytree_roundtrip_keeps_bin_codes(self, world):
+        index = _ivf_bin(world)
+        leaves, treedef = jax.tree_util.tree_flatten(index)
+        back = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert back.binarized
+        np.testing.assert_array_equal(
+            np.asarray(back.cell_bin_codes), np.asarray(index.cell_bin_codes)
+        )
+
+    def test_store_binary_serves_through_binary_plans(self, world):
+        from conftest import make_store
+
+        corpus, _, queries, _, _ = world
+        store = make_store(
+            corpus, backend="fused", precision="binary", shortlist_k=N
+        )
+        assert store.index.binarized          # binarized at init
+        plan = store._plan(None, "native")
+        assert plan.precision == "binary" and plan.launch_count == 2
+        assert plan.kernels()[0].endswith("_bin")
+        res = store.search(queries, k=K)
+        _, ref = flat_search_jnp(corpus, queries, k=K)
+        np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref))
+
+    def test_store_binary_rebinarizes_on_index_swap(self, world):
+        from conftest import make_store
+
+        corpus, _, queries, _, _ = world
+        store = make_store(
+            corpus, backend="fused", precision="binary", shortlist_k=N
+        )
+        # a lifecycle swap installs an unencoded index: _plan re-binarizes
+        store.router.index = FlatIndex(corpus=corpus, backend="fused")
+        store._plans.clear()
+        store._plan(None, "native")
+        assert store.index.binarized
+
+    def test_binary_telemetry_counts_first_pass_bytes(self, world):
+        from conftest import make_store
+
+        corpus, _, queries, _, _ = world
+        store = make_store(
+            corpus, backend="fused", precision="binary", shortlist_k=N
+        )
+        telemetry = store.attach_telemetry()
+        store.search(queries, k=K)
+        got = telemetry.counters()["first_pass_bytes"]
+        w = bin_words(D)
+        assert got == {"binary": 4 * N * w}
+
+
+class TestShortlistAutotune:
+    """The opt-in closed loop: cadence, two-window hysteresis, plan-cache
+    invalidation. The audit itself is stubbed — its parity math is covered
+    by audit_shortlist tests; this tests the loop mechanics."""
+
+    def _store(self, world, **kw):
+        from conftest import make_store
+
+        return make_store(
+            world[0], backend="fused", precision="int8", shortlist_k=N,
+            autotune_shortlist=True, autotune_cadence=Q, **kw,
+        )
+
+    def test_fp32_store_rejects_autotune(self, world):
+        from conftest import make_store
+
+        with pytest.raises(ValueError, match="autotune"):
+            make_store(world[0], autotune_shortlist=True)
+
+    def test_two_window_hysteresis_applies_suggestion(self, world,
+                                                      monkeypatch):
+        from repro.serve.store import VectorStore
+
+        store = self._store(world)
+        monkeypatch.setattr(
+            VectorStore, "audit_shortlist", lambda self, q, k=10: {}
+        )
+        monkeypatch.setattr(
+            VectorStore, "suggest_shortlist_k",
+            lambda self, k=10, target=0.999: 80,
+        )
+        queries = world[2]
+        store.search(queries, k=K)            # window 1: suggestion noted
+        assert store.shortlist_k == N         # …but not applied yet
+        store.search(queries, k=K)            # window 2: same → applied
+        assert store.shortlist_k == 80
+        assert store._plans == {}             # plan cache invalidated
+
+    def test_disagreeing_windows_do_not_apply(self, world, monkeypatch):
+        from repro.serve.store import VectorStore
+
+        store = self._store(world)
+        monkeypatch.setattr(
+            VectorStore, "audit_shortlist", lambda self, q, k=10: {}
+        )
+        suggestions = iter([80, 60, 60])
+        monkeypatch.setattr(
+            VectorStore, "suggest_shortlist_k",
+            lambda self, k=10, target=0.999: next(suggestions),
+        )
+        queries = world[2]
+        store.search(queries, k=K)
+        store.search(queries, k=K)            # 80 → 60: disagree, no apply
+        assert store.shortlist_k == N
+        store.search(queries, k=K)            # 60 → 60: agree, applied
+        assert store.shortlist_k == 60
+
+    def test_audit_shortlist_covers_binary_tier(self, world):
+        from conftest import make_store
+
+        corpus, _, queries, _, _ = world
+        store = make_store(
+            corpus, backend="fused", precision="binary", shortlist_k=N
+        )
+        rates = store.audit_shortlist(queries, k=K, widths=[N])
+        assert rates == {N: 1.0}              # exact at shortlist_k = N

@@ -95,7 +95,7 @@ class Model:
         """Bit-parity of ``store.search`` against the brute-force re-scan
         of the model. ``bridge`` (the store's v2 bridge) switches to the
         mid-migration two-scan reference for new-space queries."""
-        if store.precision == "int8":
+        if store.precision in ("int8", "binary"):
             # exact-rescore exactness needs the shortlist to cover
             # every row (see test_quant's exactness contract)
             store.shortlist_k = int(store.index.size)
@@ -417,6 +417,82 @@ class TestFrontDoorWrites:
         mb.submit(corpus[2])
         out = mb.drain(lambda q, k: store.index.search(q, k=k), k=K)
         assert set(out) == {2}
+
+
+# ---------------------------------------------------------------------------
+# IVF cell maintenance: recenter / split / merge behind maybe_rebalance
+# ---------------------------------------------------------------------------
+
+class TestRebalance:
+    """The cell-maintenance ops move rows between packed slots but never
+    renumber ids, so the value-model oracle needs no remap: parity must
+    hold verbatim before AND after every op. ``nprobe`` covers every cell
+    (exhaustive probe), so any row landed in a wrong slot, dropped, or
+    double-packed diverges the scan."""
+
+    def _setup(self, seed=11):
+        rng, corpus, queries = _world(seed)
+        store = make_store(corpus, kind="ivf", n_cells=4, nprobe=64)
+        return rng, store, Model(corpus), queries
+
+    def test_each_maintenance_op_preserves_search_parity(self):
+        rng, store, model, queries = self._setup()
+        model.check(store, queries, tag="baseline")
+
+        store.router.index = store.index.recenter()
+        store._plans.clear()
+        model.check(store, queries, tag="after recenter")
+
+        fullest = int(np.argmax(store.index.cell_counts))
+        store.router.index = store.index.split_cell(fullest)
+        store._plans.clear()
+        model.check(store, queries, tag="after split_cell")
+
+        counts = store.index.cell_counts
+        light = np.argsort(counts)
+        a, b = (int(c) for c in light[counts[light] > 0][:2][::-1])
+        store.router.index = store.index.merge_cells(a, b)
+        store._plans.clear()
+        model.check(store, queries, tag="after merge_cells")
+        assert store.index.cell_counts[b] == 0
+
+    def test_maybe_rebalance_splits_and_merges_on_skew(self):
+        rng, store, model, queries = self._setup()
+        # engineer skew: starve cells 2 and 3 down to 3 live rows each,
+        # then stuff cell 0 with rows at its own centroid
+        for cell in (2, 3):
+            ids = np.asarray(store.index.cell_ids[cell])
+            ids = ids[ids >= 0][3:]
+            store.delete(ids)
+            model.delete(ids)
+        c0 = np.asarray(store.index.centroids[0])
+        rows = _unit(
+            c0[None, :] + 0.01 * rng.standard_normal((40, D))
+        ).astype(np.float32)
+        ids = store.insert(rows)
+        model.insert(ids, rows, "v1")
+        model.check(store, queries, tag="skewed, before rebalance")
+
+        before = store.index.cell_counts
+        report = store.maybe_rebalance(skew_threshold=2.0)
+        assert report["split"] and report["merged"] and report["recentered"]
+        model.check(store, queries, tag="after maybe_rebalance")
+        after = store.index.cell_counts
+        assert after.max() < before.max()      # the heavy cell split
+        assert store.index_revision == 0       # ids never renumbered
+        for a, b in report["merged"]:
+            assert after[b] == 0               # folded cells emptied
+
+    def test_maybe_rebalance_noop_on_flat_and_balanced(self):
+        _, corpus, queries = _world(17)
+        flat_store = make_store(corpus, backend="fused")
+        report = flat_store.maybe_rebalance()
+        assert report == {"split": [], "merged": [], "recentered": False}
+
+        _, store, model, queries = self._setup(seed=19)
+        report = store.maybe_rebalance()        # balanced k-means cells
+        assert not report["split"] and not report["recentered"]
+        model.check(store, queries, tag="noop rebalance")
 
 
 # ---------------------------------------------------------------------------
